@@ -1,0 +1,59 @@
+//! Long-context scaling study: how far each system stretches before OOM
+//! and what an iteration costs along the way — the motivation story of the
+//! paper's intro, regenerated from the models.
+//!
+//!     cargo run --offline --example long_context_scaling [-- llama-7b 2x8]
+
+use distflash::baselines::distflash::DistFlashAttn;
+use distflash::baselines::megatron::Megatron;
+use distflash::baselines::ring_attention::RingAttention;
+use distflash::baselines::rsa::RingSelfAttention;
+use distflash::baselines::ulysses::Ulysses;
+use distflash::baselines::SystemModel;
+use distflash::config::{ClusterSpec, PaperModel};
+use distflash::memory::{fmt_seq, max_total_seq_pow2};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = PaperModel::by_name(args.first().map(String::as_str).unwrap_or("llama-7b"))
+        .expect("unknown model");
+    let cluster = match args.get(1).map(String::as_str) {
+        Some("1x8") => ClusterSpec::dgx_1x8(),
+        Some("16x40g") => ClusterSpec::cluster_16x40g(),
+        _ => ClusterSpec::dgx_2x8(),
+    };
+    let systems: Vec<Box<dyn SystemModel>> = vec![
+        Box::new(DistFlashAttn::default()),
+        Box::new(RingAttention),
+        Box::new(Ulysses),
+        Box::new(Megatron::tp()),
+        Box::new(RingSelfAttention),
+    ];
+
+    println!(
+        "== {} on {}x{} A100 ==",
+        model.name, cluster.n_nodes, cluster.gpus_per_node
+    );
+    println!("{:<44} {:>10}  iteration time at total sequence length:", "system", "max seq");
+    let probes: Vec<usize> = [65536usize, 131072, 262144, 524288].to_vec();
+    print!("{:<56}", "");
+    for p in &probes {
+        print!("{:>10}", fmt_seq(*p));
+    }
+    println!();
+    for sys in &systems {
+        let max = max_total_seq_pow2(sys.as_ref(), &model, &cluster);
+        print!("{:<44} {:>10}  ", sys.name(), fmt_seq(max));
+        for &total in &probes {
+            let per_gpu = total / cluster.n_gpus();
+            let it = sys.iteration(&model, &cluster, per_gpu);
+            if it.fits(&cluster) {
+                print!("{:>9.1}s", it.total_s());
+            } else {
+                print!("{:>10}", "OOM");
+            }
+        }
+        println!();
+    }
+    println!("\n(see `repro tables` for the paper-table comparisons)");
+}

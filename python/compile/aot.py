@@ -1,0 +1,226 @@
+"""AOT exporter: lower every L2 function to HLO *text* + manifest.json.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_proto().serialize()`` —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --config tiny --out ../artifacts
+    python -m compile.aot --all --out ../artifacts
+
+Each config gets ``artifacts/<name>/<artifact>.hlo.txt`` plus one
+``manifest.json`` describing input/output shapes, the parameter-order
+contract, and the model config — everything the rust runtime needs; rust
+never imports python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, ModelConfig, get
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+def _tensor_meta(name, spec):
+    return {
+        "name": name,
+        "shape": list(spec.shape),
+        "dtype": _dtype_name(spec.dtype),
+    }
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.manifest = {
+            "config": cfg.to_json(),
+            "layer_params": [
+                {"name": n, "shape": list(s)}
+                for n, s in M.layer_param_shapes(cfg).items()
+            ],
+            "global_params": [
+                {"name": n, "shape": list(s)}
+                for n, s in M.global_param_shapes(cfg).items()
+            ],
+            "artifacts": {},
+        }
+
+    def export(self, name: str, fn, inputs: list[tuple[str, jax.ShapeDtypeStruct]]):
+        """Lower ``fn(*specs)`` and record the artifact in the manifest."""
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_tensor_meta(n, s) for n, s in inputs],
+            "outputs": [_tensor_meta(f"out{i}", s) for i, s in enumerate(outs)],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {self.cfg.name}/{fname}  ({len(text)} chars)")
+
+    def finish(self):
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def export_config(cfg: ModelConfig, out_dir: str):
+    ex = Exporter(cfg, out_dir)
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    c, d, e, f, v, n = (
+        cfg.chunk_len,
+        cfg.head_dim,
+        cfg.d_model,
+        cfg.d_ff,
+        cfg.vocab,
+        cfg.seq_len,
+    )
+
+    q_s, kv_s = _spec((h, c, d)), _spec((kvh, c, d))
+    o_s, st_s = _spec((h, c, d)), _spec((h, c))
+
+    # --- attention kernels (L1 pallas inside) ---
+    for causal, tag in ((True, "diag"), (False, "full")):
+        ex.export(
+            f"attn_fwd_{tag}",
+            functools.partial(M.attn_fwd, cfg, causal=causal),
+            [("q", q_s), ("k", kv_s), ("v", kv_s), ("o", o_s), ("m", st_s), ("l", st_s)],
+        )
+        ex.export(
+            f"attn_bwd_{tag}",
+            functools.partial(M.attn_bwd, cfg, causal=causal),
+            [("q", q_s), ("k", kv_s), ("v", kv_s), ("o", o_s), ("lse", st_s), ("do", o_s)],
+        )
+    ex.export(
+        "attn_rescale",
+        M.attn_rescale,
+        [("o1", o_s), ("m1", st_s), ("l1", st_s), ("o2", o_s), ("m2", st_s), ("l2", st_s)],
+    )
+    ex.export(
+        "attn_finalize",
+        M.attn_finalize,
+        [("o", o_s), ("m", st_s), ("l", st_s)],
+    )
+    ex.export(
+        "full_attn_ref",
+        functools.partial(M.full_model_fwd_attn_ref, cfg),
+        [("q", _spec((h, n, d))), ("k", _spec((kvh, n, d))), ("v", _spec((kvh, n, d)))],
+    )
+
+    # --- layer pieces ---
+    x_s = _spec((c, e))
+    p1 = [("ln1_g", _spec((e,))), ("wq", _spec((e, e))),
+          ("wk", _spec((e, kvh * d))), ("wv", _spec((e, kvh * d)))]
+    ex.export(
+        "part1_fwd",
+        functools.partial(M.part1_fwd, cfg),
+        [("x", x_s)] + p1,
+    )
+    ex.export(
+        "part1_bwd",
+        functools.partial(M.part1_bwd, cfg),
+        [("x", x_s)] + p1 + [("dq", q_s), ("dk", kv_s), ("dv", kv_s)],
+    )
+    p2 = [("wo", _spec((e, e))), ("ln2_g", _spec((e,))),
+          ("w1", _spec((e, f))), ("w3", _spec((e, f))), ("w2", _spec((f, e)))]
+    ex.export(
+        "part2_fwd",
+        functools.partial(M.part2_fwd, cfg),
+        [("x", x_s), ("attn_o", o_s)] + p2,
+    )
+    ex.export(
+        "part2_bwd",
+        functools.partial(M.part2_bwd, cfg),
+        [("x", x_s), ("attn_o", o_s)] + p2 + [("dy", x_s)],
+    )
+
+    # --- embedding / head ---
+    ids_s = _spec((c,), jnp.int32)
+    ex.export(
+        "embed_fwd",
+        functools.partial(M.embed_fwd, cfg),
+        [("ids", ids_s), ("w_emb", _spec((v, e)))],
+    )
+    ex.export(
+        "embed_bwd",
+        functools.partial(M.embed_bwd, cfg),
+        [("ids", ids_s), ("dx", x_s)],
+    )
+    hl = [("x", x_s), ("ln_f_g", _spec((e,))), ("w_head", _spec((v, e))),
+          ("targets", ids_s), ("inv_total", _spec((), jnp.float32))]
+    ex.export("head_loss_fwd", functools.partial(M.head_loss_fwd, cfg), hl)
+    ex.export("head_loss_bwd", functools.partial(M.head_loss_bwd, cfg), hl)
+
+    # --- end-to-end oracles (small configs only: grads output is huge) ---
+    if cfg.export_ref_grads:
+        flat_specs = []
+        for i in range(cfg.n_layers):
+            for pname, shape in M.layer_param_shapes(cfg).items():
+                flat_specs.append((f"L{i}.{pname}", _spec(shape)))
+        for pname, shape in M.global_param_shapes(cfg).items():
+            flat_specs.append((pname, _spec(shape)))
+        seq_ids = _spec((n,), jnp.int32)
+        ex.export(
+            "full_model_loss",
+            functools.partial(M.full_model_loss_flat, cfg),
+            [("ids", seq_ids), ("targets", seq_ids)] + flat_specs,
+        )
+        ex.export(
+            "full_model_grads",
+            functools.partial(M.full_model_grads_flat, cfg),
+            [("ids", seq_ids), ("targets", seq_ids)] + flat_specs,
+        )
+
+    ex.finish()
+    print(f"wrote {ex.dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", action="append", default=[], help="config name(s)")
+    ap.add_argument("--all", action="store_true", help="export every config")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = sorted(CONFIGS) if args.all else (args.config or ["tiny", "tiny-gqa", "tiny-p3", "train20m"])
+    for name in names:
+        print(f"== exporting {name} ==")
+        export_config(get(name), args.out)
+
+
+if __name__ == "__main__":
+    main()

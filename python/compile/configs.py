@@ -1,0 +1,87 @@
+"""Model + export configurations shared by the AOT pipeline and pytest.
+
+The rust side never imports this; it reads the shapes back from
+``artifacts/<name>/manifest.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A LLaMA-style decoder configuration, sequence-parallel over P workers.
+
+    Every worker owns one chunk of ``chunk_len`` tokens; the full sequence is
+    ``n_workers * chunk_len`` tokens (batch size 1 — the sequence-parallel
+    regime the paper targets).
+    """
+
+    name: str
+    vocab: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    chunk_len: int
+    n_workers: int
+    block: int  # pallas kernel block size (B_r == B_c)
+    export_ref_grads: bool = False  # export the full-model grad oracle (tests)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def seq_len(self) -> int:
+        return self.chunk_len * self.n_workers
+
+    def n_params(self) -> int:
+        e, f, v = self.d_model, self.d_ff, self.vocab
+        kv = self.n_kv_heads * self.head_dim
+        per_layer = e + e * e + 2 * e * kv + e * e + e + 2 * e * f + f * e
+        return self.n_layers * per_layer + e + 2 * v * e
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["head_dim"] = self.head_dim
+        d["seq_len"] = self.seq_len
+        d["n_params"] = self.n_params()
+        return d
+
+
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # test config: small enough that every pytest / cargo test is fast
+        ModelConfig("tiny", 256, 2, 64, 4, 4, 128, 32, 4, 16, export_ref_grads=True),
+        # GQA variant of tiny (2 kv heads shared by groups of 2 queries)
+        ModelConfig("tiny-gqa", 256, 2, 64, 4, 2, 128, 32, 4, 16, export_ref_grads=True),
+        # odd worker count (exercises the P-odd balanced schedule)
+        ModelConfig("tiny-p3", 256, 2, 64, 4, 4, 128, 32, 3, 16, export_ref_grads=True),
+        # ~26M params: the fast end-to-end training demo
+        ModelConfig("train20m", 4096, 6, 384, 6, 6, 1024, 128, 4, 64),
+        # ~112M params: the paper-scale end-to-end run (slower per step)
+        ModelConfig("train100m", 8192, 12, 768, 12, 12, 2048, 128, 4, 128),
+    ]
+}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)}") from None
+
+
+if __name__ == "__main__":
+    print(json.dumps({k: v.to_json() for k, v in CONFIGS.items()}, indent=2))

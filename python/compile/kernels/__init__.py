@@ -1,0 +1,50 @@
+"""L1 kernel package: Pallas chunk FlashAttention + multi-head wrappers.
+
+The single-head kernels live in :mod:`flash_chunk`; this module vmaps them
+over the head axis so L2 (``compile.model``) and the AOT exporter work with
+``(H, C, D)`` tensors — the layout the rust executor ships between workers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_chunk, ref
+from .flash_chunk import DEFAULT_BLOCK, finalize, init_state, rescale
+
+
+def mha_chunk_fwd(q, k, v, o, m, l, *, causal: bool, block: int = DEFAULT_BLOCK):
+    """Multi-head `attn(·)` step: all tensors (H, C, D) / (H, C)."""
+    f = functools.partial(flash_chunk.chunk_fwd, causal=causal, block=block)
+    return jax.vmap(f)(q, k, v, o, m, l)
+
+
+def mha_chunk_bwd(q, k, v, o, lse, do, *, causal: bool, block: int = DEFAULT_BLOCK):
+    """Multi-head chunk-pair backward: returns (dq, dk, dv), all (H, C, D)."""
+    f = functools.partial(flash_chunk.chunk_bwd, causal=causal, block=block)
+    return jax.vmap(f)(q, k, v, o, lse, do)
+
+
+def mha_init_state(h: int, c: int, d: int):
+    """(o^0, m^0, l^0) for H heads."""
+    return (
+        jnp.zeros((h, c, d), jnp.float32),
+        jnp.full((h, c), -jnp.inf, jnp.float32),
+        jnp.zeros((h, c), jnp.float32),
+    )
+
+
+__all__ = [
+    "flash_chunk",
+    "ref",
+    "rescale",
+    "finalize",
+    "init_state",
+    "mha_chunk_fwd",
+    "mha_chunk_bwd",
+    "mha_init_state",
+    "DEFAULT_BLOCK",
+]

@@ -1,0 +1,435 @@
+"""L1: Pallas blockwise FlashAttention *chunk* kernels for DISTFLASHATTN.
+
+These are the `attn(q_p, k_r, v_r, o_p, s_p)` kernels of the paper
+(Alg. 3 / Appendix A): a FlashAttention2-style blockwise kernel revised so
+that
+
+  1. the running statistics ``o`` (unnormalized output), ``m`` (row max) and
+     ``l`` (row sum) are *accumulated from previous chunk computations*
+     instead of initialized inside the kernel, and
+  2. the caller finalizes ``o / l`` and the logsumexp ``L = m + log l`` only
+     after the *last* chunk (the paper's ``last`` flag) — here done by the
+     separate :func:`finalize` op so the kernel itself stays chunk-agnostic.
+
+Hardware adaptation (paper kernel is CUDA/Triton; see DESIGN.md §6): the
+(B_r x d) / (B_c x d) SRAM tiles become Pallas blocks; q blocks ride the
+grid axis (one program per q block, BlockSpec index map), the kv blocks are
+walked with an inner ``fori_loop`` so the (o, m, l) carry stays in
+registers/VMEM for the whole pass.  Both matmuls use
+``preferred_element_type=f32`` so on a real TPU they land on the MXU.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the rust runtime
+runs byte-identically.
+
+All kernels are single-head ``(C, D)``; the multi-head ``(H, C, D)`` wrappers
+in ``__init__.py`` vmap over heads.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+NEG_BIG = -1.0e30  # in-block mask value; never a fully-masked first block
+
+
+def _pick_block(c: int, block: int) -> int:
+    """Largest divisor of ``c`` that is <= block (power-of-two chunks)."""
+    b = min(block, c)
+    while c % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_in_ref,
+    m_in_ref,
+    l_in_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    causal: bool,
+):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale  # (Bq, D)
+
+    n_kv_blocks = kv_len // block_k
+    if causal:
+        # Bq == Bk is enforced by the wrapper; block j == qi is the diagonal
+        # block, everything past it is fully masked and skipped entirely.
+        upper = qi + 1
+    else:
+        upper = n_kv_blocks
+
+    row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        o_acc, m_acc, l_acc = carry
+        k_j = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        v_j = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        s = jax.lax.dot_general(
+            q,
+            k_j.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (Bq, Bk)
+        if causal:
+            col_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = row_ids[:, None] >= col_ids[None, :]
+            s = jnp.where(mask, s, NEG_BIG)
+        m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))
+        # m_acc == -inf on the very first block of the very first chunk:
+        # exp(-inf - finite) == 0, no NaN (the diagonal block is never fully
+        # masked for any row, so m_new is always finite after step one).
+        alpha = jnp.exp(m_acc - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_acc * alpha + jnp.sum(p, axis=1)
+        o_new = o_acc * alpha[:, None] + jax.lax.dot_general(
+            p,
+            v_j.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return o_new, m_new, l_new
+
+    o0 = o_in_ref[...].astype(jnp.float32)
+    m0 = m_in_ref[...].astype(jnp.float32)
+    l0 = l_in_ref[...].astype(jnp.float32)
+    o_acc, m_acc, l_acc = jax.lax.fori_loop(0, upper, body, (o0, m0, l0))
+    o_ref[...] = o_acc
+    m_ref[...] = m_acc
+    l_ref[...] = l_acc
+
+
+def chunk_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    m: jax.Array,
+    l: jax.Array,
+    *,
+    causal: bool,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """One `attn(q_p, k_r, v_r, o, s)` step (single head).
+
+    Args:
+      q, k, v: ``(C, D)`` chunk tensors (q from the owner, k/v possibly
+        fetched from a remote worker).
+      o: ``(C, D)`` running *unnormalized* output.
+      m, l: ``(C,)`` running row max / row sum statistics.
+      causal: True for the diagonal chunk (r == p), False for earlier chunks.
+
+    Returns:
+      updated ``(o, m, l)``.
+    """
+    c, d = q.shape
+    kv_len = k.shape[0]
+    bq = _pick_block(c, block)
+    bk = _pick_block(kv_len, block)
+    if causal:
+        if c != kv_len:
+            raise ValueError("causal diagonal chunk requires q/kv same length")
+        bq = bk = min(bq, bk)
+    scale = 1.0 / math.sqrt(d)
+    grid = (c // bq,)
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        block_q=bq,
+        block_k=bk,
+        kv_len=kv_len,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((kv_len, d), lambda i: (0, 0)),
+            pl.BlockSpec((kv_len, d), lambda i: (0, 0)),
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, d), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, o, m, l)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+#
+# FlashAttention2 backward over one chunk pair (q_p vs k_r/v_r), split in two
+# kernels so every output block is written by exactly one grid program (the
+# TPU revisit rule): dq accumulates over kv blocks (grid = q blocks), dk/dv
+# accumulate over q blocks (grid = kv blocks). ``delta = rowsum(do * o)`` is
+# precomputed by the caller (FA2's D).
+
+
+def _bwd_dq_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    do_ref,
+    lse_ref,
+    delta_ref,
+    dq_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    causal: bool,
+):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)
+    row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    upper = qi + 1 if causal else kv_len // block_k
+
+    def body(j, dq_acc):
+        k_j = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        v_j = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        s = (
+            jax.lax.dot_general(
+                q, k_j, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        p = jnp.exp(s - lse[:, None])
+        if causal:
+            col_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            p = jnp.where(row_ids[:, None] >= col_ids[None, :], p, 0.0)
+        dp = jax.lax.dot_general(
+            do, v_j, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None])
+        return dq_acc + jax.lax.dot_general(
+            ds, k_j, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    dq = jax.lax.fori_loop(0, upper, body, jnp.zeros_like(q))
+    dq_ref[...] = dq * scale
+
+
+def _bwd_dkv_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    do_ref,
+    lse_ref,
+    delta_ref,
+    dk_ref,
+    dv_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    q_len: int,
+    causal: bool,
+):
+    kj = pl.program_id(0)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    col_ids = kj * block_k + jax.lax.iota(jnp.int32, block_k)
+    n_q_blocks = q_len // block_q
+    # causal: q blocks before the diagonal contribute nothing to this kv block
+    lower = kj if causal else 0
+
+    def body(i, carry):
+        dk_acc, dv_acc = carry
+        q_i = pl.load(q_ref, (pl.ds(i * block_q, block_q), slice(None)))
+        do_i = pl.load(do_ref, (pl.ds(i * block_q, block_q), slice(None)))
+        lse_i = pl.load(lse_ref, (pl.ds(i * block_q, block_q),))
+        delta_i = pl.load(delta_ref, (pl.ds(i * block_q, block_q),))
+        s = (
+            jax.lax.dot_general(
+                q_i, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        p = jnp.exp(s - lse_i[:, None])
+        if causal:
+            row_ids = i * block_q + jax.lax.iota(jnp.int32, block_q)
+            p = jnp.where(row_ids[:, None] >= col_ids[None, :], p, 0.0)
+        dv_acc = dv_acc + jax.lax.dot_general(
+            p, do_i, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(
+            do_i, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta_i[:, None])
+        dk_acc = dk_acc + jax.lax.dot_general(
+            ds, q_i, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return dk_acc, dv_acc
+
+    dk, dv = jax.lax.fori_loop(
+        lower, n_q_blocks, body, (jnp.zeros_like(k), jnp.zeros_like(v))
+    )
+    dk_ref[...] = dk * scale
+    dv_ref[...] = dv
+
+
+def chunk_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o: jax.Array,
+    lse: jax.Array,
+    do: jax.Array,
+    *,
+    causal: bool,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Backward of one chunk pair without recomputing the attention forward.
+
+    This is what makes the rematerialization-aware checkpointing (§3.3) pay
+    off: given the *saved* final output ``o`` and logsumexp ``lse``, it
+    reconstructs the probabilities p = exp(s - L) block-wise — no forward
+    pass, no inter-worker forward communication.
+
+    Args:
+      q, do, o: ``(Cq, D)`` owner-side tensors; ``lse`` is ``(Cq,)``.
+      k, v: ``(Ck, D)`` the (possibly remote) kv chunk.
+      causal: True for the diagonal pair.
+
+    Returns:
+      ``(dq, dk, dv)`` partials: dq accumulates on the owner, dk/dv are sent
+      back to the kv chunk's owner.
+    """
+    cq, d = q.shape
+    ck = k.shape[0]
+    bq = _pick_block(cq, block)
+    bk = _pick_block(ck, block)
+    if causal:
+        if cq != ck:
+            raise ValueError("causal diagonal chunk requires q/kv same length")
+        bq = bk = min(bq, bk)
+    scale = 1.0 / math.sqrt(d)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=1)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel,
+            scale=scale,
+            block_q=bq,
+            block_k=bk,
+            kv_len=ck,
+            causal=causal,
+        ),
+        grid=(cq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((ck, d), lambda i: (0, 0)),
+            pl.BlockSpec((ck, d), lambda i: (0, 0)),
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel,
+            scale=scale,
+            block_q=bq,
+            block_k=bk,
+            q_len=cq,
+            causal=causal,
+        ),
+        grid=(ck // bk,),
+        in_specs=[
+            pl.BlockSpec((cq, d), lambda i: (0, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((cq, d), lambda i: (0, 0)),
+            pl.BlockSpec((cq,), lambda i: (0,)),
+            pl.BlockSpec((cq,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ck, d), jnp.float32),
+            jax.ShapeDtypeStruct((ck, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# merge / finalize (elementwise; jnp is already optimal here)
+# ---------------------------------------------------------------------------
+
+
+def rescale(o1, m1, l1, o2, m2, l2):
+    """Paper's `rescale(·)`: merge two partial (o, m, l) accumulator triples.
+
+    Used by the load-balanced schedule when a helper worker ships its partial
+    attention result back to the owner (Alg. 2 line 11). Exactly the FA2
+    two-block combine; safe when one side is still the (0, -inf, 0) init.
+    """
+    m = jnp.maximum(m1, m2)
+    # exp(-inf - -inf) would be NaN; a (-inf) m side has zero weight anyway.
+    a1 = jnp.where(jnp.isneginf(m1), 0.0, jnp.exp(m1 - m))
+    a2 = jnp.where(jnp.isneginf(m2), 0.0, jnp.exp(m2 - m))
+    o = o1 * a1[..., None] + o2 * a2[..., None]
+    l = l1 * a1 + l2 * a2
+    return o, m, l
+
+
+def finalize(o, m, l):
+    """The paper's `last=True` epilogue: normalize and emit logsumexp L."""
+    o_norm = o / l[..., None]
+    lse = m + jnp.log(l)
+    return o_norm, lse
+
+
+def init_state(c: int, d: int):
+    """(o^0, m^0, l^0) of Alg. 1 line 1."""
+    return (
+        jnp.zeros((c, d), jnp.float32),
+        jnp.full((c,), -jnp.inf, jnp.float32),
+        jnp.zeros((c,), jnp.float32),
+    )

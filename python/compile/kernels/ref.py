@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas chunk kernels (no Pallas, no blocking).
+
+Everything here is the "obvious" O(C^2)-memory math; the pytest suite
+asserts the blockwise kernels in :mod:`flash_chunk` match these to float32
+tolerance, and the full-sequence oracles are also AOT-exported so the rust
+distributed executor can check its numerics end-to-end.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_fwd_ref(q, k, v, o, m, l, *, causal: bool):
+    """Reference for `flash_chunk.chunk_fwd` (single head, (C, D))."""
+    d = q.shape[-1]
+    s = (q @ k.T) / math.sqrt(d)
+    if causal:
+        cq, ck = s.shape
+        mask = jnp.arange(cq)[:, None] >= jnp.arange(ck)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    m_blk = jnp.max(s, axis=1)
+    p = jnp.exp(s - m_blk[:, None])
+    l_blk = jnp.sum(p, axis=1)
+    o_blk = p @ v
+    # merge (o, m, l) with the incoming accumulator
+    m_new = jnp.maximum(m, m_blk)
+    a_old = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_new))
+    a_blk = jnp.exp(m_blk - m_new)
+    o_new = o * a_old[:, None] + o_blk * a_blk[:, None]
+    l_new = l * a_old + l_blk * a_blk
+    return o_new, m_new, l_new
+
+
+def chunk_bwd_ref(q, k, v, o, lse, do, *, causal: bool):
+    """Reference for `flash_chunk.chunk_bwd` (single head)."""
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    s = (q @ k.T) * scale
+    p = jnp.exp(s - lse[:, None])
+    if causal:
+        cq, ck = s.shape
+        mask = jnp.arange(cq)[:, None] >= jnp.arange(ck)[None, :]
+        p = jnp.where(mask, p, 0.0)
+    delta = jnp.sum(do * o, axis=1)
+    dv = p.T @ do
+    dp = do @ v.T
+    ds = p * (dp - delta[:, None])
+    dq = (ds @ k) * scale
+    dk = (ds.T @ q) * scale
+    return dq, dk, dv
+
+
+def full_attention_ref(q, k, v, *, causal: bool = True):
+    """Monolithic softmax attention over a whole sequence, (C, D) per head."""
+    d = q.shape[-1]
+    s = (q @ k.T) / math.sqrt(d)
+    if causal:
+        cq, ck = s.shape
+        mask = jnp.arange(cq)[:, None] >= jnp.arange(ck)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+def full_attention_lse_ref(q, k, v, *, causal: bool = True):
+    """Full attention plus the per-row logsumexp (for backward checks)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / math.sqrt(d)
+    if causal:
+        cq, ck = s.shape
+        mask = jnp.arange(cq)[:, None] >= jnp.arange(ck)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(s, axis=-1)
+    return jnp.exp(s - lse[:, None]) @ v, lse
+
+
+def mha_full_attention_ref(q, k, v, *, causal: bool = True):
+    """(H, C, D) multi-head wrapper of the monolithic oracle."""
+    return jax.vmap(lambda a, b, c: full_attention_ref(a, b, c, causal=causal))(
+        q, k, v
+    )

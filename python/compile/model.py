@@ -1,0 +1,305 @@
+"""L2: the transformer compute graph, split at the boundaries DISTFLASHATTN needs.
+
+A LLaMA-style decoder layer is exported in two pieces so the rust trainer can
+place the *distributed* attention between them and implement both gradient
+checkpointing strategies (paper §3.3):
+
+    part1:  x ──RMSNorm──QKV proj──► (q, k, v)            [local, per chunk]
+    (distributed DISTFLASHATTN forward happens in rust)
+    part2:  (x, attn_o) ──Wo──+residual──RMSNorm──SwiGLU──+residual──► y
+
+Backward pieces recompute their *own* cheap linear forward internally (that
+recompute is exactly what both checkpointing strategies share); whether the
+expensive distributed attention forward is recomputed is the strategy choice
+and lives entirely in rust (`coordinator::checkpoint`).
+
+All functions are pure with explicit parameter arrays so they AOT-export
+cleanly; the parameter order contract with rust is `layer_param_names()` /
+`global_param_names()` and is recorded in the manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import kernels
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# parameter contract
+# ---------------------------------------------------------------------------
+
+LAYER_PARAMS = ("ln1_g", "wq", "wk", "wv", "wo", "ln2_g", "w1", "w3", "w2")
+GLOBAL_PARAMS = ("w_emb", "ln_f_g", "w_head")
+
+
+def layer_param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    e, f = cfg.d_model, cfg.d_ff
+    kv = cfg.n_kv_heads * cfg.head_dim
+    return {
+        "ln1_g": (e,),
+        "wq": (e, e),
+        "wk": (e, kv),
+        "wv": (e, kv),
+        "wo": (e, e),
+        "ln2_g": (e,),
+        "w1": (e, f),
+        "w3": (e, f),
+        "w2": (f, e),
+    }
+
+
+def global_param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    return {
+        "w_emb": (cfg.vocab, cfg.d_model),
+        "ln_f_g": (cfg.d_model,),
+        "w_head": (cfg.vocab, cfg.d_model),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Scaled-gaussian init; returns (layers: list[dict], globals: dict)."""
+    key = jax.random.PRNGKey(seed)
+    layers = []
+    for _ in range(cfg.n_layers):
+        p = {}
+        for name, shape in layer_param_shapes(cfg).items():
+            key, sub = jax.random.split(key)
+            if name.startswith("ln"):
+                p[name] = jnp.ones(shape, jnp.float32)
+            else:
+                std = 0.02 if name != "w2" else 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+                p[name] = jax.random.normal(sub, shape, jnp.float32) * std
+        layers.append(p)
+    g = {}
+    for name, shape in global_param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name == "ln_f_g":
+            g[name] = jnp.ones(shape, jnp.float32)
+        else:
+            g[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+    return layers, g
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _split_heads(x, n_heads: int, head_dim: int):
+    # (C, H*D) -> (H, C, D)
+    c = x.shape[0]
+    return x.reshape(c, n_heads, head_dim).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    # (H, C, D) -> (C, H*D)
+    h, c, d = x.shape
+    return x.transpose(1, 0, 2).reshape(c, h * d)
+
+
+def repeat_kv(k, group_size: int):
+    """(KVH, C, D) -> (H, C, D) by repeating each kv head over its group."""
+    if group_size == 1:
+        return k
+    return jnp.repeat(k, group_size, axis=0)
+
+
+def group_kv_grads(dk, n_kv_heads: int):
+    """(H, C, D) grads -> (KVH, C, D) by summing each query group."""
+    h, c, d = dk.shape
+    g = h // n_kv_heads
+    if g == 1:
+        return dk
+    return dk.reshape(n_kv_heads, g, c, d).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# layer part 1: RMSNorm + QKV projection
+# ---------------------------------------------------------------------------
+
+
+def part1_fwd(cfg: ModelConfig, x, ln1_g, wq, wk, wv):
+    """x (C, E) -> q (H, C, D), k, v (KVH, C, D)."""
+    xn = rmsnorm(x, ln1_g)
+    q = _split_heads(xn @ wq, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(xn @ wk, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(xn @ wv, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def part1_bwd(cfg: ModelConfig, x, ln1_g, wq, wk, wv, dq, dk, dv):
+    """Recomputes part1 internally (cheap); returns (dx, dln1_g, dwq, dwk, dwv)."""
+
+    def f(x, ln1_g, wq, wk, wv):
+        return part1_fwd(cfg, x, ln1_g, wq, wk, wv)
+
+    _, vjp = jax.vjp(f, x, ln1_g, wq, wk, wv)
+    return vjp((dq, dk, dv))
+
+
+# ---------------------------------------------------------------------------
+# layer part 2: output projection + residual + RMSNorm + SwiGLU + residual
+# ---------------------------------------------------------------------------
+
+
+def part2_fwd(cfg: ModelConfig, x, attn_o, wo, ln2_g, w1, w3, w2):
+    """(x (C, E), attn_o (H, C, D)) -> y (C, E)."""
+    h = x + _merge_heads(attn_o) @ wo
+    hn = rmsnorm(h, ln2_g)
+    y = h + (jax.nn.silu(hn @ w1) * (hn @ w3)) @ w2
+    return y
+
+
+def part2_bwd(cfg: ModelConfig, x, attn_o, wo, ln2_g, w1, w3, w2, dy):
+    """Returns (dx, d_attn_o, dwo, dln2_g, dw1, dw3, dw2)."""
+
+    def f(x, attn_o, wo, ln2_g, w1, w3, w2):
+        return part2_fwd(cfg, x, attn_o, wo, ln2_g, w1, w3, w2)
+
+    _, vjp = jax.vjp(f, x, attn_o, wo, ln2_g, w1, w3, w2)
+    return vjp(dy)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head + loss
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(cfg: ModelConfig, ids, w_emb):
+    """ids (C,) i32 -> x (C, E)."""
+    return jnp.take(w_emb, ids, axis=0)
+
+
+def embed_bwd(cfg: ModelConfig, ids, dx):
+    """Scatter-add gradient into the embedding table."""
+    dw = jnp.zeros((cfg.vocab, cfg.d_model), jnp.float32)
+    return dw.at[ids].add(dx)
+
+
+def head_loss_fwd(cfg: ModelConfig, x, ln_f_g, w_head, targets, inv_total):
+    """Final RMSNorm + LM head + mean token cross-entropy.
+
+    ``inv_total`` is 1/global_token_count so that summing the per-worker
+    scalars (rust ring all-reduce) yields the global mean loss.
+    """
+    xn = rmsnorm(x, ln_f_g)
+    logits = xn @ w_head.T  # (C, V)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.sum(lse - gold) * inv_total
+
+
+def head_loss_bwd(cfg: ModelConfig, x, ln_f_g, w_head, targets, inv_total):
+    """Returns (loss, dx, dln_f_g, dw_head)."""
+
+    def f(x, ln_f_g, w_head):
+        return head_loss_fwd(cfg, x, ln_f_g, w_head, targets, inv_total)
+
+    loss, vjp = jax.vjp(f, x, ln_f_g, w_head)
+    dx, dg, dw = vjp(jnp.float32(1.0))
+    return loss, dx, dg, dw
+
+
+# ---------------------------------------------------------------------------
+# attention artifact wrappers (call the L1 pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def attn_fwd(cfg: ModelConfig, q, k, v, o, m, l, *, causal: bool):
+    """One distributed-attention step: q (H,C,D), k/v (KVH,C,D), state (H,·)."""
+    kf = repeat_kv(k, cfg.group_size)
+    vf = repeat_kv(v, cfg.group_size)
+    return kernels.mha_chunk_fwd(q, kf, vf, o, m, l, causal=causal, block=cfg.block)
+
+
+def attn_bwd(cfg: ModelConfig, q, k, v, o, lse, do, *, causal: bool):
+    """Chunk-pair backward; dk/dv are re-grouped to (KVH, C, D)."""
+    kf = repeat_kv(k, cfg.group_size)
+    vf = repeat_kv(v, cfg.group_size)
+    dq, dk, dv = kernels.mha_chunk_bwd(
+        q, kf, vf, o, lse, do, causal=causal, block=cfg.block
+    )
+    return dq, group_kv_grads(dk, cfg.n_kv_heads), group_kv_grads(dv, cfg.n_kv_heads)
+
+
+def attn_rescale(o1, m1, l1, o2, m2, l2):
+    return kernels.rescale(o1, m1, l1, o2, m2, l2)
+
+
+def attn_finalize(o, m, l):
+    return kernels.finalize(o, m, l)
+
+
+# ---------------------------------------------------------------------------
+# monolithic reference model (oracle for the rust distributed trainer)
+# ---------------------------------------------------------------------------
+
+
+def _layer_full(cfg: ModelConfig, x, p):
+    """One decoder layer over the FULL sequence with monolithic attention."""
+    q, k, v = part1_fwd(cfg, x, p["ln1_g"], p["wq"], p["wk"], p["wv"])
+    kf = repeat_kv(k, cfg.group_size)
+    vf = repeat_kv(v, cfg.group_size)
+    attn_o = kref.mha_full_attention_ref(q, kf, vf, causal=True)
+    return part2_fwd(cfg, x, attn_o, p["wo"], p["ln2_g"], p["w1"], p["w3"], p["w2"])
+
+
+def full_model_loss(cfg: ModelConfig, ids, targets, layers, glob):
+    """Whole-sequence loss with naive attention — the numerics oracle."""
+    x = embed_fwd(cfg, ids, glob["w_emb"])
+    for p in layers:
+        x = _layer_full(cfg, x, p)
+    inv_total = jnp.float32(1.0 / ids.shape[0])
+    return head_loss_fwd(cfg, x, glob["ln_f_g"], glob["w_head"], targets, inv_total)
+
+
+def full_model_fwd_attn_ref(cfg: ModelConfig, q, k, v):
+    """Monolithic full-sequence attention + lse, (H, N, D) in, used by the
+    rust executor's `verify` to check the distributed forward."""
+    kf = repeat_kv(k, cfg.group_size)
+    vf = repeat_kv(v, cfg.group_size)
+
+    def one(qh, kh, vh):
+        return kref.full_attention_lse_ref(qh, kh, vh, causal=True)
+
+    o, lse = jax.vmap(one)(q, kf, vf)
+    return o, lse
+
+
+def flatten_params(layers, glob):
+    """Deterministic flat list matching the manifest's parameter table."""
+    out = []
+    for p in layers:
+        out.extend(p[name] for name in LAYER_PARAMS)
+    out.extend(glob[name] for name in GLOBAL_PARAMS)
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    n = len(LAYER_PARAMS)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(dict(zip(LAYER_PARAMS, flat[i * n : (i + 1) * n])))
+    glob = dict(zip(GLOBAL_PARAMS, flat[cfg.n_layers * n :]))
+    return layers, glob
+
+
+def full_model_loss_flat(cfg: ModelConfig, ids, targets, *flat):
+    layers, glob = unflatten_params(cfg, list(flat))
+    return full_model_loss(cfg, ids, targets, layers, glob)
+
+
+def full_model_grads_flat(cfg: ModelConfig, ids, targets, *flat):
+    """(loss, *grads) — the end-to-end gradient oracle for small configs."""
+    loss, grads = jax.value_and_grad(
+        lambda f: full_model_loss_flat(cfg, ids, targets, *f)
+    )(list(flat))
+    return (loss, *grads)

@@ -1,0 +1,87 @@
+"""AOT pipeline checks: the exported HLO text + manifest must uphold the
+contract the rust runtime depends on (shapes, ordering, dtype names), and
+the HLO must be plain text parseable by xla_extension 0.5.1 (no serialized
+protos — see aot.py docstring)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+from compile.configs import get
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/tiny missing — run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_config_roundtrip(manifest):
+    cfg = get("tiny")
+    c = manifest["config"]
+    assert c["n_workers"] == cfg.n_workers
+    assert c["head_dim"] == cfg.head_dim
+    assert c["seq_len"] == cfg.chunk_len * cfg.n_workers
+    assert c["n_params"] == cfg.n_params()
+
+
+def test_param_order_contract(manifest):
+    names = [p["name"] for p in manifest["layer_params"]]
+    assert names == list(M.LAYER_PARAMS)
+    gnames = [p["name"] for p in manifest["global_params"]]
+    assert gnames == list(M.GLOBAL_PARAMS)
+
+
+def test_all_artifacts_present_and_text(manifest):
+    required = {
+        "attn_fwd_diag", "attn_fwd_full", "attn_bwd_diag", "attn_bwd_full",
+        "attn_rescale", "attn_finalize", "full_attn_ref",
+        "part1_fwd", "part1_bwd", "part2_fwd", "part2_bwd",
+        "embed_fwd", "embed_bwd", "head_loss_fwd", "head_loss_bwd",
+        "full_model_loss", "full_model_grads",
+    }
+    assert required <= set(manifest["artifacts"])
+    for name, a in manifest["artifacts"].items():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        # HLO text, not binary proto
+        assert "HloModule" in head, f"{name} is not HLO text"
+        assert a["inputs"] and a["outputs"], name
+
+
+def test_attn_artifact_shapes(manifest):
+    cfg = get("tiny")
+    a = manifest["artifacts"]["attn_fwd_diag"]
+    h, c, d = cfg.n_heads, cfg.chunk_len, cfg.head_dim
+    shapes = {i["name"]: i["shape"] for i in a["inputs"]}
+    assert shapes["q"] == [h, c, d]
+    assert shapes["k"] == [cfg.n_kv_heads, c, d]
+    assert shapes["m"] == [h, c]
+    assert [o["shape"] for o in a["outputs"]] == [[h, c, d], [h, c], [h, c]]
+
+
+def test_dtypes_are_known(manifest):
+    for a in manifest["artifacts"].values():
+        for t in a["inputs"] + a["outputs"]:
+            assert t["dtype"] in ("f32", "i32")
+
+
+def test_hlo_text_helper_matches_gen(tmp_path):
+    """to_hlo_text must produce xla-parsable text for a fresh lowering."""
+    import jax
+    import jax.numpy as jnp
+
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text

@@ -1,0 +1,254 @@
+"""L1 kernel correctness: Pallas chunk kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/blocks; fixed-seed numpy provides the data. These
+are the CORE correctness signal for the whole stack — the rust executor
+trusts exactly this math.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import flash_chunk as fc
+from compile.kernels import ref
+from compile.kernels import mha_chunk_bwd, mha_chunk_fwd, mha_init_state
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.sampled_from([16, 32, 64, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    block=st.sampled_from([8, 16, 32, 128]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_fwd_matches_ref(c, d, block, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, c, d), rand(rng, c, d), rand(rng, c, d)
+    o0, m0, l0 = fc.init_state(c, d)
+    got = fc.chunk_fwd(q, k, v, o0, m0, l0, causal=causal, block=block)
+    want = ref.chunk_fwd_ref(q, k, v, o0, m0, l0, causal=causal)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.sampled_from([16, 64]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_fwd_accumulates_from_prior_state(c, d, seed):
+    """The kernel must continue from an arbitrary prior (o, m, l), not init."""
+    rng = np.random.default_rng(seed)
+    q = rand(rng, c, d)
+    k1, v1, k2, v2 = (rand(rng, c, d) for _ in range(4))
+    o0, m0, l0 = fc.init_state(c, d)
+    s1 = fc.chunk_fwd(q, k1, v1, o0, m0, l0, causal=False, block=16)
+    got = fc.chunk_fwd(q, k2, v2, *s1, causal=False, block=16)
+    r1 = ref.chunk_fwd_ref(q, k1, v1, o0, m0, l0, causal=False)
+    want = ref.chunk_fwd_ref(q, k2, v2, *r1, causal=False)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    p=st.sampled_from([1, 2, 3, 4, 8]),
+    c=st.sampled_from([16, 32]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multi_chunk_equals_full_attention(p, c, d, seed):
+    """Alg. 1: iterating chunks r<=p + finalize == monolithic causal attn."""
+    rng = np.random.default_rng(seed)
+    n = c * p
+    q, k, v = rand(rng, n, d), rand(rng, n, d), rand(rng, n, d)
+    full, lse_full = ref.full_attention_lse_ref(q, k, v)
+    for wp in range(p):
+        sl = slice(wp * c, (wp + 1) * c)
+        o, m, l = fc.init_state(c, d)
+        o, m, l = fc.chunk_fwd(q[sl], k[sl], v[sl], o, m, l, causal=True, block=16)
+        for r in range(wp):
+            slr = slice(r * c, (r + 1) * c)
+            o, m, l = fc.chunk_fwd(
+                q[sl], k[slr], v[slr], o, m, l, causal=False, block=16
+            )
+        onorm, lse = fc.finalize(o, m, l)
+        assert_allclose(np.asarray(onorm), np.asarray(full[sl]), rtol=RTOL, atol=ATOL)
+        assert_allclose(np.asarray(lse), np.asarray(lse_full[sl]), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rescale_matches_sequential(c, d, seed):
+    """Helper-merge (Alg. 2 rescale) == computing the chunks sequentially."""
+    rng = np.random.default_rng(seed)
+    q = rand(rng, c, d)
+    k1, v1, k2, v2 = (rand(rng, c, d) for _ in range(4))
+    o0, m0, l0 = fc.init_state(c, d)
+    owner = fc.chunk_fwd(q, k1, v1, o0, m0, l0, causal=True, block=16)
+    helper = fc.chunk_fwd(q, k2, v2, *fc.init_state(c, d), causal=False, block=16)
+    merged = fc.rescale(*owner, *helper)
+    seq = fc.chunk_fwd(q, k2, v2, *owner, causal=False, block=16)
+    for g, w in zip(merged, seq):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+def test_rescale_with_empty_side_is_identity():
+    rng = np.random.default_rng(0)
+    c, d = 32, 16
+    q, k, v = rand(rng, c, d), rand(rng, c, d), rand(rng, c, d)
+    s = fc.chunk_fwd(q, k, v, *fc.init_state(c, d), causal=True, block=16)
+    merged = fc.rescale(*s, *fc.init_state(c, d))
+    for g, w in zip(merged, s):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+    assert not np.any(np.isnan(np.asarray(merged[0])))
+
+
+def test_rescale_both_empty_no_nan():
+    a = fc.rescale(*fc.init_state(8, 4), *fc.init_state(8, 4))
+    assert not np.any(np.isnan(np.asarray(a[0])))
+
+
+# --------------------------------------------------------------------------
+# backward
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 32]),
+    block=st.sampled_from([8, 16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_bwd_matches_ref(c, d, block, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, do = (rand(rng, c, d) for _ in range(4))
+    o, lse = ref.full_attention_lse_ref(q, k, v, causal=causal)
+    got = fc.chunk_bwd(q, k, v, o, lse, do, causal=causal, block=block)
+    want = ref.chunk_bwd_ref(q, k, v, o, lse, do, causal=causal)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    p=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_bwd_equals_autodiff(p, seed):
+    """Sum of chunk-pair (dq, dk, dv) partials == jax.grad of the oracle."""
+    rng = np.random.default_rng(seed)
+    c, d = 16, 16
+    n = c * p
+    q, k, v, do = (rand(rng, n, d) for _ in range(4))
+    ofull, lsef = ref.full_attention_lse_ref(q, k, v)
+
+    def loss(q, k, v):
+        return jnp.sum(ref.full_attention_ref(q, k, v, causal=True) * do)
+
+    dq_r, dk_r, dv_r = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    dq = np.zeros((n, d), np.float32)
+    dk = np.zeros((n, d), np.float32)
+    dv = np.zeros((n, d), np.float32)
+    for wp in range(p):
+        sl = slice(wp * c, (wp + 1) * c)
+        for r in range(wp + 1):
+            slr = slice(r * c, (r + 1) * c)
+            dqp, dkr, dvr = fc.chunk_bwd(
+                q[sl], k[slr], v[slr], ofull[sl], lsef[sl], do[sl],
+                causal=(r == wp), block=8,
+            )
+            dq[sl] += np.asarray(dqp)
+            dk[slr] += np.asarray(dkr)
+            dv[slr] += np.asarray(dvr)
+    assert_allclose(dq, np.asarray(dq_r), rtol=1e-3, atol=1e-4)
+    assert_allclose(dk, np.asarray(dk_r), rtol=1e-3, atol=1e-4)
+    assert_allclose(dv, np.asarray(dv_r), rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# multi-head wrappers & edge cases
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", [1, 3, 4])
+def test_mha_wrappers(h):
+    rng = np.random.default_rng(1)
+    c, d = 32, 16
+    q, k, v = (rand(rng, h, c, d) for _ in range(3))
+    o, m, l = mha_init_state(h, c, d)
+    o, m, l = mha_chunk_fwd(q, k, v, o, m, l, causal=True, block=16)
+    for i in range(h):
+        w = ref.chunk_fwd_ref(q[i], k[i], v[i], *fc.init_state(c, d), causal=True)
+        assert_allclose(np.asarray(o[i]), np.asarray(w[0]), rtol=RTOL, atol=ATOL)
+    onorm = o / l[..., None]
+    lse = jnp.asarray(m + np.log(np.asarray(l)))
+    do = rand(rng, h, c, d)
+    dq, dk, dv = mha_chunk_bwd(q, k, v, onorm, lse, do, causal=True, block=16)
+    for i in range(h):
+        w = ref.chunk_bwd_ref(q[i], k[i], v[i], onorm[i], lse[i], do[i], causal=True)
+        assert_allclose(np.asarray(dq[i]), np.asarray(w[0]), rtol=5e-4, atol=5e-5)
+        assert_allclose(np.asarray(dk[i]), np.asarray(w[1]), rtol=5e-4, atol=5e-5)
+        assert_allclose(np.asarray(dv[i]), np.asarray(w[2]), rtol=5e-4, atol=5e-5)
+
+
+def test_block_bigger_than_chunk_clamps():
+    rng = np.random.default_rng(2)
+    c, d = 16, 8
+    q, k, v = (rand(rng, c, d) for _ in range(3))
+    got = fc.chunk_fwd(q, k, v, *fc.init_state(c, d), causal=True, block=4096)
+    want = ref.chunk_fwd_ref(q, k, v, *fc.init_state(c, d), causal=True)
+    assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=RTOL, atol=ATOL)
+
+
+def test_causal_requires_square():
+    rng = np.random.default_rng(3)
+    q = rand(rng, 16, 8)
+    k = rand(rng, 32, 8)
+    with pytest.raises(ValueError):
+        fc.chunk_fwd(q, k, k, *fc.init_state(16, 8), causal=True)
+
+
+def test_large_scores_numerically_stable():
+    """Online softmax must survive logits far outside exp() range."""
+    rng = np.random.default_rng(4)
+    c, d = 32, 16
+    q = rand(rng, c, d) * 100.0
+    k = rand(rng, c, d) * 100.0
+    v = rand(rng, c, d)
+    o, m, l = fc.chunk_fwd(q, k, v, *fc.init_state(c, d), causal=True, block=16)
+    onorm, lse = fc.finalize(o, m, l)
+    assert not np.any(np.isnan(np.asarray(onorm)))
+    want = ref.full_attention_ref(q, k, v, causal=True)
+    assert_allclose(np.asarray(onorm), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_pick_block():
+    assert fc._pick_block(128, 128) == 128
+    assert fc._pick_block(96, 64) == 48
+    assert fc._pick_block(8, 128) == 8
+    assert fc._pick_block(7, 4) == 1

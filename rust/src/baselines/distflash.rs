@@ -1,0 +1,247 @@
+//! DISTFLASHATTN (our system) cost model.
+//!
+//! Sequence parallel over all GPUs; attention timed by the lock-step
+//! schedule simulator (balanced/ring × overlap on/off — the ablation axes
+//! of Figure 4); rematerialization-aware or HF-style checkpointing
+//! (Table 5); FSDP parameter sharding like the paper's experimental setup.
+
+use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
+use crate::coordinator::{CkptStrategy, Schedule, ScheduleKind};
+use crate::simulator::{simulate_attention, AttnCost, SimResult};
+
+use super::{fsdp_param_bytes, IterBreakdown, SystemModel};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DistFlashAttn {
+    pub schedule: ScheduleKind,
+    pub overlap: bool,
+    pub ckpt: CkptStrategy,
+    pub fsdp: bool,
+}
+
+impl Default for DistFlashAttn {
+    fn default() -> Self {
+        DistFlashAttn {
+            schedule: ScheduleKind::Balanced,
+            overlap: true,
+            ckpt: CkptStrategy::RematAware,
+            fsdp: true,
+        }
+    }
+}
+
+impl DistFlashAttn {
+    /// The paper's ablation baseline: ring + no overlap + HF checkpoints —
+    /// what §4.3/§4.5 treat as a PyTorch Ring Attention equivalent.
+    pub fn unoptimized() -> Self {
+        DistFlashAttn {
+            schedule: ScheduleKind::Ring,
+            overlap: false,
+            ckpt: CkptStrategy::HfStyle,
+            fsdp: true,
+        }
+    }
+
+    /// Forward attention cost parameters for one layer.
+    fn attn_cost(&self, model: &PaperModel, cluster: &ClusterSpec, c: f64, bwd: bool) -> AttnCost {
+        let full_flops = model.attn_pair_flops(c, c, false);
+        let diag_flops = model.attn_pair_flops(c, c, true);
+        // FA2 backward does ~2.5x the forward matmul work
+        let mult = if bwd { 2.5 } else { 1.0 };
+        let (kv, q, result) = if bwd {
+            // kv fetch + (dk, dv) return; helper bundle (q, o, lse, do); dq
+            (
+                2.0 * model.kv_bytes(c),
+                3.0 * model.q_bytes(c),
+                model.q_bytes(c),
+            )
+        } else {
+            // kv fetch; q to helper; (o, m, l) partial back
+            (
+                model.kv_bytes(c),
+                model.q_bytes(c),
+                model.q_bytes(c) * 1.1,
+            )
+        };
+        AttnCost {
+            pair_full_s: cluster.compute_time(full_flops * mult, cluster.gpu.mfu_attn),
+            pair_diag_s: cluster.compute_time(diag_flops * mult, cluster.gpu.mfu_attn),
+            rescale_s: cluster.compute_time(
+                (c * (model.n_heads * model.head_dim) as f64) * 4.0,
+                0.05, // elementwise, memory-bound
+            ),
+            kv_bytes: kv,
+            q_bytes: q,
+            result_bytes: result,
+            overlap: self.overlap,
+        }
+    }
+
+    /// Simulated attention timing for one layer (exposed separately for the
+    /// Figure 4 ablations).
+    pub fn attn_sim(
+        &self,
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+        bwd: bool,
+    ) -> SimResult {
+        let schedule = Schedule::build(self.schedule, cluster.n_gpus());
+        let cost = self.attn_cost(model, cluster, seq_per_gpu as f64, bwd);
+        simulate_attention(&schedule, cluster, &cost)
+    }
+
+    fn fsdp_exposed_s(&self, model: &PaperModel, cluster: &ClusterSpec, hideable_s: f64) -> f64 {
+        if !self.fsdp {
+            return 0.0;
+        }
+        let g = cluster.n_gpus();
+        let (bw, lat) = cluster.collective_bottleneck(g);
+        let layer_bytes = model.n_params() / model.n_layers as f64 * 2.0;
+        // per layer: gather weights in fwd + gather in bwd + reduce-scatter
+        // grads; prefetched on a side stream, exposed beyond compute only
+        let per_layer = 2.0 * crate::simulator::collective::all_gather(layer_bytes / g as f64, g, bw, lat)
+            + crate::simulator::collective::reduce_scatter(layer_bytes, g, bw, lat);
+        let total = per_layer * model.n_layers as f64;
+        (total - hideable_s).max(0.0)
+    }
+}
+
+impl SystemModel for DistFlashAttn {
+    fn name(&self) -> String {
+        format!(
+            "DistFlashAttn[{:?},{},{}]",
+            self.schedule,
+            if self.overlap { "overlap" } else { "no-overlap" },
+            self.ckpt.name()
+        )
+    }
+
+    fn iteration(
+        &self,
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+    ) -> IterBreakdown {
+        let p = cluster.n_gpus();
+        let c = seq_per_gpu as f64;
+        let l = model.n_layers as f64;
+        let e = model.d_model as f64;
+
+        // --- per-layer compute ---
+        let lin_fwd = cluster.compute_time(model.layer_linear_flops(c), cluster.gpu.mfu_gemm);
+        let attn_fwd = self.attn_sim(model, cluster, seq_per_gpu, false);
+        let attn_bwd = self.attn_sim(model, cluster, seq_per_gpu, true);
+        // head + embed (once, not per layer)
+        let head_s = cluster.compute_time(
+            2.0 * c * e * model.vocab as f64,
+            cluster.gpu.mfu_gemm,
+        );
+
+        let fwd_per_layer = lin_fwd + attn_fwd.total_s;
+        let bwd_per_layer = 2.0 * lin_fwd + attn_bwd.total_s;
+        let recompute_per_layer = match self.ckpt {
+            // HF-style redoes part1 + distributed attention fwd (incl. comm)
+            CkptStrategy::HfStyle => lin_fwd + attn_fwd.total_s,
+            // ours: only the cheap linear projections
+            CkptStrategy::RematAware => lin_fwd * 0.4, // qkv+ln share of linear
+        };
+
+        let fwd = l * fwd_per_layer + head_s;
+        let bwd = l * bwd_per_layer + 2.0 * head_s;
+        let recompute = l * recompute_per_layer;
+        let exposed = self.fsdp_exposed_s(model, cluster, l * lin_fwd * 2.0);
+
+        // --- memory ---
+        let kv_dim = (model.n_kv_heads * model.head_dim) as f64;
+        let stored_per_layer = c * e * ELEM_BYTES
+            + self.ckpt.extra_saved_floats(model.n_heads, seq_per_gpu, model.head_dim) as f64
+                * ELEM_BYTES;
+        // bwd working set: x, qkv, attn buffers, two in-flight remote kv
+        // chunks (current + prefetch), mlp intermediates
+        let working = c * e * ELEM_BYTES * 6.0
+            + 3.0 * c * (model.d_ff as f64) * ELEM_BYTES
+            + 4.0 * c * kv_dim * ELEM_BYTES;
+        let logits = c * model.vocab as f64 * ELEM_BYTES;
+        let peak = fsdp_param_bytes(model, p) + l * stored_per_layer + working + logits;
+
+        IterBreakdown {
+            fwd_compute_s: fwd,
+            bwd_compute_s: bwd,
+            recompute_s: recompute,
+            exposed_comm_s: exposed
+                + (attn_fwd.total_s - attn_fwd.step_s.len() as f64 * 0.0) * 0.0, // already inside sim
+            peak_mem_bytes: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_overlap_beats_unoptimized() {
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let ours = DistFlashAttn::default().iteration(&model, &cluster, 8192);
+        let base = DistFlashAttn::unoptimized().iteration(&model, &cluster, 8192);
+        assert!(ours.total_s() < base.total_s());
+    }
+
+    #[test]
+    fn remat_aware_saves_attention_recompute() {
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let ours = DistFlashAttn::default();
+        let hf = DistFlashAttn { ckpt: CkptStrategy::HfStyle, ..ours };
+        let a = ours.iteration(&model, &cluster, 32768);
+        let b = hf.iteration(&model, &cluster, 32768);
+        // paper Table 5: 1.31x at 32K/GPU
+        let speedup = b.total_s() / a.total_s();
+        assert!(
+            (1.15..1.6).contains(&speedup),
+            "ckpt speedup {speedup} out of band"
+        );
+    }
+
+    #[test]
+    fn supports_paper_scale_sequences() {
+        // Table 3: >256K total on 1 DGX node, >512K on 2 (80GB)
+        let model = PaperModel::llama_7b();
+        let ours = DistFlashAttn::default();
+        let one = ours.max_seq_per_gpu(&model, &ClusterSpec::dgx_1x8(), 1024, 1 << 20);
+        assert!(
+            one * 8 >= 256 * 1024,
+            "1-node max total {} < 256K",
+            one * 8
+        );
+        let two = ours.max_seq_per_gpu(&model, &ClusterSpec::dgx_2x8(), 1024, 1 << 20);
+        assert!(two * 16 >= 512 * 1024, "2-node max total {}", two * 16);
+    }
+
+    #[test]
+    fn fig4_left_speedups() {
+        // attention-only speedup vs a single GPU: unbalanced saturates
+        // near 4.5x, balanced near 7.5x (Fig. 4 left, 8 GPUs)
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let c = 32768; // long enough to saturate
+        let ours = DistFlashAttn::default();
+        let ring = DistFlashAttn { schedule: ScheduleKind::Ring, ..ours };
+        let single_pair = ours.attn_cost(&model, &cluster, c as f64, false);
+        // single-GPU flash time over the same total sequence (8c tokens):
+        // causal attention = half of full 8c x 8c
+        let single_s = cluster.compute_time(
+            model.attn_pair_flops((8 * c) as f64, (8 * c) as f64, true),
+            cluster.gpu.mfu_attn,
+        );
+        let bal_s = ours.attn_sim(&model, &cluster, c, false).total_s;
+        let ring_s = ring.attn_sim(&model, &cluster, c, false).total_s;
+        let _ = single_pair;
+        let sp_bal = single_s / bal_s;
+        let sp_ring = single_s / ring_s;
+        assert!((4.0..5.0).contains(&sp_ring), "ring speedup {sp_ring}");
+        assert!((6.8..8.0).contains(&sp_bal), "balanced speedup {sp_bal}");
+    }
+}

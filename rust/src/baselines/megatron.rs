@@ -1,0 +1,234 @@
+//! Megatron-LM tensor-parallel baseline (+DP / +PP variants for Table 2).
+//!
+//! Communication volumes follow paper §D: per layer, 6 all-gathers + 4
+//! reduce-scatters on (N/g)·d tensors across fwd+bwd (10Nd), plus the
+//! forward collectives again under gradient checkpointing (14Nd total).
+//! Head padding: Megatron requires heads divisible by the TP degree; with
+//! H=33 on g=16 it pads to 48 heads — 45.5% wasted attention/qkv compute
+//! (§4.2). Memory model uses sequence-parallel activations (Korthikanti
+//! et al.) with full recompute.
+
+use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
+use crate::simulator::collective::{all_gather, reduce_scatter};
+
+use super::{IterBreakdown, SystemModel, OPT_BYTES_PER_PARAM};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MegatronMode {
+    /// Tensor parallel across all GPUs (Table 1 baseline).
+    Tp,
+    /// TP limited to the head count, data parallel elsewhere (Table 2).
+    TpDp,
+    /// TP limited to the head count, pipeline parallel elsewhere (Table 2).
+    TpPp,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Megatron {
+    pub mode: MegatronMode,
+}
+
+impl Megatron {
+    pub fn tp() -> Self {
+        Megatron { mode: MegatronMode::Tp }
+    }
+
+    pub fn tp_dp() -> Self {
+        Megatron { mode: MegatronMode::TpDp }
+    }
+
+    pub fn tp_pp() -> Self {
+        Megatron { mode: MegatronMode::TpPp }
+    }
+
+    /// TP degree and (DP-or-PP) degree for a model on a cluster.
+    pub fn degrees(&self, model: &PaperModel, cluster: &ClusterSpec) -> (usize, usize) {
+        let n = cluster.n_gpus();
+        match self.mode {
+            MegatronMode::Tp => (n, 1),
+            // TP cannot exceed head count without padding every head away;
+            // Table 2 runs TP = heads and spreads the rest
+            MegatronMode::TpDp | MegatronMode::TpPp => {
+                let g = model.n_heads.min(n);
+                (g, n / g)
+            }
+        }
+    }
+
+    /// Padded-heads waste factor: ceil(H/g)·g / H (1.0 when divisible).
+    pub fn pad_factor(model: &PaperModel, g: usize) -> f64 {
+        let h = model.n_heads;
+        let padded = h.div_ceil(g) * g;
+        padded as f64 / h as f64
+    }
+
+    /// Context length given `seq_per_gpu`: every table reports
+    /// seq_per_gpu × n_gpus as the context. Under TP(+DP) the WHOLE context
+    /// lives on one TP group (data parallelism trains other sequences; it
+    /// cannot split this one — the paper's §4.2 point), so the TP group
+    /// processes all N tokens.
+    fn seq_total(&self, cluster: &ClusterSpec, seq_per_gpu: usize) -> f64 {
+        (seq_per_gpu * cluster.n_gpus()) as f64
+    }
+}
+
+impl SystemModel for Megatron {
+    fn name(&self) -> String {
+        match self.mode {
+            MegatronMode::Tp => "Megatron-LM (TP)".into(),
+            MegatronMode::TpDp => "Megatron-LM (TP+DP)".into(),
+            MegatronMode::TpPp => "Megatron-LM (TP+PP)".into(),
+        }
+    }
+
+    fn iteration(
+        &self,
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+    ) -> IterBreakdown {
+        let (g, rest) = self.degrees(model, cluster);
+        let dp = if self.mode == MegatronMode::TpDp { rest } else { 1 };
+        let pp = if self.mode == MegatronMode::TpPp { rest } else { 1 };
+        let n = self.seq_total(cluster, seq_per_gpu);
+        let l = model.n_layers as f64;
+        let pad = Self::pad_factor(model, g);
+
+        // --- compute (per GPU): layer flops / g, attention+qkv padded ---
+        let lin = cluster.compute_time(
+            model.layer_linear_flops(n) * pad / g as f64,
+            cluster.gpu.mfu_gemm,
+        );
+        let attn = cluster.compute_time(
+            model.attn_pair_flops(n, n, true) * pad / g as f64,
+            cluster.gpu.mfu_attn,
+        );
+        let head_s = cluster.compute_time(
+            2.0 * n * model.d_model as f64 * model.vocab as f64 / g as f64,
+            cluster.gpu.mfu_gemm,
+        );
+        let fwd_layer = lin + attn;
+
+        // --- §D comm: fwd 2AG+2RS, bwd 4 more, recompute fwd again ---
+        let (bw, lat) = cluster.collective_bottleneck(g);
+        let shard_bytes = n * model.d_model as f64 * ELEM_BYTES / g as f64;
+        let ag = all_gather(shard_bytes, g, bw, lat);
+        let rs = reduce_scatter(shard_bytes * g as f64, g, bw, lat);
+        let comm_fwd_layer = 2.0 * ag + 2.0 * rs;
+        let comm_bwd_layer = 4.0 * ag + 2.0 * rs; // 6AG+4RS total fwd+bwd
+        let comm_per_layer = comm_fwd_layer * 2.0 + comm_bwd_layer; // + recompute
+
+        // pipeline bubble: (pp-1)/m with m microbatches; paper runs few
+        // microbatches at batch 1 — model m = pp (modest bubble)
+        let bubble = if pp > 1 { (pp - 1) as f64 / pp as f64 } else { 0.0 };
+        let layers_here = l / pp as f64;
+
+        let fwd = layers_here * fwd_layer + head_s;
+        // FA2 backward is ~2.5x its forward; GEMM backward is 2x
+        let bwd = layers_here * (2.0 * lin + 2.5 * attn) + 2.0 * head_s;
+        let recompute = layers_here * fwd_layer;
+        let exposed = layers_here * comm_per_layer
+            + bubble * (fwd + bwd + recompute);
+
+        // --- memory ---
+        // batch size 1: a single sequence cannot be microbatched, so PP
+        // keeps one in-flight activation set; DP shards only optimizer
+        // state (Megatron distributed optimizer / ZeRO-1)
+        let params_here = model.n_params() / (g * pp) as f64;
+        let param_bytes = params_here * 4.0
+            + model.n_params() * 12.0 / (g * pp * dp.max(1)) as f64;
+        // sequence-parallel checkpointed input per layer: N·E/g, plus the
+        // recompute working set of one layer (~6 activations of N·E/g and
+        // 3 of N·F/g), flash attention => no N² term
+        let e = model.d_model as f64;
+        let stored = layers_here * n * e * ELEM_BYTES / g as f64;
+        let working = 6.0 * n * e * ELEM_BYTES / g as f64
+            + 3.0 * n * model.d_ff as f64 * ELEM_BYTES / g as f64;
+        // vocab-parallel cross-entropy: fp32 logits; the last PP stage
+        // additionally keeps a softmax copy (the Table 6 jump)
+        let logits = n * model.vocab as f64 * (if pp > 1 { 8.0 } else { 4.0 })
+            / g as f64;
+        let peak = param_bytes + stored + working + logits;
+
+        IterBreakdown {
+            fwd_compute_s: fwd,
+            bwd_compute_s: bwd,
+            recompute_s: recompute,
+            exposed_comm_s: exposed,
+            peak_mem_bytes: peak,
+        }
+    }
+}
+
+/// Per-stage memory for Megatron TP+PP (Table 6's uneven distribution):
+/// stage i of S holds (S - i) in-flight microbatch activations (1F1B) plus
+/// its layer shard; stage 0 adds the embedding, the last adds head+loss.
+pub fn pp_stage_memory(
+    model: &PaperModel,
+    cluster: &ClusterSpec,
+    seq_per_gpu: usize,
+    tp: usize,
+    pp: usize,
+) -> Vec<f64> {
+    let n = (seq_per_gpu * cluster.n_gpus()) as f64;
+    let e = model.d_model as f64;
+    let l = model.n_layers as f64 / pp as f64;
+    let emb_bytes = model.vocab as f64 * e * OPT_BYTES_PER_PARAM / tp as f64;
+    let layer_params =
+        (model.n_params() - 2.0 * model.vocab as f64 * e) / model.n_layers as f64;
+    (0..pp)
+        .map(|i| {
+            let in_flight = (pp - i) as f64;
+            let stored = l * n * e * ELEM_BYTES / tp as f64 * in_flight;
+            let params = l * layer_params * OPT_BYTES_PER_PARAM / tp as f64;
+            let ends = if i == 0 {
+                emb_bytes
+            } else if i == pp - 1 {
+                // LM head + fp32 logits + softmax/loss copies — the jump
+                // Table 6 shows on the last stage (17.9GB -> 32GB)
+                emb_bytes + n * model.vocab as f64 * (4.0 + 4.0) / tp as f64
+            } else {
+                0.0
+            };
+            params + stored + ends
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_factor_matches_paper() {
+        // 33 heads on TP=16 → pad to 48 → 45.5% waste (§4.2)
+        let m = PaperModel::llama_33h();
+        let f = Megatron::pad_factor(&m, 16);
+        assert!((f - 48.0 / 33.0).abs() < 1e-12);
+        assert!(((f - 1.0) * 100.0 - 45.45).abs() < 0.1);
+        // divisible → no waste
+        assert_eq!(Megatron::pad_factor(&PaperModel::llama_7b(), 8), 1.0);
+    }
+
+    #[test]
+    fn degrees_respect_head_limit() {
+        let cluster = ClusterSpec::cluster_16x40g();
+        let m2 = PaperModel::llama_nh(2);
+        assert_eq!(Megatron::tp_dp().degrees(&m2, &cluster), (2, 8));
+        assert_eq!(Megatron::tp().degrees(&m2, &cluster), (16, 1));
+    }
+
+    #[test]
+    fn pp_memory_uneven_first_heaviest_activations() {
+        let m = PaperModel::llama_nh(2);
+        let cluster = ClusterSpec::cluster_16x40g();
+        let stages = pp_stage_memory(&m, &cluster, 8192, 2, 8);
+        assert_eq!(stages.len(), 8);
+        // Table 6 shape: early stages heavier than middle, last jumps up
+        assert!(stages[0] > stages[5]);
+        assert!(stages[7] > stages[5]);
+        let spread = stages.iter().cloned().fold(0.0, f64::max)
+            / stages.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1.3, "spread {spread}");
+    }
+}

@@ -1,0 +1,114 @@
+//! Ring Self-Attention baseline (Li et al. 2021) — the first sequence
+//! parallelism system, predating memory-efficient attention.
+//!
+//! Two structural handicaps vs DISTFLASHATTN (§4.3):
+//! 1. No FlashAttention: every worker materializes its (c × N) attention
+//!    score matrix per head for the backward pass — the memory term that
+//!    caps RSA at 8x shorter sequences in Table 3.
+//! 2. Unfused, non-causal-aware ring: P full rounds of kv exchange
+//!    (2Nd forward volume, no causal skip), unoverlapped, and the
+//!    attention math runs at memory-bound efficiency.
+
+use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
+use crate::simulator::collective::p2p;
+
+use super::{fsdp_param_bytes, IterBreakdown, SystemModel};
+
+/// Effective MFU of unfused attention (separate matmul/softmax/dropout
+/// kernels bouncing through HBM).
+const RSA_ATTN_MFU: f64 = 0.11;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RingSelfAttention;
+
+impl SystemModel for RingSelfAttention {
+    fn name(&self) -> String {
+        "Ring Self-Attention".into()
+    }
+
+    fn iteration(
+        &self,
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+    ) -> IterBreakdown {
+        let p = cluster.n_gpus();
+        let c = seq_per_gpu as f64;
+        let n = c * p as f64;
+        let l = model.n_layers as f64;
+        let e = model.d_model as f64;
+
+        let lin = cluster.compute_time(model.layer_linear_flops(c), cluster.gpu.mfu_gemm);
+        // P ring rounds, full (unmasked) pair each round, low MFU
+        let attn_round = cluster.compute_time(
+            model.attn_pair_flops(c, c, false),
+            RSA_ATTN_MFU,
+        );
+        // kv hop each round; RSA overlaps nothing
+        let worst_link = {
+            let (bw, lat) = cluster.ring_bottleneck(p);
+            p2p(model.kv_bytes(c), bw, lat)
+        };
+        let attn_fwd = p as f64 * (attn_round + worst_link);
+        let head_s =
+            cluster.compute_time(2.0 * c * e * model.vocab as f64, cluster.gpu.mfu_gemm);
+
+        let fwd = l * (lin + attn_fwd) + head_s;
+        // unfused attention backward: ~2.5x forward (plus the same ring)
+        let bwd = l * (2.0 * lin + 2.5 * attn_fwd) + 2.0 * head_s;
+        let recompute = l * (lin + attn_fwd); // HF-style checkpoints
+
+        // --- memory: the killer term — materialized scores (c × N) per
+        // head, with ~3 live copies (scores, softmax, grad) during bwd ---
+        let scores = model.n_heads as f64 * c * n * ELEM_BYTES * 3.0;
+        let stored = l * c * e * ELEM_BYTES;
+        let working = 6.0 * c * e * ELEM_BYTES + 3.0 * c * model.d_ff as f64 * ELEM_BYTES;
+        let logits = c * model.vocab as f64 * ELEM_BYTES;
+        let peak = fsdp_param_bytes(model, p) + scores + stored + working + logits;
+
+        IterBreakdown {
+            fwd_compute_s: fwd,
+            bwd_compute_s: bwd,
+            recompute_s: recompute,
+            exposed_comm_s: 0.0, // already serialized into attn_fwd
+            peak_mem_bytes: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::distflash::DistFlashAttn;
+
+    #[test]
+    fn rsa_max_seq_8x_shorter() {
+        // Table 3: RSA caps at 32K total on one DGX node; ours > 256K
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let rsa = RingSelfAttention.max_seq_per_gpu(&model, &cluster, 1024, 1 << 20);
+        let ours =
+            DistFlashAttn::default().max_seq_per_gpu(&model, &cluster, 1024, 1 << 20);
+        let rsa_total = rsa * 8;
+        let ours_total = ours * 8;
+        assert!(
+            (16 * 1024..=64 * 1024).contains(&rsa_total),
+            "RSA total {rsa_total}"
+        );
+        assert!(ours_total / rsa_total >= 8, "{ours_total} / {rsa_total}");
+    }
+
+    #[test]
+    fn rsa_iteration_much_slower() {
+        // Table 3: 5.64x at 32K total / 1 node
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let seq = 4096; // 32K / 8
+        let slow = RingSelfAttention.iteration(&model, &cluster, seq).total_s();
+        let fast = DistFlashAttn::default()
+            .iteration(&model, &cluster, seq)
+            .total_s();
+        let ratio = slow / fast;
+        assert!((3.5..8.0).contains(&ratio), "RSA slowdown {ratio}");
+    }
+}

@@ -1,0 +1,112 @@
+//! DeepSpeed-Ulysses baseline (Jacobs et al. 2023).
+//!
+//! Sequence parallel everywhere except attention, which is head-parallel:
+//! four all-to-alls per layer forward (q, k, v in; o out) re-shard tokens
+//! to heads and back, four more in backward, four again when checkpointing
+//! recomputes the forward. Head-parallelism inherits Megatron's padding
+//! problem on irregular head counts (§4.4: 1.81-1.88x slower on LLaMA-33H)
+//! and its max parallel degree is the head count.
+
+use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
+use crate::simulator::collective::all_to_all;
+
+use super::{fsdp_param_bytes, IterBreakdown, SystemModel};
+use super::megatron::Megatron;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ulysses;
+
+impl SystemModel for Ulysses {
+    fn name(&self) -> String {
+        "DeepSpeed-Ulysses".into()
+    }
+
+    fn iteration(
+        &self,
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+    ) -> IterBreakdown {
+        let p = cluster.n_gpus();
+        let c = seq_per_gpu as f64; // local tokens
+        let n = c * p as f64; // full sequence
+        let l = model.n_layers as f64;
+        let e = model.d_model as f64;
+        let pad = Megatron::pad_factor(model, p);
+
+        // --- compute ---
+        // linear parts on local c tokens; attention: padded heads / p over
+        // the full sequence (causal, flash)
+        let lin = cluster.compute_time(model.layer_linear_flops(c), cluster.gpu.mfu_gemm);
+        let attn = cluster.compute_time(
+            model.attn_pair_flops(n, n, true) * pad / p as f64,
+            cluster.gpu.mfu_attn,
+        );
+        let head_s =
+            cluster.compute_time(2.0 * c * e * model.vocab as f64, cluster.gpu.mfu_gemm);
+
+        // --- comm: 4 a2a fwd + 4 bwd + 4 recompute on (c·E)-ish tensors;
+        // kv a2a shrink under GQA ---
+        let (bw, lat) = cluster.collective_bottleneck(p);
+        let q_bytes = c * e * ELEM_BYTES;
+        let kv_bytes = c * (model.n_kv_heads * model.head_dim) as f64 * ELEM_BYTES;
+        let a2a_set = all_to_all(q_bytes, p, bw, lat) * 2.0 // q in, o out
+            + all_to_all(kv_bytes, p, bw, lat) * 2.0; // k, v in
+        let comm_per_layer = 3.0 * a2a_set; // fwd + bwd + ckpt recompute
+
+        let fwd = l * (lin + attn) + head_s;
+        // FA2 backward is ~2.5x its forward; GEMM backward is 2x
+        let bwd = l * (2.0 * lin + 2.5 * attn) + 2.0 * head_s;
+        let recompute = l * (lin + attn);
+        let exposed = l * comm_per_layer;
+
+        // --- memory: like ours but layer-boundary checkpoints (no extra
+        // saved attention outputs) and full-N heads working set ---
+        let stored = l * c * e * ELEM_BYTES;
+        let padded_heads = (model.n_heads as f64 * pad) / p as f64;
+        let attn_working = 4.0 * n * padded_heads * model.head_dim as f64 * ELEM_BYTES;
+        let working = 6.0 * c * e * ELEM_BYTES
+            + 3.0 * c * model.d_ff as f64 * ELEM_BYTES
+            + attn_working;
+        let logits = c * model.vocab as f64 * ELEM_BYTES;
+        let peak = fsdp_param_bytes(model, p) + stored + working + logits;
+
+        IterBreakdown {
+            fwd_compute_s: fwd,
+            bwd_compute_s: bwd,
+            recompute_s: recompute,
+            exposed_comm_s: exposed,
+            peak_mem_bytes: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::distflash::DistFlashAttn;
+
+    #[test]
+    fn irregular_heads_hurt_ulysses_more() {
+        let cluster = ClusterSpec::dgx_2x8();
+        let ours = DistFlashAttn::default();
+        let uly = Ulysses;
+        let seq = 16384;
+        let r7b = uly
+            .iteration(&PaperModel::llama_7b(), &cluster, seq)
+            .total_s()
+            / ours
+                .iteration(&PaperModel::llama_7b(), &cluster, seq)
+                .total_s();
+        let r33 = uly
+            .iteration(&PaperModel::llama_33h(), &cluster, seq)
+            .total_s()
+            / ours
+                .iteration(&PaperModel::llama_33h(), &cluster, seq)
+                .total_s();
+        assert!(r33 > r7b, "33H ratio {r33} should exceed 7B ratio {r7b}");
+        // paper Table 4: 1.21-1.26x (7B) and 1.81-1.88x (33H)
+        assert!((1.05..1.6).contains(&r7b), "7B ratio {r7b}");
+        assert!((1.5..2.4).contains(&r33), "33H ratio {r33}");
+    }
+}

@@ -1,0 +1,312 @@
+//! Model and cluster presets for the analytic cost models.
+//!
+//! These mirror the paper's §4 experimental setup: LLaMA-7B and variants
+//! (GQA, 33 irregular heads, fewer-heads 16H/8H/4H/2H) on one or two
+//! A100 DGX boxes (NVLink intra-node, 100 Gbps InfiniBand inter-node) plus
+//! the in-house 2×8 A100-40GB development cluster.
+//!
+//! All sizes in *elements* unless suffixed `_bytes`; times in seconds;
+//! bandwidths in bytes/second. Training data type is bf16 (2 bytes), the
+//! paper's setting.
+
+/// Bytes per activation/weight element in the perf model (bf16).
+pub const ELEM_BYTES: f64 = 2.0;
+
+/// A transformer configuration as the cost models see it.
+#[derive(Clone, Debug)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+}
+
+impl PaperModel {
+    pub fn llama_7b() -> Self {
+        PaperModel {
+            name: "LLaMA-7B",
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ff: 11008,
+            head_dim: 128,
+            vocab: 32000,
+        }
+    }
+
+    /// LLaMA-7B with 8 kv heads shared by groups of 4 queries (§4 GQA).
+    pub fn llama_gqa() -> Self {
+        PaperModel { name: "LLaMA-GQA", n_kv_heads: 8, ..Self::llama_7b() }
+    }
+
+    /// 33 attention heads (irregular, non-power-of-two; §4.2).
+    pub fn llama_33h() -> Self {
+        PaperModel {
+            name: "LLaMA-33H",
+            n_heads: 33,
+            n_kv_heads: 33,
+            d_model: 33 * 128,
+            ..Self::llama_7b()
+        }
+    }
+
+    /// Fewer-heads family (Liu et al. recipe, §4 model setup): heads ∈
+    /// {16, 8, 4, 2}, hidden = heads·128, layers scaled to keep ~7B params,
+    /// FFN width kept at 11008.
+    pub fn llama_nh(heads: usize) -> Self {
+        let (name, layers) = match heads {
+            16 => ("LLaMA-16H", 64),
+            8 => ("LLaMA-8H", 128),
+            4 => ("LLaMA-4H", 256),
+            2 => ("LLaMA-2H", 512),
+            _ => panic!("llama_nh supports 2/4/8/16 heads"),
+        };
+        PaperModel {
+            name,
+            n_layers: layers,
+            d_model: heads * 128,
+            n_heads: heads,
+            n_kv_heads: heads,
+            d_ff: 11008,
+            head_dim: 128,
+            vocab: 32000,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama-7b" | "LLaMA-7B" => Some(Self::llama_7b()),
+            "llama-gqa" | "LLaMA-GQA" => Some(Self::llama_gqa()),
+            "llama-33h" | "LLaMA-33H" => Some(Self::llama_33h()),
+            "llama-16h" | "LLaMA-16H" => Some(Self::llama_nh(16)),
+            "llama-8h" | "LLaMA-8H" => Some(Self::llama_nh(8)),
+            "llama-4h" | "LLaMA-4H" => Some(Self::llama_nh(4)),
+            "llama-2h" | "LLaMA-2H" => Some(Self::llama_nh(2)),
+            _ => None,
+        }
+    }
+
+    /// Parameter count (RMSNorm + untied embeddings included).
+    pub fn n_params(&self) -> f64 {
+        let e = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let kv = (self.n_kv_heads * self.head_dim) as f64;
+        let per_layer = e + e * e + 2.0 * e * kv + e * e + e + 3.0 * e * f;
+        self.n_layers as f64 * per_layer + e + 2.0 * self.vocab as f64 * e
+    }
+
+    /// Linear (non-attention) forward FLOPs for `tokens` tokens, per layer.
+    pub fn layer_linear_flops(&self, tokens: f64) -> f64 {
+        let e = self.d_model as f64;
+        let f = self.d_ff as f64;
+        let kv = (self.n_kv_heads * self.head_dim) as f64;
+        // qkv + out proj + swiglu (w1, w3, w2)
+        2.0 * tokens * (e * e + 2.0 * e * kv + e * e + 3.0 * e * f)
+    }
+
+    /// Attention score+value FLOPs between a q span and a kv span (per
+    /// layer, all heads, both matmuls). `causal_half` halves it for the
+    /// masked diagonal region.
+    pub fn attn_pair_flops(&self, q_tokens: f64, kv_tokens: f64, causal_half: bool) -> f64 {
+        let per = 4.0 * q_tokens * kv_tokens * (self.n_heads * self.head_dim) as f64;
+        if causal_half {
+            per / 2.0
+        } else {
+            per
+        }
+    }
+
+    /// kv bytes for a token span (what DISTFLASHATTN ships between workers).
+    pub fn kv_bytes(&self, tokens: f64) -> f64 {
+        2.0 * tokens * (self.n_kv_heads * self.head_dim) as f64 * ELEM_BYTES
+    }
+
+    /// q (or attention-output) bytes for a token span.
+    pub fn q_bytes(&self, tokens: f64) -> f64 {
+        tokens * (self.n_heads * self.head_dim) as f64 * ELEM_BYTES
+    }
+}
+
+/// One GPU's roofline for the analytic model.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// Dense bf16 peak, FLOP/s.
+    pub peak_flops: f64,
+    /// Achievable fraction of peak for fused flash-attention kernels.
+    pub mfu_attn: f64,
+    /// Achievable fraction of peak for big GEMMs.
+    pub mfu_gemm: f64,
+    /// HBM capacity, bytes.
+    pub mem_bytes: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_80g() -> Self {
+        GpuSpec {
+            peak_flops: 312e12,
+            mfu_attn: 0.45, // FA2 reaches ~0.4-0.5 on A100
+            mfu_gemm: 0.55,
+            mem_bytes: 80e9,
+        }
+    }
+
+    pub fn a100_40g() -> Self {
+        GpuSpec { mem_bytes: 40e9, ..Self::a100_80g() }
+    }
+}
+
+/// Cluster topology: `n_nodes` boxes of `gpus_per_node`, NVLink inside,
+/// InfiniBand between.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    /// NVLink per-GPU unidirectional bandwidth, B/s.
+    pub intra_bw: f64,
+    pub intra_lat: f64,
+    /// Inter-node (per node pair) bandwidth, B/s.
+    pub inter_bw: f64,
+    pub inter_lat: f64,
+}
+
+impl ClusterSpec {
+    /// One A100-80GB DGX box (§4 cluster setup 1).
+    pub fn dgx_1x8() -> Self {
+        ClusterSpec {
+            n_nodes: 1,
+            gpus_per_node: 8,
+            gpu: GpuSpec::a100_80g(),
+            intra_bw: 250e9, // NVLink3 effective unidirectional
+            intra_lat: 5e-6,
+            inter_bw: 12.5e9, // 100 Gbps IB
+            inter_lat: 15e-6,
+        }
+    }
+
+    /// Two DGX boxes over 100 Gbps InfiniBand (§4 default setup).
+    pub fn dgx_2x8() -> Self {
+        ClusterSpec { n_nodes: 2, ..Self::dgx_1x8() }
+    }
+
+    /// In-house 2×8 A100 40GB development cluster (§4 cluster setup 3).
+    pub fn dev_2x8_40g() -> Self {
+        ClusterSpec {
+            gpu: GpuSpec::a100_40g(),
+            inter_bw: 6e9, // "unstable inter-node bandwidth"
+            ..Self::dgx_2x8()
+        }
+    }
+
+    /// 16 GPU A100-40GB cluster used by Table 2 / Table 3.
+    pub fn cluster_16x40g() -> Self {
+        Self::dev_2x8_40g()
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    /// (bandwidth, latency) of the path between two GPUs.
+    pub fn link(&self, a: usize, b: usize) -> (f64, f64) {
+        if self.node_of(a) == self.node_of(b) {
+            (self.intra_bw, self.intra_lat)
+        } else {
+            (self.inter_bw, self.inter_lat)
+        }
+    }
+
+    /// Bottleneck link of a ring over GPUs `0..g`: inter-node if the group
+    /// spans nodes, NVLink otherwise. Single-flow (one NIC) — what a P2P
+    /// chunk fetch sees.
+    pub fn ring_bottleneck(&self, group: usize) -> (f64, f64) {
+        if group > self.gpus_per_node {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        }
+    }
+
+    /// Effective bandwidth for *collectives* spanning nodes: NCCL stripes
+    /// the data over one ring channel per NIC (8 per DGX), so the
+    /// aggregate inter-node bandwidth is gpus_per_node × per-NIC bw.
+    pub fn collective_bottleneck(&self, group: usize) -> (f64, f64) {
+        if group > self.gpus_per_node {
+            (
+                self.inter_bw * self.gpus_per_node.min(8) as f64,
+                self.inter_lat,
+            )
+        } else {
+            (self.intra_bw, self.intra_lat)
+        }
+    }
+
+    /// Compute time for `flops` at the given MFU.
+    pub fn compute_time(&self, flops: f64, mfu: f64) -> f64 {
+        flops / (self.gpu.peak_flops * mfu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_param_count() {
+        let p = PaperModel::llama_7b().n_params();
+        assert!((6.5e9..7.5e9).contains(&p), "got {p:e}");
+    }
+
+    #[test]
+    fn nh_family_keeps_params_comparable() {
+        let base = PaperModel::llama_nh(16).n_params();
+        for h in [8, 4, 2] {
+            let p = PaperModel::llama_nh(h).n_params();
+            // FFN width fixed => params grow a bit as layers double, but
+            // stay within ~2.5x of the 16H reference (paper: "comparable")
+            assert!(p / base < 2.5 && p / base > 0.7, "{h}H: {p:e} vs {base:e}");
+        }
+    }
+
+    #[test]
+    fn head_dim_consistency() {
+        for m in [
+            PaperModel::llama_7b(),
+            PaperModel::llama_33h(),
+            PaperModel::llama_nh(4),
+        ] {
+            assert_eq!(m.n_heads * m.head_dim, m.d_model, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn gqa_reduces_kv_bytes_4x() {
+        let mha = PaperModel::llama_7b();
+        let gqa = PaperModel::llama_gqa();
+        assert_eq!(mha.kv_bytes(1024.0) / gqa.kv_bytes(1024.0), 4.0);
+        // but same attention FLOPs (kv replicated before matmul)
+        assert_eq!(
+            mha.attn_pair_flops(8.0, 8.0, false),
+            gqa.attn_pair_flops(8.0, 8.0, false)
+        );
+    }
+
+    #[test]
+    fn cluster_links() {
+        let c = ClusterSpec::dgx_2x8();
+        assert_eq!(c.n_gpus(), 16);
+        assert_eq!(c.link(0, 7).0, c.intra_bw);
+        assert_eq!(c.link(0, 8).0, c.inter_bw);
+        assert_eq!(c.ring_bottleneck(8).0, c.intra_bw);
+        assert_eq!(c.ring_bottleneck(16).0, c.inter_bw);
+    }
+}

@@ -1,0 +1,296 @@
+//! Host-side communication substrate: the NCCL substitute.
+//!
+//! Each worker thread owns a `WorkerComm`: senders to every peer, its own
+//! receiver, and a stash for out-of-order arrivals. Messages are tagged, so
+//! eager (non-blocking) sends at the top of a timestep give the same
+//! overlap semantics the paper gets from a second CUDA stream: the payload
+//! is already in the receiver's mailbox by the time it blocks on `recv`.
+//!
+//! Per-worker byte counters feed the communication-volume reports (paper
+//! §D); the ring all-reduce implements the gradient synchronization the
+//! trainer needs (the paper trains with FSDP/DDP outside the attention —
+//! here parameters are replicated, so a plain ring all-reduce suffices).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::runtime::Tensor;
+
+/// Message tag: unique per (semantic space, step, counter). Spaces keep
+/// attention steps, gradient returns, and all-reduce rounds from colliding
+/// across layers and training steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub space: u32,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Tag {
+    pub const KV: u32 = 1;
+    pub const Q_BUNDLE: u32 = 2;
+    pub const HELPER_RESULT: u32 = 3;
+    pub const KV_GRAD: u32 = 4;
+    pub const ALL_REDUCE: u32 = 5;
+    pub const GATHER: u32 = 6;
+    pub const BARRIER: u32 = 7;
+
+    pub fn new(space: u32, a: u32, b: u32) -> Tag {
+        Tag { space, a, b }
+    }
+}
+
+struct Message {
+    from: usize,
+    tag: Tag,
+    tensors: Vec<Tensor>,
+}
+
+/// Build the fully-connected mailbox fabric for `p` workers.
+pub fn build_network(p: usize) -> Vec<WorkerComm> {
+    let mut senders = Vec::with_capacity(p);
+    let mut receivers = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel::<Message>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let bytes: Arc<Vec<AtomicU64>> = Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, rx)| WorkerComm {
+            rank,
+            n_workers: p,
+            senders: senders.clone(),
+            rx,
+            stash: HashMap::new(),
+            bytes_sent: bytes.clone(),
+        })
+        .collect()
+}
+
+pub struct WorkerComm {
+    pub rank: usize,
+    pub n_workers: usize,
+    senders: Vec<Sender<Message>>,
+    rx: Receiver<Message>,
+    stash: HashMap<(usize, Tag), Vec<Vec<Tensor>>>,
+    bytes_sent: Arc<Vec<AtomicU64>>,
+}
+
+impl WorkerComm {
+    /// Non-blocking tagged send (the "second stream": returns immediately).
+    pub fn send(&self, to: usize, tag: Tag, tensors: Vec<Tensor>) {
+        let nbytes: usize = tensors.iter().map(|t| t.numel() * 4).sum();
+        self.bytes_sent[self.rank].fetch_add(nbytes as u64, Ordering::Relaxed);
+        self.senders[to]
+            .send(Message { from: self.rank, tag, tensors })
+            .expect("peer hung up");
+    }
+
+    /// Blocking tagged receive; out-of-order arrivals are stashed.
+    pub fn recv(&mut self, from: usize, tag: Tag) -> Vec<Tensor> {
+        if let Some(q) = self.stash.get_mut(&(from, tag)) {
+            if !q.is_empty() {
+                let t = q.remove(0);
+                if q.is_empty() {
+                    self.stash.remove(&(from, tag));
+                }
+                return t;
+            }
+        }
+        loop {
+            let msg = self.rx.recv().expect("network closed while waiting");
+            if msg.from == from && msg.tag == tag {
+                return msg.tensors;
+            }
+            self.stash
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push(msg.tensors);
+        }
+    }
+
+    /// Total bytes this worker has sent so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent[self.rank].load(Ordering::Relaxed)
+    }
+
+    /// Bytes sent across all workers (global comm volume).
+    pub fn bytes_sent_global(&self) -> u64 {
+        self.bytes_sent.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Ring all-reduce (sum): reduce-scatter then all-gather, the standard
+    /// 2(P-1)/P · bytes algorithm. `round` must be globally unique per call
+    /// site (e.g. derived from train step + param index).
+    pub fn all_reduce_sum(&mut self, round: u32, t: &mut Tensor) {
+        let p = self.n_workers;
+        if p == 1 {
+            return;
+        }
+        let n = t.data.len();
+        // segment boundaries (last segment absorbs the remainder)
+        let seg = |i: usize| -> std::ops::Range<usize> {
+            let base = n / p;
+            let start = i * base;
+            let end = if i == p - 1 { n } else { start + base };
+            start..end
+        };
+        let next = (self.rank + 1) % p;
+        let prev = (self.rank + p - 1) % p;
+        // reduce-scatter: after P-1 hops, segment (rank+1)%p is fully
+        // reduced at this rank
+        for step in 0..p - 1 {
+            let send_seg = (self.rank + p - step) % p;
+            let recv_seg = (self.rank + p - step - 1) % p;
+            let tag = Tag::new(Tag::ALL_REDUCE, round, step as u32);
+            let payload = Tensor::new(
+                vec![seg(send_seg).len()],
+                t.data[seg(send_seg)].to_vec(),
+            );
+            self.send(next, tag, vec![payload]);
+            let got = self.recv(prev, tag);
+            let r = seg(recv_seg);
+            for (dst, src) in t.data[r].iter_mut().zip(&got[0].data) {
+                *dst += src;
+            }
+        }
+        // all-gather the reduced segments
+        for step in 0..p - 1 {
+            let send_seg = (self.rank + p - step + 1) % p;
+            let recv_seg = (self.rank + p - step) % p;
+            let tag = Tag::new(Tag::ALL_REDUCE, round, (p + step) as u32);
+            let payload = Tensor::new(
+                vec![seg(send_seg).len()],
+                t.data[seg(send_seg)].to_vec(),
+            );
+            self.send(next, tag, vec![payload]);
+            let got = self.recv(prev, tag);
+            let r = seg(recv_seg);
+            t.data[r].copy_from_slice(&got[0].data);
+        }
+    }
+
+    /// All-gather a per-worker tensor; returns all P tensors in rank order.
+    pub fn all_gather(&mut self, round: u32, t: &Tensor) -> Vec<Tensor> {
+        let tag = Tag::new(Tag::GATHER, round, 0);
+        for to in 0..self.n_workers {
+            if to != self.rank {
+                self.send(to, tag, vec![t.clone()]);
+            }
+        }
+        (0..self.n_workers)
+            .map(|from| {
+                if from == self.rank {
+                    t.clone()
+                } else {
+                    self.recv(from, tag).remove(0)
+                }
+            })
+            .collect()
+    }
+
+    /// Full barrier (used between training steps in tests).
+    pub fn barrier(&mut self, round: u32) {
+        let tag = Tag::new(Tag::BARRIER, round, 0);
+        let token = Tensor::scalar(self.rank as f32);
+        for to in 0..self.n_workers {
+            if to != self.rank {
+                self.send(to, tag, vec![token.clone()]);
+            }
+        }
+        for from in 0..self.n_workers {
+            if from != self.rank {
+                self.recv(from, tag);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_workers<F, R>(p: usize, f: F) -> Vec<R>
+    where
+        F: Fn(WorkerComm) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let comms = build_network(p);
+        let f = Arc::new(f);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn p2p_out_of_order_delivery() {
+        let res = spawn_workers(2, |mut c| {
+            if c.rank == 0 {
+                c.send(1, Tag::new(9, 0, 0), vec![Tensor::scalar(1.0)]);
+                c.send(1, Tag::new(9, 0, 1), vec![Tensor::scalar(2.0)]);
+                0.0
+            } else {
+                // receive in reverse order: stash must kick in
+                let b = c.recv(0, Tag::new(9, 0, 1))[0].as_scalar();
+                let a = c.recv(0, Tag::new(9, 0, 0))[0].as_scalar();
+                a * 10.0 + b
+            }
+        });
+        assert_eq!(res[1], 12.0);
+    }
+
+    #[test]
+    fn ring_all_reduce_sums() {
+        for p in [1, 2, 3, 4, 7] {
+            let res = spawn_workers(p, move |mut c| {
+                // tensor of length 10 (not divisible by most p): each worker
+                // contributes rank+1 everywhere
+                let mut t = Tensor::full(&[10], (c.rank + 1) as f32);
+                c.all_reduce_sum(1, &mut t);
+                t
+            });
+            let want = (p * (p + 1) / 2) as f32;
+            for t in res {
+                assert!(t.data.iter().all(|&x| x == want), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let res = spawn_workers(3, |mut c| {
+            let t = Tensor::scalar(c.rank as f32 * 5.0);
+            let all = c.all_gather(2, &t);
+            all.iter().map(|x| x.as_scalar()).collect::<Vec<_>>()
+        });
+        for r in res {
+            assert_eq!(r, vec![0.0, 5.0, 10.0]);
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let res = spawn_workers(2, |mut c| {
+            if c.rank == 0 {
+                c.send(1, Tag::new(8, 0, 0), vec![Tensor::zeros(&[100])]);
+            } else {
+                c.recv(0, Tag::new(8, 0, 0));
+            }
+            c.barrier(99);
+            c.bytes_sent_global()
+        });
+        // 100 f32 payload + 2 barrier scalars
+        assert_eq!(res[0], 400 + 8);
+    }
+}

@@ -1,0 +1,368 @@
+//! Schedules: the paper's ring (Alg. 1) and load-balanced (Alg. 2) plans,
+//! built as explicit per-timestep, per-worker op lists.
+//!
+//! Workers are 0-indexed here (the paper is 1-indexed). An attention *pair*
+//! `(p, r)` with `r <= p` means "q chunk p attends kv chunk r"; causal LM
+//! requires every such pair exactly once — that's the invariant the
+//! property tests pin down.
+//!
+//! Ring (unbalanced): timestep t has worker p compute pair `(p, p-t)` if
+//! `t <= p`, else idle → idle fraction `(P²-P)/2P²` → ½.
+//!
+//! Load-balanced: timeline shrinks to `⌊P/2⌋+1` steps. At step t, owners
+//! `w >= t` compute distance-t pairs `(w, w-t)`; helpers `w < t` compute the
+//! distance-`(P-t)` pairs `(w+P-t, w)` on behalf of their owners and ship
+//! the partial `(o, m, l)` back for a `rescale(·)` merge. Helpers sit out
+//! only when `2t == P` (P even, where owner and helper distances coincide)
+//! → idle fraction `1/2P` (P even) or 0 (P odd), Eq. (2). (The paper's
+//! Alg. 2 line 14 writes the skip condition as `t != ⌊P/2⌋`, which would
+//! leave distance-⌈P/2⌉ pairs uncovered for odd P; `2t != P` is the version
+//! that matches its own Figure 6 and Eq. (2).)
+
+/// What a worker computes at one timestep (at most one attn(·) kernel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeOp {
+    /// Causal diagonal block: attn(q_w, k_w, v_w), the `(w, w)` pair.
+    Diag,
+    /// Owner-path: attn(q_w, k_r, v_r) for pair `(w, kv_from)`.
+    Own { kv_from: usize },
+    /// Helper-path: attn(q_owner, k_w, v_w) for pair `(owner, w)`, result
+    /// shipped back to `owner` for rescale.
+    Help { owner: usize },
+}
+
+/// One worker's plan for one timestep: its compute op plus the comm ops it
+/// must initiate / await. Send ops live on the comm stream and overlap with
+/// compute (paper §3.2).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepPlan {
+    pub compute: Option<ComputeOp>,
+    /// Ship local (k, v) to this worker (it runs `Own{kv_from: me}`).
+    /// At most one per step by construction — owners at distance t are
+    /// distinct, so a kv chunk has a single consumer per timestep. Using
+    /// `Option` (not `Vec`) keeps plan construction allocation-free
+    /// (EXPERIMENTS.md §Perf: 157 ms -> ~8 ms at P=1024).
+    pub send_kv_to: Option<usize>,
+    /// Ship local q (and in backward: do, o, lse) to this helper.
+    pub send_q_to: Option<usize>,
+    /// Await a helper partial from this worker and `rescale(·)`-merge.
+    pub recv_helper_from: Option<usize>,
+}
+
+impl StepPlan {
+    pub fn is_idle(&self) -> bool {
+        self.compute.is_none()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Ring,
+    Balanced,
+}
+
+/// A complete schedule: `steps[t][w]` is worker w's plan at timestep t.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub n_workers: usize,
+    pub steps: Vec<Vec<StepPlan>>,
+}
+
+impl Schedule {
+    pub fn ring(p: usize) -> Schedule {
+        assert!(p >= 1);
+        let mut steps = vec![vec![StepPlan::default(); p]; p];
+        for w in 0..p {
+            steps[0][w].compute = Some(ComputeOp::Diag);
+        }
+        for t in 1..p {
+            for w in 0..p {
+                if t <= w {
+                    steps[t][w].compute = Some(ComputeOp::Own { kv_from: w - t });
+                    steps[t][w - t].send_kv_to = Some(w);
+                }
+            }
+        }
+        Schedule { kind: ScheduleKind::Ring, n_workers: p, steps }
+    }
+
+    pub fn balanced(p: usize) -> Schedule {
+        assert!(p >= 1);
+        let t_max = p / 2;
+        let mut steps = vec![vec![StepPlan::default(); p]; t_max + 1];
+        for w in 0..p {
+            steps[0][w].compute = Some(ComputeOp::Diag);
+        }
+        for t in 1..=t_max {
+            for w in 0..p {
+                if w >= t {
+                    // owner path: distance-t pair (w, w-t)
+                    steps[t][w].compute = Some(ComputeOp::Own { kv_from: w - t });
+                    steps[t][w - t].send_kv_to = Some(w);
+                } else if 2 * t != p {
+                    // helper path: distance-(P-t) pair (w + P - t, w)
+                    let owner = w + p - t;
+                    steps[t][w].compute = Some(ComputeOp::Help { owner });
+                    steps[t][owner].send_q_to = Some(w);
+                    steps[t][owner].recv_helper_from = Some(w);
+                }
+            }
+        }
+        Schedule { kind: ScheduleKind::Balanced, n_workers: p, steps }
+    }
+
+    pub fn build(kind: ScheduleKind, p: usize) -> Schedule {
+        match kind {
+            ScheduleKind::Ring => Schedule::ring(p),
+            ScheduleKind::Balanced => Schedule::balanced(p),
+        }
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// All attention pairs `(owner, kv)` this schedule computes, with the
+    /// `(t, executing_worker)` slot that computes each.
+    pub fn computed_pairs(&self) -> Vec<((usize, usize), (usize, usize))> {
+        let mut out = Vec::new();
+        for (t, row) in self.steps.iter().enumerate() {
+            for (w, plan) in row.iter().enumerate() {
+                match plan.compute {
+                    Some(ComputeOp::Diag) => out.push(((w, w), (t, w))),
+                    Some(ComputeOp::Own { kv_from }) => out.push(((w, kv_from), (t, w))),
+                    Some(ComputeOp::Help { owner }) => out.push(((owner, w), (t, w))),
+                    None => {}
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of idle (worker, timestep) slots.
+    pub fn idle_slots(&self) -> usize {
+        self.steps
+            .iter()
+            .flat_map(|row| row.iter())
+            .filter(|p| p.is_idle())
+            .count()
+    }
+
+    /// Idle fraction over this schedule's own timeline (`T·P` slots) —
+    /// what Figure 4's speedup analysis uses.
+    pub fn idle_fraction(&self) -> f64 {
+        self.idle_slots() as f64 / (self.n_steps() * self.n_workers) as f64
+    }
+
+    /// Speedup over a single worker executing all `P(P+1)/2` pair units
+    /// sequentially, assuming one pair per step (Figure 4 left's model).
+    pub fn ideal_speedup(&self) -> f64 {
+        let work = self.n_workers * (self.n_workers + 1) / 2;
+        work as f64 / self.n_steps() as f64
+    }
+
+    /// Validate the causal-coverage invariant; returns an error message on
+    /// the first violation. Cheap enough to run at executor startup.
+    pub fn validate(&self) -> Result<(), String> {
+        let p = self.n_workers;
+        let mut seen = vec![vec![0usize; p]; p];
+        for ((owner, kv), (t, w)) in self.computed_pairs() {
+            if kv > owner {
+                return Err(format!("non-causal pair ({owner},{kv}) at t={t} w={w}"));
+            }
+            seen[owner][kv] += 1;
+        }
+        for owner in 0..p {
+            for kv in 0..=owner {
+                match seen[owner][kv] {
+                    1 => {}
+                    0 => return Err(format!("pair ({owner},{kv}) never computed")),
+                    n => return Err(format!("pair ({owner},{kv}) computed {n} times")),
+                }
+            }
+        }
+        // every send has a consumer in the same step and vice versa
+        for (t, row) in self.steps.iter().enumerate() {
+            for (w, plan) in row.iter().enumerate() {
+                if let Some(to) = plan.send_kv_to {
+                    if row[to].compute != Some(ComputeOp::Own { kv_from: w }) {
+                        return Err(format!("dangling kv send {w}->{to} at t={t}"));
+                    }
+                }
+                if let Some(to) = plan.send_q_to {
+                    if row[to].compute != Some(ComputeOp::Help { owner: w }) {
+                        return Err(format!("dangling q send {w}->{to} at t={t}"));
+                    }
+                }
+                if let Some(from) = plan.recv_helper_from {
+                    if row[from].compute != Some(ComputeOp::Help { owner: w }) {
+                        return Err(format!("dangling helper recv {from}->{w} at t={t}"));
+                    }
+                }
+                if let Some(ComputeOp::Own { kv_from }) = plan.compute {
+                    if row[kv_from].send_kv_to != Some(w) {
+                        return Err(format!("missing kv send {kv_from}->{w} at t={t}"));
+                    }
+                }
+                if let Some(ComputeOp::Help { owner }) = plan.compute {
+                    if row[owner].send_q_to != Some(w) {
+                        return Err(format!("missing q send {owner}->{w} at t={t}"));
+                    }
+                    if row[owner].recv_helper_from != Some(w) {
+                        return Err(format!("missing helper recv {w}->{owner} at t={t}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Closed-form ring idle fraction over the P×P timeline: `(P²-P)/2P²`.
+pub fn ring_idle_fraction(p: usize) -> f64 {
+    ((p * p - p) as f64) / ((2 * p * p) as f64)
+}
+
+/// Paper Eq. (2): balanced idle fraction, normalized like the ring timeline
+/// (idle slots over P² — the convention under which the paper states 1/2P).
+pub fn balanced_idle_fraction_eq2(p: usize) -> f64 {
+    if p % 2 == 0 {
+        1.0 / (2 * p) as f64
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_small() {
+        for p in 1..=9 {
+            let s = Schedule::ring(p);
+            s.validate().unwrap();
+            assert_eq!(s.n_steps(), p);
+            assert_eq!(s.idle_slots(), (p * p - p) / 2);
+            assert!((s.idle_fraction() - ring_idle_fraction(p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn balanced_small() {
+        for p in 1..=9 {
+            let s = Schedule::balanced(p);
+            s.validate().unwrap();
+            assert_eq!(s.n_steps(), p / 2 + 1);
+            if p % 2 == 1 {
+                assert_eq!(s.idle_slots(), 0, "P odd must be idle-free (Eq. 2)");
+            } else if p > 1 {
+                // only the 2t == P step idles, and exactly P/2 slots
+                assert_eq!(s.idle_slots(), p / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn eq2_matches_schedule_idle_slots() {
+        // Eq. 2 normalizes idle slots by the ring's P² timeline.
+        for p in 2..=16 {
+            let s = Schedule::balanced(p);
+            let got = s.idle_slots() as f64 / ((p * p) as f64);
+            assert!(
+                (got - balanced_idle_fraction_eq2(p)).abs() < 1e-12,
+                "P={p}: {got} vs {}",
+                balanced_idle_fraction_eq2(p)
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_speedups() {
+        // Paper Fig. 4 (8 workers): unbalanced saturates at 4.5x, balanced 7.2x.
+        assert!((Schedule::ring(8).ideal_speedup() - 4.5).abs() < 1e-12);
+        assert!((Schedule::balanced(8).ideal_speedup() - 7.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn helpers_skip_only_even_midpoint() {
+        let s = Schedule::balanced(8);
+        let mid = &s.steps[4];
+        assert!(mid[0].is_idle() && mid[3].is_idle());
+        assert!(!mid[4].is_idle());
+        let s = Schedule::balanced(7);
+        for row in &s.steps[1..] {
+            assert!(row.iter().all(|p| !p.is_idle()));
+        }
+    }
+
+    // property sweeps (exhaustive over P — proptest unavailable offline;
+    // an exhaustive sweep over every P in range is strictly stronger anyway)
+
+    #[test]
+    fn prop_valid_for_all_p() {
+        for p in 1..64 {
+            Schedule::ring(p).validate().unwrap();
+            Schedule::balanced(p).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_balanced_covers_exactly_like_ring() {
+        for p in 1..48 {
+            let mut a: Vec<_> = Schedule::ring(p)
+                .computed_pairs()
+                .into_iter()
+                .map(|(pair, _)| pair)
+                .collect();
+            let mut b: Vec<_> = Schedule::balanced(p)
+                .computed_pairs()
+                .into_iter()
+                .map(|(pair, _)| pair)
+                .collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "P={p}");
+        }
+    }
+
+    #[test]
+    fn prop_balanced_timeline_halves() {
+        for p in 2..64 {
+            let ring = Schedule::ring(p).n_steps();
+            let bal = Schedule::balanced(p).n_steps();
+            assert_eq!(bal, p / 2 + 1);
+            assert!(bal <= ring / 2 + 1, "P={p}");
+        }
+    }
+
+    #[test]
+    fn prop_odd_p_idle_free() {
+        for p in (1..128).step_by(2) {
+            assert_eq!(Schedule::balanced(p).idle_slots(), 0, "P={p}");
+        }
+    }
+
+    #[test]
+    fn prop_pair_count_triangular() {
+        for p in 1..48 {
+            let s = Schedule::balanced(p);
+            assert_eq!(s.computed_pairs().len(), p * (p + 1) / 2, "P={p}");
+        }
+    }
+
+    #[test]
+    fn prop_helper_always_earlier_worker() {
+        // helpers are always lighter-loaded (smaller index) than owners
+        for p in 2..48 {
+            for (t, row) in Schedule::balanced(p).steps.iter().enumerate() {
+                for (w, plan) in row.iter().enumerate() {
+                    if let Some(ComputeOp::Help { owner }) = plan.compute {
+                        assert!(w < t && owner > w, "P={p} helper {w} owner {owner} t={t}");
+                    }
+                }
+            }
+        }
+    }
+}

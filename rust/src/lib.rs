@@ -1,0 +1,31 @@
+//! DISTFLASHATTN reproduction — distributed memory-efficient attention for
+//! long-context LLM training (Li & Shao et al., 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L1/L2 (python, build-time only): Pallas flash-attention chunk kernels
+//!   and the split transformer graph, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * L3 (this crate): schedules, the multi-worker executor, the cluster
+//!   simulator with every paper baseline, the memory model, and the
+//!   sequence-parallel trainer.
+//!
+//! Public API tour:
+//! * [`coordinator::run_dist_attention`] — distributed attention over real
+//!   tensors, P worker threads, verified against the monolithic oracle.
+//! * [`train::Trainer`] — end-to-end sequence-parallel training with both
+//!   checkpointing strategies.
+//! * [`simulator`] + [`baselines`] — A100-cluster discrete-event model that
+//!   regenerates every table and figure of the paper's evaluation.
+//! * [`memory`] — activation/weight accounting and max-sequence solver.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod memory;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod train;
+pub mod util;
+
+pub use coordinator::{CkptStrategy, Schedule, ScheduleKind};
+pub use runtime::{Manifest, Runtime, Tensor};

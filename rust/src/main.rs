@@ -1,0 +1,326 @@
+//! `repro` — DISTFLASHATTN reproduction CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   tables   [--id N]                       regenerate paper tables (default all)
+//!   figures  [--id N]                       regenerate paper figures
+//!   verify   [--config tiny] [--schedule S] distributed attention vs oracle
+//!   train    [--config tiny] [--steps N] [--ckpt hf|remat] [--schedule S]
+//!            [--lr F] [--seed N]            run the distributed trainer
+//!   simulate --model M --cluster C --seq N  one-off iteration estimate
+//!   inspect  [--config tiny]                print an artifact manifest
+//!
+//! Arg parsing is hand-rolled (offline environment, no clap).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use distflash::baselines::distflash::DistFlashAttn;
+use distflash::baselines::megatron::Megatron;
+use distflash::baselines::ring_attention::RingAttention;
+use distflash::baselines::rsa::RingSelfAttention;
+use distflash::baselines::ulysses::Ulysses;
+use distflash::baselines::SystemModel;
+use distflash::config::{ClusterSpec, PaperModel};
+use distflash::coordinator::{run_dist_attention, CkptStrategy, ScheduleKind};
+use distflash::report::paper;
+use distflash::runtime::{Runtime, Tensor, Value};
+use distflash::train::{train, AdamConfig, TrainConfig};
+use distflash::util::Rng;
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < raw.len() {
+            if let Some(name) = raw[i].strip_prefix("--") {
+                let val = if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    i += 1;
+                    raw[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn f32(&self, name: &str, default: f32) -> f32 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn artifact_dir(cfg: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(cfg)
+}
+
+fn schedule_kind(s: &str) -> ScheduleKind {
+    match s {
+        "ring" | "unbalanced" => ScheduleKind::Ring,
+        _ => ScheduleKind::Balanced,
+    }
+}
+
+fn cluster_by_name(s: &str) -> ClusterSpec {
+    match s {
+        "1x8" => ClusterSpec::dgx_1x8(),
+        "2x8" => ClusterSpec::dgx_2x8(),
+        "16x40g" | "dev" => ClusterSpec::cluster_16x40g(),
+        other => {
+            eprintln!("unknown cluster {other:?}, using 1x8");
+            ClusterSpec::dgx_1x8()
+        }
+    }
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    let id = args.get("id", "all");
+    let out = match id.as_str() {
+        "1" => paper::table1(),
+        "2" => paper::table2(),
+        "3" => paper::table3(),
+        "4" => paper::table4(),
+        "5" => paper::table5(),
+        "6" => paper::table6(),
+        "ra" => paper::ring_attention_summary(),
+        _ => [
+            paper::table1(),
+            paper::table2(),
+            paper::table3(),
+            paper::table4(),
+            paper::ring_attention_summary(),
+            paper::table5(),
+            paper::table6(),
+        ]
+        .join("\n"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let id = args.get("id", "all");
+    let out = match id.as_str() {
+        "1" => paper::fig1(),
+        "2" => paper::fig2(),
+        "4" => [paper::fig4_left(), paper::fig4_right()].join("\n"),
+        "7" => paper::fig7(),
+        _ => [
+            paper::fig1(),
+            paper::fig2(),
+            paper::fig4_left(),
+            paper::fig4_right(),
+            paper::fig7(),
+        ]
+        .join("\n"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.get("config", "tiny");
+    let kind = schedule_kind(&args.get("schedule", "balanced"));
+    let dir = artifact_dir(&cfg);
+    let rt = Runtime::load(&dir)?;
+    let mc = rt.manifest().config.clone();
+    let (h, kvh, n, d, p) = (mc.n_heads, mc.n_kv_heads, mc.seq_len, mc.head_dim, mc.n_workers);
+    println!(
+        "verify: config={cfg} schedule={kind:?} P={p} N={n} heads={h}/{kvh} d={d}"
+    );
+    let mut rng = Rng::new(args.usize("seed", 0) as u64);
+    let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let oracle = rt.run(
+        "full_attn_ref",
+        &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+    )?;
+    let res = run_dist_attention(&dir, kind, p, &q, &k, &v, Some(&do_))?;
+    println!("  forward  max|Δo|   = {:.3e}", res.o.max_abs_diff(&oracle[0]));
+    println!("  forward  max|Δlse| = {:.3e}", res.lse.max_abs_diff(&oracle[1]));
+    let (dq, dk, dv) = res.grads.unwrap();
+    println!(
+        "  backward |dq|={:.4} |dk|={:.4} |dv|={:.4} (finite: {})",
+        dq.l2_norm(),
+        dk.l2_norm(),
+        dv.l2_norm(),
+        dq.data.iter().chain(&dk.data).chain(&dv.data).all(|x| x.is_finite())
+    );
+    println!("  comm bytes = {}", res.comm_bytes);
+    println!("verify OK");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg_name = args.get("config", "tiny");
+    let cfg = TrainConfig {
+        schedule: schedule_kind(&args.get("schedule", "balanced")),
+        ckpt: args
+            .get("ckpt", "remat")
+            .parse::<CkptStrategy>()
+            .unwrap_or(CkptStrategy::RematAware),
+        steps: args.usize("steps", 30),
+        adam: AdamConfig { lr: args.f32("lr", 3e-3), ..Default::default() },
+        seed: args.usize("seed", 42) as u64,
+        log_every: args.usize("log-every", 1),
+        ..TrainConfig::new(&artifact_dir(&cfg_name))
+    };
+    println!(
+        "train: config={cfg_name} schedule={:?} ckpt={} steps={}",
+        cfg.schedule,
+        cfg.ckpt.name(),
+        cfg.steps
+    );
+    let report = train(&cfg)?;
+    for log in &report.logs {
+        if log.step % cfg.log_every == 0 || log.step + 1 == cfg.steps {
+            println!(
+                "  step {:>4}  loss {:.4}  |g| {:.3}  {:.2}s  comm {:.1}MB",
+                log.step,
+                log.loss,
+                log.grad_norm,
+                log.wall_s,
+                log.comm_bytes as f64 / 1e6
+            );
+        }
+    }
+    println!(
+        "done: {:.1}s total, {} kernel calls ({:.1}s in kernels, {:.0}% of wall)",
+        report.total_s,
+        report.kernel_calls,
+        report.kernel_s,
+        report.kernel_s / report.total_s * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = PaperModel::by_name(&args.get("model", "llama-7b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = cluster_by_name(&args.get("cluster", "2x8"));
+    let seq = args.usize("seq", 16384);
+    let systems: Vec<Box<dyn SystemModel>> = vec![
+        Box::new(DistFlashAttn::default()),
+        Box::new(DistFlashAttn::unoptimized()),
+        Box::new(Megatron::tp()),
+        Box::new(Ulysses),
+        Box::new(RingAttention),
+        Box::new(RingSelfAttention),
+    ];
+    println!(
+        "simulate: {} on {}x{} GPUs, seq/GPU={seq}",
+        model.name, cluster.n_nodes, cluster.gpus_per_node
+    );
+    println!(
+        "{:<44} {:>9} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "system", "fwd(s)", "bwd(s)", "rec(s)", "comm(s)", "total(s)", "mem(GB)"
+    );
+    for sys in &systems {
+        let it = sys.iteration(&model, &cluster, seq);
+        println!(
+            "{:<44} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>10.2} {:>8.1}{}",
+            sys.name(),
+            it.fwd_compute_s,
+            it.bwd_compute_s,
+            it.recompute_s,
+            it.exposed_comm_s,
+            it.total_s(),
+            it.peak_mem_bytes / 1e9,
+            if it.fits(&cluster) { "" } else { "  OOM!" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.get("config", "tiny");
+    let rt = Runtime::load(&artifact_dir(&cfg))?;
+    let m = rt.manifest();
+    println!(
+        "config {}: {} layers, d_model {}, heads {}/{}, chunk {} x {} workers, {} params",
+        m.config.name,
+        m.config.n_layers,
+        m.config.d_model,
+        m.config.n_heads,
+        m.config.n_kv_heads,
+        m.config.chunk_len,
+        m.config.n_workers,
+        m.config.n_params
+    );
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {:<22} {} inputs -> {} outputs  ({})",
+            name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "repro — DISTFLASHATTN reproduction\n\
+         usage: repro <tables|figures|verify|train|simulate|inspect> [--flag value]...\n\
+         run `make artifacts` first; see README.md for the full tour"
+    );
+}
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = raw.first().cloned() else {
+        help();
+        return ExitCode::SUCCESS;
+    };
+    let args = Args::parse(&raw[1..]);
+    let result = match cmd.as_str() {
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "verify" => cmd_verify(&args),
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

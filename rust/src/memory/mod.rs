@@ -1,0 +1,74 @@
+//! Memory accounting utilities shared by the baselines and the
+//! max-sequence experiments (Tables 2, 3, 6).
+//!
+//! The per-system peak models live with each baseline (they are strategy
+//! specific); this module provides the generic solver plus human-readable
+//! breakdown helpers.
+
+use crate::baselines::SystemModel;
+use crate::config::{ClusterSpec, PaperModel};
+
+/// Search granularity the paper's tables use (sequence lengths are powers
+/// of two times 1K).
+pub const SEQ_GRANULARITY: usize = 1024;
+
+/// Max *total* sequence length for a system on a cluster, rounded down to
+/// the nearest power of two (how the paper reports Table 2/3 entries).
+pub fn max_total_seq_pow2(
+    sys: &dyn SystemModel,
+    model: &PaperModel,
+    cluster: &ClusterSpec,
+) -> usize {
+    let per_gpu = sys.max_seq_per_gpu(model, cluster, SEQ_GRANULARITY, 4 << 20);
+    let total = per_gpu * cluster.n_gpus();
+    if total == 0 {
+        return 0;
+    }
+    let mut p = 1usize;
+    while p * 2 <= total {
+        p *= 2;
+    }
+    p
+}
+
+/// Pretty-print byte counts the way the paper's tables do.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.1}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1}MB", b / 1e6)
+    } else {
+        format!("{:.0}B", b)
+    }
+}
+
+/// Sequence lengths as the paper writes them (64K, 512K, ...).
+pub fn fmt_seq(tokens: usize) -> String {
+    if tokens >= 1024 && tokens % 1024 == 0 {
+        format!("{}K", tokens / 1024)
+    } else {
+        format!("{tokens}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::distflash::DistFlashAttn;
+
+    #[test]
+    fn pow2_rounding() {
+        let model = PaperModel::llama_7b();
+        let cluster = ClusterSpec::dgx_1x8();
+        let total = max_total_seq_pow2(&DistFlashAttn::default(), &model, &cluster);
+        assert!(total.is_power_of_two());
+        assert!(total >= 256 * 1024, "{total}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_seq(64 * 1024), "64K");
+        assert_eq!(fmt_seq(1000), "1000");
+        assert_eq!(fmt_bytes(31.5e9), "31.5GB");
+    }
+}

@@ -1,0 +1,48 @@
+//! Table / figure rendering for the paper reproductions: fixed-width text
+//! tables matching the rows the paper prints, plus simple ASCII series for
+//! the figures.
+
+pub mod paper;
+pub mod table;
+
+pub use table::Table;
+
+/// Render an (x, series...) dataset as aligned columns — the "figure"
+/// format for Fig. 1/4/7 reproductions in a terminal.
+pub fn render_series(
+    title: &str,
+    x_label: &str,
+    xs: &[String],
+    series: &[(&str, Vec<f64>)],
+    unit: &str,
+) -> String {
+    let mut t = Table::new(title);
+    let mut header = vec![x_label.to_string()];
+    header.extend(series.iter().map(|(n, _)| format!("{n} ({unit})")));
+    t.header(header);
+    for (i, x) in xs.iter().enumerate() {
+        let mut row = vec![x.clone()];
+        for (_, ys) in series {
+            row.push(format!("{:.3}", ys[i]));
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn series_renders() {
+        let s = super::render_series(
+            "Fig X",
+            "seq",
+            &["4K".into(), "8K".into()],
+            &[("ours", vec![1.0, 2.0]), ("base", vec![2.0, 4.0])],
+            "s",
+        );
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("4K"));
+        assert!(s.contains("2.000"));
+    }
+}

@@ -1,0 +1,484 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§4, Appendix C/D), from the analytic models in `baselines` + the
+//! schedule simulator. Each function renders our measured/modeled numbers
+//! next to the paper's published ones so the reproduction gap is explicit.
+//!
+//! Used by `repro tables|figures` and by `cargo bench --bench paper_tables`.
+
+use crate::baselines::distflash::DistFlashAttn;
+use crate::baselines::megatron::{pp_stage_memory, Megatron};
+use crate::baselines::ring_attention::RingAttention;
+use crate::baselines::rsa::RingSelfAttention;
+use crate::baselines::ulysses::Ulysses;
+use crate::baselines::SystemModel;
+use crate::config::{ClusterSpec, PaperModel};
+use crate::coordinator::{CkptStrategy, Schedule, ScheduleKind};
+use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
+use crate::report::Table;
+
+fn k(tokens: usize) -> String {
+    fmt_seq(tokens)
+}
+
+/// Table 1: per-iteration wall-clock, DISTFLASHATTN vs Megatron-LM on
+/// LLaMA-7B / LLaMA-GQA / LLaMA-33H, 1×8 and 2×8, 8K–32K per GPU.
+pub fn table1() -> String {
+    // paper numbers (seconds): [model][cluster][seq] -> (megatron, ours)
+    let paper: &[(&str, &str, usize, f64, f64)] = &[
+        ("LLaMA-7B", "1x8", 8192, 6.81, 5.98),
+        ("LLaMA-7B", "1x8", 16384, 20.93, 17.26),
+        ("LLaMA-7B", "1x8", 32768, 72.75, 58.46),
+        ("LLaMA-7B", "2x8", 8192, 14.26, 12.75),
+        ("LLaMA-7B", "2x8", 16384, 43.44, 30.21),
+        ("LLaMA-7B", "2x8", 32768, 147.06, 106.37),
+        ("LLaMA-GQA", "1x8", 8192, 6.60, 5.61),
+        ("LLaMA-GQA", "1x8", 16384, 20.53, 16.86),
+        ("LLaMA-GQA", "1x8", 32768, 71.93, 57.01),
+        ("LLaMA-GQA", "2x8", 8192, 14.21, 9.74),
+        ("LLaMA-GQA", "2x8", 16384, 43.20, 28.49),
+        ("LLaMA-GQA", "2x8", 32768, 146.38, 102.34),
+        ("LLaMA-33H", "1x8", 8192, 8.37, 6.08),
+        ("LLaMA-33H", "1x8", 16384, 25.75, 17.77),
+        ("LLaMA-33H", "1x8", 32768, 90.21, 59.96),
+        ("LLaMA-33H", "2x8", 8192, 20.63, 13.12),
+        ("LLaMA-33H", "2x8", 16384, 62.78, 31.33),
+        ("LLaMA-33H", "2x8", 32768, 216.70, 107.76),
+    ];
+    let mut t = Table::new("Table 1 — per-iteration time (s): DISTFLASHATTN vs Megatron-LM");
+    t.header(
+        ["model", "cluster", "seq/GPU", "megatron(s)", "ours(s)", "speedup", "paper-mg", "paper-ours", "paper-spd"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for &(mname, cl, seq, pm, po) in paper {
+        let model = PaperModel::by_name(mname).unwrap();
+        let cluster = if cl == "1x8" { ClusterSpec::dgx_1x8() } else { ClusterSpec::dgx_2x8() };
+        let mg = Megatron::tp().iteration(&model, &cluster, seq).total_s();
+        let ours = DistFlashAttn::default().iteration(&model, &cluster, seq).total_s();
+        t.row(vec![
+            mname.into(),
+            cl.into(),
+            k(seq),
+            format!("{mg:.2}"),
+            format!("{ours:.2}"),
+            format!("{:.2}x", mg / ours),
+            format!("{pm:.2}"),
+            format!("{po:.2}"),
+            format!("{:.2}x", pm / po),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 2: max sequence length on 16×A100-40GB for the fewer-heads family
+/// under Megatron TP+DP / TP+PP / DISTFLASHATTN.
+pub fn table2() -> String {
+    let cluster = ClusterSpec::cluster_16x40g();
+    // paper totals: (model, tp_dp, tp_pp, ours) — "" = not reported
+    let paper: &[(&str, &str, &str, &str)] = &[
+        ("llama-16h", "512K", "512K", "512K"),
+        ("llama-8h", "256K", "256K", "512K"),
+        ("llama-4h", "128K", "256K", "512K"),
+        ("llama-2h", "64K", "128K", "512K"),
+    ];
+    let mut t = Table::new("Table 2 — max total sequence on 16xA100-40GB");
+    t.header(
+        ["model", "TP+DP", "TP+PP", "ours", "paper TP+DP", "paper TP+PP", "paper ours"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for &(name, p1, p2, p3) in paper {
+        let model = PaperModel::by_name(name).unwrap();
+        let a = max_total_seq_pow2(&Megatron::tp_dp(), &model, &cluster);
+        let b = max_total_seq_pow2(&Megatron::tp_pp(), &model, &cluster);
+        let c = max_total_seq_pow2(&DistFlashAttn::default(), &model, &cluster);
+        t.row(vec![
+            model.name.into(),
+            k(a),
+            k(b),
+            k(c),
+            p1.into(),
+            p2.into(),
+            p3.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 3: max sequence + per-iteration time vs Ring Self-Attention.
+pub fn table3() -> String {
+    let model = PaperModel::llama_7b();
+    let mut t = Table::new("Table 3 — vs Ring Self-Attention (LLaMA-7B, DGX)");
+    t.header(
+        ["cluster", "RSA max", "ours max", "RSA iter(s)", "ours iter(s)", "speedup", "paper"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for (cl, cluster, paper_rsa_max, paper_note) in [
+        ("1 node", ClusterSpec::dgx_1x8(), 32 * 1024usize, "max 32K vs >256K; 5.64x @32K"),
+        ("2 nodes", ClusterSpec::dgx_2x8(), 64 * 1024usize, "max 64K vs >512K; 4.45x @64K"),
+    ] {
+        let rsa_max = max_total_seq_pow2(&RingSelfAttention, &model, &cluster);
+        let ours_max = max_total_seq_pow2(&DistFlashAttn::default(), &model, &cluster);
+        // iteration time at RSA's paper max
+        let seq_gpu = paper_rsa_max / cluster.n_gpus();
+        let slow = RingSelfAttention.iteration(&model, &cluster, seq_gpu).total_s();
+        let fast = DistFlashAttn::default().iteration(&model, &cluster, seq_gpu).total_s();
+        t.row(vec![
+            cl.into(),
+            k(rsa_max),
+            format!(">{}", k(ours_max)),
+            format!("{slow:.2}"),
+            format!("{fast:.2}"),
+            format!("{:.2}x", slow / fast),
+            paper_note.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 4: vs DeepSpeed-Ulysses (LLaMA-7B and LLaMA-33H, 2×8).
+pub fn table4() -> String {
+    let cluster = ClusterSpec::dgx_2x8();
+    let paper: &[(&str, usize, f64, f64)] = &[
+        ("llama-7b", 16384, 37.53, 30.21),
+        ("llama-7b", 32768, 134.09, 106.37),
+        ("llama-33h", 16384, 56.63, 31.33),
+        ("llama-33h", 32768, 202.89, 107.76),
+    ];
+    let mut t = Table::new("Table 4 — vs DeepSpeed-Ulysses (2x8)");
+    t.header(
+        ["model", "seq/GPU", "ulysses(s)", "ours(s)", "speedup", "paper-uly", "paper-ours", "paper-spd"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for &(name, seq, pu, po) in paper {
+        let model = PaperModel::by_name(name).unwrap();
+        let u = Ulysses.iteration(&model, &cluster, seq).total_s();
+        let o = DistFlashAttn::default().iteration(&model, &cluster, seq).total_s();
+        t.row(vec![
+            model.name.into(),
+            k(seq),
+            format!("{u:.2}"),
+            format!("{o:.2}"),
+            format!("{:.2}x", u / o),
+            format!("{pu:.2}"),
+            format!("{po:.2}"),
+            format!("{:.2}x", pu / po),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 5: rematerialization-aware vs HF checkpointing, 1K–32K per GPU.
+pub fn table5() -> String {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_1x8();
+    let paper: &[(usize, Option<f64>, f64)] = &[
+        (1024, None, 0.84),
+        (2048, Some(1.29), 1.36),
+        (4096, Some(2.64), 2.50),
+        (8192, Some(6.93), 5.98),
+        (16384, Some(21.44), 17.26),
+        (32768, Some(76.38), 58.46),
+    ];
+    let ours_sys = DistFlashAttn::default();
+    let hf_sys = DistFlashAttn { ckpt: CkptStrategy::HfStyle, ..ours_sys };
+    let mut t = Table::new("Table 5 — checkpointing strategies (8xA100, LLaMA-7B)");
+    t.header(
+        ["seq/GPU", "HF ckpt(s)", "ours(s)", "speedup", "paper-HF", "paper-ours", "paper-spd"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for &(seq, phf, pours) in paper {
+        let hf = hf_sys.iteration(&model, &cluster, seq).total_s();
+        let ours = ours_sys.iteration(&model, &cluster, seq).total_s();
+        t.row(vec![
+            k(seq),
+            format!("{hf:.2}"),
+            format!("{ours:.2}"),
+            format!("{:.2}x", hf / ours),
+            phf.map(|x| format!("{x:.2}")).unwrap_or_default(),
+            format!("{pours:.2}"),
+            phf.map(|x| format!("{:.2}x", x / pours)).unwrap_or_default(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 6 (Appendix C): Megatron TP+PP per-stage memory, LLaMA-2H @ 128K.
+pub fn table6() -> String {
+    let model = PaperModel::llama_nh(2);
+    let cluster = ClusterSpec::cluster_16x40g();
+    let seq_per_gpu = 128 * 1024 / cluster.n_gpus();
+    let stages = pp_stage_memory(&model, &cluster, seq_per_gpu, 2, 8);
+    let paper = [
+        [31.5, 31.4, 28.7, 28.7, 26.0, 26.0, 24.6, 24.6],
+        [21.8, 21.8, 20.5, 20.5, 17.9, 17.8, 32.0, 32.1],
+    ];
+    let mut t = Table::new("Table 6 — Megatron TP2+PP8 per-stage memory, LLaMA-2H @128K");
+    t.header(
+        ["stage", "modeled", "paper node1", "paper node2"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for (i, s) in stages.iter().enumerate() {
+        t.row(vec![
+            format!("{i}"),
+            fmt_bytes(*s),
+            format!("{}GB", paper[0][i]),
+            format!("{}GB", paper[1][i]),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 1: idle fraction of ring vs balanced scheduling as P grows.
+pub fn fig1() -> String {
+    let ps = [2usize, 4, 7, 8, 15, 16, 32, 64];
+    let xs: Vec<String> = ps.iter().map(|p| p.to_string()).collect();
+    let ring: Vec<f64> = ps
+        .iter()
+        .map(|&p| crate::coordinator::schedule::ring_idle_fraction(p))
+        .collect();
+    let bal: Vec<f64> = ps
+        .iter()
+        .map(|&p| crate::coordinator::schedule::balanced_idle_fraction_eq2(p))
+        .collect();
+    crate::report::render_series(
+        "Figure 1 — idle fraction (ring -> 1/2, balanced -> 0)",
+        "P",
+        &xs,
+        &[("ring (unbalanced)", ring), ("load-balanced (ours)", bal)],
+        "fraction",
+    )
+}
+
+/// Figure 2: per-step timeline of worker roles under the balanced schedule
+/// with overlap, 8 workers (a textual rendition of the paper's diagram).
+pub fn fig2() -> String {
+    let s = Schedule::balanced(8);
+    let mut out = String::from("## Figure 2 — balanced schedule timeline (P=8)\n");
+    out.push_str("rows = workers, cols = timesteps; D=diag, O<r>=own(kv from r), H<o>=help(for o), .=idle\n");
+    for w in 0..8 {
+        let mut line = format!("w{w}: ");
+        for row in &s.steps {
+            let cell = match row[w].compute {
+                Some(crate::coordinator::ComputeOp::Diag) => "D   ".to_string(),
+                Some(crate::coordinator::ComputeOp::Own { kv_from }) => format!("O{kv_from}  "),
+                Some(crate::coordinator::ComputeOp::Help { owner }) => format!("H{owner}  "),
+                None => ".   ".to_string(),
+            };
+            line.push_str(&cell);
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+/// Figure 4 left: attention speedup vs single-GPU FlashAttention, balanced
+/// vs unbalanced, total sequence 4K → 256K on 8 GPUs.
+pub fn fig4_left() -> String {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_1x8();
+    let totals = [4096usize, 8192, 16384, 32768, 65536, 131072, 262144];
+    let xs: Vec<String> = totals.iter().map(|&t| k(t)).collect();
+    let mut bal = Vec::new();
+    let mut ring = Vec::new();
+    for &total in &totals {
+        let c = total / 8;
+        let single = cluster.compute_time(
+            model.attn_pair_flops(total as f64, total as f64, true),
+            cluster.gpu.mfu_attn,
+        );
+        let b = DistFlashAttn::default().attn_sim(&model, &cluster, c, false);
+        let r = DistFlashAttn {
+            schedule: ScheduleKind::Ring,
+            ..DistFlashAttn::default()
+        }
+        .attn_sim(&model, &cluster, c, false);
+        bal.push(single / b.total_s);
+        ring.push(single / r.total_s);
+    }
+    crate::report::render_series(
+        "Figure 4 (left) — attention speedup vs 1-GPU flash (paper: ring->4.5x, balanced->7.5x)",
+        "total seq",
+        &xs,
+        &[("balanced (ours)", bal), ("unbalanced ring", ring)],
+        "x",
+    )
+}
+
+/// Figure 4 right: communication overhead with/without overlap (2×8).
+pub fn fig4_right() -> String {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_2x8();
+    let totals = [32768usize, 65536, 131072, 262144, 524288];
+    let xs: Vec<String> = totals.iter().map(|&t| k(t)).collect();
+    let mut with = Vec::new();
+    let mut without = Vec::new();
+    for &total in &totals {
+        let c = total / 16;
+        let sys = DistFlashAttn::default();
+        let on = sys.attn_sim(&model, &cluster, c, false);
+        let off = DistFlashAttn { overlap: false, ..sys }.attn_sim(&model, &cluster, c, false);
+        // compute-only baseline: same schedule with zero comm bytes
+        let base = {
+            let schedule = Schedule::balanced(16);
+            let mut cost = pure_attn_cost(&model, &cluster, c as f64);
+            cost.kv_bytes = 0.0;
+            cost.q_bytes = 0.0;
+            cost.result_bytes = 0.0;
+            crate::simulator::simulate_attention(&schedule, &cluster, &cost).total_s
+        };
+        with.push((on.total_s - base) / base * 100.0);
+        without.push((off.total_s - base) / base * 100.0);
+    }
+    crate::report::render_series(
+        "Figure 4 (right) — comm overhead % (paper @128K: 105% -> 44%)",
+        "total seq",
+        &xs,
+        &[("no overlap", without), ("overlap (ours)", with)],
+        "%",
+    )
+}
+
+fn pure_attn_cost(
+    model: &PaperModel,
+    cluster: &ClusterSpec,
+    c: f64,
+) -> crate::simulator::AttnCost {
+    crate::simulator::AttnCost {
+        pair_full_s: cluster.compute_time(model.attn_pair_flops(c, c, false), cluster.gpu.mfu_attn),
+        pair_diag_s: cluster.compute_time(model.attn_pair_flops(c, c, true), cluster.gpu.mfu_attn),
+        rescale_s: cluster.compute_time(c * (model.n_heads * model.head_dim) as f64 * 4.0, 0.05),
+        kv_bytes: model.kv_bytes(c),
+        q_bytes: model.q_bytes(c),
+        result_bytes: model.q_bytes(c) * 1.1,
+        overlap: true,
+    }
+}
+
+/// Figure 7: forward-pass time breakdown, attention vs the rest, one GPU.
+pub fn fig7() -> String {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_1x8();
+    let seqs = [1024usize, 2048, 4096, 8192, 16384, 32768, 65536];
+    let xs: Vec<String> = seqs.iter().map(|&s| k(s)).collect();
+    let mut attn_ms = Vec::new();
+    let mut other_ms = Vec::new();
+    let mut frac = Vec::new();
+    for &n in &seqs {
+        let a = cluster.compute_time(
+            model.attn_pair_flops(n as f64, n as f64, true),
+            cluster.gpu.mfu_attn,
+        ) * 1e3;
+        let o = cluster.compute_time(model.layer_linear_flops(n as f64), cluster.gpu.mfu_gemm) * 1e3;
+        attn_ms.push(a);
+        other_ms.push(o);
+        frac.push(a / (a + o) * 100.0);
+    }
+    crate::report::render_series(
+        "Figure 7 — per-layer fwd time: attention dominates at long seq (paper: ~230ms @64K)",
+        "seq",
+        &xs,
+        &[
+            ("attention (ms)", attn_ms),
+            ("other modules (ms)", other_ms),
+            ("attention share (%)", frac),
+        ],
+        "",
+    )
+}
+
+/// §4.3's Ring Attention comparison as a one-line summary table.
+pub fn ring_attention_summary() -> String {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_1x8();
+    let seq = 32768;
+    let ra = RingAttention.iteration(&model, &cluster, seq).total_s();
+    let ours = DistFlashAttn::default().iteration(&model, &cluster, seq).total_s();
+    let mut t = Table::new("§4.3 — vs Ring Attention (8 GPUs, LLaMA-7B, 32K/GPU)");
+    t.header(["system", "iter(s)", "speedup", "paper"].map(String::from).to_vec());
+    t.row(vec!["Ring Attention".into(), format!("{ra:.2}"), "1.00x".into(), "1.00x".into()]);
+    t.row(vec![
+        "DISTFLASHATTN".into(),
+        format!("{ours:.2}"),
+        format!("{:.2}x", ra / ours),
+        "1.67x".into(),
+    ]);
+    t.render()
+}
+
+/// All tables + figures, concatenated (the `repro tables --all` output).
+pub fn all_reports() -> String {
+    [
+        table1(),
+        table2(),
+        table3(),
+        table4(),
+        ring_attention_summary(),
+        table5(),
+        table6(),
+        fig1(),
+        fig2(),
+        fig4_left(),
+        fig4_right(),
+        fig7(),
+    ]
+    .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_report_renders() {
+        for (name, s) in [
+            ("t1", table1()),
+            ("t2", table2()),
+            ("t3", table3()),
+            ("t4", table4()),
+            ("t5", table5()),
+            ("t6", table6()),
+            ("f1", fig1()),
+            ("f2", fig2()),
+            ("f4l", fig4_left()),
+            ("f4r", fig4_right()),
+            ("f7", fig7()),
+            ("ra", ring_attention_summary()),
+        ] {
+            assert!(s.len() > 100, "{name} too short:\n{s}");
+            assert!(!s.contains("NaN"), "{name} has NaN:\n{s}");
+            assert!(!s.contains("inf"), "{name} has inf:\n{s}");
+        }
+    }
+
+    #[test]
+    fn table1_speedups_in_band() {
+        // every modeled speedup must favor us, within a loose band of the
+        // paper's 1.14-2.01x
+        let s = table1();
+        for line in s.lines().skip(3) {
+            if let Some(col) = line.split('|').nth(6) {
+                let v: f64 = col.trim().trim_end_matches('x').parse().unwrap_or(1.0);
+                assert!((0.95..3.0).contains(&v), "speedup out of band: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_right_overlap_reduces_overhead() {
+        let s = fig4_right();
+        // last data line: overlap column < no-overlap column
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        for l in &lines[2..] {
+            let cols: Vec<&str> = l.split('|').map(str::trim).collect();
+            let no: f64 = cols[2].parse().unwrap();
+            let yes: f64 = cols[3].parse().unwrap();
+            assert!(yes <= no + 1e-9, "{l}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Fixed-width text tables (the offline stand-in for a plotting stack).
+
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn header(&mut self, cols: Vec<String>) -> &mut Self {
+        self.header = cols;
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain([self.header.len()])
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |row: &[String]| -> String {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let sep = format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        if !self.header.is_empty() {
+            out.push_str(&line(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T");
+        t.header(vec!["sys".into(), "time".into()]);
+        t.row(vec!["ours".into(), "1.0".into()]);
+        t.row(vec!["megatron-lm".into(), "2.0".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all table lines same width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+}

@@ -1,0 +1,248 @@
+//! Artifact manifest: the shape/dtype contract between the python AOT
+//! pipeline (`python/compile/aot.py`) and the rust runtime.
+//!
+//! `manifest.json` is the only thing rust ever reads from python land; the
+//! HLO files it references are opaque blobs handed to PJRT. Parsed with the
+//! in-tree JSON parser (`util::json`) — the environment is offline, serde
+//! is unavailable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Mirror of `ModelConfig.to_json()` on the python side.
+#[derive(Debug, Clone)]
+pub struct ModelConfigJson {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub chunk_len: usize,
+    pub n_workers: usize,
+    pub block: usize,
+    pub head_dim: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+    pub export_ref_grads: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfigJson,
+    pub layer_params: Vec<ParamMeta>,
+    pub global_params: Vec<ParamMeta>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.at(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: missing/invalid integer field {key:?}"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.at(key)
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: missing string field {key:?}"))?
+        .to_string())
+}
+
+fn tensor_meta(j: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        name: req_str(j, "name")?,
+        shape: j
+            .at("shape")
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("manifest: bad shape"))?,
+        dtype: req_str(j, "dtype")?,
+    })
+}
+
+fn param_meta(j: &Json) -> Result<ParamMeta> {
+    Ok(ParamMeta {
+        name: req_str(j, "name")?,
+        shape: j
+            .at("shape")
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("manifest: bad param shape"))?,
+    })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`; `dir` is e.g. `artifacts/tiny`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let c = j.at("config");
+        let config = ModelConfigJson {
+            name: req_str(c, "name")?,
+            vocab: req_usize(c, "vocab")?,
+            n_layers: req_usize(c, "n_layers")?,
+            d_model: req_usize(c, "d_model")?,
+            n_heads: req_usize(c, "n_heads")?,
+            n_kv_heads: req_usize(c, "n_kv_heads")?,
+            d_ff: req_usize(c, "d_ff")?,
+            chunk_len: req_usize(c, "chunk_len")?,
+            n_workers: req_usize(c, "n_workers")?,
+            block: req_usize(c, "block")?,
+            head_dim: req_usize(c, "head_dim")?,
+            seq_len: req_usize(c, "seq_len")?,
+            n_params: req_usize(c, "n_params")?,
+            export_ref_grads: c.at("export_ref_grads").as_bool().unwrap_or(false),
+        };
+
+        let mut layer_params = Vec::new();
+        for p in j
+            .at("layer_params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: layer_params not an array"))?
+        {
+            layer_params.push(param_meta(p)?);
+        }
+        let mut global_params = Vec::new();
+        for p in j
+            .at("global_params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: global_params not an array"))?
+        {
+            global_params.push(param_meta(p)?);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .at("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: artifacts not an object"))?;
+        for (name, a) in arts {
+            let mut inputs = Vec::new();
+            for t in a.at("inputs").as_arr().unwrap_or(&[]) {
+                inputs.push(tensor_meta(t)?);
+            }
+            let mut outputs = Vec::new();
+            for t in a.at("outputs").as_arr().unwrap_or(&[]) {
+                outputs.push(tensor_meta(t)?);
+            }
+            if inputs.is_empty() || outputs.is_empty() {
+                bail!("manifest: artifact {name:?} missing inputs/outputs");
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: req_str(a, "file")?,
+                    inputs,
+                    outputs,
+                    sha256: a.at("sha256").as_str().unwrap_or("").to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            config,
+            layer_params,
+            global_params,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({:?})", self.dir))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Flat parameter table in the order `full_model_*` oracles expect:
+    /// every layer's params (manifest order) then the global params.
+    pub fn flat_param_table(&self) -> Vec<ParamMeta> {
+        let mut out = Vec::new();
+        for i in 0..self.config.n_layers {
+            for p in &self.layer_params {
+                out.push(ParamMeta {
+                    name: format!("L{i}.{}", p.name),
+                    shape: p.shape.clone(),
+                });
+            }
+        }
+        out.extend(self.global_params.iter().cloned());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"name":"t","vocab":16,"n_layers":2,"d_model":8,"n_heads":2,
+                 "n_kv_heads":2,"d_ff":16,"chunk_len":4,"n_workers":2,
+                 "block":4,"head_dim":4,"seq_len":8,"n_params":123},
+      "layer_params": [{"name":"ln1_g","shape":[8]}],
+      "global_params": [{"name":"w_emb","shape":[16,8]}],
+      "artifacts": {
+        "f": {"file":"f.hlo.txt","inputs":[{"name":"x","shape":[4,8],"dtype":"f32"}],
+              "outputs":[{"name":"out0","shape":[4,8],"dtype":"f32"}],"sha256":"x"}
+      }
+    }"#;
+
+    fn sample() -> Manifest {
+        let dir = std::env::temp_dir().join("distflash-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = sample();
+        assert_eq!(m.config.n_workers, 2);
+        assert!(!m.config.export_ref_grads);
+        assert_eq!(m.artifacts["f"].inputs[0].shape, vec![4, 8]);
+        assert_eq!(m.hlo_path("f").unwrap().file_name().unwrap(), "f.hlo.txt");
+        assert!(m.artifact("missing").is_err());
+    }
+
+    #[test]
+    fn flat_param_table_order() {
+        let m = sample();
+        let table = m.flat_param_table();
+        assert_eq!(table.len(), 3); // 2 layers x 1 + 1 global
+        assert_eq!(table[0].name, "L0.ln1_g");
+        assert_eq!(table[1].name, "L1.ln1_g");
+        assert_eq!(table[2].name, "w_emb");
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! One `Runtime` per worker thread — `PjRtClient` is `Rc`-based (not
+//! `Send`), which conveniently mirrors the real deployment: one process per
+//! GPU, each owning its own device context, communicating through
+//! host-visible buffers (here: channels).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`); see
+//! DESIGN.md §3 for why serialized protos don't work with xla_extension
+//! 0.5.1.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+use xla::{PjRtClient, PjRtLoadedExecutable};
+
+use super::artifacts::Manifest;
+use super::tensor::{Tensor, Value};
+
+/// Cumulative executable-invocation statistics (perf accounting).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub calls: u64,
+    pub kernel_nanos: u64,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts/<config>/`; executables are compiled
+    /// lazily on first use and cached for the lifetime of the runtime.
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (so timing loops exclude JIT).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs`, returning all outputs as f32
+    /// host tensors. Inputs are validated against the manifest shapes.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let meta = self.manifest.artifact(name)?;
+        ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: got {} inputs, manifest says {}",
+            inputs.len(),
+            meta.inputs.len()
+        );
+        for (v, m) in inputs.iter().zip(&meta.inputs) {
+            ensure!(
+                v.shape() == &m.shape[..],
+                "{name}: input {:?} shape {:?} != manifest {:?}",
+                m.name,
+                v.shape(),
+                m.shape
+            );
+        }
+        // Build device buffers ourselves and use `execute_b`: the crate's
+        // `execute` (literal path) leaks every input buffer it creates
+        // internally (xla_rs.cc `release()`s them and never frees) — with
+        // our call volume that's ~50 MB/step. Caller-owned `PjRtBuffer`s
+        // drop correctly.
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|v| match v {
+                Value::F32(t) => self.client.buffer_from_host_buffer(&t.data, &t.shape, None),
+                Value::I32(t) => self.client.buffer_from_host_buffer(&t.data, &t.shape, None),
+            })
+            .collect::<xla::Result<_>>()
+            .map_err(|e| anyhow!("{name}: uploading inputs: {e}"))?;
+
+        let t0 = std::time::Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("compiled above");
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.calls += 1;
+            s.kernel_nanos += t0.elapsed().as_nanos() as u64;
+        }
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: untupling result: {e}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in &parts {
+            out.push(
+                Tensor::from_literal(p)
+                    .map_err(|e| anyhow!("{name}: reading output: {e}"))?,
+            );
+        }
+        ensure!(
+            out.len() == meta.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            out.len(),
+            meta.outputs.len()
+        );
+        Ok(out)
+    }
+}

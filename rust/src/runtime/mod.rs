@@ -1,0 +1,13 @@
+//! PJRT runtime layer: host tensors, the artifact manifest contract, and the
+//! compile-once/execute-many client wrapper.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ModelConfigJson};
+pub use client::{Runtime, RuntimeStats};
+pub use tensor::{ITensor, Tensor, Value};

@@ -1,0 +1,258 @@
+//! Host tensors: the currency of the coordinator.
+//!
+//! Workers exchange these over channels (the NCCL-P2P substitute) and feed
+//! them to PJRT executables. Everything on the coordinator hot path is
+//! `f32`; token ids are `i32` (the only integer inputs any artifact takes).
+
+use xla::Literal;
+
+/// Dense row-major f32 host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Filled with `v` (e.g. `f32::NEG_INFINITY` for the `m` statistic).
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "not a scalar: shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Elementwise accumulate (gradient reduction on the host).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b|; panics on shape mismatch. Used by verification paths.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Split axis-0 into `n` equal chunks (sequence sharding).
+    pub fn chunk0(&self, n: usize) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty() && self.shape[0] % n == 0);
+        let rows = self.shape[0] / n;
+        let stride: usize = self.shape[1..].iter().product::<usize>().max(1) * rows;
+        let mut shape = self.shape.clone();
+        shape[0] = rows;
+        (0..n)
+            .map(|i| Tensor::new(shape.clone(), self.data[i * stride..(i + 1) * stride].to_vec()))
+            .collect()
+    }
+
+    /// Concatenate along axis 0 (inverse of `chunk0`).
+    pub fn cat0(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut shape = parts[0].shape.clone();
+        shape[0] = parts.iter().map(|t| t.shape[0]).sum();
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            assert_eq!(p.shape[1..], parts[0].shape[1..], "cat0 trailing dims differ");
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(shape, data)
+    }
+
+    /// Split axis-1 of a rank-3 tensor (H, N, D) into `n` chunks of the N
+    /// axis — the layout used to shard per-head q/k/v across workers.
+    pub fn chunk_axis1(&self, n: usize) -> Vec<Tensor> {
+        assert_eq!(self.shape.len(), 3);
+        let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert_eq!(c % n, 0);
+        let rows = c / n;
+        let mut out = vec![Vec::with_capacity(h * rows * d); n];
+        for hh in 0..h {
+            for i in 0..n {
+                let start = hh * c * d + i * rows * d;
+                out[i].extend_from_slice(&self.data[start..start + rows * d]);
+            }
+        }
+        out.into_iter()
+            .map(|data| Tensor::new(vec![h, rows, d], data))
+            .collect()
+    }
+
+    /// Concatenate rank-3 tensors along axis 1 (inverse of `chunk_axis1`).
+    pub fn cat_axis1(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let h = parts[0].shape[0];
+        let d = parts[0].shape[2];
+        let c: usize = parts.iter().map(|t| t.shape[1]).sum();
+        let mut data = Vec::with_capacity(h * c * d);
+        for hh in 0..h {
+            for p in parts {
+                let rows = p.shape[1];
+                let start = hh * rows * d;
+                data.extend_from_slice(&p.data[start..start + rows * d]);
+            }
+        }
+        Tensor::new(vec![h, c, d], data)
+    }
+
+    pub fn to_literal(&self) -> xla::Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        if dims.is_empty() {
+            return Ok(Literal::scalar(self.data[0]));
+        }
+        Literal::vec1(&self.data).reshape(&dims)
+    }
+
+    pub fn from_literal(lit: &Literal) -> xla::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Dense row-major i32 host tensor (token ids / targets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ITensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        ITensor { shape, data }
+    }
+
+    pub fn chunk0(&self, n: usize) -> Vec<ITensor> {
+        assert!(self.shape.len() == 1 && self.shape[0] % n == 0);
+        let rows = self.shape[0] / n;
+        (0..n)
+            .map(|i| ITensor::new(vec![rows], self.data[i * rows..(i + 1) * rows].to_vec()))
+            .collect()
+    }
+
+    pub fn to_literal(&self) -> xla::Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(&self.data).reshape(&dims)
+    }
+}
+
+/// An input value for an artifact call.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(ITensor),
+}
+
+impl Value {
+    pub fn to_literal(&self) -> xla::Result<Literal> {
+        match self {
+            Value::F32(t) => t.to_literal(),
+            Value::I32(t) => t.to_literal(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<ITensor> for Value {
+    fn from(t: ITensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_cat_roundtrip() {
+        let t = Tensor::new(vec![4, 3], (0..12).map(|x| x as f32).collect());
+        let parts = t.chunk0(2);
+        assert_eq!(parts[0].shape, vec![2, 3]);
+        assert_eq!(parts[1].data[0], 6.0);
+        assert_eq!(Tensor::cat0(&parts), t);
+    }
+
+    #[test]
+    fn chunk_axis1_roundtrip() {
+        // (2 heads, 4 tokens, 3 dim)
+        let t = Tensor::new(vec![2, 4, 3], (0..24).map(|x| x as f32).collect());
+        let parts = t.chunk_axis1(2);
+        assert_eq!(parts[0].shape, vec![2, 2, 3]);
+        // head 0 rows 0-1 then head 1 rows 0-1
+        assert_eq!(parts[0].data[0], 0.0);
+        assert_eq!(parts[0].data[6], 12.0);
+        assert_eq!(Tensor::cat_axis1(&parts), t);
+    }
+
+    #[test]
+    fn add_assign_and_diff() {
+        let mut a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        a.add_assign(&b);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        a.scale(2.0);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

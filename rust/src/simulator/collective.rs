@@ -1,0 +1,87 @@
+//! Analytic cost models for the collectives the baselines use (ring
+//! algorithms, the NCCL default at these scales).
+//!
+//! Conventions: `bytes` is the *full* tensor size being gathered/reduced
+//! (per participating GPU where noted), `g` the group size, `(bw, lat)` the
+//! bottleneck link. Formulas are the standard ring-collective costs
+//! (e.g. NCCL docs / Korthikanti et al. appendix).
+
+/// Point-to-point: one message over one link.
+pub fn p2p(bytes: f64, bw: f64, lat: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    lat + bytes / bw
+}
+
+/// Ring all-gather of a `bytes`-sized shard from each of `g` ranks
+/// (total output g·bytes): (g-1) steps shipping `bytes` each.
+pub fn all_gather(bytes_per_rank: f64, g: usize, bw: f64, lat: f64) -> f64 {
+    if g <= 1 {
+        return 0.0;
+    }
+    (g - 1) as f64 * (lat + bytes_per_rank / bw)
+}
+
+/// Ring reduce-scatter of a `bytes`-sized input per rank down to
+/// bytes/g shards: (g-1) steps shipping bytes/g each.
+pub fn reduce_scatter(bytes: f64, g: usize, bw: f64, lat: f64) -> f64 {
+    if g <= 1 {
+        return 0.0;
+    }
+    (g - 1) as f64 * (lat + bytes / g as f64 / bw)
+}
+
+/// Ring all-reduce = reduce-scatter + all-gather: 2(g-1)/g · bytes / bw.
+pub fn all_reduce(bytes: f64, g: usize, bw: f64, lat: f64) -> f64 {
+    reduce_scatter(bytes, g, bw, lat) + all_gather(bytes / g as f64, g, bw, lat)
+}
+
+/// All-to-all: each rank exchanges bytes·(g-1)/g of its data (pairwise).
+pub fn all_to_all(bytes: f64, g: usize, bw: f64, lat: f64) -> f64 {
+    if g <= 1 {
+        return 0.0;
+    }
+    (g - 1) as f64 * lat + bytes * (g - 1) as f64 / g as f64 / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BW: f64 = 100e9;
+    const LAT: f64 = 1e-6;
+
+    #[test]
+    fn degenerate_groups_cost_nothing() {
+        assert_eq!(all_gather(1e9, 1, BW, LAT), 0.0);
+        assert_eq!(reduce_scatter(1e9, 1, BW, LAT), 0.0);
+        assert_eq!(all_reduce(1e9, 1, BW, LAT), 0.0);
+        assert_eq!(all_to_all(1e9, 1, BW, LAT), 0.0);
+        assert_eq!(p2p(0.0, BW, LAT), 0.0);
+    }
+
+    #[test]
+    fn all_reduce_is_twice_reduce_scatter_volume() {
+        // classic identity: AR ≈ 2·(g-1)/g · bytes / bw for small latency
+        let g = 8;
+        let bytes = 1e9;
+        let ar = all_reduce(bytes, g, BW, 0.0);
+        let expect = 2.0 * (g - 1) as f64 / g as f64 * bytes / BW;
+        assert!((ar - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn bigger_groups_cost_more_latency() {
+        let t4 = all_gather(1e6, 4, BW, LAT);
+        let t8 = all_gather(1e6, 8, BW, LAT);
+        assert!(t8 > t4);
+    }
+
+    #[test]
+    fn p2p_scales_linearly() {
+        let a = p2p(1e9, BW, 0.0);
+        let b = p2p(2e9, BW, 0.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Cluster timing simulator: analytic collective costs + a lock-step BSP
+//! simulation of DISTFLASHATTN schedules on modeled A100 clusters.
+//!
+//! This is the substrate behind every wall-clock number in the paper-table
+//! reproductions; the real-numerics executor (`coordinator::executor`)
+//! proves correctness, this proves the *performance shape*.
+
+pub mod collective;
+pub mod engine;
+
+pub use engine::{simulate_attention, AttnCost, SimResult, SlotTrace};

@@ -1,0 +1,85 @@
+//! Synthetic corpus: a low-entropy order-1 Markov chain over the vocab.
+//!
+//! Structured enough that a causal LM's loss falls well below ln(V) within
+//! a few hundred steps, deterministic by seed so every worker can generate
+//! the same stream locally (no data broadcast needed — exactly how the
+//! verification math wants it).
+
+use crate::util::Rng;
+
+pub struct MarkovCorpus {
+    vocab: usize,
+    /// next[token] = most likely successor.
+    next: Vec<usize>,
+    /// Probability of following the chain (vs a uniform random token).
+    p_follow: f64,
+    rng: Rng,
+    state: usize,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let mut next = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            next.push(rng.below(vocab));
+        }
+        MarkovCorpus { vocab, next, p_follow: 0.9, rng, state: 0 }
+    }
+
+    /// Next `n + 1` tokens; `(inputs, targets)` = (t[..n], t[1..]).
+    pub fn sample(&mut self, n: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(n + 1);
+        toks.push(self.state as i32);
+        for _ in 0..n {
+            self.state = if (self.rng.f32() as f64) < self.p_follow {
+                self.next[self.state]
+            } else {
+                self.rng.below(self.vocab)
+            };
+            toks.push(self.state as i32);
+        }
+        let inputs = toks[..n].to_vec();
+        let targets = toks[1..].to_vec();
+        (inputs, targets)
+    }
+
+    /// Entropy floor of the chain in nats (loss can't go below this).
+    pub fn entropy_floor(&self) -> f64 {
+        let p = self.p_follow + (1.0 - self.p_follow) / self.vocab as f64;
+        let q = (1.0 - self.p_follow) / self.vocab as f64;
+        -(p * p.ln() + (self.vocab - 1) as f64 * q * q.ln())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let (a, ta) = MarkovCorpus::new(256, 7).sample(100);
+        let (b, tb) = MarkovCorpus::new(256, 7).sample(100);
+        assert_eq!(a, b);
+        assert_eq!(ta, tb);
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+        // targets are inputs shifted by one
+        assert_eq!(&a[1..], &ta[..99]);
+        assert_eq!(tb.len(), 100);
+    }
+
+    #[test]
+    fn chain_is_learnable() {
+        let c = MarkovCorpus::new(256, 0);
+        let floor = c.entropy_floor();
+        let uniform = (256f64).ln();
+        assert!(floor < uniform * 0.25, "floor {floor} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _) = MarkovCorpus::new(256, 1).sample(50);
+        let (b, _) = MarkovCorpus::new(256, 2).sample(50);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! End-to-end sequence-parallel training on the real runtime: synthetic
+//! corpus, Adam, and the distributed trainer with both checkpointing
+//! strategies. The numerics are pinned to the `full_model_grads` oracle in
+//! `rust/tests/trainer_integration.rs`.
+
+pub mod data;
+pub mod optimizer;
+pub mod trainer;
+
+pub use data::MarkovCorpus;
+pub use optimizer::{Adam, AdamConfig};
+pub use trainer::{oracle_first_step, train, StepLog, TrainConfig, TrainReport};

@@ -1,0 +1,138 @@
+//! Adam (Kingma & Ba) over host tensors, with bias correction and optional
+//! gradient clipping. Runs identically on every worker after the gradient
+//! all-reduce, keeping replicated parameters bit-identical — the property
+//! the trainer's determinism tests pin down.
+
+use crate::runtime::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub grad_clip: Option<f32>,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, grad_clip: Some(1.0) }
+    }
+}
+
+pub struct Adam {
+    cfg: AdamConfig,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig, params: &[Tensor]) -> Adam {
+        Adam {
+            cfg,
+            m: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            v: params.iter().map(|p| Tensor::zeros(&p.shape)).collect(),
+            t: 0,
+        }
+    }
+
+    /// Global gradient L2 norm (for clipping / logging).
+    pub fn grad_norm(grads: &[Tensor]) -> f32 {
+        grads
+            .iter()
+            .map(|g| g.data.iter().map(|x| x * x).sum::<f32>())
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// One update step; `params` and `grads` must align with construction.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let scale = match self.cfg.grad_clip {
+            Some(c) => {
+                let norm = Self::grad_norm(grads);
+                if norm > c {
+                    c / norm
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for i in 0..p.data.len() {
+                let gi = g.data[i] * scale;
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+                let mhat = m.data[i] / bc1;
+                let vhat = v.data[i] / bc2;
+                p.data[i] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // minimize f(x) = ||x - 3||^2
+        let mut params = vec![Tensor::zeros(&[4])];
+        let mut adam = Adam::new(
+            AdamConfig { lr: 0.1, grad_clip: None, ..Default::default() },
+            &params,
+        );
+        for _ in 0..200 {
+            let grads = vec![Tensor::new(
+                vec![4],
+                params[0].data.iter().map(|x| 2.0 * (x - 3.0)).collect(),
+            )];
+            adam.step(&mut params, &grads);
+        }
+        for &x in &params[0].data {
+            assert!((x - 3.0).abs() < 0.05, "converged to {x}");
+        }
+    }
+
+    #[test]
+    fn clipping_bounds_update() {
+        let mut params = vec![Tensor::zeros(&[2])];
+        let mut adam = Adam::new(
+            AdamConfig { lr: 0.1, grad_clip: Some(1.0), ..Default::default() },
+            &params,
+        );
+        let huge = vec![Tensor::new(vec![2], vec![1e6, 1e6])];
+        adam.step(&mut params, &huge);
+        // first-step Adam update magnitude ≈ lr regardless, but clipped
+        // grads keep m/v sane; just assert finiteness and small step
+        assert!(params[0].data.iter().all(|x| x.is_finite() && x.abs() < 0.2));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let p0 = vec![Tensor::new(vec![3], vec![1.0, -2.0, 0.5])];
+        let g = vec![Tensor::new(vec![3], vec![0.3, 0.1, -0.7])];
+        let mut a = p0.clone();
+        let mut b = p0.clone();
+        let mut oa = Adam::new(AdamConfig::default(), &a);
+        let mut ob = Adam::new(AdamConfig::default(), &b);
+        for _ in 0..5 {
+            oa.step(&mut a, &g);
+            ob.step(&mut b, &g);
+        }
+        assert_eq!(a[0].data, b[0].data);
+    }
+}

@@ -1,0 +1,563 @@
+//! Sequence-parallel distributed trainer: the full DISTFLASHATTN training
+//! loop over the AOT layer artifacts.
+//!
+//! P worker threads each own one sequence chunk and a full parameter
+//! replica. Per layer: local `part1` (LN + QKV) → *distributed* attention
+//! (the paper's contribution, over the channel fabric) → local `part2`
+//! (proj + MLP). Gradients are summed with a ring all-reduce and Adam runs
+//! identically everywhere (replicated params stay bit-identical — FSDP
+//! sharding is modeled in `baselines`, not materialized here, since memory
+//! pressure is not what the CPU testbed measures).
+//!
+//! Checkpointing strategies (paper §3.3) are implemented exactly as the
+//! data-flow dictates:
+//! * `HfStyle`   — store layer input x; backward re-runs part1 AND the
+//!   distributed attention forward (with all its communication).
+//! * `RematAware` — additionally store (o, lse) at the FlashAttention
+//!   output; backward re-runs only part1. No attention forward, no
+//!   forward communication. Numerically identical (asserted in tests).
+
+use std::path::{Path, PathBuf};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::comm::{build_network, WorkerComm};
+use crate::coordinator::executor::{AttnCtx, ATTN_ARTIFACTS};
+use crate::coordinator::{CkptStrategy, Schedule, ScheduleKind};
+use crate::runtime::{ITensor, Runtime, Tensor, Value};
+use crate::train::data::MarkovCorpus;
+use crate::train::optimizer::{Adam, AdamConfig};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifact_dir: PathBuf,
+    pub schedule: ScheduleKind,
+    pub ckpt: CkptStrategy,
+    pub steps: usize,
+    pub adam: AdamConfig,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn new(artifact_dir: &Path) -> Self {
+        TrainConfig {
+            artifact_dir: artifact_dir.to_path_buf(),
+            schedule: ScheduleKind::Balanced,
+            ckpt: CkptStrategy::RematAware,
+            steps: 20,
+            adam: AdamConfig::default(),
+            seed: 0,
+            log_every: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub wall_s: f64,
+    /// Global bytes moved during this step (attention + all-reduce).
+    pub comm_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub logs: Vec<StepLog>,
+    pub kernel_calls: u64,
+    pub kernel_s: f64,
+    pub total_s: f64,
+}
+
+/// Parameter layout helper: layer params in manifest order, then globals.
+struct ParamLayout {
+    n_layers: usize,
+    per_layer: usize,
+}
+
+impl ParamLayout {
+    fn layer(&self, l: usize, i: usize) -> usize {
+        l * self.per_layer + i
+    }
+
+    fn global(&self, i: usize) -> usize {
+        self.n_layers * self.per_layer + i
+    }
+}
+
+/// Deterministic parameter init (every worker computes the same tensors).
+fn init_params(rt: &Runtime, seed: u64) -> Vec<Tensor> {
+    let m = rt.manifest();
+    let cfg = &m.config;
+    let mut rng = Rng::new(seed ^ 0x9A7A);
+    let mut out = Vec::new();
+    let std_scale = 0.02f32;
+    for _l in 0..cfg.n_layers {
+        for p in &m.layer_params {
+            let n: usize = p.shape.iter().product();
+            let t = if p.name.starts_with("ln") {
+                Tensor::full(&p.shape, 1.0)
+            } else {
+                let mut data = rng.normal_vec(n);
+                let s = if p.name == "w2" {
+                    std_scale / (2.0 * cfg.n_layers as f32).sqrt()
+                } else {
+                    std_scale
+                };
+                for x in &mut data {
+                    *x *= s;
+                }
+                Tensor::new(p.shape.clone(), data)
+            };
+            out.push(t);
+        }
+    }
+    for p in &m.global_params {
+        let n: usize = p.shape.iter().product();
+        let t = if p.name.starts_with("ln") {
+            Tensor::full(&p.shape, 1.0)
+        } else {
+            let mut data = rng.normal_vec(n);
+            for x in &mut data {
+                *x *= std_scale;
+            }
+            Tensor::new(p.shape.clone(), data)
+        };
+        out.push(t);
+    }
+    out
+}
+
+fn v(t: &Tensor) -> Value {
+    Value::F32(t.clone())
+}
+
+/// Saved forward state for one layer (per checkpoint strategy).
+struct LayerCkpt {
+    x: Tensor,
+    /// Present only under RematAware.
+    attn: Option<(Tensor, Tensor)>, // (o, lse)
+}
+
+struct Worker {
+    rank: usize,
+    runtime: Runtime,
+    comm: WorkerComm,
+    schedule: Schedule,
+    cfg: TrainConfig,
+    params: Vec<Tensor>,
+    layout: ParamLayout,
+}
+
+impl Worker {
+    /// Names of per-layer params in manifest order (indices into layout).
+    const LN1: usize = 0;
+    const WQ: usize = 1;
+    const WK: usize = 2;
+    const WV: usize = 3;
+    const WO: usize = 4;
+    const LN2: usize = 5;
+    const W1: usize = 6;
+    const W3: usize = 7;
+    const W2: usize = 8;
+    const W_EMB: usize = 0;
+    const LN_F: usize = 1;
+    const W_HEAD: usize = 2;
+
+    fn lp(&self, l: usize, i: usize) -> &Tensor {
+        &self.params[self.layout.layer(l, i)]
+    }
+
+    fn gp(&self, i: usize) -> &Tensor {
+        &self.params[self.layout.global(i)]
+    }
+
+    fn attn_call(
+        &mut self,
+        call_id: u32,
+        f: impl FnOnce(&mut AttnCtx) -> Result<Vec<Tensor>>,
+    ) -> Result<Vec<Tensor>> {
+        let mut ctx = AttnCtx {
+            rank: self.rank,
+            runtime: &self.runtime,
+            comm: &mut self.comm,
+            schedule: &self.schedule,
+            call_id,
+        };
+        f(&mut ctx)
+    }
+
+    /// One full forward over the local chunk; returns (loss_local, ckpts,
+    /// final x) — loss_local already carries the 1/N global normalizer.
+    fn forward(
+        &mut self,
+        step: usize,
+        ids: &ITensor,
+        targets: &ITensor,
+        inv_total: f32,
+    ) -> Result<(f32, Vec<LayerCkpt>, Tensor)> {
+        let n_layers = self.layout.n_layers;
+        let mut x = self
+            .runtime
+            .run("embed_fwd", &[Value::I32(ids.clone()), v(self.gp(Self::W_EMB))])?
+            .remove(0);
+        let mut ckpts = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let qkv = self.runtime.run(
+                "part1_fwd",
+                &[
+                    v(&x),
+                    v(self.lp(l, Self::LN1)),
+                    v(self.lp(l, Self::WQ)),
+                    v(self.lp(l, Self::WK)),
+                    v(self.lp(l, Self::WV)),
+                ],
+            )?;
+            let (q, k, vv) = (&qkv[0], &qkv[1], &qkv[2]);
+            let call = call_id(step, l, Pass::Fwd);
+            let out = self.attn_call(call, |ctx| {
+                let (o, lse) = ctx.forward(q, k, vv)?;
+                Ok(vec![o, lse])
+            })?;
+            let (o, lse) = (out[0].clone(), out[1].clone());
+            let y = self
+                .runtime
+                .run(
+                    "part2_fwd",
+                    &[
+                        v(&x),
+                        v(&o),
+                        v(self.lp(l, Self::WO)),
+                        v(self.lp(l, Self::LN2)),
+                        v(self.lp(l, Self::W1)),
+                        v(self.lp(l, Self::W3)),
+                        v(self.lp(l, Self::W2)),
+                    ],
+                )?
+                .remove(0);
+            ckpts.push(LayerCkpt {
+                x: x.clone(),
+                attn: match self.cfg.ckpt {
+                    CkptStrategy::RematAware => Some((o, lse)),
+                    CkptStrategy::HfStyle => None,
+                },
+            });
+            x = y;
+        }
+        let loss = self
+            .runtime
+            .run(
+                "head_loss_fwd",
+                &[
+                    v(&x),
+                    v(self.gp(Self::LN_F)),
+                    v(self.gp(Self::W_HEAD)),
+                    Value::I32(targets.clone()),
+                    Value::F32(Tensor::scalar(inv_total)),
+                ],
+            )?[0]
+            .as_scalar();
+        Ok((loss, ckpts, x))
+    }
+
+    /// Full backward; returns grads aligned with `params`.
+    fn backward(
+        &mut self,
+        step: usize,
+        ids: &ITensor,
+        targets: &ITensor,
+        inv_total: f32,
+        ckpts: Vec<LayerCkpt>,
+        x_final: Tensor,
+    ) -> Result<Vec<Tensor>> {
+        let n_layers = self.layout.n_layers;
+        let mut grads: Vec<Tensor> =
+            self.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+
+        // head
+        let head = self.runtime.run(
+            "head_loss_bwd",
+            &[
+                v(&x_final),
+                v(self.gp(Self::LN_F)),
+                v(self.gp(Self::W_HEAD)),
+                Value::I32(targets.clone()),
+                Value::F32(Tensor::scalar(inv_total)),
+            ],
+        )?;
+        // outputs: (loss, dx, dln_f, dw_head)
+        let mut dy = head[1].clone();
+        grads[self.layout.global(Self::LN_F)].add_assign(&head[2]);
+        grads[self.layout.global(Self::W_HEAD)].add_assign(&head[3]);
+
+        for l in (0..n_layers).rev() {
+            let ck = &ckpts[l];
+            let x = ck.x.clone();
+            // part1 recompute (cheap; both strategies)
+            let qkv = self.runtime.run(
+                "part1_fwd",
+                &[
+                    v(&x),
+                    v(self.lp(l, Self::LN1)),
+                    v(self.lp(l, Self::WQ)),
+                    v(self.lp(l, Self::WK)),
+                    v(self.lp(l, Self::WV)),
+                ],
+            )?;
+            let (q, k, vv) = (qkv[0].clone(), qkv[1].clone(), qkv[2].clone());
+            // attention output: saved (ours) or recomputed with full comm (HF)
+            let (o, lse) = match &ck.attn {
+                Some((o, lse)) => (o.clone(), lse.clone()),
+                None => {
+                    let call = call_id(step, l, Pass::Recompute);
+                    let out = self.attn_call(call, |ctx| {
+                        let (o, lse) = ctx.forward(&q, &k, &vv)?;
+                        Ok(vec![o, lse])
+                    })?;
+                    (out[0].clone(), out[1].clone())
+                }
+            };
+            // part2 backward
+            let p2 = self.runtime.run(
+                "part2_bwd",
+                &[
+                    v(&x),
+                    v(&o),
+                    v(self.lp(l, Self::WO)),
+                    v(self.lp(l, Self::LN2)),
+                    v(self.lp(l, Self::W1)),
+                    v(self.lp(l, Self::W3)),
+                    v(self.lp(l, Self::W2)),
+                    v(&dy),
+                ],
+            )?;
+            // outputs: (dx, d_attn_o, dwo, dln2, dw1, dw3, dw2)
+            let dx_p2 = p2[0].clone();
+            let d_o = p2[1].clone();
+            grads[self.layout.layer(l, Self::WO)].add_assign(&p2[2]);
+            grads[self.layout.layer(l, Self::LN2)].add_assign(&p2[3]);
+            grads[self.layout.layer(l, Self::W1)].add_assign(&p2[4]);
+            grads[self.layout.layer(l, Self::W3)].add_assign(&p2[5]);
+            grads[self.layout.layer(l, Self::W2)].add_assign(&p2[6]);
+            // distributed attention backward (no fwd recompute — §3.3)
+            let call = call_id(step, l, Pass::Bwd);
+            let attn_grads = self.attn_call(call, |ctx| {
+                let (dq, dk, dv) = ctx.backward(&q, &k, &vv, &o, &lse, &d_o)?;
+                Ok(vec![dq, dk, dv])
+            })?;
+            // part1 backward
+            let p1 = self.runtime.run(
+                "part1_bwd",
+                &[
+                    v(&x),
+                    v(self.lp(l, Self::LN1)),
+                    v(self.lp(l, Self::WQ)),
+                    v(self.lp(l, Self::WK)),
+                    v(self.lp(l, Self::WV)),
+                    v(&attn_grads[0]),
+                    v(&attn_grads[1]),
+                    v(&attn_grads[2]),
+                ],
+            )?;
+            // outputs: (dx, dln1, dwq, dwk, dwv)
+            grads[self.layout.layer(l, Self::LN1)].add_assign(&p1[1]);
+            grads[self.layout.layer(l, Self::WQ)].add_assign(&p1[2]);
+            grads[self.layout.layer(l, Self::WK)].add_assign(&p1[3]);
+            grads[self.layout.layer(l, Self::WV)].add_assign(&p1[4]);
+            // dL/dx = residual path (part2's dx) + part1 path
+            dy = dx_p2;
+            dy.add_assign(&p1[0]);
+        }
+
+        // embedding
+        let demb = self
+            .runtime
+            .run("embed_bwd", &[Value::I32(ids.clone()), v(&dy)])?
+            .remove(0);
+        grads[self.layout.global(Self::W_EMB)].add_assign(&demb);
+        Ok(grads)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Pass {
+    Fwd,
+    Bwd,
+    Recompute,
+}
+
+/// Unique attention call id per (step, layer, pass) — keeps channel tags
+/// from colliding across the whole run.
+fn call_id(step: usize, layer: usize, pass: Pass) -> u32 {
+    let p = match pass {
+        Pass::Fwd => 0,
+        Pass::Bwd => 1,
+        Pass::Recompute => 2,
+    };
+    ((step as u32) << 12) | ((layer as u32) << 2) | p
+}
+
+/// Run distributed training; returns the rank-0 report.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let probe = Runtime::load(&cfg.artifact_dir)?;
+    let mc = probe.manifest().config.clone();
+    let p = mc.n_workers;
+    let n = mc.seq_len;
+    drop(probe);
+
+    let schedule = Schedule::build(cfg.schedule, p);
+    schedule.validate().map_err(|e| anyhow!("schedule: {e}"))?;
+    let comms = build_network(p);
+
+    let mut handles = Vec::new();
+    for (rank, comm) in comms.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let schedule = schedule.clone();
+        handles.push(thread::spawn(move || -> Result<Option<TrainReport>> {
+            let runtime = Runtime::load(&cfg.artifact_dir)?;
+            runtime.precompile(ATTN_ARTIFACTS)?;
+            runtime.precompile(&[
+                "embed_fwd",
+                "embed_bwd",
+                "part1_fwd",
+                "part1_bwd",
+                "part2_fwd",
+                "part2_bwd",
+                "head_loss_fwd",
+                "head_loss_bwd",
+            ])?;
+            let params = init_params(&runtime, cfg.seed);
+            let layout = ParamLayout {
+                n_layers: runtime.manifest().config.n_layers,
+                per_layer: runtime.manifest().layer_params.len(),
+            };
+            let mut w = Worker {
+                rank,
+                runtime,
+                comm,
+                schedule,
+                cfg: cfg.clone(),
+                params,
+                layout,
+            };
+            let mut adam = Adam::new(cfg.adam, &w.params);
+            let mut corpus = MarkovCorpus::new(
+                w.runtime.manifest().config.vocab,
+                cfg.seed,
+            );
+            let chunk = w.runtime.manifest().config.chunk_len;
+            let inv_total = 1.0 / n as f32;
+            let mut logs = Vec::new();
+            let t_start = std::time::Instant::now();
+
+            for step in 0..cfg.steps {
+                let t0 = std::time::Instant::now();
+                // every worker generates the identical sequence, takes its
+                // chunk
+                let (ids_full, tgts_full) = corpus.sample(n);
+                let ids = ITensor::new(
+                    vec![chunk],
+                    ids_full[rank * chunk..(rank + 1) * chunk].to_vec(),
+                );
+                let tgts = ITensor::new(
+                    vec![chunk],
+                    tgts_full[rank * chunk..(rank + 1) * chunk].to_vec(),
+                );
+
+                let (loss_local, ckpts, x_final) =
+                    w.forward(step, &ids, &tgts, inv_total)?;
+                let mut grads =
+                    w.backward(step, &ids, &tgts, inv_total, ckpts, x_final)?;
+
+                // global loss + gradient all-reduce
+                let mut loss_t = Tensor::scalar(loss_local);
+                let round_base = (step as u32) << 16;
+                w.comm.all_reduce_sum(round_base, &mut loss_t);
+                for (i, g) in grads.iter_mut().enumerate() {
+                    w.comm.all_reduce_sum(round_base + 1 + i as u32, g);
+                }
+                let gnorm = Adam::grad_norm(&grads);
+                adam.step(&mut w.params, &grads);
+
+                if rank == 0 {
+                    logs.push(StepLog {
+                        step,
+                        loss: loss_t.as_scalar(),
+                        grad_norm: gnorm,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                        comm_bytes: w.comm.bytes_sent_global(),
+                    });
+                }
+            }
+
+            if rank == 0 {
+                let stats = w.runtime.stats();
+                Ok(Some(TrainReport {
+                    logs,
+                    kernel_calls: stats.calls,
+                    kernel_s: stats.kernel_nanos as f64 / 1e9,
+                    total_s: t_start.elapsed().as_secs_f64(),
+                }))
+            } else {
+                Ok(None)
+            }
+        }));
+    }
+
+    let mut report = None;
+    for h in handles {
+        let r = h
+            .join()
+            .map_err(|_| anyhow!("trainer worker panicked"))?
+            .context("trainer worker failed")?;
+        if let Some(r) = r {
+            report = Some(r);
+        }
+    }
+    report.ok_or_else(|| anyhow!("no report from rank 0"))
+}
+
+/// Evaluate the monolithic `full_model_grads` oracle with the same
+/// deterministic init + first corpus sample; returns (loss, grads).
+/// Only available for configs exported with `export_ref_grads`.
+pub fn oracle_first_step(cfg: &TrainConfig) -> Result<(f32, Vec<Tensor>)> {
+    let rt = Runtime::load(&cfg.artifact_dir)?;
+    let mc = rt.manifest().config.clone();
+    anyhow::ensure!(
+        mc.export_ref_grads,
+        "config {} lacks the full_model_grads oracle",
+        mc.name
+    );
+    let params = init_params(&rt, cfg.seed);
+    let mut corpus = MarkovCorpus::new(mc.vocab, cfg.seed);
+    let (ids, tgts) = corpus.sample(mc.seq_len);
+    let mut inputs: Vec<Value> = vec![
+        Value::I32(ITensor::new(vec![mc.seq_len], ids)),
+        Value::I32(ITensor::new(vec![mc.seq_len], tgts)),
+    ];
+    inputs.extend(params.iter().map(|t| Value::F32(t.clone())));
+    let mut out = rt.run("full_model_grads", &inputs)?;
+    let loss = out.remove(0).as_scalar();
+    Ok((loss, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn call_ids_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..16 {
+            for layer in 0..8 {
+                for pass in [Pass::Fwd, Pass::Bwd, Pass::Recompute] {
+                    assert!(seen.insert(call_id(step, layer, pass)));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Dependency-free substrates: JSON parsing, a deterministic RNG, and a
+//! tiny bench harness (the environment is offline; serde/rand/criterion are
+//! not available, so these are built here and tested like everything else).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,131 @@
+//! Simulator/baseline integration: cross-model consistency checks that
+//! mirror the paper's headline claims (the table-level shape, not absolute
+//! seconds). These run without artifacts — pure analytic models.
+
+use distflash::baselines::distflash::DistFlashAttn;
+use distflash::baselines::megatron::Megatron;
+use distflash::baselines::ring_attention::RingAttention;
+use distflash::baselines::rsa::RingSelfAttention;
+use distflash::baselines::ulysses::Ulysses;
+use distflash::baselines::SystemModel;
+use distflash::config::{ClusterSpec, PaperModel};
+use distflash::coordinator::{CkptStrategy, ScheduleKind};
+use distflash::memory::max_total_seq_pow2;
+
+#[test]
+fn headline_we_beat_every_baseline_at_long_context() {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_2x8();
+    let seq = 32768;
+    let ours = DistFlashAttn::default().iteration(&model, &cluster, seq).total_s();
+    let others: Vec<(String, f64)> = vec![
+        ("megatron".into(), Megatron::tp().iteration(&model, &cluster, seq).total_s()),
+        ("ulysses".into(), Ulysses.iteration(&model, &cluster, seq).total_s()),
+        ("ring-attn".into(), RingAttention.iteration(&model, &cluster, seq).total_s()),
+        ("rsa".into(), RingSelfAttention.iteration(&model, &cluster, seq).total_s()),
+    ];
+    for (name, t) in others {
+        assert!(t > ours, "{name}: {t} should exceed ours {ours}");
+    }
+}
+
+#[test]
+fn table1_shape_speedup_grows_with_seq_and_irregular_heads() {
+    let cluster = ClusterSpec::dgx_2x8();
+    let speedup = |m: &PaperModel, s: usize| {
+        Megatron::tp().iteration(m, &cluster, s).total_s()
+            / DistFlashAttn::default().iteration(m, &cluster, s).total_s()
+    };
+    let m7 = PaperModel::llama_7b();
+    let m33 = PaperModel::llama_33h();
+    // we win at every length, in the paper's 1.1-2.0x band. (The paper's
+    // *rising*-with-seq trend partly reflects short-seq framework
+    // overheads the analytic model does not include — recorded as a
+    // deviation in EXPERIMENTS.md.)
+    for seq in [8192, 16384, 32768] {
+        let s = speedup(&m7, seq);
+        assert!((1.05..2.2).contains(&s), "7B @{seq}: {s}");
+    }
+    // irregular heads amplify our advantage (paper: up to 2.01x)
+    assert!(speedup(&m33, 16384) > speedup(&m7, 16384) * 1.2);
+}
+
+#[test]
+fn table2_shape_ours_insensitive_to_head_count() {
+    let cluster = ClusterSpec::cluster_16x40g();
+    let ours = DistFlashAttn::default();
+    let m16 = max_total_seq_pow2(&ours, &PaperModel::llama_nh(16), &cluster);
+    let m2 = max_total_seq_pow2(&ours, &PaperModel::llama_nh(2), &cluster);
+    // sequence parallelism does not care about head count (Table 2 row 3)
+    assert!(
+        (m2 as f64 / m16 as f64) >= 0.5,
+        "ours collapses with fewer heads: 16H {m16} vs 2H {m2}"
+    );
+    // Megatron TP+DP degrades as heads shrink (Table 2 row 1)
+    let g16 = max_total_seq_pow2(&Megatron::tp_dp(), &PaperModel::llama_nh(16), &cluster);
+    let g2 = max_total_seq_pow2(&Megatron::tp_dp(), &PaperModel::llama_nh(2), &cluster);
+    assert!(g2 < g16, "megatron TP+DP should shrink: 16H {g16} 2H {g2}");
+    // and we dominate at 2 heads (paper: 512K vs 64K)
+    assert!(m2 >= g2 * 4, "ours {m2} vs megatron {g2}");
+}
+
+#[test]
+fn table2_shape_pp_beats_dp_on_memory_at_low_heads() {
+    // paper Table 2: TP+PP supports longer sequences than TP+DP for 4H/2H
+    let cluster = ClusterSpec::cluster_16x40g();
+    for heads in [4usize, 2] {
+        let m = PaperModel::llama_nh(heads);
+        let dp = max_total_seq_pow2(&Megatron::tp_dp(), &m, &cluster);
+        let pp = max_total_seq_pow2(&Megatron::tp_pp(), &m, &cluster);
+        assert!(pp >= dp, "{heads}H: pp {pp} < dp {dp}");
+    }
+}
+
+#[test]
+fn ablation_each_optimization_helps() {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_2x8();
+    let seq = 16384;
+    let full = DistFlashAttn::default();
+    let no_balance = DistFlashAttn { schedule: ScheduleKind::Ring, ..full };
+    let no_overlap = DistFlashAttn { overlap: false, ..full };
+    let no_remat = DistFlashAttn { ckpt: CkptStrategy::HfStyle, ..full };
+    let t = |s: &DistFlashAttn| s.iteration(&model, &cluster, seq).total_s();
+    let base = t(&full);
+    assert!(t(&no_balance) > base * 1.15, "balancing contributes (paper ~2x on attention)");
+    assert!(t(&no_overlap) > base * 1.02, "overlap contributes (paper 1.32x e2e)");
+    assert!(t(&no_remat) > base * 1.10, "remat-aware ckpt contributes (paper 1.24x @16K)");
+}
+
+#[test]
+fn gqa_speedup_exceeds_mha_speedup_cross_node() {
+    // paper §4.1: GQA cuts our kv comm 4x while Megatron's comm is
+    // unchanged -> our relative advantage grows (1.46x vs 1.12x @8K 2x8)
+    let cluster = ClusterSpec::dgx_2x8();
+    let ratio = |m: &PaperModel| {
+        Megatron::tp().iteration(m, &cluster, 8192).total_s()
+            / DistFlashAttn::default().iteration(m, &cluster, 8192).total_s()
+    };
+    assert!(ratio(&PaperModel::llama_gqa()) > ratio(&PaperModel::llama_7b()));
+}
+
+#[test]
+fn fig4_right_overhead_drops_with_overlap() {
+    // paper: 105% -> 44% comm overhead at 128K total on 2x8
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_2x8();
+    let c = 131072 / 16;
+    let on = DistFlashAttn::default().attn_sim(&model, &cluster, c, false);
+    let off = DistFlashAttn { overlap: false, ..DistFlashAttn::default() }
+        .attn_sim(&model, &cluster, c, false);
+    assert!(off.total_s / on.total_s > 1.2, "overlap gain too small");
+}
+
+#[test]
+fn rsa_oom_where_we_fit() {
+    let model = PaperModel::llama_7b();
+    let cluster = ClusterSpec::dgx_1x8();
+    let seq = 16384; // 128K total — beyond RSA's 32K ceiling
+    assert!(!RingSelfAttention.iteration(&model, &cluster, seq).fits(&cluster));
+    assert!(DistFlashAttn::default().iteration(&model, &cluster, seq).fits(&cluster));
+}
