@@ -1,0 +1,18 @@
+# Convenience targets. Tier-1 (`make test`) runs on a bare checkout:
+# artifact-dependent integration tests skip with a clear message until
+# `make artifacts` has produced the AOT bundles (requires jax) and the
+# `xla` path dependency points at real PJRT bindings (see Cargo.toml).
+
+.PHONY: artifacts test bench tables
+
+artifacts:
+	cd python && python -m compile.aot --all --out ../artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench hot_paths && cargo bench --bench paper_tables
+
+tables:
+	cargo run --release --bin repro -- tables

@@ -10,9 +10,9 @@
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::comm::build_network;
-use distflash::coordinator::Schedule;
+use distflash::coordinator::{Pass, Plan, Schedule};
 use distflash::runtime::Tensor;
-use distflash::simulator::{simulate_attention, AttnCost};
+use distflash::simulator::{simulate_attention, simulate_plan, AttnCost, EventOpts};
 use distflash::util::bench::{bench, black_box};
 use distflash::util::{Json, Rng};
 
@@ -70,6 +70,21 @@ fn main() {
             s.report(),
             slots / s.mean_ns * 1e3
         );
+    }
+
+    // schedule-IR lowering + event-driven simulation throughput
+    for p in [16usize, 128, 512] {
+        let sched = Schedule::balanced(p);
+        let s = bench(&format!("plan_lower_fwd_p{p}"), 3, 30, || {
+            black_box(Plan::from_schedule(black_box(&sched), Pass::Forward));
+        });
+        println!("{}", s.report());
+        let plan = Plan::from_schedule(&sched, Pass::Forward);
+        let ops = plan.n_ops() as f64;
+        let s = bench(&format!("simulate_plan_p{p}"), 3, 30, || {
+            black_box(simulate_plan(&plan, &cluster, &cost, &EventOpts::default()));
+        });
+        println!("{}   ({:.1}M ops/s)", s.report(), ops / s.mean_ns * 1e3);
     }
 
     // ring all-reduce over real threads (4 workers, 1M f32 each)

@@ -17,6 +17,7 @@ fn main() {
         ("table5_ckpt_ablation", paper::table5),
         ("table6_pp_memory", paper::table6),
         ("ring_attention_summary", paper::ring_attention_summary),
+        ("executed_schedules", paper::executed_schedules),
         ("fig1_idle_fraction", paper::fig1),
         ("fig2_timeline", paper::fig2),
         ("fig4_left_balance", paper::fig4_left),

@@ -21,6 +21,27 @@ pub mod rsa;
 pub mod ulysses;
 
 use crate::config::{ClusterSpec, PaperModel};
+use crate::simulator::AttnCost;
+
+/// Forward-pass attention cost classes for a chunked schedule — the shared
+/// resolution of the IR's `Kernel`/`Payload` classes used by the executed
+/// (event-driven) baselines and the reports.
+pub fn attn_cost_fwd(model: &PaperModel, cluster: &ClusterSpec, chunk_tokens: f64) -> AttnCost {
+    AttnCost {
+        pair_full_s: cluster
+            .compute_time(model.attn_pair_flops(chunk_tokens, chunk_tokens, false), cluster.gpu.mfu_attn),
+        pair_diag_s: cluster
+            .compute_time(model.attn_pair_flops(chunk_tokens, chunk_tokens, true), cluster.gpu.mfu_attn),
+        rescale_s: cluster.compute_time(
+            chunk_tokens * (model.n_heads * model.head_dim) as f64 * 4.0,
+            0.05, // elementwise, memory-bound
+        ),
+        kv_bytes: model.kv_bytes(chunk_tokens),
+        q_bytes: model.q_bytes(chunk_tokens),
+        result_bytes: model.q_bytes(chunk_tokens) * 1.1,
+        overlap: true,
+    }
+}
 
 /// One training iteration, decomposed (seconds), plus peak memory (bytes).
 #[derive(Clone, Copy, Debug, Default)]

@@ -8,13 +8,59 @@
 //! and its max parallel degree is the head count.
 
 use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
+use crate::coordinator::Plan;
 use crate::simulator::collective::all_to_all;
+use crate::simulator::{simulate_plan, EventOpts, EventResult};
 
-use super::{fsdp_param_bytes, IterBreakdown, SystemModel};
 use super::megatron::Megatron;
+use super::{attn_cost_fwd, fsdp_param_bytes, IterBreakdown, SystemModel};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Ulysses;
+
+impl Ulysses {
+    /// The attention phase (a2a in, head-parallel attention, a2a out) as a
+    /// schedule-IR dataflow plan — executed by the event engine instead of
+    /// summed as closed-form collective costs. Uses the whole cluster; use
+    /// [`Ulysses::attn_plan_p`] for an explicit parallel degree.
+    pub fn attn_plan(model: &PaperModel, cluster: &ClusterSpec, seq_per_gpu: usize) -> Plan {
+        Self::attn_plan_p(model, cluster, seq_per_gpu, cluster.n_gpus())
+    }
+
+    /// [`Ulysses::attn_plan`] at an explicit parallel degree `p` (so CLI
+    /// comparisons can hold the worker count fixed across systems).
+    pub fn attn_plan_p(
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+        p: usize,
+    ) -> Plan {
+        let c = seq_per_gpu as f64;
+        let n = c * p as f64;
+        let pad = Megatron::pad_factor(model, p);
+        let attn_s = cluster.compute_time(
+            model.attn_pair_flops(n, n, true) * pad / p as f64,
+            cluster.gpu.mfu_attn,
+        );
+        let q_bytes = c * model.d_model as f64 * ELEM_BYTES;
+        let kv_bytes = c * (model.n_kv_heads * model.head_dim) as f64 * ELEM_BYTES;
+        // per-pair shards: q + k + v in, o out
+        let in_msg = (q_bytes + 2.0 * kv_bytes) / p as f64;
+        let out_msg = q_bytes / p as f64;
+        Plan::ulysses(p, attn_s, in_msg, out_msg)
+    }
+
+    /// Event-engine execution of one attention forward.
+    pub fn executed_attn(
+        model: &PaperModel,
+        cluster: &ClusterSpec,
+        seq_per_gpu: usize,
+    ) -> EventResult {
+        let plan = Self::attn_plan(model, cluster, seq_per_gpu);
+        let cost = attn_cost_fwd(model, cluster, seq_per_gpu as f64);
+        simulate_plan(&plan, cluster, &cost, &EventOpts::default())
+    }
+}
 
 impl SystemModel for Ulysses {
     fn name(&self) -> String {
@@ -85,6 +131,44 @@ impl SystemModel for Ulysses {
 mod tests {
     use super::*;
     use crate::baselines::distflash::DistFlashAttn;
+
+    #[test]
+    fn executed_a2a_matches_closed_form() {
+        // on a uniform-link cluster the event engine's receiver-serialized
+        // pairwise messages reduce exactly to the ring a2a closed form:
+        // the executed plan and the analytic formula must agree to 1e-9
+        let cluster = ClusterSpec::dgx_1x8();
+        let p = cluster.n_gpus();
+        let (attn_s, in_msg, out_msg) = (1e-3, 2e6, 1e6);
+        let plan = Plan::ulysses(p, attn_s, in_msg, out_msg);
+        let cost = attn_cost_fwd(&PaperModel::llama_7b(), &cluster, 1024.0);
+        let r = simulate_plan(&plan, &cluster, &cost, &EventOpts::default());
+        let (bw, lat) = (cluster.intra_bw, cluster.intra_lat);
+        let expect = all_to_all(in_msg * p as f64, p, bw, lat)
+            + attn_s
+            + all_to_all(out_msg * p as f64, p, bw, lat);
+        let rel = (r.total_s - expect).abs() / expect;
+        assert!(rel < 1e-9, "executed {} vs closed form {expect}", r.total_s);
+        assert!((r.comm_bytes - (p * (p - 1)) as f64 * (in_msg + out_msg)).abs() < 1.0);
+    }
+
+    #[test]
+    fn executed_a2a_exposure_grows_across_nodes() {
+        // the a2a phases cannot hide under the attention kernel (strict
+        // phase dependency in the dataflow), so crossing to InfiniBand
+        // must inflate the executed comm share — per-link topology is
+        // emergent in the event engine, unlike the closed-form model
+        let model = PaperModel::llama_7b();
+        let seq = 8192;
+        // comm share of wall-clock: 1 - avg per-worker compute / total
+        let share = |r: &EventResult| 1.0 - (r.busy_s / r.n_workers as f64) / r.total_s;
+        let one = share(&Ulysses::executed_attn(&model, &ClusterSpec::dgx_1x8(), seq));
+        let two = share(&Ulysses::executed_attn(&model, &ClusterSpec::dgx_2x8(), seq));
+        assert!(
+            two > 2.0 * one && two > 0.05,
+            "inter-node share {two} should dwarf intra-node {one}"
+        );
+    }
 
     #[test]
     fn irregular_heads_hurt_ulysses_more() {

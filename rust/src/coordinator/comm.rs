@@ -36,6 +36,8 @@ impl Tag {
     pub const ALL_REDUCE: u32 = 5;
     pub const GATHER: u32 = 6;
     pub const BARRIER: u32 = 7;
+    /// Raw plan-IR transfers (baseline plans outside the attention spaces).
+    pub const RAW_XFER: u32 = 8;
 
     pub fn new(space: u32, a: u32, b: u32) -> Tag {
         Tag { space, a, b }

@@ -1,19 +1,24 @@
-//! Distributed attention executor: runs a `Schedule` with *real* tensors.
+//! Distributed attention executor: runs a lowered [`Plan`] with *real*
+//! tensors.
 //!
 //! Each worker thread owns its own PJRT runtime (one process per GPU in the
-//! real deployment) and executes the paper's Alg. 1/2 against the AOT
-//! attention artifacts, exchanging chunks over the `comm` fabric. This is
-//! the numerics half of the reproduction: the distributed forward must match
-//! the monolithic `full_attn_ref` oracle bit-for-float, and the distributed
-//! backward must match the oracle's autodiff.
+//! real deployment) and walks the plan's op stream, executing the nodes it
+//! owns: transfer nodes it is the source of become eager tagged sends (the
+//! paper's second stream), compute nodes pull their inbound data with
+//! blocking receives keyed by the node's dependency edges. Because the
+//! simulator consumes the *same* plan, the timing model and the runtime
+//! provably execute the identical schedule — there is no second
+//! description to drift.
 //!
-//! Timing claims live in `simulator`; this module's job is to prove the
-//! *algorithm* (schedules, rescale math, gradient routing) is exact.
+//! This is the numerics half of the reproduction: the distributed forward
+//! must match the monolithic `full_attn_ref` oracle bit-for-float, and the
+//! distributed backward must match the oracle's autodiff. Timing claims
+//! live in `simulator`.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use super::comm::{Tag, WorkerComm};
-use super::schedule::{ComputeOp, Schedule};
+use super::plan::{Kernel, Pass, Payload, Plan, PlanNode, PlanOp};
 use crate::runtime::{Runtime, Tensor, Value};
 
 /// Per-worker view of one distributed attention call.
@@ -21,7 +26,8 @@ pub struct AttnCtx<'a> {
     pub rank: usize,
     pub runtime: &'a Runtime,
     pub comm: &'a mut WorkerComm,
-    pub schedule: &'a Schedule,
+    /// The lowered plan for this pass (validated by the harness).
+    pub plan: &'a Plan,
     /// Distinguishes concurrent attention calls (layer index + train step).
     pub call_id: u32,
 }
@@ -30,9 +36,18 @@ fn v(t: &Tensor) -> Value {
     Value::F32(t.clone())
 }
 
+/// `(src, step)` of the first dependency of `node` that is a transfer
+/// matching `pred` — how compute nodes locate their inbound mailbox slot.
+fn dep_xfer(plan: &Plan, node: &PlanNode, pred: fn(&Payload) -> bool) -> Option<(usize, usize)> {
+    node.deps.iter().find_map(|&d| match &plan.ops[d].op {
+        PlanOp::Xfer { src, payload, .. } if pred(payload) => Some((*src, plan.ops[d].step)),
+        _ => None,
+    })
+}
+
 impl<'a> AttnCtx<'a> {
-    fn tag(&self, space: u32, t: usize) -> Tag {
-        Tag::new(space, self.call_id, t as u32)
+    fn tag(&self, space: u32, step: usize) -> Tag {
+        Tag::new(space, self.call_id, step as u32)
     }
 
     /// Distributed forward (paper Alg. 1 / Alg. 2): returns the normalized
@@ -43,80 +58,116 @@ impl<'a> AttnCtx<'a> {
         k: &Tensor,
         v_t: &Tensor,
     ) -> Result<(Tensor, Tensor)> {
+        if self.plan.pass != Pass::Forward {
+            bail!("forward called with a {:?} plan", self.plan.pass);
+        }
+        // dataflow plans (ring-attention, ulysses) route payloads multi-hop;
+        // the executor's direct tagged recvs would deadlock on them
+        if !self.plan.lockstep {
+            bail!("executor requires a schedule-lowered plan, got {:?}", self.plan.name);
+        }
+        let plan = self.plan;
         let h = q.shape[0];
         let c = q.shape[1];
         let d = q.shape[2];
         let mut o = Tensor::zeros(&[h, c, d]);
         let mut m = Tensor::full(&[h, c], f32::NEG_INFINITY);
         let mut l = Tensor::zeros(&[h, c]);
+        // helper partial (o, m, l) awaiting its HelperResult transfer node
+        let mut helper_out: Option<Vec<Tensor>> = None;
 
-        for (t, row) in self.schedule.steps.iter().enumerate() {
-            let plan = &row[self.rank];
-            // 1. eager sends (the paper's second stream / prefetch)
-            if let Some(to) = plan.send_kv_to {
-                self.comm
-                    .send(to, self.tag(Tag::KV, t), vec![k.clone(), v_t.clone()]);
-            }
-            if let Some(to) = plan.send_q_to {
-                self.comm
-                    .send(to, self.tag(Tag::Q_BUNDLE, t), vec![q.clone()]);
-            }
-            // 2. compute
-            match plan.compute {
-                Some(ComputeOp::Diag) => {
-                    let out = self.runtime.run(
-                        "attn_fwd_diag",
-                        &[v(q), v(k), v(v_t), v(&o), v(&m), v(&l)],
-                    )?;
-                    let mut it = out.into_iter();
-                    o = it.next().unwrap();
-                    m = it.next().unwrap();
-                    l = it.next().unwrap();
-                }
-                Some(ComputeOp::Own { kv_from }) => {
-                    let mut kv = self.comm.recv(kv_from, self.tag(Tag::KV, t));
-                    let vr = kv.pop().unwrap();
-                    let kr = kv.pop().unwrap();
-                    let out = self.runtime.run(
-                        "attn_fwd_full",
-                        &[v(q), v(&kr), v(&vr), v(&o), v(&m), v(&l)],
-                    )?;
-                    let mut it = out.into_iter();
-                    o = it.next().unwrap();
-                    m = it.next().unwrap();
-                    l = it.next().unwrap();
-                }
-                Some(ComputeOp::Help { owner }) => {
-                    let qo = self
-                        .comm
-                        .recv(owner, self.tag(Tag::Q_BUNDLE, t))
-                        .remove(0);
-                    let oh = Tensor::zeros(&[h, c, d]);
-                    let mh = Tensor::full(&[h, c], f32::NEG_INFINITY);
-                    let lh = Tensor::zeros(&[h, c]);
-                    let out = self.runtime.run(
-                        "attn_fwd_full",
-                        &[v(&qo), v(k), v(v_t), v(&oh), v(&mh), v(&lh)],
-                    )?;
-                    self.comm
-                        .send(owner, self.tag(Tag::HELPER_RESULT, t), out);
-                }
-                None => {}
-            }
-            // 3. merge helper partials (rescale)
-            if let Some(from) = plan.recv_helper_from {
-                let mut part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, t));
-                let l2 = part.pop().unwrap();
-                let m2 = part.pop().unwrap();
-                let o2 = part.pop().unwrap();
-                let out = self.runtime.run(
-                    "attn_rescale",
-                    &[v(&o), v(&m), v(&l), v(&o2), v(&m2), v(&l2)],
-                )?;
-                let mut it = out.into_iter();
-                o = it.next().unwrap();
-                m = it.next().unwrap();
-                l = it.next().unwrap();
+        for node in &plan.ops {
+            match &node.op {
+                PlanOp::Xfer { src, dst, payload } if *src == self.rank => match payload {
+                    Payload::Kv => self.comm.send(
+                        *dst,
+                        self.tag(Tag::KV, node.step),
+                        vec![k.clone(), v_t.clone()],
+                    ),
+                    Payload::QBundle => self.comm.send(
+                        *dst,
+                        self.tag(Tag::Q_BUNDLE, node.step),
+                        vec![q.clone()],
+                    ),
+                    Payload::HelperResult => {
+                        let out = helper_out
+                            .take()
+                            .ok_or_else(|| anyhow!("no helper partial pending at op {}", node.id))?;
+                        self.comm
+                            .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
+                    }
+                    Payload::KvGrad | Payload::Raw(_) => {
+                        bail!("payload {payload:?} is not executable in forward")
+                    }
+                },
+                PlanOp::Compute { kernel, pair } if node.worker == self.rank => match kernel {
+                    Kernel::AttnDiag => {
+                        let out = self.runtime.run(
+                            "attn_fwd_diag",
+                            &[v(q), v(k), v(v_t), v(&o), v(&m), v(&l)],
+                        )?;
+                        let mut it = out.into_iter();
+                        o = it.next().unwrap();
+                        m = it.next().unwrap();
+                        l = it.next().unwrap();
+                    }
+                    Kernel::AttnFull => {
+                        let (owner, kv_chunk) =
+                            pair.ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
+                        if owner == self.rank {
+                            // owner path: fetch the remote (k, v) chunk
+                            let mut kv = self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
+                            let vr = kv.pop().unwrap();
+                            let kr = kv.pop().unwrap();
+                            let out = self.runtime.run(
+                                "attn_fwd_full",
+                                &[v(q), v(&kr), v(&vr), v(&o), v(&m), v(&l)],
+                            )?;
+                            let mut it = out.into_iter();
+                            o = it.next().unwrap();
+                            m = it.next().unwrap();
+                            l = it.next().unwrap();
+                        } else {
+                            // helper path: owner's q against local (k, v),
+                            // fresh accumulators, partial shipped back
+                            let qo = self
+                                .comm
+                                .recv(owner, self.tag(Tag::Q_BUNDLE, node.step))
+                                .remove(0);
+                            let oh = Tensor::zeros(&[h, c, d]);
+                            let mh = Tensor::full(&[h, c], f32::NEG_INFINITY);
+                            let lh = Tensor::zeros(&[h, c]);
+                            let out = self.runtime.run(
+                                "attn_fwd_full",
+                                &[v(&qo), v(k), v(v_t), v(&oh), v(&mh), v(&lh)],
+                            )?;
+                            helper_out = Some(out);
+                        }
+                    }
+                    Kernel::Rescale => {
+                        let (from, step) =
+                            dep_xfer(plan, node, |p| matches!(p, Payload::HelperResult))
+                                .ok_or_else(|| {
+                                    anyhow!("rescale op {} lacks a helper-result dep", node.id)
+                                })?;
+                        let mut part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
+                        let l2 = part.pop().unwrap();
+                        let m2 = part.pop().unwrap();
+                        let o2 = part.pop().unwrap();
+                        let out = self.runtime.run(
+                            "attn_rescale",
+                            &[v(&o), v(&m), v(&l), v(&o2), v(&m2), v(&l2)],
+                        )?;
+                        let mut it = out.into_iter();
+                        o = it.next().unwrap();
+                        m = it.next().unwrap();
+                        l = it.next().unwrap();
+                    }
+                    Kernel::Accum | Kernel::Raw(_) => {
+                        bail!("kernel {kernel:?} is not executable in forward")
+                    }
+                },
+                _ => {}
             }
         }
         // epilogue: the paper's `last=True` — normalize + logsumexp
@@ -125,11 +176,13 @@ impl<'a> AttnCtx<'a> {
         Ok((it.next().unwrap(), it.next().unwrap()))
     }
 
-    /// Distributed backward: mirrors the forward schedule. Owners re-fetch
-    /// remote (k, v) and return (dk, dv) partials; helpers receive the
-    /// owner's (q, o, lse, do) bundle and return a dq partial. Thanks to the
-    /// saved `o`/`lse` (rematerialization-aware checkpointing, §3.3) NO
-    /// forward attention is recomputed here.
+    /// Distributed backward: the backward-lowered plan mirrors the forward
+    /// schedule. Owners re-fetch remote (k, v) and return (dk, dv)
+    /// partials; helpers receive the owner's (q, o, lse, do) bundle and
+    /// return a dq partial; a trailing Accum node drains every lender's
+    /// (dk, dv) returns. Thanks to the saved `o`/`lse`
+    /// (rematerialization-aware checkpointing, §3.3) NO forward attention
+    /// is recomputed here.
     pub fn backward(
         &mut self,
         q: &Tensor,
@@ -139,84 +192,129 @@ impl<'a> AttnCtx<'a> {
         lse: &Tensor,
         do_: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor)> {
+        if self.plan.pass != Pass::Backward {
+            bail!("backward called with a {:?} plan", self.plan.pass);
+        }
+        if !self.plan.lockstep {
+            bail!("executor requires a schedule-lowered plan, got {:?}", self.plan.name);
+        }
+        let plan = self.plan;
         let mut dq = Tensor::zeros(&q.shape);
         let mut dk = Tensor::zeros(&k.shape);
         let mut dv = Tensor::zeros(&v_t.shape);
-        // (step, peer) pairs we expect a (dk, dv) return from
-        let mut pending_kv_grads: Vec<(usize, usize)> = Vec::new();
+        // helper dq partial awaiting its HelperResult transfer node
+        let mut helper_out: Option<Vec<Tensor>> = None;
+        // (dk, dv) partial awaiting its KvGrad return node
+        let mut grad_out: Option<Vec<Tensor>> = None;
 
-        for (t, row) in self.schedule.steps.iter().enumerate() {
-            let plan = &row[self.rank];
-            if let Some(to) = plan.send_kv_to {
-                self.comm
-                    .send(to, self.tag(Tag::KV, t), vec![k.clone(), v_t.clone()]);
-                pending_kv_grads.push((t, to));
+        for node in &plan.ops {
+            match &node.op {
+                PlanOp::Xfer { src, dst, payload } if *src == self.rank => match payload {
+                    Payload::Kv => self.comm.send(
+                        *dst,
+                        self.tag(Tag::KV, node.step),
+                        vec![k.clone(), v_t.clone()],
+                    ),
+                    Payload::QBundle => {
+                        // helper needs the full owner bundle for the bwd
+                        // kernel
+                        self.comm.send(
+                            *dst,
+                            self.tag(Tag::Q_BUNDLE, node.step),
+                            vec![q.clone(), o.clone(), lse.clone(), do_.clone()],
+                        );
+                    }
+                    Payload::HelperResult => {
+                        let out = helper_out
+                            .take()
+                            .ok_or_else(|| anyhow!("no dq partial pending at op {}", node.id))?;
+                        self.comm
+                            .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
+                    }
+                    Payload::KvGrad => {
+                        let out = grad_out.take().ok_or_else(|| {
+                            anyhow!("no (dk, dv) partial pending at op {}", node.id)
+                        })?;
+                        self.comm.send(*dst, self.tag(Tag::KV_GRAD, node.step), out);
+                    }
+                    Payload::Raw(_) => bail!("raw payload is not executable in backward"),
+                },
+                PlanOp::Compute { kernel, pair } if node.worker == self.rank => match kernel {
+                    Kernel::AttnDiag => {
+                        let out = self.runtime.run(
+                            "attn_bwd_diag",
+                            &[v(q), v(k), v(v_t), v(o), v(lse), v(do_)],
+                        )?;
+                        let mut it = out.into_iter();
+                        dq.add_assign(&it.next().unwrap());
+                        dk.add_assign(&it.next().unwrap());
+                        dv.add_assign(&it.next().unwrap());
+                    }
+                    Kernel::AttnFull => {
+                        let (owner, kv_chunk) =
+                            pair.ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
+                        if owner == self.rank {
+                            let mut kv = self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
+                            let vr = kv.pop().unwrap();
+                            let kr = kv.pop().unwrap();
+                            let out = self.runtime.run(
+                                "attn_bwd_full",
+                                &[v(q), v(&kr), v(&vr), v(o), v(lse), v(do_)],
+                            )?;
+                            let mut it = out.into_iter();
+                            dq.add_assign(&it.next().unwrap());
+                            let dkr = it.next().unwrap();
+                            let dvr = it.next().unwrap();
+                            grad_out = Some(vec![dkr, dvr]);
+                        } else {
+                            let mut bundle =
+                                self.comm.recv(owner, self.tag(Tag::Q_BUNDLE, node.step));
+                            let do_o = bundle.pop().unwrap();
+                            let lse_o = bundle.pop().unwrap();
+                            let o_o = bundle.pop().unwrap();
+                            let q_o = bundle.pop().unwrap();
+                            let out = self.runtime.run(
+                                "attn_bwd_full",
+                                &[v(&q_o), v(k), v(v_t), v(&o_o), v(&lse_o), v(&do_o)],
+                            )?;
+                            let mut it = out.into_iter();
+                            let dq_o = it.next().unwrap();
+                            dk.add_assign(&it.next().unwrap());
+                            dv.add_assign(&it.next().unwrap());
+                            helper_out = Some(vec![dq_o]);
+                        }
+                    }
+                    Kernel::Rescale => {
+                        let (from, step) =
+                            dep_xfer(plan, node, |p| matches!(p, Payload::HelperResult))
+                                .ok_or_else(|| {
+                                    anyhow!("rescale op {} lacks a helper-result dep", node.id)
+                                })?;
+                        let part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
+                        dq.add_assign(&part[0]);
+                    }
+                    Kernel::Accum => {
+                        // drain the (dk, dv) returns from every owner this
+                        // worker lent kv to
+                        for &dref in &node.deps {
+                            let dep = &plan.ops[dref];
+                            match &dep.op {
+                                PlanOp::Xfer { src, payload: Payload::KvGrad, .. } => {
+                                    let mut g =
+                                        self.comm.recv(*src, self.tag(Tag::KV_GRAD, dep.step));
+                                    let dvr = g.pop().unwrap();
+                                    let dkr = g.pop().unwrap();
+                                    dk.add_assign(&dkr);
+                                    dv.add_assign(&dvr);
+                                }
+                                other => bail!("accum dep {dref} is not a kv-grad ({other:?})"),
+                            }
+                        }
+                    }
+                    Kernel::Raw(_) => bail!("raw kernel is not executable in backward"),
+                },
+                _ => {}
             }
-            if let Some(to) = plan.send_q_to {
-                // helper needs the full owner bundle to run the bwd kernel
-                self.comm.send(
-                    to,
-                    self.tag(Tag::Q_BUNDLE, t),
-                    vec![q.clone(), o.clone(), lse.clone(), do_.clone()],
-                );
-            }
-            match plan.compute {
-                Some(ComputeOp::Diag) => {
-                    let out = self.runtime.run(
-                        "attn_bwd_diag",
-                        &[v(q), v(k), v(v_t), v(o), v(lse), v(do_)],
-                    )?;
-                    let mut it = out.into_iter();
-                    dq.add_assign(&it.next().unwrap());
-                    dk.add_assign(&it.next().unwrap());
-                    dv.add_assign(&it.next().unwrap());
-                }
-                Some(ComputeOp::Own { kv_from }) => {
-                    let mut kv = self.comm.recv(kv_from, self.tag(Tag::KV, t));
-                    let vr = kv.pop().unwrap();
-                    let kr = kv.pop().unwrap();
-                    let out = self.runtime.run(
-                        "attn_bwd_full",
-                        &[v(q), v(&kr), v(&vr), v(o), v(lse), v(do_)],
-                    )?;
-                    let mut it = out.into_iter();
-                    dq.add_assign(&it.next().unwrap());
-                    let dkr = it.next().unwrap();
-                    let dvr = it.next().unwrap();
-                    self.comm
-                        .send(kv_from, self.tag(Tag::KV_GRAD, t), vec![dkr, dvr]);
-                }
-                Some(ComputeOp::Help { owner }) => {
-                    let mut bundle = self.comm.recv(owner, self.tag(Tag::Q_BUNDLE, t));
-                    let do_o = bundle.pop().unwrap();
-                    let lse_o = bundle.pop().unwrap();
-                    let o_o = bundle.pop().unwrap();
-                    let q_o = bundle.pop().unwrap();
-                    let out = self.runtime.run(
-                        "attn_bwd_full",
-                        &[v(&q_o), v(k), v(v_t), v(&o_o), v(&lse_o), v(&do_o)],
-                    )?;
-                    let mut it = out.into_iter();
-                    let dq_o = it.next().unwrap();
-                    dk.add_assign(&it.next().unwrap());
-                    dv.add_assign(&it.next().unwrap());
-                    self.comm
-                        .send(owner, self.tag(Tag::HELPER_RESULT, t), vec![dq_o]);
-                }
-                None => {}
-            }
-            if let Some(from) = plan.recv_helper_from {
-                let dq_part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, t));
-                dq.add_assign(&dq_part[0]);
-            }
-        }
-        // collect (dk, dv) returns from every owner we lent kv to
-        for (t, peer) in pending_kv_grads {
-            let mut g = self.comm.recv(peer, self.tag(Tag::KV_GRAD, t));
-            let dvr = g.pop().unwrap();
-            let dkr = g.pop().unwrap();
-            dk.add_assign(&dkr);
-            dv.add_assign(&dvr);
         }
         Ok((dq, dk, dv))
     }

@@ -2,14 +2,21 @@
 //! mirroring one-process-per-GPU) and run a distributed attention call over
 //! a full sequence. Used by `repro verify`, the integration tests, and the
 //! examples.
+//!
+//! The harness is where the schedule IR is produced: the chosen
+//! [`Schedule`] is lowered to one forward and one backward [`Plan`], both
+//! validated (`validate_lowered`), and every worker executes those exact
+//! plans — the same objects a simulator would time.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::comm::build_network;
 use super::executor::{AttnCtx, ATTN_ARTIFACTS};
+use super::plan::{Pass, Plan};
 use super::schedule::{Schedule, ScheduleKind};
 use crate::runtime::{Runtime, Tensor};
 
@@ -26,12 +33,28 @@ pub struct DistAttnResult {
     pub comm_bytes: u64,
 }
 
+/// Lower and validate the forward/backward plans for a schedule — shared
+/// by the harness and the trainer so every consumer runs checked IR.
+pub fn build_plans(kind: ScheduleKind, n_workers: usize) -> Result<(Arc<Plan>, Arc<Plan>)> {
+    let schedule = Schedule::build(kind, n_workers);
+    schedule
+        .validate()
+        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let fwd = Plan::from_schedule(&schedule, Pass::Forward);
+    fwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid forward plan: {e}"))?;
+    let bwd = Plan::from_schedule(&schedule, Pass::Backward);
+    bwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid backward plan: {e}"))?;
+    Ok((Arc::new(fwd), Arc::new(bwd)))
+}
+
 /// Run DISTFLASHATTN forward (and optionally backward) over full-sequence
 /// tensors: q (H, N, D), k/v (KVH, N, D), do (H, N, D).
 ///
 /// The sequence is split into P chunks along the token axis; P OS threads
-/// execute the schedule against the AOT artifacts in `artifact_dir` and the
-/// per-chunk results are re-concatenated.
+/// execute the lowered plans against the AOT artifacts in `artifact_dir`
+/// and the per-chunk results are re-concatenated.
 pub fn run_dist_attention(
     artifact_dir: &Path,
     kind: ScheduleKind,
@@ -41,10 +64,7 @@ pub fn run_dist_attention(
     v: &Tensor,
     do_: Option<&Tensor>,
 ) -> Result<DistAttnResult> {
-    let schedule = Schedule::build(kind, n_workers);
-    schedule
-        .validate()
-        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let (fwd_plan, bwd_plan) = build_plans(kind, n_workers)?;
 
     let qs = q.chunk_axis1(n_workers);
     let ks = k.chunk_axis1(n_workers);
@@ -65,7 +85,8 @@ pub fn run_dist_attention(
     let mut handles = Vec::new();
     for (rank, mut comm) in comms.into_iter().enumerate() {
         let dir = dir.clone();
-        let schedule = schedule.clone();
+        let fwd_plan = fwd_plan.clone();
+        let bwd_plan = bwd_plan.clone();
         let q = qs[rank].clone();
         let k = ks[rank].clone();
         let v = vs[rank].clone();
@@ -73,17 +94,25 @@ pub fn run_dist_attention(
         handles.push(thread::spawn(move || -> Result<WorkerOut> {
             let runtime = Runtime::load(&dir)?;
             runtime.precompile(ATTN_ARTIFACTS)?;
-            let mut ctx = AttnCtx {
-                rank,
-                runtime: &runtime,
-                comm: &mut comm,
-                schedule: &schedule,
-                call_id: 0,
+            let (o, lse) = {
+                let mut ctx = AttnCtx {
+                    rank,
+                    runtime: &runtime,
+                    comm: &mut comm,
+                    plan: &fwd_plan,
+                    call_id: 0,
+                };
+                ctx.forward(&q, &k, &v)?
             };
-            let (o, lse) = ctx.forward(&q, &k, &v)?;
             let grads = match do_chunk {
                 Some(d) => {
-                    ctx.call_id = 1;
+                    let mut ctx = AttnCtx {
+                        rank,
+                        runtime: &runtime,
+                        comm: &mut comm,
+                        plan: &bwd_plan,
+                        call_id: 1,
+                    };
                     Some(ctx.backward(&q, &k, &v, &o, &lse, &d)?)
                 }
                 None => None,
@@ -122,9 +151,15 @@ pub fn run_dist_attention(
         Tensor::new(cat.shape[..2].to_vec(), cat.data)
     };
     let grads = if do_.is_some() {
-        let dq = Tensor::cat_axis1(&outs.iter().map(|w| w.grads.as_ref().unwrap().0.clone()).collect::<Vec<_>>());
-        let dk = Tensor::cat_axis1(&outs.iter().map(|w| w.grads.as_ref().unwrap().1.clone()).collect::<Vec<_>>());
-        let dv = Tensor::cat_axis1(&outs.iter().map(|w| w.grads.as_ref().unwrap().2.clone()).collect::<Vec<_>>());
+        let dq = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().0.clone()).collect::<Vec<_>>(),
+        );
+        let dk = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().1.clone()).collect::<Vec<_>>(),
+        );
+        let dv = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().2.clone()).collect::<Vec<_>>(),
+        );
         Some((dq, dk, dv))
     } else {
         None

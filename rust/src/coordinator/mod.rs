@@ -1,8 +1,11 @@
 //! L3 coordinator: the paper's system contribution.
 //!
 //! * `schedule` — ring (Alg. 1) vs load-balanced (Alg. 2) plans + invariants
+//! * `plan` — the schedule IR: op DAG (computes, transfers, rescales) that
+//!   both the simulators and the real executor consume
 //! * `comm` — P2P mailboxes, ring all-reduce (the NCCL substitute)
-//! * `executor` — runs a schedule with real tensors against PJRT artifacts
+//! * `executor` — runs a lowered plan with real tensors against PJRT
+//!   artifacts
 //! * `harness` — spawn-P-workers front door used by verify/tests/examples
 //! * `checkpoint` — HF-style vs rematerialization-aware strategies (§3.3)
 
@@ -10,9 +13,11 @@ pub mod checkpoint;
 pub mod comm;
 pub mod executor;
 pub mod harness;
+pub mod plan;
 pub mod schedule;
 
 pub use checkpoint::CkptStrategy;
 pub use executor::{AttnCtx, ATTN_ARTIFACTS};
 pub use harness::{run_dist_attention, DistAttnResult};
+pub use plan::{Kernel, Pass, Payload, Plan, PlanNode, PlanOp};
 pub use schedule::{ComputeOp, Schedule, ScheduleKind, StepPlan};

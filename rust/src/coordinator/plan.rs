@@ -1,0 +1,758 @@
+//! The schedule IR: an explicit dependency-graph (DAG) of compute kernels,
+//! transfers, rescale merges, and gradient returns.
+//!
+//! A [`Plan`] is the single executable description of one distributed
+//! attention call. Three producers build plans:
+//!
+//! * [`Plan::from_schedule`] lowers a per-timestep [`Schedule`] (the
+//!   paper's Alg. 1/2 plans) for either pass — this is what both the
+//!   threaded executor (`coordinator::executor`) and the simulators run,
+//!   so the timing model and the real runtime provably execute the
+//!   identical op stream;
+//! * [`Plan::ring_attention`] expresses Ring Attention's rotating-kv
+//!   pipeline (Liu et al., 2023) directly as a dataflow DAG;
+//! * [`Plan::ulysses`] expresses a DeepSpeed-Ulysses-style all-to-all
+//!   resharding plan.
+//!
+//! Op semantics:
+//! * [`PlanOp::Compute`] occupies its worker's *compute stream*. The
+//!   kernel is a cost class ([`Kernel`]) resolved against an `AttnCost`
+//!   at simulation time, and a real PJRT artifact at execution time.
+//! * [`PlanOp::Xfer`] occupies one worker's *comm stream*: the receiver's
+//!   for prefetchable payloads (kv / q — data that exists at pass start),
+//!   the sender's for mid-step products (helper results, kv-grad
+//!   returns). `PlanNode::worker` records the stream owner.
+//!
+//! Lock-step plans (`lockstep = true`, produced by lowering) preserve the
+//! BSP step structure via the `step` tags — the event engine inserts a
+//! barrier between steps and releases transfers up to `prefetch_depth`
+//! steps early. Dataflow plans (`lockstep = false`, the baseline builders)
+//! have no barriers at all: overlap emerges purely from the dependency
+//! edges.
+//!
+//! Invariants pinned by [`Plan::validate`] / [`Plan::validate_lowered`]
+//! and the property suite (`rust/tests/schedule_properties.rs`): every
+//! causal pair `(p, r), r <= p` computed exactly once; every transfer
+//! wired to a consumer; dependency ids strictly backward (acyclicity by
+//! construction); per-(src, dst) message-tag uniqueness.
+
+use super::comm::Tag;
+use super::schedule::{ComputeOp, Schedule};
+use crate::simulator::AttnCost;
+
+/// Index into [`Plan::ops`]. Dependencies always point to smaller ids.
+pub type OpId = usize;
+
+/// Which pass of one attention call the plan describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+impl Pass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::Forward => "fwd",
+            Pass::Backward => "bwd",
+        }
+    }
+}
+
+/// Compute cost classes, resolved against an `AttnCost` (or a real kernel).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// Causal diagonal chunk pair (≈ half the FLOPs of a full pair).
+    AttnDiag,
+    /// Full (non-diagonal) chunk pair — owner-path or helper-path.
+    AttnFull,
+    /// Merge a helper partial: `rescale(·)` in forward, dq-accumulate in
+    /// backward.
+    Rescale,
+    /// Zero-cost sink that consumes kv-grad returns at the end of a
+    /// backward plan (the executor's gradient drain).
+    Accum,
+    /// Literal seconds — for baseline plans whose kernels fall outside the
+    /// AttnCost classes (e.g. Ulysses' head-parallel full-sequence attn).
+    Raw(f64),
+}
+
+/// Transfer payload classes, resolved against an `AttnCost`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Payload {
+    /// A (k, v) chunk — prefetchable (exists at pass start).
+    Kv,
+    /// Owner q (forward) or (q, o, lse, do) bundle (backward) —
+    /// prefetchable.
+    QBundle,
+    /// Helper partial: (o, m, l) forward, dq backward — produced mid-step.
+    HelperResult,
+    /// (dk, dv) return from an owner to its kv lender — produced mid-step.
+    KvGrad,
+    /// Literal bytes — for baseline plans (e.g. all-to-all shards).
+    Raw(f64),
+}
+
+impl Payload {
+    /// Whether the payload exists at pass start (so it may be prefetched
+    /// arbitrarily early) or is produced mid-plan by a compute op.
+    pub fn prefetchable(&self) -> bool {
+        matches!(self, Payload::Kv | Payload::QBundle | Payload::Raw(_))
+    }
+
+    /// Tag space this payload travels under on the comm fabric.
+    pub fn tag_space(&self) -> u32 {
+        match self {
+            Payload::Kv => Tag::KV,
+            Payload::QBundle => Tag::Q_BUNDLE,
+            Payload::HelperResult => Tag::HELPER_RESULT,
+            Payload::KvGrad => Tag::KV_GRAD,
+            Payload::Raw(_) => Tag::RAW_XFER,
+        }
+    }
+
+    /// Bytes on the wire under a given cost model.
+    pub fn bytes(&self, cost: &AttnCost) -> f64 {
+        match self {
+            Payload::Kv => cost.kv_bytes,
+            Payload::QBundle => cost.q_bytes,
+            Payload::HelperResult => cost.result_bytes,
+            // dk/dv mirror k/v exactly
+            Payload::KvGrad => cost.kv_bytes,
+            Payload::Raw(b) => *b,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanOp {
+    Compute {
+        kernel: Kernel,
+        /// `(q_chunk, kv_chunk)` for attention kernels; `None` otherwise.
+        pair: Option<(usize, usize)>,
+    },
+    Xfer {
+        src: usize,
+        dst: usize,
+        payload: Payload,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct PlanNode {
+    pub id: OpId,
+    /// Stream owner: executing worker for computes; receiver for
+    /// prefetchable transfers, sender for mid-step products.
+    pub worker: usize,
+    /// Logical step — barrier group for lock-step plans, phase label for
+    /// dataflow plans. Nondecreasing in op order.
+    pub step: usize,
+    pub op: PlanOp,
+    /// Data dependencies; every entry is `< id`.
+    pub deps: Vec<OpId>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub name: String,
+    pub n_workers: usize,
+    pub n_steps: usize,
+    /// BSP step barriers between `step` groups (schedule lowerings).
+    pub lockstep: bool,
+    /// Whether the plan must cover each causal pair exactly once.
+    pub causal: bool,
+    pub pass: Pass,
+    pub ops: Vec<PlanNode>,
+}
+
+impl Plan {
+    fn new(name: &str, n_workers: usize, n_steps: usize, lockstep: bool, causal: bool, pass: Pass) -> Plan {
+        Plan {
+            name: name.to_string(),
+            n_workers,
+            n_steps,
+            lockstep,
+            causal,
+            pass,
+            ops: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, worker: usize, step: usize, op: PlanOp, deps: Vec<OpId>) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(PlanNode { id, worker, step, op, deps });
+        id
+    }
+
+    /// Lower a per-timestep [`Schedule`] to the op DAG for one pass.
+    ///
+    /// Emission order per step — kv transfers, q transfers, computes (each
+    /// helper compute immediately followed by its result transfer; each
+    /// backward owner compute by its kv-grad return), rescale merges — is
+    /// exactly the order the threaded executor issues sends/recvs in, so
+    /// the same node sequence drives both the simulator and the runtime.
+    pub fn from_schedule(schedule: &Schedule, pass: Pass) -> Plan {
+        let p = schedule.n_workers;
+        let t_steps = schedule.n_steps();
+        let n_steps = match pass {
+            Pass::Forward => t_steps,
+            // +1: the trailing kv-grad accumulation step
+            Pass::Backward => t_steps + 1,
+        };
+        let mut plan = Plan::new(
+            &format!("{:?}-{}", schedule.kind, pass.name()),
+            p,
+            n_steps,
+            true,
+            true,
+            pass,
+        );
+        // kv-grad transfers awaiting each lender's trailing Accum
+        let mut kvgrad_in: Vec<Vec<OpId>> = vec![Vec::new(); p];
+        for (t, row) in schedule.steps.iter().enumerate() {
+            let mut kv_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
+            let mut q_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
+            let mut result_xfer: Vec<Option<OpId>> = vec![None; p]; // by owner
+            for (w, sp) in row.iter().enumerate() {
+                if let Some(dst) = sp.send_kv_to {
+                    let id = plan.push(
+                        dst,
+                        t,
+                        PlanOp::Xfer { src: w, dst, payload: Payload::Kv },
+                        vec![],
+                    );
+                    kv_xfer[dst] = Some(id);
+                }
+            }
+            for (w, sp) in row.iter().enumerate() {
+                if let Some(dst) = sp.send_q_to {
+                    let id = plan.push(
+                        dst,
+                        t,
+                        PlanOp::Xfer { src: w, dst, payload: Payload::QBundle },
+                        vec![],
+                    );
+                    q_xfer[dst] = Some(id);
+                }
+            }
+            for (w, sp) in row.iter().enumerate() {
+                match sp.compute {
+                    Some(ComputeOp::Diag) => {
+                        plan.push(
+                            w,
+                            t,
+                            PlanOp::Compute { kernel: Kernel::AttnDiag, pair: Some((w, w)) },
+                            vec![],
+                        );
+                    }
+                    Some(ComputeOp::Own { kv_from }) => {
+                        let kv = kv_xfer[w].expect("validated schedule: kv send matches Own");
+                        let id = plan.push(
+                            w,
+                            t,
+                            PlanOp::Compute {
+                                kernel: Kernel::AttnFull,
+                                pair: Some((w, kv_from)),
+                            },
+                            vec![kv],
+                        );
+                        if pass == Pass::Backward {
+                            let g = plan.push(
+                                w,
+                                t,
+                                PlanOp::Xfer { src: w, dst: kv_from, payload: Payload::KvGrad },
+                                vec![id],
+                            );
+                            kvgrad_in[kv_from].push(g);
+                        }
+                    }
+                    Some(ComputeOp::Help { owner }) => {
+                        let q = q_xfer[w].expect("validated schedule: q send matches Help");
+                        let id = plan.push(
+                            w,
+                            t,
+                            PlanOp::Compute {
+                                kernel: Kernel::AttnFull,
+                                pair: Some((owner, w)),
+                            },
+                            vec![q],
+                        );
+                        // result rides the helper's comm stream; it can
+                        // leave only once the helper has both received q
+                        // and finished the kernel
+                        let rid = plan.push(
+                            w,
+                            t,
+                            PlanOp::Xfer { src: w, dst: owner, payload: Payload::HelperResult },
+                            vec![id, q],
+                        );
+                        result_xfer[owner] = Some(rid);
+                    }
+                    None => {}
+                }
+            }
+            for (w, sp) in row.iter().enumerate() {
+                if sp.recv_helper_from.is_some() {
+                    let mut deps =
+                        vec![result_xfer[w].expect("validated schedule: helper result present")];
+                    // the owner's own inbound kv also gates the merge
+                    if let Some(kv) = kv_xfer[w] {
+                        deps.push(kv);
+                    }
+                    plan.push(w, t, PlanOp::Compute { kernel: Kernel::Rescale, pair: None }, deps);
+                }
+            }
+        }
+        if pass == Pass::Backward {
+            for (w, deps) in kvgrad_in.into_iter().enumerate() {
+                if !deps.is_empty() {
+                    plan.push(
+                        w,
+                        t_steps,
+                        PlanOp::Compute { kernel: Kernel::Accum, pair: None },
+                        deps,
+                    );
+                }
+            }
+        }
+        plan
+    }
+
+    /// Ring Attention (Liu et al., 2023) as a dataflow plan: every worker
+    /// computes `P` block pairs (masked pairs included — the causally
+    /// unbalanced 2× work) while kv blocks rotate around the ring. Each
+    /// hop depends only on the previous hop's arrival, so compute/comm
+    /// overlap emerges from the DAG rather than a flag.
+    pub fn ring_attention(p: usize) -> Plan {
+        assert!(p >= 1);
+        let mut plan = Plan::new("ring-attention", p, p, false, false, Pass::Forward);
+        // arrival op that delivered the block each worker currently holds
+        let mut held: Vec<Option<OpId>> = vec![None; p];
+        for t in 0..p {
+            let arrivals: Vec<Option<OpId>> = held.clone();
+            for w in 0..p {
+                let blk = (w + p - t) % p;
+                let kernel = if blk == w { Kernel::AttnDiag } else { Kernel::AttnFull };
+                let deps: Vec<OpId> = arrivals[w].into_iter().collect();
+                plan.push(w, t, PlanOp::Compute { kernel, pair: Some((w, blk)) }, deps);
+            }
+            if t + 1 < p {
+                let mut next: Vec<Option<OpId>> = vec![None; p];
+                for w in 0..p {
+                    let dst = (w + 1) % p;
+                    // forward the held block as soon as it is here — no
+                    // need to wait for this step's kernel
+                    let deps: Vec<OpId> = arrivals[w].into_iter().collect();
+                    let id = plan.push(
+                        dst,
+                        t,
+                        PlanOp::Xfer { src: w, dst, payload: Payload::Kv },
+                        deps,
+                    );
+                    next[dst] = Some(id);
+                }
+                held = next;
+            }
+        }
+        plan
+    }
+
+    /// DeepSpeed-Ulysses-style attention phase: all-to-all reshard in,
+    /// head-parallel full-sequence attention, all-to-all reshard out.
+    /// `attn_s` is the per-worker attention seconds; `in_msg_bytes` /
+    /// `out_msg_bytes` are the *per-pair* shard sizes (q+k+v in, o out).
+    pub fn ulysses(p: usize, attn_s: f64, in_msg_bytes: f64, out_msg_bytes: f64) -> Plan {
+        assert!(p >= 1);
+        let mut plan = Plan::new("ulysses-a2a", p, 3, false, false, Pass::Forward);
+        let mut inbound: Vec<Vec<OpId>> = vec![Vec::new(); p];
+        for src in 0..p {
+            for dst in 0..p {
+                if src != dst {
+                    let id = plan.push(
+                        dst,
+                        0,
+                        PlanOp::Xfer { src, dst, payload: Payload::Raw(in_msg_bytes) },
+                        vec![],
+                    );
+                    inbound[dst].push(id);
+                }
+            }
+        }
+        let mut compute: Vec<OpId> = Vec::with_capacity(p);
+        for (w, deps) in inbound.into_iter().enumerate() {
+            compute.push(plan.push(
+                w,
+                1,
+                PlanOp::Compute { kernel: Kernel::Raw(attn_s), pair: None },
+                deps,
+            ));
+        }
+        for src in 0..p {
+            for dst in 0..p {
+                if src != dst {
+                    plan.push(
+                        dst,
+                        2,
+                        PlanOp::Xfer { src, dst, payload: Payload::Raw(out_msg_bytes) },
+                        vec![compute[src]],
+                    );
+                }
+            }
+        }
+        plan
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Attention pairs `(q_chunk, kv_chunk)` with the `(step, worker)`
+    /// slot computing each — the IR-level analogue of
+    /// `Schedule::computed_pairs`.
+    pub fn computed_pairs(&self) -> Vec<((usize, usize), (usize, usize))> {
+        self.ops
+            .iter()
+            .filter_map(|n| match n.op {
+                PlanOp::Compute { pair: Some(pr), .. } => Some((pr, (n.step, n.worker))),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total bytes this plan moves under a cost model — by construction
+    /// exactly what the simulators charge and (with byte-accurate costs)
+    /// what the executor's `bytes_sent_global()` counts.
+    pub fn total_bytes(&self, cost: &AttnCost) -> f64 {
+        self.ops
+            .iter()
+            .map(|n| match &n.op {
+                PlanOp::Xfer { payload, .. } => payload.bytes(cost),
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Every `(src, dst, Tag)` triple this plan puts on the wire for a
+    /// given attention call id — the executor's exact tagging.
+    pub fn wire_tags(&self, call_id: u32) -> Vec<(usize, usize, Tag)> {
+        self.ops
+            .iter()
+            .filter_map(|n| match &n.op {
+                PlanOp::Xfer { src, dst, payload } => Some((
+                    *src,
+                    *dst,
+                    Tag::new(payload.tag_space(), call_id, n.step as u32),
+                )),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Structural DAG invariants common to every plan: id/index agreement,
+    /// backward-pointing deps (acyclicity by construction), nondecreasing
+    /// steps, endpoint sanity, stream-owner convention, per-(src, dst)
+    /// tag uniqueness, and — for causal plans — each causal pair computed
+    /// exactly once with no non-causal pairs.
+    pub fn validate(&self) -> Result<(), String> {
+        let p = self.n_workers;
+        let mut prev_step = 0usize;
+        for (i, n) in self.ops.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("op {i}: id {} out of sync", n.id));
+            }
+            if n.worker >= p {
+                return Err(format!("op {i}: worker {} out of range", n.worker));
+            }
+            if n.step >= self.n_steps {
+                return Err(format!("op {i}: step {} >= n_steps {}", n.step, self.n_steps));
+            }
+            if n.step < prev_step {
+                return Err(format!("op {i}: step {} decreases (prev {prev_step})", n.step));
+            }
+            prev_step = n.step;
+            for &d in &n.deps {
+                if d >= i {
+                    return Err(format!("op {i}: dep {d} not strictly earlier"));
+                }
+            }
+            if let PlanOp::Xfer { src, dst, payload } = &n.op {
+                if src == dst || *src >= p || *dst >= p {
+                    return Err(format!("op {i}: bad endpoints {src}->{dst}"));
+                }
+                let want = if payload.prefetchable() { *dst } else { *src };
+                if n.worker != want {
+                    return Err(format!(
+                        "op {i}: xfer stream owner {} (want {want} for {payload:?})",
+                        n.worker
+                    ));
+                }
+            }
+        }
+        // tag uniqueness per (src, dst): the mailbox fabric keys messages
+        // by (sender, tag) at each receiver
+        let mut seen = std::collections::HashSet::new();
+        for (src, dst, tag) in self.wire_tags(0) {
+            if !seen.insert((src, dst, tag)) {
+                return Err(format!("duplicate wire tag {tag:?} on {src}->{dst}"));
+            }
+        }
+        if self.causal {
+            let mut count = vec![vec![0usize; p]; p];
+            for ((q, kv), (t, w)) in self.computed_pairs() {
+                if q >= p || kv >= p {
+                    return Err(format!("pair ({q},{kv}) out of range at t={t} w={w}"));
+                }
+                if kv > q {
+                    return Err(format!("non-causal pair ({q},{kv}) at t={t} w={w}"));
+                }
+                count[q][kv] += 1;
+            }
+            for q in 0..p {
+                for kv in 0..=q {
+                    match count[q][kv] {
+                        1 => {}
+                        0 => return Err(format!("pair ({q},{kv}) never computed")),
+                        n => return Err(format!("pair ({q},{kv}) computed {n} times")),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stricter wiring checks for schedule-lowered plans: every owner-path
+    /// compute fetches its kv from the chunk's home worker, every
+    /// helper-path compute is fed by the owner's q bundle and answered by
+    /// a result transfer, every rescale consumes a helper result, and
+    /// backward kv-grad returns are all drained by a trailing Accum.
+    pub fn validate_lowered(&self) -> Result<(), String> {
+        self.validate()?;
+        let mut kvgrad_expected = 0usize;
+        let mut kvgrad_drained = 0usize;
+        for n in &self.ops {
+            match &n.op {
+                PlanOp::Compute { kernel: Kernel::AttnFull, pair: Some((q, kv)) } => {
+                    if n.worker == *q {
+                        // owner path: direct kv fetch from the home worker
+                        let ok = n.deps.iter().any(|&d| {
+                            matches!(
+                                &self.ops[d].op,
+                                PlanOp::Xfer { src, dst, payload: Payload::Kv }
+                                    if *src == *kv && *dst == *q
+                            )
+                        });
+                        if !ok {
+                            return Err(format!(
+                                "op {}: own-path pair ({q},{kv}) lacks kv fetch dep",
+                                n.id
+                            ));
+                        }
+                    } else if n.worker == *kv {
+                        // helper path: owner's q bundle in, result out
+                        let ok = n.deps.iter().any(|&d| {
+                            matches!(
+                                &self.ops[d].op,
+                                PlanOp::Xfer { src, dst, payload: Payload::QBundle }
+                                    if *src == *q && *dst == *kv
+                            )
+                        });
+                        if !ok {
+                            return Err(format!(
+                                "op {}: helper pair ({q},{kv}) lacks q bundle dep",
+                                n.id
+                            ));
+                        }
+                        let answered = self.ops.iter().any(|m| {
+                            matches!(
+                                &m.op,
+                                PlanOp::Xfer { src, dst, payload: Payload::HelperResult }
+                                    if *src == *kv && *dst == *q && m.deps.contains(&n.id)
+                            )
+                        });
+                        if !answered {
+                            return Err(format!(
+                                "op {}: helper pair ({q},{kv}) never ships its result",
+                                n.id
+                            ));
+                        }
+                    } else {
+                        return Err(format!(
+                            "op {}: pair ({q},{kv}) on uninvolved worker {}",
+                            n.id, n.worker
+                        ));
+                    }
+                }
+                PlanOp::Compute { kernel: Kernel::Rescale, .. } => {
+                    let ok = n.deps.iter().any(|&d| {
+                        matches!(
+                            &self.ops[d].op,
+                            PlanOp::Xfer { dst, payload: Payload::HelperResult, .. }
+                                if *dst == n.worker
+                        )
+                    });
+                    if !ok {
+                        return Err(format!("op {}: rescale lacks helper-result dep", n.id));
+                    }
+                }
+                PlanOp::Compute { kernel: Kernel::Accum, .. } => {
+                    for &d in &n.deps {
+                        match &self.ops[d].op {
+                            PlanOp::Xfer { dst, payload: Payload::KvGrad, .. }
+                                if *dst == n.worker =>
+                            {
+                                kvgrad_drained += 1;
+                            }
+                            other => {
+                                return Err(format!(
+                                    "op {}: accum dep {d} is not an inbound kv-grad ({other:?})",
+                                    n.id
+                                ))
+                            }
+                        }
+                    }
+                }
+                PlanOp::Xfer { payload: Payload::KvGrad, .. } => kvgrad_expected += 1,
+                _ => {}
+            }
+        }
+        if kvgrad_expected != kvgrad_drained {
+            return Err(format!(
+                "{kvgrad_expected} kv-grad returns but {kvgrad_drained} drained by Accum"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedule::ScheduleKind;
+
+    fn cost() -> AttnCost {
+        AttnCost {
+            pair_full_s: 1e-3,
+            pair_diag_s: 0.5e-3,
+            rescale_s: 1e-5,
+            kv_bytes: 1e6,
+            q_bytes: 0.5e6,
+            result_bytes: 0.6e6,
+            overlap: true,
+        }
+    }
+
+    #[test]
+    fn lowered_plans_validate() {
+        for p in 1..=16 {
+            for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+                let s = Schedule::build(kind, p);
+                for pass in [Pass::Forward, Pass::Backward] {
+                    let plan = Plan::from_schedule(&s, pass);
+                    plan.validate_lowered()
+                        .unwrap_or_else(|e| panic!("{kind:?} P={p} {pass:?}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowered_pairs_match_schedule() {
+        for p in [1usize, 2, 5, 8, 13] {
+            let s = Schedule::balanced(p);
+            let mut a: Vec<_> = s.computed_pairs().into_iter().map(|(pr, _)| pr).collect();
+            let mut b: Vec<_> = Plan::from_schedule(&s, Pass::Forward)
+                .computed_pairs()
+                .into_iter()
+                .map(|(pr, _)| pr)
+                .collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "P={p}");
+        }
+    }
+
+    #[test]
+    fn backward_adds_grad_returns() {
+        let s = Schedule::balanced(8);
+        let fwd = Plan::from_schedule(&s, Pass::Forward);
+        let bwd = Plan::from_schedule(&s, Pass::Backward);
+        let grads = bwd
+            .ops
+            .iter()
+            .filter(|n| matches!(n.op, PlanOp::Xfer { payload: Payload::KvGrad, .. }))
+            .count();
+        let owns = fwd
+            .ops
+            .iter()
+            .filter(|n| {
+                matches!(&n.op, PlanOp::Compute { kernel: Kernel::AttnFull, pair: Some((q, _)) }
+                    if n.worker == *q)
+            })
+            .count();
+        assert_eq!(grads, owns, "one (dk,dv) return per owner-path compute");
+        assert!(bwd.n_steps == fwd.n_steps + 1);
+    }
+
+    #[test]
+    fn ring_attention_plan_shape() {
+        let p = 8;
+        let plan = Plan::ring_attention(p);
+        plan.validate().unwrap();
+        // full P^2 pairs (masked ones included — the 2x work)
+        assert_eq!(plan.computed_pairs().len(), p * p);
+        // each of the P-1 rotation rounds moves P blocks
+        let kv = plan
+            .ops
+            .iter()
+            .filter(|n| matches!(n.op, PlanOp::Xfer { payload: Payload::Kv, .. }))
+            .count();
+        assert_eq!(kv, p * (p - 1));
+        // exactly double the causal plan's kv traffic
+        let causal = Plan::from_schedule(&Schedule::ring(p), Pass::Forward);
+        assert_eq!(plan.total_bytes(&cost()), 2.0 * causal.total_bytes(&cost()));
+    }
+
+    #[test]
+    fn ulysses_plan_shape() {
+        let p = 4;
+        let plan = Plan::ulysses(p, 1e-3, 2e6, 1e6);
+        plan.validate().unwrap();
+        let xfers = plan
+            .ops
+            .iter()
+            .filter(|n| matches!(n.op, PlanOp::Xfer { .. }))
+            .count();
+        assert_eq!(xfers, 2 * p * (p - 1));
+        assert_eq!(plan.total_bytes(&cost()), (p * (p - 1)) as f64 * 3e6);
+    }
+
+    #[test]
+    fn validate_rejects_mutations() {
+        let s = Schedule::balanced(8);
+        // drop the kv-fetch dependency of an own-path compute
+        let mut plan = Plan::from_schedule(&s, Pass::Forward);
+        let victim = plan
+            .ops
+            .iter()
+            .position(|n| {
+                matches!(&n.op, PlanOp::Compute { kernel: Kernel::AttnFull, pair: Some((q, _)) }
+                    if n.worker == *q)
+            })
+            .unwrap();
+        plan.ops[victim].deps.clear();
+        assert!(plan.validate_lowered().is_err());
+
+        // duplicate a pair
+        let mut plan = Plan::from_schedule(&s, Pass::Forward);
+        if let PlanOp::Compute { pair, .. } = &mut plan.ops[victim].op {
+            *pair = Some((0, 0));
+        }
+        assert!(plan.validate().is_err());
+
+        // forward-pointing dependency
+        let mut plan = Plan::from_schedule(&s, Pass::Forward);
+        let last = plan.ops.len() - 1;
+        plan.ops[0].deps.push(last);
+        assert!(plan.validate().is_err());
+    }
+}

@@ -119,6 +119,12 @@ impl Schedule {
         }
     }
 
+    /// Lower to the op-DAG IR ([`crate::coordinator::plan::Plan`]) for one
+    /// pass — what the executor and the event-driven simulator consume.
+    pub fn lower(&self, pass: super::plan::Pass) -> super::plan::Plan {
+        super::plan::Plan::from_schedule(self, pass)
+    }
+
     pub fn n_steps(&self) -> usize {
         self.steps.len()
     }

@@ -9,12 +9,18 @@
 //!   sequence-parallel trainer.
 //!
 //! Public API tour:
+//! * [`coordinator::plan::Plan`] — the schedule IR: one op DAG consumed by
+//!   the executor, the simulators, and the baseline comparisons alike.
 //! * [`coordinator::run_dist_attention`] — distributed attention over real
 //!   tensors, P worker threads, verified against the monolithic oracle.
 //! * [`train::Trainer`] — end-to-end sequence-parallel training with both
 //!   checkpointing strategies.
-//! * [`simulator`] + [`baselines`] — A100-cluster discrete-event model that
-//!   regenerates every table and figure of the paper's evaluation.
+//! * [`simulator`] — the lock-step reference engine plus the event-driven
+//!   engine (per-worker compute/comm streams, per-link topology,
+//!   configurable prefetch depth) over lowered plans.
+//! * [`baselines`] — analytic iteration models for every system in the
+//!   paper's evaluation, plus executed (event-engine) Ring Attention and
+//!   Ulysses plans in the same IR.
 //! * [`memory`] — activation/weight accounting and max-sequence solver.
 
 pub mod baselines;
@@ -27,5 +33,5 @@ pub mod simulator;
 pub mod train;
 pub mod util;
 
-pub use coordinator::{CkptStrategy, Schedule, ScheduleKind};
+pub use coordinator::{CkptStrategy, Pass, Plan, Schedule, ScheduleKind};
 pub use runtime::{Manifest, Runtime, Tensor};

@@ -7,6 +7,8 @@
 //!   train    [--config tiny] [--steps N] [--ckpt hf|remat] [--schedule S]
 //!            [--lr F] [--seed N]            run the distributed trainer
 //!   simulate --model M --cluster C --seq N  one-off iteration estimate
+//!   plans    [--p N] [--cluster C] [--seq N] executed schedule-IR timings
+//!            [--model M]                    (event engine, prefetch sweep)
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
 //! Arg parsing is hand-rolled (offline environment, no clap).
@@ -20,9 +22,10 @@ use distflash::baselines::megatron::Megatron;
 use distflash::baselines::ring_attention::RingAttention;
 use distflash::baselines::rsa::RingSelfAttention;
 use distflash::baselines::ulysses::Ulysses;
-use distflash::baselines::SystemModel;
+use distflash::baselines::{attn_cost_fwd, SystemModel};
 use distflash::config::{ClusterSpec, PaperModel};
-use distflash::coordinator::{run_dist_attention, CkptStrategy, ScheduleKind};
+use distflash::coordinator::{run_dist_attention, CkptStrategy, Pass, Plan, Schedule, ScheduleKind};
+use distflash::simulator::{simulate_plan, EventOpts};
 use distflash::report::paper;
 use distflash::runtime::{Runtime, Tensor, Value};
 use distflash::train::{train, AdamConfig, TrainConfig};
@@ -105,12 +108,14 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
         "5" => paper::table5(),
         "6" => paper::table6(),
         "ra" => paper::ring_attention_summary(),
+        "exec" => paper::executed_schedules(),
         _ => [
             paper::table1(),
             paper::table2(),
             paper::table3(),
             paper::table4(),
             paper::ring_attention_summary(),
+            paper::executed_schedules(),
             paper::table5(),
             paper::table6(),
         ]
@@ -256,6 +261,48 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_plans(args: &Args) -> anyhow::Result<()> {
+    let cluster = cluster_by_name(&args.get("cluster", "1x8"));
+    let p = args.usize("p", cluster.n_gpus());
+    let seq = args.usize("seq", 8192);
+    let model = PaperModel::by_name(&args.get("model", "llama-7b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cost = attn_cost_fwd(&model, &cluster, seq as f64);
+    println!(
+        "executed schedule-IR plans: {} P={p} seq/GPU={seq} (event engine; fwd cost classes)",
+        model.name
+    );
+    let plans: Vec<(&str, Plan)> = vec![
+        ("balanced-fwd", Schedule::balanced(p).lower(Pass::Forward)),
+        ("balanced-bwd", Schedule::balanced(p).lower(Pass::Backward)),
+        ("ring-fwd", Schedule::ring(p).lower(Pass::Forward)),
+        ("ring-attention", RingAttention::plan(p)),
+        ("ulysses-a2a", Ulysses::attn_plan_p(&model, &cluster, seq, p)),
+    ];
+    println!(
+        "{:<16} {:>7} {:>11} {:>11} {:>11} {:>10} {:>7}",
+        "plan", "ops", "d0 (ms)", "d1 (ms)", "d4 (ms)", "comm(MB)", "idle%"
+    );
+    for (name, plan) in &plans {
+        plan.validate()
+            .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+        let run = |d: usize| simulate_plan(plan, &cluster, &cost, &EventOpts { prefetch_depth: d });
+        let r1 = run(1);
+        println!(
+            "{:<16} {:>7} {:>11.2} {:>11.2} {:>11.2} {:>10.1} {:>7.1}",
+            name,
+            plan.n_ops(),
+            run(0).total_s * 1e3,
+            r1.total_s * 1e3,
+            run(4).total_s * 1e3,
+            r1.comm_bytes / 1e6,
+            r1.idle_fraction() * 100.0
+        );
+    }
+    println!("(d<N> = prefetch depth N; d0 = no overlap)");
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let cfg = args.get("config", "tiny");
     let rt = Runtime::load(&artifact_dir(&cfg))?;
@@ -287,8 +334,9 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|verify|train|simulate|inspect> [--flag value]...\n\
-         run `make artifacts` first; see README.md for the full tour"
+         usage: repro <tables|figures|verify|train|simulate|plans|inspect> [--flag value]...\n\
+         `tables`, `simulate`, and `plans` run on a bare checkout; `verify`/`train`\n\
+         need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate"
     );
 }
 
@@ -305,6 +353,7 @@ fn main() -> ExitCode {
         "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
+        "plans" => cmd_plans(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             help();

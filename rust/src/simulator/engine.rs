@@ -11,6 +11,12 @@
 //!
 //! This reproduces the analysis behind Figure 4 and Figure 2 and gives the
 //! per-(worker, step) trace used for the Fig. 2-style timeline.
+//!
+//! This engine is kept as the closed-form *reference*: the event-driven
+//! engine (`simulator::event`) over the lowered schedule IR reproduces it
+//! exactly at prefetch depth 1 (overlap) / depth 0 (serialized) — pinned
+//! by `rust/tests/cross_engine.rs` — and generalizes it to dataflow plans
+//! and deeper prefetch.
 
 use crate::config::ClusterSpec;
 use crate::coordinator::schedule::{ComputeOp, Schedule};

@@ -1,11 +1,25 @@
-//! Cluster timing simulator: analytic collective costs + a lock-step BSP
-//! simulation of DISTFLASHATTN schedules on modeled A100 clusters.
+//! Cluster timing simulators: analytic collective costs, the legacy
+//! lock-step BSP engine, and the event-driven engine over the schedule IR.
 //!
 //! This is the substrate behind every wall-clock number in the paper-table
 //! reproductions; the real-numerics executor (`coordinator::executor`)
 //! proves correctness, this proves the *performance shape*.
+//!
+//! Two engines, one contract:
+//! * [`engine`] — the original lock-step model over a `Schedule`'s
+//!   per-timestep rows (kept as the closed-form reference);
+//! * [`event`] — the event-driven engine over a lowered [`Plan`]
+//!   (per-worker compute/comm streams, per-link bandwidth/latency,
+//!   configurable prefetch depth). At `prefetch_depth = 1` it reproduces
+//!   the lock-step engine exactly (pinned by `rust/tests/cross_engine.rs`)
+//!   and it additionally runs dataflow baseline plans (Ring Attention,
+//!   Ulysses) the lock-step engine cannot express.
+//!
+//! [`Plan`]: crate::coordinator::plan::Plan
 
 pub mod collective;
 pub mod engine;
+pub mod event;
 
 pub use engine::{simulate_attention, AttnCost, SimResult, SlotTrace};
+pub use event::{simulate_plan, EventOpts, EventResult};

@@ -18,13 +18,16 @@
 //!   forward communication. Numerically identical (asserted in tests).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::comm::{build_network, WorkerComm};
 use crate::coordinator::executor::{AttnCtx, ATTN_ARTIFACTS};
-use crate::coordinator::{CkptStrategy, Schedule, ScheduleKind};
+use crate::coordinator::harness::build_plans;
+use crate::coordinator::plan::Plan;
+use crate::coordinator::{CkptStrategy, ScheduleKind};
 use crate::runtime::{ITensor, Runtime, Tensor, Value};
 use crate::train::data::MarkovCorpus;
 use crate::train::optimizer::{Adam, AdamConfig};
@@ -147,7 +150,9 @@ struct Worker {
     rank: usize,
     runtime: Runtime,
     comm: WorkerComm,
-    schedule: Schedule,
+    /// Lowered schedule IR, shared with the simulators (one per pass).
+    fwd_plan: Arc<Plan>,
+    bwd_plan: Arc<Plan>,
     cfg: TrainConfig,
     params: Vec<Tensor>,
     layout: ParamLayout,
@@ -179,13 +184,15 @@ impl Worker {
     fn attn_call(
         &mut self,
         call_id: u32,
+        backward: bool,
         f: impl FnOnce(&mut AttnCtx) -> Result<Vec<Tensor>>,
     ) -> Result<Vec<Tensor>> {
+        let plan = if backward { self.bwd_plan.clone() } else { self.fwd_plan.clone() };
         let mut ctx = AttnCtx {
             rank: self.rank,
             runtime: &self.runtime,
             comm: &mut self.comm,
-            schedule: &self.schedule,
+            plan: &plan,
             call_id,
         };
         f(&mut ctx)
@@ -219,7 +226,7 @@ impl Worker {
             )?;
             let (q, k, vv) = (&qkv[0], &qkv[1], &qkv[2]);
             let call = call_id(step, l, Pass::Fwd);
-            let out = self.attn_call(call, |ctx| {
+            let out = self.attn_call(call, false, |ctx| {
                 let (o, lse) = ctx.forward(q, k, vv)?;
                 Ok(vec![o, lse])
             })?;
@@ -314,7 +321,7 @@ impl Worker {
                 Some((o, lse)) => (o.clone(), lse.clone()),
                 None => {
                     let call = call_id(step, l, Pass::Recompute);
-                    let out = self.attn_call(call, |ctx| {
+                    let out = self.attn_call(call, false, |ctx| {
                         let (o, lse) = ctx.forward(&q, &k, &vv)?;
                         Ok(vec![o, lse])
                     })?;
@@ -345,7 +352,7 @@ impl Worker {
             grads[self.layout.layer(l, Self::W2)].add_assign(&p2[6]);
             // distributed attention backward (no fwd recompute — §3.3)
             let call = call_id(step, l, Pass::Bwd);
-            let attn_grads = self.attn_call(call, |ctx| {
+            let attn_grads = self.attn_call(call, true, |ctx| {
                 let (dq, dk, dv) = ctx.backward(&q, &k, &vv, &o, &lse, &d_o)?;
                 Ok(vec![dq, dk, dv])
             })?;
@@ -409,14 +416,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let n = mc.seq_len;
     drop(probe);
 
-    let schedule = Schedule::build(cfg.schedule, p);
-    schedule.validate().map_err(|e| anyhow!("schedule: {e}"))?;
+    let (fwd_plan, bwd_plan) = build_plans(cfg.schedule, p)?;
     let comms = build_network(p);
 
     let mut handles = Vec::new();
     for (rank, comm) in comms.into_iter().enumerate() {
         let cfg = cfg.clone();
-        let schedule = schedule.clone();
+        let fwd_plan = fwd_plan.clone();
+        let bwd_plan = bwd_plan.clone();
         handles.push(thread::spawn(move || -> Result<Option<TrainReport>> {
             let runtime = Runtime::load(&cfg.artifact_dir)?;
             runtime.precompile(ATTN_ARTIFACTS)?;
@@ -439,7 +446,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 rank,
                 runtime,
                 comm,
-                schedule,
+                fwd_plan,
+                bwd_plan,
                 cfg: cfg.clone(),
                 params,
                 layout,

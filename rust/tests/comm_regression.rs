@@ -1,0 +1,195 @@
+//! Comm-layer regression: the executor's wire protocol against the plan
+//! IR, without PJRT. A dry-run executor walks the lowered plans over the
+//! real channel fabric with correctly-shaped dummy tensors — with
+//! collective traffic interleaved on the same fabric — proving (1) tag
+//! uniqueness across rounds and semantic spaces (no cross-talk), and
+//! (2) `bytes_sent_global()` exactly matching the byte count the
+//! simulator predicts for the same plans via `Plan::total_bytes`.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::thread;
+
+use distflash::coordinator::comm::{build_network, Tag, WorkerComm};
+use distflash::coordinator::{Kernel, Pass, Payload, Plan, PlanOp, Schedule, ScheduleKind};
+use distflash::runtime::Tensor;
+use distflash::simulator::AttnCost;
+
+// GQA shapes (kv heads != q heads) to catch payload-size mixups
+const H: usize = 4;
+const KVH: usize = 2;
+const C: usize = 8;
+const D: usize = 16;
+
+fn f32s(n: usize) -> usize {
+    n * 4
+}
+
+/// Per-payload tensor shapes exactly as the executor ships them.
+fn payload_tensors(payload: &Payload, pass: Pass) -> Vec<Tensor> {
+    match (payload, pass) {
+        (Payload::Kv, _) => vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])],
+        (Payload::QBundle, Pass::Forward) => vec![Tensor::zeros(&[H, C, D])],
+        (Payload::QBundle, Pass::Backward) => vec![
+            Tensor::zeros(&[H, C, D]),
+            Tensor::zeros(&[H, C, D]),
+            Tensor::zeros(&[H, C]),
+            Tensor::zeros(&[H, C, D]),
+        ],
+        (Payload::HelperResult, Pass::Forward) => vec![
+            Tensor::zeros(&[H, C, D]),
+            Tensor::zeros(&[H, C]),
+            Tensor::zeros(&[H, C]),
+        ],
+        (Payload::HelperResult, Pass::Backward) => vec![Tensor::zeros(&[H, C, D])],
+        (Payload::KvGrad, _) => vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])],
+        (Payload::Raw(_), _) => vec![],
+    }
+}
+
+/// Byte-accurate cost model for those shapes (f32 host wire), so the
+/// simulator-side `Plan::total_bytes` predicts the executor's counters.
+fn wire_cost(pass: Pass) -> AttnCost {
+    let (q_bytes, result_bytes) = match pass {
+        Pass::Forward => (f32s(H * C * D) as f64, f32s(H * C * D + 2 * H * C) as f64),
+        Pass::Backward => (f32s(3 * H * C * D + H * C) as f64, f32s(H * C * D) as f64),
+    };
+    AttnCost {
+        pair_full_s: 0.0,
+        pair_diag_s: 0.0,
+        rescale_s: 0.0,
+        kv_bytes: f32s(2 * KVH * C * D) as f64,
+        q_bytes,
+        result_bytes,
+        overlap: true,
+    }
+}
+
+/// Walk a plan the way the executor does, minus the kernels: eager sends
+/// where this rank is the source, blocking receives where its computes
+/// consume inbound data.
+fn dry_run(plan: &Plan, rank: usize, comm: &mut WorkerComm, call_id: u32) {
+    let tag = |space: u32, step: usize| Tag::new(space, call_id, step as u32);
+    for node in &plan.ops {
+        match &node.op {
+            PlanOp::Xfer { src, dst, payload } if *src == rank => {
+                comm.send(
+                    *dst,
+                    tag(payload.tag_space(), node.step),
+                    payload_tensors(payload, plan.pass),
+                );
+            }
+            PlanOp::Compute { kernel, pair } if node.worker == rank => match kernel {
+                Kernel::AttnFull => {
+                    let (owner, kv_chunk) = pair.unwrap();
+                    if owner == rank {
+                        let got = comm.recv(kv_chunk, tag(Tag::KV, node.step));
+                        assert_eq!(got.len(), 2);
+                        assert_eq!(got[0].shape, vec![KVH, C, D]);
+                    } else {
+                        let want = if plan.pass == Pass::Forward { 1 } else { 4 };
+                        let got = comm.recv(owner, tag(Tag::Q_BUNDLE, node.step));
+                        assert_eq!(got.len(), want, "bundle size for {:?}", plan.pass);
+                    }
+                }
+                Kernel::Rescale => {
+                    let from = node
+                        .deps
+                        .iter()
+                        .find_map(|&d| match &plan.ops[d].op {
+                            PlanOp::Xfer { src, payload: Payload::HelperResult, .. } => Some(*src),
+                            _ => None,
+                        })
+                        .expect("rescale has a helper-result dep");
+                    comm.recv(from, tag(Tag::HELPER_RESULT, node.step));
+                }
+                Kernel::Accum => {
+                    for &d in &node.deps {
+                        if let PlanOp::Xfer { src, payload: Payload::KvGrad, .. } = &plan.ops[d].op
+                        {
+                            let got = comm.recv(*src, tag(Tag::KV_GRAD, plan.ops[d].step));
+                            assert_eq!(got[0].shape, vec![KVH, C, D]);
+                        }
+                    }
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn executor_bytes_match_plan_prediction_with_collectives_interleaved() {
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        let p = 4usize;
+        let s = Schedule::build(kind, p);
+        let fwd = Arc::new(s.lower(Pass::Forward));
+        let bwd = Arc::new(s.lower(Pass::Backward));
+        let comms = build_network(p);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut comm)| {
+                let fwd = fwd.clone();
+                let bwd = bwd.clone();
+                thread::spawn(move || {
+                    dry_run(&fwd, rank, &mut comm, 0);
+                    // collective traffic on the same fabric, between the
+                    // two attention calls: results must be exact (no
+                    // cross-talk with schedule messages)
+                    let mut t = Tensor::full(&[12], (rank + 1) as f32);
+                    comm.all_reduce_sum(1000, &mut t);
+                    assert!(t.data.iter().all(|&x| x == 10.0), "all-reduce corrupted");
+                    let all = comm.all_gather(2000, &Tensor::scalar(rank as f32));
+                    for (i, g) in all.iter().enumerate() {
+                        assert_eq!(g.as_scalar(), i as f32, "all-gather corrupted");
+                    }
+                    dry_run(&bwd, rank, &mut comm, 1);
+                    comm.barrier(3000);
+                    comm.bytes_sent_global()
+                })
+            })
+            .collect();
+        let totals: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for t in &totals {
+            assert_eq!(*t, totals[0], "{kind:?}: global counter disagrees");
+        }
+        // simulator-predicted attention bytes + exact collective bytes
+        let plan_bytes =
+            fwd.total_bytes(&wire_cost(Pass::Forward)) + bwd.total_bytes(&wire_cost(Pass::Backward));
+        let all_reduce = (p * 2 * (p - 1) * 3 * 4) as u64; // 2(P-1) segments of 3 f32 each
+        let all_gather = (p * (p - 1) * 4) as u64; // one scalar to each peer
+        let barrier = (p * (p - 1) * 4) as u64;
+        assert_eq!(
+            totals[0],
+            plan_bytes as u64 + all_reduce + all_gather + barrier,
+            "{kind:?}: executor bytes diverge from plan prediction"
+        );
+    }
+}
+
+#[test]
+fn tags_unique_across_calls_and_disjoint_from_collectives() {
+    let p = 8;
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        let s = Schedule::build(kind, p);
+        let mut seen: HashSet<(usize, usize, Tag)> = HashSet::new();
+        for (call, pass) in [(0u32, Pass::Forward), (1, Pass::Backward)] {
+            for (src, dst, tag) in s.lower(pass).wire_tags(call) {
+                assert!(
+                    seen.insert((src, dst, tag)),
+                    "{kind:?}: duplicate tag {tag:?} on {src}->{dst}"
+                );
+            }
+        }
+        for (_, _, tag) in seen.iter() {
+            assert!(
+                tag.space != Tag::ALL_REDUCE
+                    && tag.space != Tag::GATHER
+                    && tag.space != Tag::BARRIER,
+                "{kind:?}: schedule traffic leaked into a collective space"
+            );
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Property suite pinning the paper's schedule invariants across
+//! `P = 1..=64`, both `ScheduleKind`s, and both passes — at the
+//! `Schedule` level and through the IR lowering. (proptest is unavailable
+//! offline; an exhaustive sweep over every P in range is strictly
+//! stronger than sampling anyway.)
+
+use std::collections::HashSet;
+
+use distflash::coordinator::schedule::{balanced_idle_fraction_eq2, ring_idle_fraction};
+use distflash::coordinator::{
+    ComputeOp, Pass, Payload, PlanOp, Schedule, ScheduleKind, StepPlan,
+};
+
+const KINDS: [ScheduleKind; 2] = [ScheduleKind::Ring, ScheduleKind::Balanced];
+const PASSES: [Pass; 2] = [Pass::Forward, Pass::Backward];
+
+#[test]
+fn every_causal_pair_exactly_once_all_p() {
+    for p in 1..=64 {
+        for kind in KINDS {
+            let s = Schedule::build(kind, p);
+            s.validate().unwrap_or_else(|e| panic!("{kind:?} P={p}: {e}"));
+            let mut seen = HashSet::new();
+            for ((o, kv), _) in s.computed_pairs() {
+                assert!(kv <= o, "{kind:?} P={p}: non-causal ({o},{kv})");
+                assert!(seen.insert((o, kv)), "{kind:?} P={p}: dup ({o},{kv})");
+            }
+            assert_eq!(seen.len(), p * (p + 1) / 2, "{kind:?} P={p}");
+            // the lowered IR must compute the identical pair set, both
+            // passes
+            for pass in PASSES {
+                let plan = s.lower(pass);
+                plan.validate_lowered()
+                    .unwrap_or_else(|e| panic!("{kind:?} P={p} {pass:?}: {e}"));
+                let ir: HashSet<(usize, usize)> =
+                    plan.computed_pairs().into_iter().map(|(pr, _)| pr).collect();
+                assert_eq!(ir, seen, "{kind:?} P={p} {pass:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn idle_fraction_matches_closed_forms_all_p() {
+    for p in 1..=64 {
+        // ring: (P^2 - P) / 2P^2 over its own P x P timeline
+        let ring = Schedule::ring(p);
+        assert!(
+            (ring.idle_fraction() - ring_idle_fraction(p)).abs() < 1e-12,
+            "P={p}: {} vs {}",
+            ring.idle_fraction(),
+            ring_idle_fraction(p)
+        );
+        // paper Eq. (2): balanced idle slots normalized by the ring's P^2
+        // timeline -> 1/2P (P even), 0 (P odd)
+        let bal = Schedule::balanced(p);
+        let got = bal.idle_slots() as f64 / (p * p) as f64;
+        assert!(
+            (got - balanced_idle_fraction_eq2(p)).abs() < 1e-12,
+            "P={p}: {got} vs {}",
+            balanced_idle_fraction_eq2(p)
+        );
+    }
+}
+
+#[test]
+fn balanced_timeline_and_speedup_dominate_all_p() {
+    for p in 2..=64 {
+        let bal = Schedule::balanced(p);
+        assert_eq!(bal.n_steps(), p / 2 + 1, "P={p}");
+        assert!(
+            bal.ideal_speedup() >= Schedule::ring(p).ideal_speedup(),
+            "P={p}"
+        );
+    }
+}
+
+#[test]
+fn validate_accepts_generated_and_rejects_mutated() {
+    for p in 2..=16 {
+        for kind in KINDS {
+            let good = Schedule::build(kind, p);
+            good.validate().unwrap();
+
+            // (a) drop a kv send -> the matching Own compute dangles
+            let mut s = good.clone();
+            let mut mutated = false;
+            'outer: for row in &mut s.steps {
+                for plan in row.iter_mut() {
+                    if plan.send_kv_to.is_some() {
+                        plan.send_kv_to = None;
+                        mutated = true;
+                        break 'outer;
+                    }
+                }
+            }
+            if mutated {
+                assert!(s.validate().is_err(), "{kind:?} P={p}: dropped send accepted");
+            }
+
+            // (b) append a step recomputing the (0, 0) diagonal -> dup pair
+            let mut s = good.clone();
+            let mut row = vec![StepPlan::default(); p];
+            row[0].compute = Some(ComputeOp::Diag);
+            s.steps.push(row);
+            assert!(s.validate().is_err(), "{kind:?} P={p}: dup pair accepted");
+        }
+    }
+}
+
+#[test]
+fn lowered_plan_rejects_mutations() {
+    for p in 2..=16 {
+        for kind in KINDS {
+            for pass in PASSES {
+                let mut plan = Schedule::build(kind, p).lower(pass);
+                // retarget a kv transfer: breaks the stream-owner and
+                // fetch-wiring invariants
+                let idx = plan
+                    .ops
+                    .iter()
+                    .position(|n| matches!(n.op, PlanOp::Xfer { payload: Payload::Kv, .. }))
+                    .expect("every P >= 2 schedule ships kv");
+                if let PlanOp::Xfer { dst, .. } = &mut plan.ops[idx].op {
+                    *dst = (*dst + 1) % p;
+                }
+                assert!(
+                    plan.validate_lowered().is_err(),
+                    "{kind:?} P={p} {pass:?}: retargeted transfer accepted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_tags_unique_within_every_plan_all_p() {
+    for p in 1..=64 {
+        for kind in KINDS {
+            for pass in PASSES {
+                let plan = Schedule::build(kind, p).lower(pass);
+                let tags = plan.wire_tags(7);
+                let set: HashSet<_> = tags.iter().cloned().collect();
+                assert_eq!(set.len(), tags.len(), "{kind:?} P={p} {pass:?}");
+            }
+        }
+    }
+}
