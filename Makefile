@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench tables
+.PHONY: artifacts test bench bench-json tables optimize
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -14,5 +14,13 @@ test:
 bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
+# machine-readable optimizer results (default vs optimized per
+# schedule/cluster/seq) -> BENCH_optimizer.json, tracked across PRs
+bench-json:
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json
+
 tables:
 	cargo run --release --bin repro -- tables
+
+optimize:
+	cargo run --release --bin repro -- optimize --cluster 2x8

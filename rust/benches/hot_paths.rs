@@ -10,9 +10,9 @@
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::comm::build_network;
-use distflash::coordinator::{Pass, Plan, Schedule};
+use distflash::coordinator::{optimize_schedule, OptimizeOpts, Pass, Plan, Schedule};
 use distflash::runtime::Tensor;
-use distflash::simulator::{simulate_attention, simulate_plan, AttnCost, EventOpts};
+use distflash::simulator::{simulate_attention, simulate_plan, AttnCost, EventOpts, PlanSim};
 use distflash::util::bench::{bench, black_box};
 use distflash::util::{Json, Rng};
 
@@ -85,6 +85,38 @@ fn main() {
             black_box(simulate_plan(&plan, &cluster, &cost, &EventOpts::default()));
         });
         println!("{}   ({:.1}M ops/s)", s.report(), ops / s.mean_ns * 1e3);
+        // the optimizer's scoring path: pre-resolved costs, reused scratch
+        let mut sim = PlanSim::new(&plan, &cost);
+        let placement: Vec<usize> = (0..p).collect();
+        let s = bench(&format!("plan_sim_reuse_p{p}"), 3, 50, || {
+            black_box(sim.total_s(&cluster, &placement, 1));
+        });
+        println!("{}   ({:.1}M ops/s)", s.report(), ops / s.mean_ns * 1e3);
+    }
+
+    // end-to-end plan optimizer (flips + placement hill climb + depth
+    // sweep) — the whole search must stay interactive: a few hundred
+    // event-engine passes, well under the bench budget
+    {
+        let sched = Schedule::balanced(16);
+        let s = bench("optimize_schedule_p16_2x8", 1, 5, || {
+            black_box(optimize_schedule(
+                &sched,
+                Pass::Forward,
+                &cluster,
+                &cost,
+                &OptimizeOpts::default(),
+            ));
+        });
+        println!("{}", s.report());
+        // generous wall-clock ceiling: the search is ~5 ms in release on
+        // the reference box; only a pathological regression (e.g. an
+        // accidentally quadratic rescore) trips this on any machine
+        assert!(
+            s.mean_ms() < 2000.0,
+            "optimizer search blew its budget: {:.1} ms",
+            s.mean_ms()
+        );
     }
 
     // ring all-reduce over real threads (4 workers, 1M f32 each)

@@ -18,6 +18,7 @@ fn main() {
         ("table6_pp_memory", paper::table6),
         ("ring_attention_summary", paper::ring_attention_summary),
         ("executed_schedules", paper::executed_schedules),
+        ("optimized_schedules", paper::optimized_schedules),
         ("fig1_idle_fraction", paper::fig1),
         ("fig2_timeline", paper::fig2),
         ("fig4_left_balance", paper::fig4_left),

@@ -20,25 +20,77 @@ pub mod ring_attention;
 pub mod rsa;
 pub mod ulysses;
 
-use crate::config::{ClusterSpec, PaperModel};
+use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
 use crate::simulator::AttnCost;
 
 /// Forward-pass attention cost classes for a chunked schedule — the shared
 /// resolution of the IR's `Kernel`/`Payload` classes used by the executed
 /// (event-driven) baselines and the reports.
 pub fn attn_cost_fwd(model: &PaperModel, cluster: &ClusterSpec, chunk_tokens: f64) -> AttnCost {
+    attn_cost_from_dims(
+        cluster,
+        chunk_tokens,
+        model.n_heads,
+        model.n_kv_heads,
+        model.head_dim,
+    )
+}
+
+/// The canonical forward cost-class resolution, from raw dimensions — for
+/// callers that only have an artifact manifest (trainer `optimize_for`,
+/// verify) rather than a [`PaperModel`]. [`attn_cost_fwd`] is a thin
+/// delegate, so there is exactly one definition of these formulas.
+pub fn attn_cost_from_dims(
+    cluster: &ClusterSpec,
+    chunk_tokens: f64,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+) -> AttnCost {
+    let c = chunk_tokens;
+    let full_flops = 4.0 * c * c * (n_heads * head_dim) as f64;
+    let q_bytes = c * (n_heads * head_dim) as f64 * ELEM_BYTES;
     AttnCost {
-        pair_full_s: cluster
-            .compute_time(model.attn_pair_flops(chunk_tokens, chunk_tokens, false), cluster.gpu.mfu_attn),
-        pair_diag_s: cluster
-            .compute_time(model.attn_pair_flops(chunk_tokens, chunk_tokens, true), cluster.gpu.mfu_attn),
+        pair_full_s: cluster.compute_time(full_flops, cluster.gpu.mfu_attn),
+        pair_diag_s: cluster.compute_time(full_flops / 2.0, cluster.gpu.mfu_attn),
         rescale_s: cluster.compute_time(
-            chunk_tokens * (model.n_heads * model.head_dim) as f64 * 4.0,
+            c * (n_heads * head_dim) as f64 * 4.0,
             0.05, // elementwise, memory-bound
         ),
-        kv_bytes: model.kv_bytes(chunk_tokens),
-        q_bytes: model.q_bytes(chunk_tokens),
-        result_bytes: model.q_bytes(chunk_tokens) * 1.1,
+        kv_bytes: 2.0 * c * (n_kv_heads * head_dim) as f64 * ELEM_BYTES,
+        q_bytes,
+        result_bytes: q_bytes * 1.1,
+        overlap: true,
+    }
+}
+
+/// Backward-pass cost classes for the same chunked schedule. The flash
+/// backward kernel replays the pair matmuls plus the four gradient matmuls
+/// (≈ 2.5× forward FLOPs); the q bundle carries (q, o, lse, do) — about 3×
+/// the forward q payload — while the kv chunk (and the mirrored (dk, dv)
+/// return) is sized by `n_kv_heads` exactly as in forward. Under
+/// grouped-query attention the q-bundle/kv byte ratio therefore widens by
+/// another 3×, which is what makes the optimizer's role-flipping pass fire
+/// hardest on backward plans.
+pub fn attn_cost_bwd(model: &PaperModel, cluster: &ClusterSpec, chunk_tokens: f64) -> AttnCost {
+    bwd_cost_from_fwd(&attn_cost_fwd(model, cluster, chunk_tokens), model.head_dim)
+}
+
+/// Derive the backward cost classes from already-resolved forward classes —
+/// the single definition of the bwd/fwd relationship, shared by
+/// [`attn_cost_bwd`] and dimension-only callers (the trainer's
+/// `optimize_for` path, which has a manifest instead of a `PaperModel`).
+pub fn bwd_cost_from_fwd(fwd: &AttnCost, head_dim: usize) -> AttnCost {
+    AttnCost {
+        pair_full_s: 2.5 * fwd.pair_full_s,
+        pair_diag_s: 2.5 * fwd.pair_diag_s,
+        // dq accumulate — same elementwise footprint as the fwd rescale
+        rescale_s: fwd.rescale_s,
+        kv_bytes: fwd.kv_bytes,
+        // (q, o, do) + lse
+        q_bytes: 3.0 * fwd.q_bytes + fwd.q_bytes / head_dim as f64,
+        // dq partial
+        result_bytes: fwd.q_bytes,
         overlap: true,
     }
 }

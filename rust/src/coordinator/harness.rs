@@ -16,9 +16,12 @@ use anyhow::{anyhow, Context, Result};
 
 use super::comm::build_network;
 use super::executor::{AttnCtx, ATTN_ARTIFACTS};
+use super::optimize::{optimize_schedule, OptimizeOpts};
 use super::plan::{Pass, Plan};
 use super::schedule::{Schedule, ScheduleKind};
+use crate::config::ClusterSpec;
 use crate::runtime::{Runtime, Tensor};
+use crate::simulator::AttnCost;
 
 /// Gathered results of one distributed attention call over N tokens.
 #[derive(Debug)]
@@ -49,6 +52,33 @@ pub fn build_plans(kind: ScheduleKind, n_workers: usize) -> Result<(Arc<Plan>, A
     Ok((Arc::new(fwd), Arc::new(bwd)))
 }
 
+/// Optimizer-backed variant of [`build_plans`]: run the full pass pipeline
+/// (role flipping, placement, prefetch autotune) against the given cluster
+/// and per-pass cost models, and return validated plans the executor can
+/// run directly. The flipped op stream changes *which worker computes
+/// which pair* — the executor follows it literally — while the placement
+/// is timing metadata for the launcher/simulators.
+pub fn build_plans_optimized(
+    kind: ScheduleKind,
+    n_workers: usize,
+    cluster: &ClusterSpec,
+    fwd_cost: &AttnCost,
+    bwd_cost: &AttnCost,
+    opts: &OptimizeOpts,
+) -> Result<(Arc<Plan>, Arc<Plan>)> {
+    let schedule = Schedule::build(kind, n_workers);
+    schedule
+        .validate()
+        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let fwd = optimize_schedule(&schedule, Pass::Forward, cluster, fwd_cost, opts).plan;
+    fwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid optimized forward plan: {e}"))?;
+    let bwd = optimize_schedule(&schedule, Pass::Backward, cluster, bwd_cost, opts).plan;
+    bwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid optimized backward plan: {e}"))?;
+    Ok((Arc::new(fwd), Arc::new(bwd)))
+}
+
 /// Run DISTFLASHATTN forward (and optionally backward) over full-sequence
 /// tensors: q (H, N, D), k/v (KVH, N, D), do (H, N, D).
 ///
@@ -65,6 +95,29 @@ pub fn run_dist_attention(
     do_: Option<&Tensor>,
 ) -> Result<DistAttnResult> {
     let (fwd_plan, bwd_plan) = build_plans(kind, n_workers)?;
+    run_dist_attention_planned(artifact_dir, fwd_plan, bwd_plan, q, k, v, do_)
+}
+
+/// Run a distributed attention call over *caller-supplied* lowered plans —
+/// the entry point for optimizer-produced plans (`build_plans_optimized`).
+/// Both plans must be schedule lowerings for the same worker count and
+/// already validated.
+pub fn run_dist_attention_planned(
+    artifact_dir: &Path,
+    fwd_plan: Arc<Plan>,
+    bwd_plan: Arc<Plan>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: Option<&Tensor>,
+) -> Result<DistAttnResult> {
+    let n_workers = fwd_plan.n_workers;
+    if bwd_plan.n_workers != n_workers {
+        return Err(anyhow!(
+            "fwd plan has {n_workers} workers, bwd plan {}",
+            bwd_plan.n_workers
+        ));
+    }
 
     let qs = q.chunk_axis1(n_workers);
     let ks = k.chunk_axis1(n_workers);

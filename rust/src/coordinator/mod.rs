@@ -8,16 +8,23 @@
 //!   artifacts
 //! * `harness` — spawn-P-workers front door used by verify/tests/examples
 //! * `checkpoint` — HF-style vs rematerialization-aware strategies (§3.3)
+//! * `optimize` — cost-model-driven plan optimizer (placement, GQA role
+//!   flipping, prefetch autotuning) over the lowered IR
 
 pub mod checkpoint;
 pub mod comm;
 pub mod executor;
 pub mod harness;
+pub mod optimize;
 pub mod plan;
 pub mod schedule;
 
 pub use checkpoint::CkptStrategy;
 pub use executor::{AttnCtx, ATTN_ARTIFACTS};
-pub use harness::{run_dist_attention, DistAttnResult};
-pub use plan::{Kernel, Pass, Payload, Plan, PlanNode, PlanOp};
+pub use harness::{
+    build_plans, build_plans_optimized, run_dist_attention, run_dist_attention_planned,
+    DistAttnResult,
+};
+pub use optimize::{autotune_depth, optimize_plan, optimize_schedule, OptimizeOpts, Optimized};
+pub use plan::{Kernel, LowerOpts, Pass, Payload, Plan, PlanNode, PlanOp};
 pub use schedule::{ComputeOp, Schedule, ScheduleKind, StepPlan};

@@ -35,6 +35,11 @@
 //! causal pair `(p, r), r <= p` computed exactly once; every transfer
 //! wired to a consumer; dependency ids strictly backward (acyclicity by
 //! construction); per-(src, dst) message-tag uniqueness.
+//!
+//! Two degrees of freedom are left open for the plan optimizer
+//! (`coordinator::optimize`): the rank→GPU [`Plan::placement`] (identity
+//! by default, priced by the event engine's per-link lookup) and the
+//! per-step owner/helper role flip chosen at lowering via [`LowerOpts`].
 
 use super::comm::Tag;
 use super::schedule::{ComputeOp, Schedule};
@@ -152,6 +157,28 @@ pub struct PlanNode {
     pub deps: Vec<OpId>,
 }
 
+/// Per-step lowering choices made by the plan optimizer
+/// (`coordinator::optimize`). Defaults reproduce the paper's schedule
+/// exactly.
+#[derive(Clone, Debug, Default)]
+pub struct LowerOpts {
+    /// Steps whose helper pairs are *flipped*: instead of shipping the
+    /// owner's q bundle to the helper and a partial result back, the
+    /// helper ships its (k, v) chunk to the owner, which computes the
+    /// pair itself as a second owner-path kernel. Pays one extra kernel
+    /// on the owner's compute stream, saves `q_bytes + result_bytes -
+    /// kv_bytes` on the wire — the winning trade for GQA models (small
+    /// kv heads) on slow links. Indexed by schedule timestep; missing
+    /// entries mean "don't flip".
+    pub flip_steps: Vec<bool>,
+}
+
+impl LowerOpts {
+    pub fn flip(&self, step: usize) -> bool {
+        self.flip_steps.get(step).copied().unwrap_or(false)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Plan {
     pub name: String,
@@ -163,6 +190,13 @@ pub struct Plan {
     pub causal: bool,
     pub pass: Pass,
     pub ops: Vec<PlanNode>,
+    /// rank → GPU assignment used by the timing engines' link lookup
+    /// (`ClusterSpec::link`). Identity by default; the plan optimizer
+    /// permutes it so heavy edges ride fast intra-node links. Purely
+    /// timing metadata — the executor's mailbox fabric is placement-
+    /// agnostic (in a real deployment the launcher binds rank i to GPU
+    /// `placement[i]`).
+    pub placement: Vec<usize>,
 }
 
 impl Plan {
@@ -175,6 +209,7 @@ impl Plan {
             causal,
             pass,
             ops: Vec::new(),
+            placement: (0..n_workers).collect(),
         }
     }
 
@@ -192,6 +227,15 @@ impl Plan {
     /// exactly the order the threaded executor issues sends/recvs in, so
     /// the same node sequence drives both the simulator and the runtime.
     pub fn from_schedule(schedule: &Schedule, pass: Pass) -> Plan {
+        Self::from_schedule_opts(schedule, pass, &LowerOpts::default())
+    }
+
+    /// Lowering with per-step optimizer overrides (see [`LowerOpts`]).
+    /// With default options this is exactly [`Plan::from_schedule`]; with
+    /// `flip_steps[t]` set, step `t`'s helper pairs are computed owner-side
+    /// off a kv fetch from the helper instead of helper-side off a q
+    /// bundle. The covered pair set is identical either way.
+    pub fn from_schedule_opts(schedule: &Schedule, pass: Pass, lopts: &LowerOpts) -> Plan {
         let p = schedule.n_workers;
         let t_steps = schedule.n_steps();
         let n_steps = match pass {
@@ -210,9 +254,12 @@ impl Plan {
         // kv-grad transfers awaiting each lender's trailing Accum
         let mut kvgrad_in: Vec<Vec<OpId>> = vec![Vec::new(); p];
         for (t, row) in schedule.steps.iter().enumerate() {
+            let flip = lopts.flip(t);
             let mut kv_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
             let mut q_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
             let mut result_xfer: Vec<Option<OpId>> = vec![None; p]; // by owner
+            // flipped helper kv fetches, by helper (the kv chunk's home)
+            let mut flip_kv: Vec<Option<OpId>> = vec![None; p];
             for (w, sp) in row.iter().enumerate() {
                 if let Some(dst) = sp.send_kv_to {
                     let id = plan.push(
@@ -225,7 +272,19 @@ impl Plan {
                 }
             }
             for (w, sp) in row.iter().enumerate() {
-                if let Some(dst) = sp.send_q_to {
+                if flip {
+                    // flipped step: the helper lends its (k, v) to the
+                    // owner instead of receiving the owner's q bundle
+                    if let Some(ComputeOp::Help { owner }) = sp.compute {
+                        let id = plan.push(
+                            owner,
+                            t,
+                            PlanOp::Xfer { src: w, dst: owner, payload: Payload::Kv },
+                            vec![],
+                        );
+                        flip_kv[w] = Some(id);
+                    }
+                } else if let Some(dst) = sp.send_q_to {
                     let id = plan.push(
                         dst,
                         t,
@@ -266,6 +325,29 @@ impl Plan {
                             kvgrad_in[kv_from].push(g);
                         }
                     }
+                    Some(ComputeOp::Help { owner }) if flip => {
+                        // flipped: the owner computes the pair itself as a
+                        // second owner-path kernel off the helper's kv
+                        let kv = flip_kv[w].expect("flip emitted a kv fetch for every Help");
+                        let id = plan.push(
+                            owner,
+                            t,
+                            PlanOp::Compute {
+                                kernel: Kernel::AttnFull,
+                                pair: Some((owner, w)),
+                            },
+                            vec![kv],
+                        );
+                        if pass == Pass::Backward {
+                            let g = plan.push(
+                                owner,
+                                t,
+                                PlanOp::Xfer { src: owner, dst: w, payload: Payload::KvGrad },
+                                vec![id],
+                            );
+                            kvgrad_in[w].push(g);
+                        }
+                    }
                     Some(ComputeOp::Help { owner }) => {
                         let q = q_xfer[w].expect("validated schedule: q send matches Help");
                         let id = plan.push(
@@ -292,7 +374,7 @@ impl Plan {
                 }
             }
             for (w, sp) in row.iter().enumerate() {
-                if sp.recv_helper_from.is_some() {
+                if !flip && sp.recv_helper_from.is_some() {
                     let mut deps =
                         vec![result_xfer[w].expect("validated schedule: helper result present")];
                     // the owner's own inbound kv also gates the merge
@@ -455,6 +537,18 @@ impl Plan {
     /// exactly once with no non-causal pairs.
     pub fn validate(&self) -> Result<(), String> {
         let p = self.n_workers;
+        if self.placement.len() != p {
+            return Err(format!(
+                "placement has {} entries for {p} workers",
+                self.placement.len()
+            ));
+        }
+        let mut gpu_seen = std::collections::HashSet::new();
+        for (w, &g) in self.placement.iter().enumerate() {
+            if !gpu_seen.insert(g) {
+                return Err(format!("placement: GPU {g} assigned twice (worker {w})"));
+            }
+        }
         let mut prev_step = 0usize;
         for (i, n) in self.ops.iter().enumerate() {
             if n.id != i {

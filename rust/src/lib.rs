@@ -11,6 +11,10 @@
 //! Public API tour:
 //! * [`coordinator::plan::Plan`] — the schedule IR: one op DAG consumed by
 //!   the executor, the simulators, and the baseline comparisons alike.
+//! * [`coordinator::optimize`] — the cost-model-driven plan optimizer:
+//!   topology-aware rank→GPU placement, GQA-aware owner/helper role
+//!   flipping, and prefetch-depth autotuning, every pass scored by the
+//!   event engine and never worse than the default lowering.
 //! * [`coordinator::run_dist_attention`] — distributed attention over real
 //!   tensors, P worker threads, verified against the monolithic oracle.
 //! * [`train::Trainer`] — end-to-end sequence-parallel training with both

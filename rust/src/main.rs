@@ -6,9 +6,15 @@
 //!   verify   [--config tiny] [--schedule S] distributed attention vs oracle
 //!   train    [--config tiny] [--steps N] [--ckpt hf|remat] [--schedule S]
 //!            [--lr F] [--seed N]            run the distributed trainer
+//!            [--optimize [--cluster C]]     (with optimizer-derived plans)
 //!   simulate --model M --cluster C --seq N  one-off iteration estimate
 //!   plans    [--p N] [--cluster C] [--seq N] executed schedule-IR timings
 //!            [--model M]                    (event engine, prefetch sweep)
+//!   optimize [--model M] [--cluster C] [--seq N] [--p N] [--schedule S]
+//!            [--pass fwd|bwd|both] [--seed N] cost-model plan optimizer:
+//!            placement + GQA role flipping + prefetch autotune
+//!   bench    [--json] [--out FILE]          optimizer grid; --json writes
+//!                                           BENCH_optimizer.json
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
 //! Arg parsing is hand-rolled (offline environment, no clap).
@@ -22,9 +28,12 @@ use distflash::baselines::megatron::Megatron;
 use distflash::baselines::ring_attention::RingAttention;
 use distflash::baselines::rsa::RingSelfAttention;
 use distflash::baselines::ulysses::Ulysses;
-use distflash::baselines::{attn_cost_fwd, SystemModel};
+use distflash::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
 use distflash::config::{ClusterSpec, PaperModel};
-use distflash::coordinator::{run_dist_attention, CkptStrategy, Pass, Plan, Schedule, ScheduleKind};
+use distflash::coordinator::{
+    optimize_schedule, run_dist_attention, CkptStrategy, OptimizeOpts, Pass, Plan, Schedule,
+    ScheduleKind,
+};
 use distflash::simulator::{simulate_plan, EventOpts};
 use distflash::report::paper;
 use distflash::runtime::{Runtime, Tensor, Value};
@@ -109,6 +118,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
         "6" => paper::table6(),
         "ra" => paper::ring_attention_summary(),
         "exec" => paper::executed_schedules(),
+        "opt" => paper::optimized_schedules(),
         _ => [
             paper::table1(),
             paper::table2(),
@@ -116,6 +126,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
             paper::table4(),
             paper::ring_attention_summary(),
             paper::executed_schedules(),
+            paper::optimized_schedules(),
             paper::table5(),
             paper::table6(),
         ]
@@ -192,6 +203,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         adam: AdamConfig { lr: args.f32("lr", 3e-3), ..Default::default() },
         seed: args.usize("seed", 42) as u64,
         log_every: args.usize("log-every", 1),
+        optimize_for: if args.get("optimize", "false") == "true" {
+            Some(cluster_by_name(&args.get("cluster", "1x8")))
+        } else {
+            None
+        },
         ..TrainConfig::new(&artifact_dir(&cfg_name))
     };
     println!(
@@ -303,6 +319,103 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let model = PaperModel::by_name(&args.get("model", "llama-gqa"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = cluster_by_name(&args.get("cluster", "2x8"));
+    let p = args.usize("p", cluster.n_gpus());
+    if p > cluster.n_gpus() {
+        eprintln!(
+            "note: P={p} exceeds the cluster's {} GPUs; ranks beyond it are priced as if on \
+             additional nodes of the same shape (virtual-node semantics)",
+            cluster.n_gpus()
+        );
+    }
+    let seq = args.usize("seq", 2048);
+    let kind = schedule_kind(&args.get("schedule", "balanced"));
+    let opts = OptimizeOpts { seed: args.usize("seed", 0) as u64, ..Default::default() };
+    let schedule = Schedule::build(kind, p);
+    let passes: Vec<Pass> = match args.get("pass", "both").as_str() {
+        "fwd" => vec![Pass::Forward],
+        "bwd" => vec![Pass::Backward],
+        _ => vec![Pass::Forward, Pass::Backward],
+    };
+    println!(
+        "optimize: {} {kind:?} P={p} on {}x{} GPUs, seq/GPU={seq} (seed {})",
+        model.name, cluster.n_nodes, cluster.gpus_per_node, opts.seed
+    );
+    println!(
+        "{:<5} {:>13} {:>15} {:>8} {:>7} {:>6} {:>6} {:>6}",
+        "pass", "default (ms)", "optimized (ms)", "speedup", "depth*", "flips", "moves", "sims"
+    );
+    for pass in passes {
+        let cost = match pass {
+            Pass::Forward => attn_cost_fwd(&model, &cluster, seq as f64),
+            Pass::Backward => attn_cost_bwd(&model, &cluster, seq as f64),
+        };
+        let o = optimize_schedule(&schedule, pass, &cluster, &cost, &opts);
+        o.plan
+            .validate_lowered()
+            .map_err(|e| anyhow::anyhow!("optimized {pass:?} plan invalid: {e}"))?;
+        println!(
+            "{:<5} {:>13.2} {:>15.2} {:>7.2}x {:>7} {:>6} {:>6} {:>6}",
+            pass.name(),
+            o.default_s * 1e3,
+            o.optimized_s * 1e3,
+            o.speedup(),
+            o.prefetch_depth,
+            o.flipped_steps.len(),
+            o.moved_ranks,
+            o.sim_calls
+        );
+        if !o.flipped_steps.is_empty() {
+            println!("      flipped steps: {:?} (helper pairs computed owner-side)", o.flipped_steps);
+        }
+        if o.moved_ranks > 0 {
+            println!("      placement: {:?}", o.plan.placement);
+        }
+    }
+    println!("(depth* = autotuned prefetch knee; default column is identity placement, no flips, depth 1)");
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let rows = paper::optimizer_rows();
+    if args.get("json", "false") == "true" {
+        let out_path = args.get("out", "BENCH_optimizer.json");
+        let mut buf = String::from("{\n  \"bench\": \"optimizer\",\n  \"schedule\": \"balanced\",\n  \"results\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            buf.push_str(&format!(
+                "    {{\"model\": \"{}\", \"cluster\": \"{}\", \"seq_per_gpu\": {}, \"pass\": \"{}\", \
+                 \"default_s\": {:.9}, \"optimized_s\": {:.9}, \"speedup\": {:.4}, \
+                 \"prefetch_depth\": {}, \"flipped_steps\": {}, \"moved_ranks\": {}, \"sim_calls\": {}}}{}\n",
+                json_escape(r.model),
+                json_escape(r.cluster),
+                r.seq_per_gpu,
+                json_escape(r.pass),
+                r.default_s,
+                r.optimized_s,
+                r.speedup(),
+                r.prefetch_depth,
+                r.flipped_steps,
+                r.moved_ranks,
+                r.sim_calls,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        buf.push_str("  ]\n}\n");
+        std::fs::write(&out_path, &buf)?;
+        println!("wrote {} optimizer results to {out_path}", rows.len());
+    } else {
+        println!("{}", paper::optimized_schedules());
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     let cfg = args.get("config", "tiny");
     let rt = Runtime::load(&artifact_dir(&cfg))?;
@@ -334,9 +447,9 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|verify|train|simulate|plans|inspect> [--flag value]...\n\
-         `tables`, `simulate`, and `plans` run on a bare checkout; `verify`/`train`\n\
-         need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate"
+         usage: repro <tables|figures|verify|train|simulate|plans|optimize|bench|inspect> [--flag value]...\n\
+         `tables`, `simulate`, `plans`, `optimize`, and `bench` run on a bare checkout;\n\
+         `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate"
     );
 }
 
@@ -354,6 +467,8 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
         "plans" => cmd_plans(&args),
+        "optimize" => cmd_optimize(&args),
+        "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             help();

@@ -94,117 +94,218 @@ fn kernel_seconds(kernel: &Kernel, cost: &AttnCost) -> f64 {
     }
 }
 
+/// Pre-resolved simulation state for one `(Plan, AttnCost)` pair — the
+/// plan optimizer's hot path. Kernel seconds and payload bytes are
+/// resolved once into flat per-op arrays; dependency lists are flattened
+/// into a single index buffer; and every scratch vector is owned by the
+/// struct and reused, so repeated [`PlanSim::total_s`] calls (hundreds per
+/// optimizer configuration, varying only placement and prefetch depth) do
+/// no per-call allocation and no enum matching.
+pub struct PlanSim {
+    n_workers: usize,
+    n_steps: usize,
+    lockstep: bool,
+    // per-op static resolution (struct-of-arrays)
+    worker: Vec<u32>,
+    step: Vec<u32>,
+    /// Kernel seconds for computes; payload bytes for transfers.
+    val: Vec<f64>,
+    /// `u32::MAX` for computes; endpoint ranks for transfers.
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    /// Transfer is prefetchable (kv / q / raw).
+    prefetchable: Vec<bool>,
+    /// Flattened dependency lists: op i's deps are
+    /// `dep_idx[dep_off[i]..dep_off[i+1]]`.
+    dep_off: Vec<u32>,
+    dep_idx: Vec<u32>,
+    /// Aligned with `dep_idx`: edge is skipped under overlap (attention
+    /// compute gated by a prefetchable transfer in a lock-step plan).
+    dep_skip_overlap: Vec<bool>,
+    comm_bytes: f64,
+    busy_s: f64,
+    // reusable scratch
+    compute_tail: Vec<f64>,
+    comm_tail: Vec<f64>,
+    barrier: Vec<f64>,
+    op_start: Vec<f64>,
+    op_finish: Vec<f64>,
+}
+
+impl PlanSim {
+    pub fn new(plan: &Plan, cost: &AttnCost) -> PlanSim {
+        let p = plan.n_workers;
+        let n_ops = plan.ops.len();
+        let mut sim = PlanSim {
+            n_workers: p,
+            n_steps: plan.n_steps.max(1),
+            lockstep: plan.lockstep,
+            worker: Vec::with_capacity(n_ops),
+            step: Vec::with_capacity(n_ops),
+            val: Vec::with_capacity(n_ops),
+            src: Vec::with_capacity(n_ops),
+            dst: Vec::with_capacity(n_ops),
+            prefetchable: Vec::with_capacity(n_ops),
+            dep_off: Vec::with_capacity(n_ops + 1),
+            dep_idx: Vec::new(),
+            dep_skip_overlap: Vec::new(),
+            comm_bytes: 0.0,
+            busy_s: 0.0,
+            compute_tail: vec![0.0; p],
+            comm_tail: vec![0.0; p],
+            barrier: vec![0.0; plan.n_steps.max(1)],
+            op_start: vec![0.0; n_ops],
+            op_finish: vec![0.0; n_ops],
+        };
+        for node in &plan.ops {
+            sim.worker.push(node.worker as u32);
+            sim.step.push(node.step as u32);
+            sim.dep_off.push(sim.dep_idx.len() as u32);
+            let is_attn = matches!(
+                node.op,
+                PlanOp::Compute { kernel: Kernel::AttnDiag | Kernel::AttnFull, .. }
+            );
+            for &d in &node.deps {
+                sim.dep_idx.push(d as u32);
+                let dep_prefetch_xfer = matches!(
+                    &plan.ops[d].op,
+                    PlanOp::Xfer { payload, .. } if payload.prefetchable()
+                );
+                sim.dep_skip_overlap
+                    .push(plan.lockstep && is_attn && dep_prefetch_xfer);
+            }
+            match &node.op {
+                PlanOp::Compute { kernel, .. } => {
+                    let s = kernel_seconds(kernel, cost);
+                    sim.busy_s += s;
+                    sim.val.push(s);
+                    sim.src.push(u32::MAX);
+                    sim.dst.push(u32::MAX);
+                    sim.prefetchable.push(false);
+                }
+                PlanOp::Xfer { src, dst, payload } => {
+                    let bytes = payload.bytes(cost);
+                    sim.comm_bytes += bytes;
+                    sim.val.push(bytes);
+                    sim.src.push(*src as u32);
+                    sim.dst.push(*dst as u32);
+                    sim.prefetchable.push(payload.prefetchable());
+                }
+            }
+        }
+        sim.dep_off.push(sim.dep_idx.len() as u32);
+        sim
+    }
+
+    /// Total bytes every transfer moves (placement/depth-independent).
+    pub fn comm_bytes(&self) -> f64 {
+        self.comm_bytes
+    }
+
+    /// Sum of kernel seconds across workers (placement/depth-independent).
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// One scheduling pass; fills `op_start`/`op_finish` scratch and
+    /// returns the makespan. `placement[w]` is the GPU rank `w` runs on.
+    fn pass(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> f64 {
+        debug_assert_eq!(placement.len(), self.n_workers);
+        let overlap = depth >= 1;
+        let back_prefetch = depth.max(1) as u32;
+        self.compute_tail.iter_mut().for_each(|x| *x = 0.0);
+        self.comm_tail.iter_mut().for_each(|x| *x = 0.0);
+        self.barrier.iter_mut().for_each(|x| *x = 0.0);
+        let mut cur_step = 0u32;
+        let mut running_max = 0.0f64;
+
+        for i in 0..self.worker.len() {
+            let step = self.step[i];
+            if self.lockstep && step > cur_step {
+                for t in cur_step..step {
+                    self.barrier[t as usize] = running_max;
+                }
+                cur_step = step;
+            }
+            let is_xfer = self.src[i] != u32::MAX;
+            // release barrier: computes and mid-step products bind to the
+            // previous step; prefetchable transfers run up to `depth` early
+            let mut ready = if self.lockstep {
+                let b = if is_xfer && self.prefetchable[i] { back_prefetch } else { 1 };
+                if step >= b { self.barrier[(step - b) as usize] } else { 0.0 }
+            } else {
+                0.0
+            };
+            let lo = self.dep_off[i] as usize;
+            let hi = self.dep_off[i + 1] as usize;
+            for j in lo..hi {
+                if !(overlap && self.dep_skip_overlap[j]) {
+                    let f = self.op_finish[self.dep_idx[j] as usize];
+                    if f > ready {
+                        ready = f;
+                    }
+                }
+            }
+            let w = self.worker[i] as usize;
+            let (dur, tail) = if is_xfer {
+                let bytes = self.val[i];
+                let s = if bytes <= 0.0 || (self.lockstep && overlap && !self.prefetchable[i]) {
+                    // mid-step products pipeline into the next kernel on
+                    // the copy stream under overlap (§3.2): no exposed
+                    // wire time. Dataflow plans always pay real time.
+                    0.0
+                } else {
+                    let (bw, lat) = cluster
+                        .link(placement[self.src[i] as usize], placement[self.dst[i] as usize]);
+                    lat + bytes / bw
+                };
+                (s, &mut self.comm_tail[w])
+            } else {
+                (self.val[i], &mut self.compute_tail[w])
+            };
+            let start = ready.max(*tail);
+            let finish = start + dur;
+            *tail = finish;
+            self.op_start[i] = start;
+            self.op_finish[i] = finish;
+            if finish > running_max {
+                running_max = finish;
+            }
+        }
+        running_max
+    }
+
+    /// Allocation-free makespan — the optimizer's scoring call.
+    pub fn total_s(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> f64 {
+        self.pass(cluster, placement, depth)
+    }
+
+    /// Full per-op accounting (allocates the returned vectors).
+    pub fn run(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> EventResult {
+        let total_s = self.pass(cluster, placement, depth);
+        EventResult {
+            total_s,
+            comm_bytes: self.comm_bytes,
+            busy_s: self.busy_s,
+            op_start: self.op_start.clone(),
+            op_finish: self.op_finish.clone(),
+            n_workers: self.n_workers,
+        }
+    }
+}
+
 /// Simulate a plan on a cluster. `cost` resolves the kernel/payload cost
 /// classes; its `overlap` flag is ignored here — overlap is the plan DAG
-/// plus `opts.prefetch_depth`.
+/// plus `opts.prefetch_depth`. Links are looked up through the plan's
+/// rank→GPU `placement` (identity unless optimized). One-shot convenience
+/// over [`PlanSim`]; for repeated scoring build a `PlanSim` once.
 pub fn simulate_plan(
     plan: &Plan,
     cluster: &ClusterSpec,
     cost: &AttnCost,
     opts: &EventOpts,
 ) -> EventResult {
-    let p = plan.n_workers;
-    let depth = opts.prefetch_depth;
-    let overlap = depth >= 1;
-    let n_ops = plan.ops.len();
-
-    let mut compute_tail = vec![0.0f64; p];
-    let mut comm_tail = vec![0.0f64; p];
-    let mut op_start = vec![0.0f64; n_ops];
-    let mut op_finish = vec![0.0f64; n_ops];
-    // barrier[t] = completion time of every op with step <= t
-    let mut barrier = vec![0.0f64; plan.n_steps.max(1)];
-    let mut cur_step = 0usize;
-    let mut running_max = 0.0f64;
-    let mut comm_bytes = 0.0f64;
-    let mut busy_s = 0.0f64;
-
-    for node in &plan.ops {
-        if plan.lockstep && node.step > cur_step {
-            for t in cur_step..node.step {
-                barrier[t] = running_max;
-            }
-            cur_step = node.step;
-        }
-        // released-at barrier index: computes and mid-step products are
-        // bound to the previous step's barrier; prefetchable transfers may
-        // run up to `depth` steps ahead
-        let release = if plan.lockstep {
-            let back = match &node.op {
-                PlanOp::Xfer { payload, .. } if payload.prefetchable() => depth.max(1),
-                _ => 1,
-            };
-            if node.step >= back {
-                barrier[node.step - back]
-            } else {
-                0.0
-            }
-        } else {
-            0.0
-        };
-
-        let mut ready = release;
-        for &d in &node.deps {
-            // the prefetch contract: under overlap, a compute kernel's
-            // prefetchable inputs arrived in an earlier window (the
-            // barrier guarantees it); the transfer's cost lives on the
-            // comm stream instead of gating the kernel
-            let skip = plan.lockstep
-                && overlap
-                && matches!(
-                    node.op,
-                    PlanOp::Compute { kernel: Kernel::AttnDiag | Kernel::AttnFull, .. }
-                )
-                && matches!(
-                    &plan.ops[d].op,
-                    PlanOp::Xfer { payload, .. } if payload.prefetchable()
-                );
-            if !skip {
-                ready = ready.max(op_finish[d]);
-            }
-        }
-
-        let (dur, stream_tail): (f64, &mut f64) = match &node.op {
-            PlanOp::Compute { kernel, .. } => {
-                let s = kernel_seconds(kernel, cost);
-                busy_s += s;
-                (s, &mut compute_tail[node.worker])
-            }
-            PlanOp::Xfer { src, dst, payload } => {
-                let bytes = payload.bytes(cost);
-                comm_bytes += bytes;
-                let s = if bytes <= 0.0 {
-                    0.0
-                } else if plan.lockstep && overlap && !payload.prefetchable() {
-                    // helper results / grad returns pipeline into the next
-                    // kernel on the copy stream (the lock-step engine's
-                    // §3.2 convention): no exposed wire time. Dataflow
-                    // plans always pay real wire time.
-                    0.0
-                } else {
-                    let (bw, lat) = cluster.link(*src, *dst);
-                    lat + bytes / bw
-                };
-                (s, &mut comm_tail[node.worker])
-            }
-        };
-
-        let start = ready.max(*stream_tail);
-        let finish = start + dur;
-        *stream_tail = finish;
-        op_start[node.id] = start;
-        op_finish[node.id] = finish;
-        running_max = running_max.max(finish);
-    }
-
-    EventResult {
-        total_s: running_max,
-        comm_bytes,
-        busy_s,
-        op_start,
-        op_finish,
-        n_workers: p,
-    }
+    PlanSim::new(plan, cost).run(cluster, &plan.placement, opts.prefetch_depth)
 }
 
 #[cfg(test)]

@@ -22,4 +22,4 @@ pub mod engine;
 pub mod event;
 
 pub use engine::{simulate_attention, AttnCost, SimResult, SlotTrace};
-pub use event::{simulate_plan, EventOpts, EventResult};
+pub use event::{simulate_plan, EventOpts, EventResult, PlanSim};

@@ -23,9 +23,12 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::config::ClusterSpec;
 use crate::coordinator::comm::{build_network, WorkerComm};
 use crate::coordinator::executor::{AttnCtx, ATTN_ARTIFACTS};
-use crate::coordinator::harness::build_plans;
+use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
+use crate::coordinator::harness::{build_plans, build_plans_optimized};
+use crate::coordinator::optimize::OptimizeOpts;
 use crate::coordinator::plan::Plan;
 use crate::coordinator::{CkptStrategy, ScheduleKind};
 use crate::runtime::{ITensor, Runtime, Tensor, Value};
@@ -42,6 +45,11 @@ pub struct TrainConfig {
     pub adam: AdamConfig,
     pub seed: u64,
     pub log_every: usize,
+    /// When set, run the plan optimizer (`coordinator::optimize`) against
+    /// this cluster before training: the workers then execute the
+    /// cost-optimal flipped/placed plans instead of the default lowering.
+    /// Numerics are identical either way (same pair coverage).
+    pub optimize_for: Option<ClusterSpec>,
 }
 
 impl TrainConfig {
@@ -54,6 +62,7 @@ impl TrainConfig {
             adam: AdamConfig::default(),
             seed: 0,
             log_every: 1,
+            optimize_for: None,
         }
     }
 }
@@ -416,7 +425,27 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let n = mc.seq_len;
     drop(probe);
 
-    let (fwd_plan, bwd_plan) = build_plans(cfg.schedule, p)?;
+    let (fwd_plan, bwd_plan) = match &cfg.optimize_for {
+        Some(cluster) => {
+            let fwd_cost = attn_cost_from_dims(
+                cluster,
+                mc.chunk_len as f64,
+                mc.n_heads,
+                mc.n_kv_heads,
+                mc.head_dim,
+            );
+            let bwd_cost = bwd_cost_from_fwd(&fwd_cost, mc.head_dim);
+            build_plans_optimized(
+                cfg.schedule,
+                p,
+                cluster,
+                &fwd_cost,
+                &bwd_cost,
+                &OptimizeOpts { seed: cfg.seed, ..Default::default() },
+            )?
+        }
+        None => build_plans(cfg.schedule, p)?,
+    };
     let comms = build_network(p);
 
     let mut handles = Vec::new();
