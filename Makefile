@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench bench-json tables optimize
+.PHONY: artifacts test bench bench-json tables optimize optimize-varlen
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -14,13 +14,18 @@ test:
 bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
-# machine-readable optimizer results (default vs optimized per
-# schedule/cluster/seq) -> BENCH_optimizer.json, tracked across PRs
+# machine-readable optimizer + varlen-rebalancer results
+# -> BENCH_optimizer.json + BENCH_varlen.json, tracked across PRs
+# (CI runs this and uploads both as workflow artifacts)
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json
 
 tables:
 	cargo run --release --bin repro -- tables
 
 optimize:
 	cargo run --release --bin repro -- optimize --cluster 2x8
+
+# token-level rebalancing of a Zipf-packed document batch vs pad-to-max
+optimize-varlen:
+	cargo run --release --bin repro -- optimize --varlen --cluster 2x8

@@ -10,7 +10,9 @@
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::comm::build_network;
-use distflash::coordinator::{optimize_schedule, OptimizeOpts, Pass, Plan, Schedule};
+use distflash::coordinator::{
+    optimize_schedule, optimize_varlen, OptimizeOpts, Pass, Plan, Schedule, VarlenSpec,
+};
 use distflash::runtime::Tensor;
 use distflash::simulator::{simulate_attention, simulate_plan, AttnCost, EventOpts, PlanSim};
 use distflash::util::bench::{bench, black_box};
@@ -115,6 +117,40 @@ fn main() {
         assert!(
             s.mean_ms() < 2000.0,
             "optimizer search blew its budget: {:.1} ms",
+            s.mean_ms()
+        );
+    }
+
+    // token-level varlen rebalancer: boundary moves + per-pair flips over
+    // the dense dual plan, scored by the incremental rescorer — the
+    // enlarged search must stay in the same sim-call budget order as the
+    // PR 2 passes (a few hundred event-engine passes)
+    {
+        let spec = VarlenSpec::pack_zipf(64, 2048 * 16, 1.1, 17, 16);
+        let sched = Schedule::balanced(16);
+        let mut sim_calls = 0usize;
+        let mut inc = 0usize;
+        let s = bench("optimize_varlen_p16_2x8", 1, 5, || {
+            let o = optimize_varlen(
+                &sched,
+                &spec,
+                Pass::Forward,
+                &cluster,
+                &cost,
+                &OptimizeOpts::default(),
+            );
+            sim_calls = o.sim_calls;
+            inc = o.incremental_rescores;
+            black_box(o.optimized_s);
+        });
+        println!("{}   ({sim_calls} sim calls, {inc} incremental)", s.report());
+        assert!(
+            sim_calls < 2500,
+            "varlen search budget blown: {sim_calls} sim calls"
+        );
+        assert!(
+            s.mean_ms() < 2000.0,
+            "varlen rebalance blew its wall budget: {:.1} ms",
             s.mean_ms()
         );
     }

@@ -50,24 +50,40 @@ struct Message {
     tensors: Vec<Tensor>,
 }
 
-/// Build the fully-connected mailbox fabric for `p` workers.
+/// Build the fully-connected mailbox fabric for `p` workers (identity
+/// placement: rank i's mailbox at slot i).
 pub fn build_network(p: usize) -> Vec<WorkerComm> {
-    let mut senders = Vec::with_capacity(p);
-    let mut receivers = Vec::with_capacity(p);
+    let identity: Vec<usize> = (0..p).collect();
+    build_network_placed(p, &identity)
+}
+
+/// Placement-aware fabric: rank `i`'s mailbox lives at *slot*
+/// `placement[i]` — the in-process analogue of a launcher binding rank i
+/// to GPU `placement[i]` (`Plan::placement`). Every worker's sender table
+/// is permuted identically, so messages stay addressed by logical rank
+/// and the executor is placement-agnostic; byte counters stay
+/// rank-indexed.
+pub fn build_network_placed(p: usize, placement: &[usize]) -> Vec<WorkerComm> {
+    assert_eq!(placement.len(), p, "placement must cover every rank");
+    let mut slot_senders = Vec::with_capacity(p);
+    let mut slot_receivers: Vec<Option<Receiver<Message>>> = Vec::with_capacity(p);
     for _ in 0..p {
         let (tx, rx) = channel::<Message>();
-        senders.push(tx);
-        receivers.push(rx);
+        slot_senders.push(tx);
+        slot_receivers.push(Some(rx));
     }
     let bytes: Arc<Vec<AtomicU64>> = Arc::new((0..p).map(|_| AtomicU64::new(0)).collect());
-    receivers
-        .into_iter()
-        .enumerate()
-        .map(|(rank, rx)| WorkerComm {
+    // rank j's mailbox is the channel at slot placement[j]
+    let senders: Vec<Sender<Message>> =
+        placement.iter().map(|&g| slot_senders[g].clone()).collect();
+    (0..p)
+        .map(|rank| WorkerComm {
             rank,
             n_workers: p,
             senders: senders.clone(),
-            rx,
+            rx: slot_receivers[placement[rank]]
+                .take()
+                .expect("placement must be a permutation of 0..p"),
             stash: HashMap::new(),
             bytes_sent: bytes.clone(),
         })

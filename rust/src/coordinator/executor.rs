@@ -18,8 +18,36 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::comm::{Tag, WorkerComm};
-use super::plan::{Kernel, Pass, Payload, Plan, PlanNode, PlanOp};
+use super::plan::{Kernel, Pass, PayloadClass, Plan, PlanNode, PlanOp};
 use crate::runtime::{Runtime, Tensor, Value};
+
+/// Executable kernel semantics. Token-scaled variants collapse onto their
+/// base class — the scale prices the op for the timing engines, while the
+/// runtime kernel simply operates on whatever (possibly ragged) chunk
+/// shapes arrive. Intra-chunk document masking is the kernel's job (the
+/// plan already skips chunk pairs that share no document); the vendored
+/// stub artifacts do not implement it, so varlen numerics runs require
+/// doc-mask-aware artifacts.
+enum ExecKernel {
+    Diag,
+    Full,
+    Rescale,
+    Accum,
+}
+
+fn exec_kernel(kernel: &Kernel, pair: Option<(usize, usize)>) -> Option<ExecKernel> {
+    match kernel {
+        Kernel::AttnDiag => Some(ExecKernel::Diag),
+        Kernel::AttnFull => Some(ExecKernel::Full),
+        Kernel::AttnTok { .. } => match pair {
+            Some((q, kv)) if q == kv => Some(ExecKernel::Diag),
+            _ => Some(ExecKernel::Full),
+        },
+        Kernel::Rescale | Kernel::RescaleTok { .. } => Some(ExecKernel::Rescale),
+        Kernel::Accum => Some(ExecKernel::Accum),
+        Kernel::Raw(_) => None,
+    }
+}
 
 /// Per-worker view of one distributed attention call.
 pub struct AttnCtx<'a> {
@@ -36,11 +64,13 @@ fn v(t: &Tensor) -> Value {
     Value::F32(t.clone())
 }
 
-/// `(src, step)` of the first dependency of `node` that is a transfer
-/// matching `pred` — how compute nodes locate their inbound mailbox slot.
-fn dep_xfer(plan: &Plan, node: &PlanNode, pred: fn(&Payload) -> bool) -> Option<(usize, usize)> {
+/// `(src, step)` of the first dependency of `node` that is a transfer of
+/// the given class — how compute nodes locate their inbound mailbox slot.
+fn dep_xfer(plan: &Plan, node: &PlanNode, class: PayloadClass) -> Option<(usize, usize)> {
     node.deps.iter().find_map(|&d| match &plan.ops[d].op {
-        PlanOp::Xfer { src, payload, .. } if pred(payload) => Some((*src, plan.ops[d].step)),
+        PlanOp::Xfer { src, payload, .. } if payload.class() == class => {
+            Some((*src, plan.ops[d].step))
+        }
         _ => None,
     })
 }
@@ -78,95 +108,103 @@ impl<'a> AttnCtx<'a> {
 
         for node in &plan.ops {
             match &node.op {
-                PlanOp::Xfer { src, dst, payload } if *src == self.rank => match payload {
-                    Payload::Kv => self.comm.send(
-                        *dst,
-                        self.tag(Tag::KV, node.step),
-                        vec![k.clone(), v_t.clone()],
-                    ),
-                    Payload::QBundle => self.comm.send(
-                        *dst,
-                        self.tag(Tag::Q_BUNDLE, node.step),
-                        vec![q.clone()],
-                    ),
-                    Payload::HelperResult => {
-                        let out = helper_out
-                            .take()
-                            .ok_or_else(|| anyhow!("no helper partial pending at op {}", node.id))?;
-                        self.comm
-                            .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
+                PlanOp::Xfer { src, dst, payload } if *src == self.rank => {
+                    match payload.class() {
+                        PayloadClass::Kv => self.comm.send(
+                            *dst,
+                            self.tag(Tag::KV, node.step),
+                            vec![k.clone(), v_t.clone()],
+                        ),
+                        PayloadClass::QBundle => self.comm.send(
+                            *dst,
+                            self.tag(Tag::Q_BUNDLE, node.step),
+                            vec![q.clone()],
+                        ),
+                        PayloadClass::HelperResult => {
+                            let out = helper_out.take().ok_or_else(|| {
+                                anyhow!("no helper partial pending at op {}", node.id)
+                            })?;
+                            self.comm
+                                .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
+                        }
+                        PayloadClass::KvGrad | PayloadClass::Raw => {
+                            bail!("payload {payload:?} is not executable in forward")
+                        }
                     }
-                    Payload::KvGrad | Payload::Raw(_) => {
-                        bail!("payload {payload:?} is not executable in forward")
-                    }
-                },
-                PlanOp::Compute { kernel, pair } if node.worker == self.rank => match kernel {
-                    Kernel::AttnDiag => {
-                        let out = self.runtime.run(
-                            "attn_fwd_diag",
-                            &[v(q), v(k), v(v_t), v(&o), v(&m), v(&l)],
-                        )?;
-                        let mut it = out.into_iter();
-                        o = it.next().unwrap();
-                        m = it.next().unwrap();
-                        l = it.next().unwrap();
-                    }
-                    Kernel::AttnFull => {
-                        let (owner, kv_chunk) =
-                            pair.ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
-                        if owner == self.rank {
-                            // owner path: fetch the remote (k, v) chunk
-                            let mut kv = self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
-                            let vr = kv.pop().unwrap();
-                            let kr = kv.pop().unwrap();
+                }
+                PlanOp::Compute { kernel, pair } if node.worker == self.rank => {
+                    match exec_kernel(kernel, *pair) {
+                        Some(ExecKernel::Diag) => {
                             let out = self.runtime.run(
-                                "attn_fwd_full",
-                                &[v(q), v(&kr), v(&vr), v(&o), v(&m), v(&l)],
+                                "attn_fwd_diag",
+                                &[v(q), v(k), v(v_t), v(&o), v(&m), v(&l)],
                             )?;
                             let mut it = out.into_iter();
                             o = it.next().unwrap();
                             m = it.next().unwrap();
                             l = it.next().unwrap();
-                        } else {
-                            // helper path: owner's q against local (k, v),
-                            // fresh accumulators, partial shipped back
-                            let qo = self
-                                .comm
-                                .recv(owner, self.tag(Tag::Q_BUNDLE, node.step))
-                                .remove(0);
-                            let oh = Tensor::zeros(&[h, c, d]);
-                            let mh = Tensor::full(&[h, c], f32::NEG_INFINITY);
-                            let lh = Tensor::zeros(&[h, c]);
+                        }
+                        Some(ExecKernel::Full) => {
+                            let (owner, kv_chunk) = pair
+                                .ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
+                            if owner == self.rank {
+                                // owner path: fetch the remote (k, v) chunk
+                                let mut kv =
+                                    self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
+                                let vr = kv.pop().unwrap();
+                                let kr = kv.pop().unwrap();
+                                let out = self.runtime.run(
+                                    "attn_fwd_full",
+                                    &[v(q), v(&kr), v(&vr), v(&o), v(&m), v(&l)],
+                                )?;
+                                let mut it = out.into_iter();
+                                o = it.next().unwrap();
+                                m = it.next().unwrap();
+                                l = it.next().unwrap();
+                            } else {
+                                // helper path: owner's q against local
+                                // (k, v), fresh accumulators shaped by the
+                                // owner's (possibly ragged) chunk, partial
+                                // shipped back
+                                let qo = self
+                                    .comm
+                                    .recv(owner, self.tag(Tag::Q_BUNDLE, node.step))
+                                    .remove(0);
+                                let (ho, co) = (qo.shape[0], qo.shape[1]);
+                                let oh = Tensor::zeros(&qo.shape);
+                                let mh = Tensor::full(&[ho, co], f32::NEG_INFINITY);
+                                let lh = Tensor::zeros(&[ho, co]);
+                                let out = self.runtime.run(
+                                    "attn_fwd_full",
+                                    &[v(&qo), v(k), v(v_t), v(&oh), v(&mh), v(&lh)],
+                                )?;
+                                helper_out = Some(out);
+                            }
+                        }
+                        Some(ExecKernel::Rescale) => {
+                            let (from, step) =
+                                dep_xfer(plan, node, PayloadClass::HelperResult).ok_or_else(
+                                    || anyhow!("rescale op {} lacks a helper-result dep", node.id),
+                                )?;
+                            let mut part =
+                                self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
+                            let l2 = part.pop().unwrap();
+                            let m2 = part.pop().unwrap();
+                            let o2 = part.pop().unwrap();
                             let out = self.runtime.run(
-                                "attn_fwd_full",
-                                &[v(&qo), v(k), v(v_t), v(&oh), v(&mh), v(&lh)],
+                                "attn_rescale",
+                                &[v(&o), v(&m), v(&l), v(&o2), v(&m2), v(&l2)],
                             )?;
-                            helper_out = Some(out);
+                            let mut it = out.into_iter();
+                            o = it.next().unwrap();
+                            m = it.next().unwrap();
+                            l = it.next().unwrap();
+                        }
+                        Some(ExecKernel::Accum) | None => {
+                            bail!("kernel {kernel:?} is not executable in forward")
                         }
                     }
-                    Kernel::Rescale => {
-                        let (from, step) =
-                            dep_xfer(plan, node, |p| matches!(p, Payload::HelperResult))
-                                .ok_or_else(|| {
-                                    anyhow!("rescale op {} lacks a helper-result dep", node.id)
-                                })?;
-                        let mut part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
-                        let l2 = part.pop().unwrap();
-                        let m2 = part.pop().unwrap();
-                        let o2 = part.pop().unwrap();
-                        let out = self.runtime.run(
-                            "attn_rescale",
-                            &[v(&o), v(&m), v(&l), v(&o2), v(&m2), v(&l2)],
-                        )?;
-                        let mut it = out.into_iter();
-                        o = it.next().unwrap();
-                        m = it.next().unwrap();
-                        l = it.next().unwrap();
-                    }
-                    Kernel::Accum | Kernel::Raw(_) => {
-                        bail!("kernel {kernel:?} is not executable in forward")
-                    }
-                },
+                }
                 _ => {}
             }
         }
@@ -209,110 +247,119 @@ impl<'a> AttnCtx<'a> {
 
         for node in &plan.ops {
             match &node.op {
-                PlanOp::Xfer { src, dst, payload } if *src == self.rank => match payload {
-                    Payload::Kv => self.comm.send(
-                        *dst,
-                        self.tag(Tag::KV, node.step),
-                        vec![k.clone(), v_t.clone()],
-                    ),
-                    Payload::QBundle => {
-                        // helper needs the full owner bundle for the bwd
-                        // kernel
-                        self.comm.send(
+                PlanOp::Xfer { src, dst, payload } if *src == self.rank => {
+                    match payload.class() {
+                        PayloadClass::Kv => self.comm.send(
                             *dst,
-                            self.tag(Tag::Q_BUNDLE, node.step),
-                            vec![q.clone(), o.clone(), lse.clone(), do_.clone()],
-                        );
+                            self.tag(Tag::KV, node.step),
+                            vec![k.clone(), v_t.clone()],
+                        ),
+                        PayloadClass::QBundle => {
+                            // helper needs the full owner bundle for the
+                            // bwd kernel
+                            self.comm.send(
+                                *dst,
+                                self.tag(Tag::Q_BUNDLE, node.step),
+                                vec![q.clone(), o.clone(), lse.clone(), do_.clone()],
+                            );
+                        }
+                        PayloadClass::HelperResult => {
+                            let out = helper_out.take().ok_or_else(|| {
+                                anyhow!("no dq partial pending at op {}", node.id)
+                            })?;
+                            self.comm
+                                .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
+                        }
+                        PayloadClass::KvGrad => {
+                            let out = grad_out.take().ok_or_else(|| {
+                                anyhow!("no (dk, dv) partial pending at op {}", node.id)
+                            })?;
+                            self.comm.send(*dst, self.tag(Tag::KV_GRAD, node.step), out);
+                        }
+                        PayloadClass::Raw => bail!("raw payload is not executable in backward"),
                     }
-                    Payload::HelperResult => {
-                        let out = helper_out
-                            .take()
-                            .ok_or_else(|| anyhow!("no dq partial pending at op {}", node.id))?;
-                        self.comm
-                            .send(*dst, self.tag(Tag::HELPER_RESULT, node.step), out);
-                    }
-                    Payload::KvGrad => {
-                        let out = grad_out.take().ok_or_else(|| {
-                            anyhow!("no (dk, dv) partial pending at op {}", node.id)
-                        })?;
-                        self.comm.send(*dst, self.tag(Tag::KV_GRAD, node.step), out);
-                    }
-                    Payload::Raw(_) => bail!("raw payload is not executable in backward"),
-                },
-                PlanOp::Compute { kernel, pair } if node.worker == self.rank => match kernel {
-                    Kernel::AttnDiag => {
-                        let out = self.runtime.run(
-                            "attn_bwd_diag",
-                            &[v(q), v(k), v(v_t), v(o), v(lse), v(do_)],
-                        )?;
-                        let mut it = out.into_iter();
-                        dq.add_assign(&it.next().unwrap());
-                        dk.add_assign(&it.next().unwrap());
-                        dv.add_assign(&it.next().unwrap());
-                    }
-                    Kernel::AttnFull => {
-                        let (owner, kv_chunk) =
-                            pair.ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
-                        if owner == self.rank {
-                            let mut kv = self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
-                            let vr = kv.pop().unwrap();
-                            let kr = kv.pop().unwrap();
+                }
+                PlanOp::Compute { kernel, pair } if node.worker == self.rank => {
+                    match exec_kernel(kernel, *pair) {
+                        Some(ExecKernel::Diag) => {
                             let out = self.runtime.run(
-                                "attn_bwd_full",
-                                &[v(q), v(&kr), v(&vr), v(o), v(lse), v(do_)],
+                                "attn_bwd_diag",
+                                &[v(q), v(k), v(v_t), v(o), v(lse), v(do_)],
                             )?;
                             let mut it = out.into_iter();
                             dq.add_assign(&it.next().unwrap());
-                            let dkr = it.next().unwrap();
-                            let dvr = it.next().unwrap();
-                            grad_out = Some(vec![dkr, dvr]);
-                        } else {
-                            let mut bundle =
-                                self.comm.recv(owner, self.tag(Tag::Q_BUNDLE, node.step));
-                            let do_o = bundle.pop().unwrap();
-                            let lse_o = bundle.pop().unwrap();
-                            let o_o = bundle.pop().unwrap();
-                            let q_o = bundle.pop().unwrap();
-                            let out = self.runtime.run(
-                                "attn_bwd_full",
-                                &[v(&q_o), v(k), v(v_t), v(&o_o), v(&lse_o), v(&do_o)],
-                            )?;
-                            let mut it = out.into_iter();
-                            let dq_o = it.next().unwrap();
                             dk.add_assign(&it.next().unwrap());
                             dv.add_assign(&it.next().unwrap());
-                            helper_out = Some(vec![dq_o]);
                         }
-                    }
-                    Kernel::Rescale => {
-                        let (from, step) =
-                            dep_xfer(plan, node, |p| matches!(p, Payload::HelperResult))
-                                .ok_or_else(|| {
-                                    anyhow!("rescale op {} lacks a helper-result dep", node.id)
-                                })?;
-                        let part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
-                        dq.add_assign(&part[0]);
-                    }
-                    Kernel::Accum => {
-                        // drain the (dk, dv) returns from every owner this
-                        // worker lent kv to
-                        for &dref in &node.deps {
-                            let dep = &plan.ops[dref];
-                            match &dep.op {
-                                PlanOp::Xfer { src, payload: Payload::KvGrad, .. } => {
-                                    let mut g =
-                                        self.comm.recv(*src, self.tag(Tag::KV_GRAD, dep.step));
-                                    let dvr = g.pop().unwrap();
-                                    let dkr = g.pop().unwrap();
-                                    dk.add_assign(&dkr);
-                                    dv.add_assign(&dvr);
-                                }
-                                other => bail!("accum dep {dref} is not a kv-grad ({other:?})"),
+                        Some(ExecKernel::Full) => {
+                            let (owner, kv_chunk) = pair
+                                .ok_or_else(|| anyhow!("attention op {} has no pair", node.id))?;
+                            if owner == self.rank {
+                                let mut kv =
+                                    self.comm.recv(kv_chunk, self.tag(Tag::KV, node.step));
+                                let vr = kv.pop().unwrap();
+                                let kr = kv.pop().unwrap();
+                                let out = self.runtime.run(
+                                    "attn_bwd_full",
+                                    &[v(q), v(&kr), v(&vr), v(o), v(lse), v(do_)],
+                                )?;
+                                let mut it = out.into_iter();
+                                dq.add_assign(&it.next().unwrap());
+                                let dkr = it.next().unwrap();
+                                let dvr = it.next().unwrap();
+                                grad_out = Some(vec![dkr, dvr]);
+                            } else {
+                                let mut bundle =
+                                    self.comm.recv(owner, self.tag(Tag::Q_BUNDLE, node.step));
+                                let do_o = bundle.pop().unwrap();
+                                let lse_o = bundle.pop().unwrap();
+                                let o_o = bundle.pop().unwrap();
+                                let q_o = bundle.pop().unwrap();
+                                let out = self.runtime.run(
+                                    "attn_bwd_full",
+                                    &[v(&q_o), v(k), v(v_t), v(&o_o), v(&lse_o), v(&do_o)],
+                                )?;
+                                let mut it = out.into_iter();
+                                let dq_o = it.next().unwrap();
+                                dk.add_assign(&it.next().unwrap());
+                                dv.add_assign(&it.next().unwrap());
+                                helper_out = Some(vec![dq_o]);
                             }
                         }
+                        Some(ExecKernel::Rescale) => {
+                            let (from, step) =
+                                dep_xfer(plan, node, PayloadClass::HelperResult).ok_or_else(
+                                    || anyhow!("rescale op {} lacks a helper-result dep", node.id),
+                                )?;
+                            let part = self.comm.recv(from, self.tag(Tag::HELPER_RESULT, step));
+                            dq.add_assign(&part[0]);
+                        }
+                        Some(ExecKernel::Accum) => {
+                            // drain the (dk, dv) returns from every owner
+                            // this worker lent kv to
+                            for &dref in &node.deps {
+                                let dep = &plan.ops[dref];
+                                match &dep.op {
+                                    PlanOp::Xfer { src, payload, .. }
+                                        if payload.class() == PayloadClass::KvGrad =>
+                                    {
+                                        let mut g = self
+                                            .comm
+                                            .recv(*src, self.tag(Tag::KV_GRAD, dep.step));
+                                        let dvr = g.pop().unwrap();
+                                        let dkr = g.pop().unwrap();
+                                        dk.add_assign(&dkr);
+                                        dv.add_assign(&dvr);
+                                    }
+                                    other => {
+                                        bail!("accum dep {dref} is not a kv-grad ({other:?})")
+                                    }
+                                }
+                            }
+                        }
+                        None => bail!("raw kernel is not executable in backward"),
                     }
-                    Kernel::Raw(_) => bail!("raw kernel is not executable in backward"),
-                },
+                }
                 _ => {}
             }
         }

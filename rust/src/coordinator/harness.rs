@@ -14,11 +14,11 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::comm::build_network;
+use super::comm::build_network_placed;
 use super::executor::{AttnCtx, ATTN_ARTIFACTS};
 use super::optimize::{optimize_schedule, OptimizeOpts};
-use super::plan::{Pass, Plan};
-use super::schedule::{Schedule, ScheduleKind};
+use super::plan::{LowerOpts, Pass, Plan};
+use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
 use crate::config::ClusterSpec;
 use crate::runtime::{Runtime, Tensor};
 use crate::simulator::AttnCost;
@@ -79,6 +79,34 @@ pub fn build_plans_optimized(
     Ok((Arc::new(fwd), Arc::new(bwd)))
 }
 
+/// Varlen (document-packed) variant of [`build_plans`]: token-exact
+/// lowering against the given chunk spec — every op priced by its ragged
+/// slice, chunk pairs sharing no document skipped.
+/// [`run_dist_attention_planned`] splits tensors at `spec.boundaries`,
+/// but note the current AOT manifests compile fixed chunk shapes: only
+/// *uniform* boundaries are executable today (which still exercises the
+/// doc-masked plan structure — skipped pairs never communicate); ragged
+/// execution needs per-chunk artifacts (see ROADMAP, "Intra-chunk
+/// document masking"). The simulators have no such restriction.
+pub fn build_plans_varlen(
+    kind: ScheduleKind,
+    spec: &VarlenSpec,
+) -> Result<(Arc<Plan>, Arc<Plan>)> {
+    spec.validate().map_err(|e| anyhow!("invalid varlen spec: {e}"))?;
+    let schedule = Schedule::build(kind, spec.n_chunks());
+    schedule
+        .validate()
+        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let lopts = LowerOpts { varlen: Some(Arc::new(spec.clone())), ..Default::default() };
+    let fwd = Plan::from_schedule_opts(&schedule, Pass::Forward, &lopts);
+    fwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid varlen forward plan: {e}"))?;
+    let bwd = Plan::from_schedule_opts(&schedule, Pass::Backward, &lopts);
+    bwd.validate_lowered()
+        .map_err(|e| anyhow!("invalid varlen backward plan: {e}"))?;
+    Ok((Arc::new(fwd), Arc::new(bwd)))
+}
+
 /// Run DISTFLASHATTN forward (and optionally backward) over full-sequence
 /// tensors: q (H, N, D), k/v (KVH, N, D), do (H, N, D).
 ///
@@ -118,13 +146,58 @@ pub fn run_dist_attention_planned(
             bwd_plan.n_workers
         ));
     }
+    // both passes must agree on the chunking — a backward plan lowered
+    // against different boundaries would expect different shapes and
+    // pair structure than the tensors sharded below
+    if fwd_plan.varlen.as_deref() != bwd_plan.varlen.as_deref() {
+        return Err(anyhow!(
+            "fwd and bwd plans carry different varlen chunk specs"
+        ));
+    }
 
-    let qs = q.chunk_axis1(n_workers);
-    let ks = k.chunk_axis1(n_workers);
-    let vs = v.chunk_axis1(n_workers);
-    let dos = do_.map(|d| d.chunk_axis1(n_workers));
+    // equal chunks by default; ragged token boundaries for varlen plans
+    let (qs, ks, vs, dos) = match fwd_plan.varlen.as_deref() {
+        Some(spec) => {
+            if spec.total_tokens() != q.shape[1] {
+                return Err(anyhow!(
+                    "varlen spec covers {} tokens but q has {}",
+                    spec.total_tokens(),
+                    q.shape[1]
+                ));
+            }
+            // the AOT artifacts compile one fixed chunk shape; a ragged
+            // chunk would fail the runtime's shape check mid-plan on one
+            // worker and deadlock its peers' blocking recvs — reject up
+            // front with the honest story instead
+            let c0 = spec.chunk_tokens(0);
+            if (1..n_workers).any(|w| spec.chunk_tokens(w) != c0) {
+                return Err(anyhow!(
+                    "ragged varlen boundaries need per-chunk AOT artifacts; the fixed-shape \
+                     manifest executes uniform chunks only (simulate ragged plans with the \
+                     event engine, or rebalance with uniform boundaries)"
+                ));
+            }
+            (
+                q.chunk_axis1_at(&spec.boundaries),
+                k.chunk_axis1_at(&spec.boundaries),
+                v.chunk_axis1_at(&spec.boundaries),
+                do_.map(|d| d.chunk_axis1_at(&spec.boundaries)),
+            )
+        }
+        None => (
+            q.chunk_axis1(n_workers),
+            k.chunk_axis1(n_workers),
+            v.chunk_axis1(n_workers),
+            do_.map(|d| d.chunk_axis1(n_workers)),
+        ),
+    };
 
-    let comms = build_network(n_workers);
+    // bind rank i's mailbox to slot placement[i] — the in-process
+    // analogue of the launcher pinning rank i to that GPU. (A backward
+    // plan optimized separately may carry a different placement; messages
+    // are addressed by logical rank, so the forward placement binding
+    // stays correct for both passes.)
+    let comms = build_network_placed(n_workers, &fwd_plan.placement);
     let dir: PathBuf = artifact_dir.to_path_buf();
 
     struct WorkerOut {

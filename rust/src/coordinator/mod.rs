@@ -22,9 +22,12 @@ pub mod schedule;
 pub use checkpoint::CkptStrategy;
 pub use executor::{AttnCtx, ATTN_ARTIFACTS};
 pub use harness::{
-    build_plans, build_plans_optimized, run_dist_attention, run_dist_attention_planned,
-    DistAttnResult,
+    build_plans, build_plans_optimized, build_plans_varlen, run_dist_attention,
+    run_dist_attention_planned, DistAttnResult,
 };
-pub use optimize::{autotune_depth, optimize_plan, optimize_schedule, OptimizeOpts, Optimized};
-pub use plan::{Kernel, LowerOpts, Pass, Payload, Plan, PlanNode, PlanOp};
-pub use schedule::{ComputeOp, Schedule, ScheduleKind, StepPlan};
+pub use optimize::{
+    autotune_depth, optimize_plan, optimize_schedule, optimize_varlen, OptimizeOpts, Optimized,
+    VarlenOptimized,
+};
+pub use plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanNode, PlanOp};
+pub use schedule::{ChunkSpec, ComputeOp, Schedule, ScheduleKind, StepPlan, VarlenSpec};

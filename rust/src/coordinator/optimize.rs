@@ -44,9 +44,11 @@
 //! Everything here is deterministic given `OptimizeOpts::seed`: the only
 //! randomness is the hill climb's swap visiting order (`util::Rng`).
 
+use std::sync::Arc;
+
 use crate::config::ClusterSpec;
-use crate::coordinator::plan::{LowerOpts, Pass, Plan, PlanOp};
-use crate::coordinator::schedule::{ComputeOp, Schedule};
+use crate::coordinator::plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanOp};
+use crate::coordinator::schedule::{ComputeOp, Schedule, VarlenSpec};
 use crate::simulator::{AttnCost, PlanSim};
 use crate::util::Rng;
 
@@ -64,10 +66,18 @@ pub struct OptimizeOpts {
     /// Knee tolerance: pick the smallest depth within this relative
     /// distance of the best sweep time.
     pub knee_rel_tol: f64,
+    /// Fraction of `GpuSpec::mem_bytes` the prefetch pipeline may stage:
+    /// depth `d` holds `d` in-flight kv chunks, so candidates with
+    /// `d * kv_stage_bytes` beyond this headroom are rejected outright —
+    /// the memory charge the knee tolerance used to proxy for.
+    pub stage_mem_frac: f64,
     /// Enable the role-flipping pass (schedule lowerings only).
     pub flip: bool,
     /// Enable the placement search.
     pub placement: bool,
+    /// Maximum boundary+flip sweeps of the token-level rebalancer
+    /// (stops early on a sweep with no accepted move).
+    pub rebalance_rounds: usize,
 }
 
 impl Default for OptimizeOpts {
@@ -77,8 +87,10 @@ impl Default for OptimizeOpts {
             swap_rounds: 3,
             depths: vec![1, 2, 3, 4, 6, 8],
             knee_rel_tol: 0.01,
+            stage_mem_frac: 0.05,
             flip: true,
             placement: true,
+            rebalance_rounds: 3,
         }
     }
 }
@@ -130,13 +142,22 @@ fn depth_candidates(opts: &OptimizeOpts) -> Vec<usize> {
 }
 
 /// Depth knee on a prepared simulator. Returns `(depth, total_s, calls)`.
+/// Depth `d` stages `d` in-flight kv chunks on the receiving GPU, so
+/// candidates whose staging footprint exceeds the configured share of
+/// `GpuSpec::mem_bytes` are dropped before timing (depth 1, the paper's
+/// baseline pipeline, is always kept).
 fn autotune_depth_sim(
     sim: &mut PlanSim,
     cluster: &ClusterSpec,
     placement: &[usize],
     opts: &OptimizeOpts,
 ) -> (usize, f64, usize) {
-    let ds = depth_candidates(opts);
+    let budget = opts.stage_mem_frac * cluster.gpu.mem_bytes;
+    let stage = sim.stage_bytes();
+    let ds: Vec<usize> = depth_candidates(opts)
+        .into_iter()
+        .filter(|&d| d == 1 || d as f64 * stage <= budget)
+        .collect();
     let totals: Vec<f64> = ds
         .iter()
         .map(|&d| sim.total_s(cluster, placement, d))
@@ -338,7 +359,11 @@ pub fn optimize_schedule(
             }
             flips[t] = true;
             let cand =
-                Plan::from_schedule_opts(schedule, pass, &LowerOpts { flip_steps: flips.clone() });
+                Plan::from_schedule_opts(
+                    schedule,
+                    pass,
+                    &LowerOpts { flip_steps: flips.clone(), ..Default::default() },
+                );
             let mut cand_sim = PlanSim::new(&cand, cost);
             let s = cand_sim.total_s(cluster, &identity, 1);
             sim_calls += 1;
@@ -377,6 +402,496 @@ pub fn optimize_schedule(
             .collect(),
         moved_ranks,
         sim_calls,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token-level workload rebalancing for document-packed (varlen) batches
+// ---------------------------------------------------------------------------
+
+/// How one dense-plan op's cost is derived from the current chunk
+/// boundaries — the rebalancer's patch table. `live_pair` gates the op to
+/// zero when its chunk pair shares no document.
+#[derive(Clone, Copy, Debug)]
+enum OpCost {
+    /// Attention block `(q, kv)`: `Kernel::attn` at the pair's token scale.
+    AttnPair { q: usize, kv: usize },
+    /// Helper merge on `owner`: `Kernel::rescale` at the owner's scale.
+    Merge { owner: usize },
+    /// Transfer sized by one chunk's token span, of a payload class.
+    Bytes { chunk: usize, class: PayloadClass },
+    /// Cost never touched by boundary moves or flips (Accum).
+    Fixed,
+}
+
+/// Which role alternative of a helper pair an op belongs to. The dense
+/// lowering emits both; exactly one is active at a time and the other is
+/// costed at zero (zero-cost ops never extend the makespan — they start
+/// and finish at already-reached times).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Side {
+    Common,
+    Unflipped { step: usize, helper: usize },
+    Flipped { step: usize, helper: usize },
+}
+
+struct DenseOp {
+    cost: OpCost,
+    side: Side,
+    live_pair: Option<(usize, usize)>,
+}
+
+/// Classify every op of a dense-dual varlen plan (see
+/// [`LowerOpts::dense_duals`]) so moves become pure cost patches.
+///
+/// Roles are recovered from step-distance arithmetic: at step `t` an
+/// own-path pair sits at distance `t`, a helper pair at distance
+/// `P - t` — distinct because the balanced builder emits no helpers when
+/// `2t == P`. That invariant is load-bearing for the flip toggles, so
+/// every Flipped classification asserts it rather than trusting future
+/// schedule kinds.
+fn classify_dense_ops(plan: &Plan) -> Vec<DenseOp> {
+    let p = plan.n_workers;
+    let helper_dist = |dist: usize, t: usize, id: usize| {
+        assert!(
+            dist == p - t && dist != t,
+            "op {id}: helper-pair distance {dist} at step {t} breaks the P-t role \
+             invariant the rebalancer's flip toggles rely on"
+        );
+    };
+    plan.ops
+        .iter()
+        .map(|n| {
+            let t = n.step;
+            match &n.op {
+                PlanOp::Compute { kernel, pair } => match (kernel, pair) {
+                    (Kernel::Accum, _) | (Kernel::Raw(_), _) => {
+                        DenseOp { cost: OpCost::Fixed, side: Side::Common, live_pair: None }
+                    }
+                    (Kernel::Rescale | Kernel::RescaleTok { .. }, _) => {
+                        // the merge belongs to the unflipped side; its
+                        // helper is the source of the result dep
+                        let helper = n
+                            .deps
+                            .iter()
+                            .find_map(|&d| match &plan.ops[d].op {
+                                PlanOp::Xfer { src, payload, .. }
+                                    if payload.class() == PayloadClass::HelperResult =>
+                                {
+                                    Some(*src)
+                                }
+                                _ => None,
+                            })
+                            .expect("rescale has a helper-result dep");
+                        DenseOp {
+                            cost: OpCost::Merge { owner: n.worker },
+                            side: Side::Unflipped { step: t, helper },
+                            live_pair: Some((n.worker, helper)),
+                        }
+                    }
+                    (_, Some((q, kv))) => {
+                        let (q, kv) = (*q, *kv);
+                        let side = if q == kv || (n.worker == q && q - kv == t) {
+                            Side::Common // diagonal or own-path block
+                        } else if n.worker == kv {
+                            Side::Unflipped { step: t, helper: kv }
+                        } else {
+                            helper_dist(q - kv, t, n.id);
+                            Side::Flipped { step: t, helper: kv }
+                        };
+                        DenseOp { cost: OpCost::AttnPair { q, kv }, side, live_pair: Some((q, kv)) }
+                    }
+                    _ => DenseOp { cost: OpCost::Fixed, side: Side::Common, live_pair: None },
+                },
+                PlanOp::Xfer { src, dst, payload } => {
+                    let (s, d) = (*src, *dst);
+                    match payload.class() {
+                        PayloadClass::Kv => {
+                            // own-path fetch (dst - src == t) vs flipped lend
+                            if d > s && d - s == t {
+                                DenseOp {
+                                    cost: OpCost::Bytes { chunk: s, class: PayloadClass::Kv },
+                                    side: Side::Common,
+                                    live_pair: Some((d, s)),
+                                }
+                            } else {
+                                helper_dist(d - s, t, n.id);
+                                DenseOp {
+                                    cost: OpCost::Bytes { chunk: s, class: PayloadClass::Kv },
+                                    side: Side::Flipped { step: t, helper: s },
+                                    live_pair: Some((d, s)),
+                                }
+                            }
+                        }
+                        PayloadClass::QBundle => DenseOp {
+                            cost: OpCost::Bytes { chunk: s, class: PayloadClass::QBundle },
+                            side: Side::Unflipped { step: t, helper: d },
+                            live_pair: Some((s, d)),
+                        },
+                        PayloadClass::HelperResult => DenseOp {
+                            cost: OpCost::Bytes { chunk: d, class: PayloadClass::HelperResult },
+                            side: Side::Unflipped { step: t, helper: s },
+                            live_pair: Some((d, s)),
+                        },
+                        PayloadClass::KvGrad => {
+                            if s > d && s - d == t {
+                                // own-path (dk, dv) return to the lender
+                                DenseOp {
+                                    cost: OpCost::Bytes { chunk: d, class: PayloadClass::KvGrad },
+                                    side: Side::Common,
+                                    live_pair: Some((s, d)),
+                                }
+                            } else {
+                                helper_dist(s - d, t, n.id);
+                                DenseOp {
+                                    cost: OpCost::Bytes { chunk: d, class: PayloadClass::KvGrad },
+                                    side: Side::Flipped { step: t, helper: d },
+                                    live_pair: Some((s, d)),
+                                }
+                            }
+                        }
+                        PayloadClass::Raw => {
+                            DenseOp { cost: OpCost::Fixed, side: Side::Common, live_pair: None }
+                        }
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Result of the token-level varlen optimizer: rebalanced chunk
+/// boundaries, per-pair role flips, placement, and prefetch depth for one
+/// document-packed attention call.
+#[derive(Clone, Debug)]
+pub struct VarlenOptimized {
+    /// Final sparse lowering (token-exact payloads, zero-weight pairs
+    /// skipped, flips applied, placement set) — validated, executable.
+    pub plan: Plan,
+    /// Final chunk boundaries.
+    pub spec: VarlenSpec,
+    pub prefetch_depth: usize,
+    /// Pad-to-max baseline: every document padded to the longest, equal
+    /// chunks, classic lowering (depth 1, identity placement).
+    pub pad_s: f64,
+    /// Equal-token varlen boundaries, default roles (depth 1, identity).
+    pub equal_s: f64,
+    /// The optimized plan at the chosen depth and placement.
+    pub optimized_s: f64,
+    pub flipped_pairs: usize,
+    /// Chunk boundaries that moved off the equal-token split.
+    pub moved_boundaries: usize,
+    pub moved_ranks: usize,
+    /// Event-engine scoring passes (full or incremental).
+    pub sim_calls: usize,
+    /// How many of those were answered by a dirty-suffix replay instead
+    /// of a full re-simulation.
+    pub incremental_rescores: usize,
+}
+
+impl VarlenOptimized {
+    pub fn speedup_vs_pad(&self) -> f64 {
+        if self.optimized_s > 0.0 { self.pad_s / self.optimized_s } else { 1.0 }
+    }
+
+    pub fn speedup_vs_equal(&self) -> f64 {
+        if self.optimized_s > 0.0 { self.equal_s / self.optimized_s } else { 1.0 }
+    }
+}
+
+/// Search state over the dense dual plan: current boundaries, per-pair
+/// flip choices, and the incremental simulator they are priced on.
+struct Rebalancer<'a> {
+    sim: PlanSim,
+    roles: Vec<DenseOp>,
+    /// Ops whose cost depends on chunk `c`'s boundaries.
+    ops_of_chunk: Vec<Vec<usize>>,
+    /// Helper-pair keys `(step, helper)` with their (dual) op lists.
+    pairs: Vec<((usize, usize), Vec<usize>)>,
+    spec: VarlenSpec,
+    lopts: LowerOpts,
+    cost: &'a AttnCost,
+}
+
+impl<'a> Rebalancer<'a> {
+    fn new(plan: &Plan, spec: VarlenSpec, cost: &'a AttnCost) -> Rebalancer<'a> {
+        let roles = classify_dense_ops(plan);
+        let p = plan.n_workers;
+        let mut ops_of_chunk: Vec<Vec<usize>> = vec![Vec::new(); p];
+        let mut pair_map: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, r) in roles.iter().enumerate() {
+            match r.cost {
+                OpCost::AttnPair { q, kv } => {
+                    ops_of_chunk[q].push(i);
+                    if kv != q {
+                        ops_of_chunk[kv].push(i);
+                    }
+                }
+                OpCost::Merge { owner } => {
+                    ops_of_chunk[owner].push(i);
+                    if let Some((_, h)) = r.live_pair {
+                        if h != owner {
+                            ops_of_chunk[h].push(i);
+                        }
+                    }
+                }
+                OpCost::Bytes { chunk, .. } => {
+                    ops_of_chunk[chunk].push(i);
+                    // liveness also depends on the pair's other chunk
+                    if let Some((q, kv)) = r.live_pair {
+                        let other = if q == chunk { kv } else { q };
+                        if other != chunk {
+                            ops_of_chunk[other].push(i);
+                        }
+                    }
+                }
+                OpCost::Fixed => {}
+            }
+            match r.side {
+                Side::Unflipped { step, helper } | Side::Flipped { step, helper } => {
+                    pair_map.entry((step, helper)).or_default().push(i);
+                }
+                Side::Common => {}
+            }
+        }
+        let mut reb = Rebalancer {
+            sim: PlanSim::new(plan, cost),
+            roles,
+            ops_of_chunk,
+            pairs: pair_map.into_iter().collect(),
+            spec,
+            lopts: LowerOpts::default(),
+            cost,
+        };
+        // bring every op to its target: dormant flipped sides and dead
+        // pairs to zero, live ops to the current boundaries' scales
+        for i in 0..reb.roles.len() {
+            let c = reb.target_cost(i);
+            reb.sim.set_op_cost(i, c);
+        }
+        reb
+    }
+
+    fn flipped(&self, step: usize, helper: usize) -> bool {
+        self.lopts.flip_pair(step, helper, self.spec.n_chunks())
+    }
+
+    /// The cost this op should carry under the current boundaries and
+    /// flip choices — resolved through the exact same `Kernel`/`Payload`
+    /// constructors the sparse lowering uses, so the search proxy and the
+    /// final plan price identically.
+    fn target_cost(&self, i: usize) -> f64 {
+        let r = &self.roles[i];
+        let active = match r.side {
+            Side::Common => true,
+            Side::Unflipped { step, helper } => !self.flipped(step, helper),
+            Side::Flipped { step, helper } => self.flipped(step, helper),
+        };
+        let live = r
+            .live_pair
+            .map_or(true, |(q, kv)| self.spec.pair_weight(q, kv) > 0.0);
+        if !active || !live {
+            return 0.0;
+        }
+        match r.cost {
+            OpCost::AttnPair { q, kv } => {
+                Kernel::attn(q, kv, self.spec.pair_scale(q, kv)).seconds(self.cost)
+            }
+            OpCost::Merge { owner } => {
+                Kernel::rescale(self.spec.token_scale(owner)).seconds(self.cost)
+            }
+            OpCost::Bytes { chunk, class } => {
+                let s = self.spec.token_scale(chunk);
+                match class {
+                    PayloadClass::Kv => Payload::kv(s).bytes(self.cost),
+                    PayloadClass::QBundle => Payload::q_bundle(s).bytes(self.cost),
+                    PayloadClass::HelperResult => Payload::helper_result(s).bytes(self.cost),
+                    PayloadClass::KvGrad => Payload::kv_grad(s).bytes(self.cost),
+                    PayloadClass::Raw => self.sim.op_cost(i),
+                }
+            }
+            OpCost::Fixed => self.sim.op_cost(i),
+        }
+    }
+
+    /// Patch the given ops to their target costs, remembering the old
+    /// values for a cheap revert.
+    fn patch(&mut self, ops: &[usize], undo: &mut Vec<(usize, f64)>) {
+        undo.clear();
+        for &i in ops {
+            let old = self.sim.op_cost(i);
+            let new = self.target_cost(i);
+            if old != new {
+                undo.push((i, old));
+                self.sim.set_op_cost(i, new);
+            }
+        }
+    }
+
+    fn revert(&mut self, undo: &[(usize, f64)]) {
+        for &(i, v) in undo {
+            self.sim.set_op_cost(i, v);
+        }
+    }
+}
+
+/// Token-level workload balancing for a document-packed batch: greedy
+/// chunk-boundary moves plus per-pair owner/helper role flips, every
+/// candidate priced by the incremental rescorer on a fixed dense DAG, then
+/// the standard placement and (memory-capped) prefetch-depth passes on the
+/// final sparse lowering. Accepts only strict improvements, so the result
+/// is never worse than the equal-token varlen default — and on skewed
+/// document mixes it beats the pad-to-max baseline by construction of the
+/// token-exact cost model.
+pub fn optimize_varlen(
+    schedule: &Schedule,
+    spec0: &VarlenSpec,
+    pass: Pass,
+    cluster: &ClusterSpec,
+    cost: &AttnCost,
+    opts: &OptimizeOpts,
+) -> VarlenOptimized {
+    let p = schedule.n_workers;
+    assert_eq!(spec0.n_chunks(), p, "spec chunks must match schedule workers");
+    let identity: Vec<usize> = (0..p).collect();
+    let mut sim_calls = 0usize;
+    let mut incremental = 0usize;
+
+    // pad-to-max baseline: linear payloads and quadratic kernels inflate
+    // by the padded-to-real chunk ratio
+    let r = spec0.pad_factor();
+    let pad_cost = AttnCost {
+        pair_full_s: cost.pair_full_s * r * r,
+        pair_diag_s: cost.pair_diag_s * r * r,
+        rescale_s: cost.rescale_s * r,
+        kv_bytes: cost.kv_bytes * r,
+        q_bytes: cost.q_bytes * r,
+        result_bytes: cost.result_bytes * r,
+        overlap: cost.overlap,
+    };
+    let pad_plan = Plan::from_schedule(schedule, pass);
+    let pad_s = PlanSim::new(&pad_plan, &pad_cost).total_s(cluster, &identity, 1);
+    sim_calls += 1;
+
+    // equal-token varlen default (the honest sparse lowering)
+    let equal_opts = LowerOpts { varlen: Some(Arc::new(spec0.clone())), ..Default::default() };
+    let equal_plan = Plan::from_schedule_opts(schedule, pass, &equal_opts);
+    let equal_s = PlanSim::new(&equal_plan, cost).total_s(cluster, &identity, 1);
+    sim_calls += 1;
+
+    // dense dual plan: fixed DAG over which every boundary move and flip
+    // toggle is a cost patch
+    let dense_opts = LowerOpts {
+        varlen: Some(Arc::new(spec0.clone())),
+        dense_duals: true,
+        ..Default::default()
+    };
+    let dense_plan = Plan::from_schedule_opts(schedule, pass, &dense_opts);
+    let mut reb = Rebalancer::new(&dense_plan, spec0.clone(), cost);
+    let mut best = reb.sim.rescore(cluster, &identity, 1);
+    sim_calls += 1;
+
+    let grain = (spec0.ref_tokens() / 16.0).max(1.0) as i64;
+    let deltas: [i64; 6] = [-4 * grain, -2 * grain, -grain, grain, 2 * grain, 4 * grain];
+    let mut undo: Vec<(usize, f64)> = Vec::new();
+    let mut touched: Vec<usize> = Vec::new();
+    for _ in 0..opts.rebalance_rounds {
+        let mut improved = false;
+        // boundary moves: shift the cut between chunks b-1 and b
+        for b in 1..p {
+            for &d in &deltas {
+                let old_b = reb.spec.boundaries[b];
+                let nb = old_b as i64 + d;
+                if nb <= reb.spec.boundaries[b - 1] as i64
+                    || nb >= reb.spec.boundaries[b + 1] as i64
+                {
+                    continue; // every chunk keeps at least one token
+                }
+                touched.clear();
+                touched.extend_from_slice(&reb.ops_of_chunk[b - 1]);
+                touched.extend_from_slice(&reb.ops_of_chunk[b]);
+                reb.spec.boundaries[b] = nb as usize;
+                reb.patch(&touched, &mut undo);
+                if reb.sim.dirty_from() > 0 {
+                    incremental += 1;
+                }
+                sim_calls += 1;
+                let t = reb.sim.rescore(cluster, &identity, 1);
+                if improves(t, best) {
+                    best = t;
+                    improved = true;
+                } else {
+                    reb.spec.boundaries[b] = old_b;
+                    reb.revert(&undo);
+                }
+            }
+        }
+        // per-pair role flips
+        for k in 0..reb.pairs.len() {
+            let (step, helper) = reb.pairs[k].0;
+            let was = reb.flipped(step, helper);
+            reb.lopts.set_flip_pair(step, helper, p, !was);
+            let ops = std::mem::take(&mut reb.pairs[k].1);
+            reb.patch(&ops, &mut undo);
+            reb.pairs[k].1 = ops;
+            if reb.sim.dirty_from() > 0 {
+                incremental += 1;
+            }
+            sim_calls += 1;
+            let t = reb.sim.rescore(cluster, &identity, 1);
+            if improves(t, best) {
+                best = t;
+                improved = true;
+            } else {
+                reb.lopts.set_flip_pair(step, helper, p, was);
+                reb.revert(&undo);
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // final sparse lowering with the chosen boundaries and flips, then the
+    // standard placement + depth passes on the real plan
+    let final_spec = reb.spec.clone();
+    let final_opts = LowerOpts {
+        flip_pairs: reb.lopts.flip_pairs.clone(),
+        varlen: Some(Arc::new(final_spec.clone())),
+        ..Default::default()
+    };
+    let mut final_plan = Plan::from_schedule_opts(schedule, pass, &final_opts);
+    let mut fsim = PlanSim::new(&final_plan, cost);
+    let mut place = identity.clone();
+    if opts.placement {
+        let (pl, _s, calls) =
+            placement_pass(&final_plan, &mut fsim, cluster, cost, opts, &identity);
+        sim_calls += calls;
+        place = pl;
+    }
+    let (depth, total, calls) = autotune_depth_sim(&mut fsim, cluster, &place, opts);
+    sim_calls += calls;
+    let moved_ranks = place.iter().enumerate().filter(|&(i, &g)| i != g).count();
+    let moved_boundaries = final_spec
+        .boundaries
+        .iter()
+        .zip(&spec0.boundaries)
+        .filter(|(a, b)| a != b)
+        .count();
+    final_plan.placement = place;
+    VarlenOptimized {
+        plan: final_plan,
+        spec: final_spec,
+        prefetch_depth: depth,
+        pad_s,
+        equal_s,
+        optimized_s: total,
+        flipped_pairs: reb.lopts.flipped_pair_count(),
+        moved_boundaries,
+        moved_ranks,
+        sim_calls,
+        incremental_rescores: incremental,
     }
 }
 
@@ -425,6 +940,20 @@ mod tests {
             assert!(o.optimized_s <= o.default_s * (1.0 + 1e-9), "{pass:?}");
             o.plan.validate_lowered().unwrap();
         }
+    }
+
+    #[test]
+    fn depth_cap_charges_staging_memory() {
+        // comm-bound regime where the knee is deep — but depth d stages
+        // d kv chunks, so a starved staging budget must pin depth to 1
+        let cluster = ClusterSpec::dgx_2x8();
+        let c = AttnCost { kv_bytes: 60e6, ..cost(1.0) };
+        let plan = Plan::from_schedule(&Schedule::ring(16), Pass::Forward);
+        let (d_free, _) = autotune_depth(&plan, &cluster, &c, &OptimizeOpts::default());
+        assert!(d_free > 1, "default headroom should allow a deep knee");
+        let starved = OptimizeOpts { stage_mem_frac: 1e-12, ..Default::default() };
+        let (d_cap, _) = autotune_depth(&plan, &cluster, &c, &starved);
+        assert_eq!(d_cap, 1, "staging charge must cap the depth");
     }
 
     #[test]

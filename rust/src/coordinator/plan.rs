@@ -41,8 +41,10 @@
 //! by default, priced by the event engine's per-link lookup) and the
 //! per-step owner/helper role flip chosen at lowering via [`LowerOpts`].
 
+use std::sync::Arc;
+
 use super::comm::Tag;
-use super::schedule::{ComputeOp, Schedule};
+use super::schedule::{ComputeOp, Schedule, VarlenSpec};
 use crate::simulator::AttnCost;
 
 /// Index into [`Plan::ops`]. Dependencies always point to smaller ids.
@@ -71,15 +73,60 @@ pub enum Kernel {
     AttnDiag,
     /// Full (non-diagonal) chunk pair — owner-path or helper-path.
     AttnFull,
+    /// Token-exact attention block: `scale` multiples of the reference
+    /// full pair (`pair_full_s`). Emitted by varlen lowerings, where a
+    /// chunk pair's work is the causal same-document token-pair count of
+    /// its ragged slices rather than a uniform block.
+    AttnTok { scale: f64 },
     /// Merge a helper partial: `rescale(·)` in forward, dq-accumulate in
     /// backward.
     Rescale,
+    /// Token-exact rescale: `scale` multiples of the reference merge.
+    RescaleTok { scale: f64 },
     /// Zero-cost sink that consumes kv-grad returns at the end of a
     /// backward plan (the executor's gradient drain).
     Accum,
     /// Literal seconds — for baseline plans whose kernels fall outside the
     /// AttnCost classes (e.g. Ulysses' head-parallel full-sequence attn).
     Raw(f64),
+}
+
+impl Kernel {
+    /// The attention kernel for pair `(q, kv)` at a given token scale.
+    /// Collapses to the classic variants at the reference scale so a
+    /// uniform varlen spec lowers to exactly the equal-chunk plan.
+    pub fn attn(q: usize, kv: usize, scale: f64) -> Kernel {
+        if q == kv && scale == 0.5 {
+            Kernel::AttnDiag
+        } else if q != kv && scale == 1.0 {
+            Kernel::AttnFull
+        } else {
+            Kernel::AttnTok { scale }
+        }
+    }
+
+    /// The rescale kernel at a given token scale (see [`Kernel::attn`]).
+    pub fn rescale(scale: f64) -> Kernel {
+        if scale == 1.0 {
+            Kernel::Rescale
+        } else {
+            Kernel::RescaleTok { scale }
+        }
+    }
+
+    /// Seconds under a cost model — the single cost resolution shared by
+    /// the timing engines and the rebalancer's incremental patches.
+    pub fn seconds(&self, cost: &AttnCost) -> f64 {
+        match self {
+            Kernel::AttnDiag => cost.pair_diag_s,
+            Kernel::AttnFull => cost.pair_full_s,
+            Kernel::AttnTok { scale } => scale * cost.pair_full_s,
+            Kernel::Rescale => cost.rescale_s,
+            Kernel::RescaleTok { scale } => scale * cost.rescale_s,
+            Kernel::Accum => 0.0,
+            Kernel::Raw(s) => *s,
+        }
+    }
 }
 
 /// Transfer payload classes, resolved against an `AttnCost`.
@@ -94,25 +141,91 @@ pub enum Payload {
     HelperResult,
     /// (dk, dv) return from an owner to its kv lender — produced mid-step.
     KvGrad,
+    /// Token-scaled variants: `scale` multiples of the reference payload,
+    /// emitted by varlen lowerings where ragged chunk slices put
+    /// token-exact byte counts on the wire.
+    KvTok { scale: f64 },
+    QBundleTok { scale: f64 },
+    HelperResultTok { scale: f64 },
+    KvGradTok { scale: f64 },
     /// Literal bytes — for baseline plans (e.g. all-to-all shards).
     Raw(f64),
 }
 
+/// Semantic class of a payload, ignoring token scaling — what the
+/// executor and the wiring validators key on (a scaled kv chunk is still
+/// a kv chunk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadClass {
+    Kv,
+    QBundle,
+    HelperResult,
+    KvGrad,
+    Raw,
+}
+
 impl Payload {
+    /// Token-scaled constructors that collapse to the classic variants at
+    /// the reference scale (see [`Kernel::attn`]).
+    pub fn kv(scale: f64) -> Payload {
+        if scale == 1.0 {
+            Payload::Kv
+        } else {
+            Payload::KvTok { scale }
+        }
+    }
+
+    pub fn q_bundle(scale: f64) -> Payload {
+        if scale == 1.0 {
+            Payload::QBundle
+        } else {
+            Payload::QBundleTok { scale }
+        }
+    }
+
+    pub fn helper_result(scale: f64) -> Payload {
+        if scale == 1.0 {
+            Payload::HelperResult
+        } else {
+            Payload::HelperResultTok { scale }
+        }
+    }
+
+    pub fn kv_grad(scale: f64) -> Payload {
+        if scale == 1.0 {
+            Payload::KvGrad
+        } else {
+            Payload::KvGradTok { scale }
+        }
+    }
+
+    pub fn class(&self) -> PayloadClass {
+        match self {
+            Payload::Kv | Payload::KvTok { .. } => PayloadClass::Kv,
+            Payload::QBundle | Payload::QBundleTok { .. } => PayloadClass::QBundle,
+            Payload::HelperResult | Payload::HelperResultTok { .. } => PayloadClass::HelperResult,
+            Payload::KvGrad | Payload::KvGradTok { .. } => PayloadClass::KvGrad,
+            Payload::Raw(_) => PayloadClass::Raw,
+        }
+    }
+
     /// Whether the payload exists at pass start (so it may be prefetched
     /// arbitrarily early) or is produced mid-plan by a compute op.
     pub fn prefetchable(&self) -> bool {
-        matches!(self, Payload::Kv | Payload::QBundle | Payload::Raw(_))
+        matches!(
+            self.class(),
+            PayloadClass::Kv | PayloadClass::QBundle | PayloadClass::Raw
+        )
     }
 
     /// Tag space this payload travels under on the comm fabric.
     pub fn tag_space(&self) -> u32 {
-        match self {
-            Payload::Kv => Tag::KV,
-            Payload::QBundle => Tag::Q_BUNDLE,
-            Payload::HelperResult => Tag::HELPER_RESULT,
-            Payload::KvGrad => Tag::KV_GRAD,
-            Payload::Raw(_) => Tag::RAW_XFER,
+        match self.class() {
+            PayloadClass::Kv => Tag::KV,
+            PayloadClass::QBundle => Tag::Q_BUNDLE,
+            PayloadClass::HelperResult => Tag::HELPER_RESULT,
+            PayloadClass::KvGrad => Tag::KV_GRAD,
+            PayloadClass::Raw => Tag::RAW_XFER,
         }
     }
 
@@ -124,6 +237,10 @@ impl Payload {
             Payload::HelperResult => cost.result_bytes,
             // dk/dv mirror k/v exactly
             Payload::KvGrad => cost.kv_bytes,
+            Payload::KvTok { scale } => scale * cost.kv_bytes,
+            Payload::QBundleTok { scale } => scale * cost.q_bytes,
+            Payload::HelperResultTok { scale } => scale * cost.result_bytes,
+            Payload::KvGradTok { scale } => scale * cost.kv_bytes,
             Payload::Raw(b) => *b,
         }
     }
@@ -143,7 +260,7 @@ pub enum PlanOp {
     },
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PlanNode {
     pub id: OpId,
     /// Stream owner: executing worker for computes; receiver for
@@ -157,9 +274,8 @@ pub struct PlanNode {
     pub deps: Vec<OpId>,
 }
 
-/// Per-step lowering choices made by the plan optimizer
-/// (`coordinator::optimize`). Defaults reproduce the paper's schedule
-/// exactly.
+/// Lowering choices made by the plan optimizer (`coordinator::optimize`).
+/// Defaults reproduce the paper's schedule exactly.
 #[derive(Clone, Debug, Default)]
 pub struct LowerOpts {
     /// Steps whose helper pairs are *flipped*: instead of shipping the
@@ -171,11 +287,56 @@ pub struct LowerOpts {
     /// kv heads) on slow links. Indexed by schedule timestep; missing
     /// entries mean "don't flip".
     pub flip_steps: Vec<bool>,
+    /// Per-*pair* role flips, finer than `flip_steps`: bit `step *
+    /// n_workers + helper` set means that single helper pair is flipped
+    /// even if the step as a whole is not. On a placed plan the q-vs-kv
+    /// trade differs per helper pair (intra- vs inter-node owner), which
+    /// a per-step decision cannot express. Stored as a packed bitmap;
+    /// missing bits mean "don't flip".
+    pub flip_pairs: Vec<u64>,
+    /// Token-exact lowering for a document-packed batch: every op's cost
+    /// payload is scaled by the chunk pair's causal same-document token
+    /// count, and zero-weight pairs (chunks sharing no document) are
+    /// skipped entirely. `None` reproduces the equal-chunk lowering.
+    pub varlen: Option<Arc<VarlenSpec>>,
+    /// Search-mode emission for the token-level rebalancer: keep
+    /// zero-weight pairs *and* emit both role alternatives (helper-side
+    /// and owner-side) for every helper pair, so boundary moves and
+    /// per-pair flips become pure cost patches on a fixed DAG that the
+    /// incremental rescorer can replay. Dense plans are timing-only —
+    /// they deliberately violate the compute-once invariant and must not
+    /// be validated or executed.
+    pub dense_duals: bool,
 }
 
 impl LowerOpts {
     pub fn flip(&self, step: usize) -> bool {
         self.flip_steps.get(step).copied().unwrap_or(false)
+    }
+
+    /// Whether the single helper pair `(step, helper)` is flipped.
+    pub fn flip_pair(&self, step: usize, helper: usize, n_workers: usize) -> bool {
+        let bit = step * n_workers + helper;
+        self.flip_pairs
+            .get(bit / 64)
+            .map(|w| w >> (bit % 64) & 1 == 1)
+            .unwrap_or(false)
+    }
+
+    pub fn set_flip_pair(&mut self, step: usize, helper: usize, n_workers: usize, v: bool) {
+        let bit = step * n_workers + helper;
+        if self.flip_pairs.len() <= bit / 64 {
+            self.flip_pairs.resize(bit / 64 + 1, 0);
+        }
+        if v {
+            self.flip_pairs[bit / 64] |= 1 << (bit % 64);
+        } else {
+            self.flip_pairs[bit / 64] &= !(1 << (bit % 64));
+        }
+    }
+
+    pub fn flipped_pair_count(&self) -> usize {
+        self.flip_pairs.iter().map(|w| w.count_ones() as usize).sum()
     }
 }
 
@@ -194,9 +355,14 @@ pub struct Plan {
     /// (`ClusterSpec::link`). Identity by default; the plan optimizer
     /// permutes it so heavy edges ride fast intra-node links. Purely
     /// timing metadata — the executor's mailbox fabric is placement-
-    /// agnostic (in a real deployment the launcher binds rank i to GPU
-    /// `placement[i]`).
+    /// agnostic, but the harness *does* consume this: it binds rank i's
+    /// mailbox to slot `placement[i]`, the in-process analogue of the
+    /// launcher pinning rank i to that GPU.
     pub placement: Vec<usize>,
+    /// Token-level chunk spec this plan was lowered against, if any —
+    /// needed by `validate` (zero-weight pairs are legitimately absent)
+    /// and by ragged executors splitting tensors at its boundaries.
+    pub varlen: Option<Arc<VarlenSpec>>,
 }
 
 impl Plan {
@@ -210,6 +376,7 @@ impl Plan {
             pass,
             ops: Vec::new(),
             placement: (0..n_workers).collect(),
+            varlen: None,
         }
     }
 
@@ -230,11 +397,13 @@ impl Plan {
         Self::from_schedule_opts(schedule, pass, &LowerOpts::default())
     }
 
-    /// Lowering with per-step optimizer overrides (see [`LowerOpts`]).
-    /// With default options this is exactly [`Plan::from_schedule`]; with
-    /// `flip_steps[t]` set, step `t`'s helper pairs are computed owner-side
-    /// off a kv fetch from the helper instead of helper-side off a q
-    /// bundle. The covered pair set is identical either way.
+    /// Lowering with optimizer overrides (see [`LowerOpts`]). With default
+    /// options this is exactly [`Plan::from_schedule`]; with flips set
+    /// (per step or per pair), the affected helper pairs are computed
+    /// owner-side off a kv fetch from the helper instead of helper-side
+    /// off a q bundle; with a varlen spec, every op's cost payload is
+    /// token-exact and zero-weight pairs vanish. The covered (non-zero)
+    /// pair set is identical in every configuration.
     pub fn from_schedule_opts(schedule: &Schedule, pass: Pass, lopts: &LowerOpts) -> Plan {
         let p = schedule.n_workers;
         let t_steps = schedule.n_steps();
@@ -243,18 +412,38 @@ impl Plan {
             // +1: the trailing kv-grad accumulation step
             Pass::Backward => t_steps + 1,
         };
+        let vl: Option<&VarlenSpec> = lopts.varlen.as_deref();
+        let dense = lopts.dense_duals;
+        let suffix = match (vl.is_some(), dense) {
+            (true, true) => "-varlen-dense",
+            (true, false) => "-varlen",
+            (false, true) => "-dense",
+            (false, false) => "",
+        };
+        // token-exact scales; the reference (equal-chunk) lowering is the
+        // special case where every scale collapses to 1 (or 0.5 diag)
+        let pscale = |q: usize, kv: usize| {
+            vl.map_or(if q == kv { 0.5 } else { 1.0 }, |v| v.pair_scale(q, kv))
+        };
+        let tscale = |w: usize| vl.map_or(1.0, |v| v.token_scale(w));
+        // a pair is live unless its ragged slices share no document
+        let live = |q: usize, kv: usize| {
+            dense || vl.map_or(true, |v| v.pair_weight(q, kv) > 0.0)
+        };
         let mut plan = Plan::new(
-            &format!("{:?}-{}", schedule.kind, pass.name()),
+            &format!("{:?}-{}{}", schedule.kind, pass.name(), suffix),
             p,
             n_steps,
             true,
             true,
             pass,
         );
+        plan.varlen = lopts.varlen.clone();
         // kv-grad transfers awaiting each lender's trailing Accum
         let mut kvgrad_in: Vec<Vec<OpId>> = vec![Vec::new(); p];
         for (t, row) in schedule.steps.iter().enumerate() {
-            let flip = lopts.flip(t);
+            let step_flip = lopts.flip(t);
+            let flip_of = |helper: usize| step_flip || lopts.flip_pair(t, helper, p);
             let mut kv_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
             let mut q_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
             let mut result_xfer: Vec<Option<OpId>> = vec![None; p]; // by owner
@@ -262,36 +451,42 @@ impl Plan {
             let mut flip_kv: Vec<Option<OpId>> = vec![None; p];
             for (w, sp) in row.iter().enumerate() {
                 if let Some(dst) = sp.send_kv_to {
-                    let id = plan.push(
-                        dst,
-                        t,
-                        PlanOp::Xfer { src: w, dst, payload: Payload::Kv },
-                        vec![],
-                    );
-                    kv_xfer[dst] = Some(id);
+                    if live(dst, w) {
+                        let id = plan.push(
+                            dst,
+                            t,
+                            PlanOp::Xfer { src: w, dst, payload: Payload::kv(tscale(w)) },
+                            vec![],
+                        );
+                        kv_xfer[dst] = Some(id);
+                    }
                 }
             }
             for (w, sp) in row.iter().enumerate() {
-                if flip {
-                    // flipped step: the helper lends its (k, v) to the
-                    // owner instead of receiving the owner's q bundle
-                    if let Some(ComputeOp::Help { owner }) = sp.compute {
+                // flipped helper pairs: the helper lends its (k, v) to the
+                // owner instead of receiving the owner's q bundle
+                if let Some(ComputeOp::Help { owner }) = sp.compute {
+                    if (dense || flip_of(w)) && live(owner, w) {
                         let id = plan.push(
                             owner,
                             t,
-                            PlanOp::Xfer { src: w, dst: owner, payload: Payload::Kv },
+                            PlanOp::Xfer { src: w, dst: owner, payload: Payload::kv(tscale(w)) },
                             vec![],
                         );
                         flip_kv[w] = Some(id);
                     }
-                } else if let Some(dst) = sp.send_q_to {
-                    let id = plan.push(
-                        dst,
-                        t,
-                        PlanOp::Xfer { src: w, dst, payload: Payload::QBundle },
-                        vec![],
-                    );
-                    q_xfer[dst] = Some(id);
+                }
+                // unflipped helper pairs: the owner ships its q bundle
+                if let Some(dst) = sp.send_q_to {
+                    if (dense || !flip_of(dst)) && live(w, dst) {
+                        let id = plan.push(
+                            dst,
+                            t,
+                            PlanOp::Xfer { src: w, dst, payload: Payload::q_bundle(tscale(w)) },
+                            vec![],
+                        );
+                        q_xfer[dst] = Some(id);
+                    }
                 }
             }
             for (w, sp) in row.iter().enumerate() {
@@ -300,17 +495,23 @@ impl Plan {
                         plan.push(
                             w,
                             t,
-                            PlanOp::Compute { kernel: Kernel::AttnDiag, pair: Some((w, w)) },
+                            PlanOp::Compute {
+                                kernel: Kernel::attn(w, w, pscale(w, w)),
+                                pair: Some((w, w)),
+                            },
                             vec![],
                         );
                     }
                     Some(ComputeOp::Own { kv_from }) => {
+                        if !live(w, kv_from) {
+                            continue;
+                        }
                         let kv = kv_xfer[w].expect("validated schedule: kv send matches Own");
                         let id = plan.push(
                             w,
                             t,
                             PlanOp::Compute {
-                                kernel: Kernel::AttnFull,
+                                kernel: Kernel::attn(w, kv_from, pscale(w, kv_from)),
                                 pair: Some((w, kv_from)),
                             },
                             vec![kv],
@@ -319,69 +520,97 @@ impl Plan {
                             let g = plan.push(
                                 w,
                                 t,
-                                PlanOp::Xfer { src: w, dst: kv_from, payload: Payload::KvGrad },
+                                PlanOp::Xfer {
+                                    src: w,
+                                    dst: kv_from,
+                                    payload: Payload::kv_grad(tscale(kv_from)),
+                                },
                                 vec![id],
                             );
                             kvgrad_in[kv_from].push(g);
                         }
                     }
-                    Some(ComputeOp::Help { owner }) if flip => {
-                        // flipped: the owner computes the pair itself as a
-                        // second owner-path kernel off the helper's kv
-                        let kv = flip_kv[w].expect("flip emitted a kv fetch for every Help");
-                        let id = plan.push(
-                            owner,
-                            t,
-                            PlanOp::Compute {
-                                kernel: Kernel::AttnFull,
-                                pair: Some((owner, w)),
-                            },
-                            vec![kv],
-                        );
-                        if pass == Pass::Backward {
-                            let g = plan.push(
+                    Some(ComputeOp::Help { owner }) => {
+                        if !live(owner, w) {
+                            continue;
+                        }
+                        let flip = flip_of(w);
+                        if dense || !flip {
+                            // helper-side: owner's q against local (k, v),
+                            // partial shipped back for the merge
+                            let q = q_xfer[w].expect("validated schedule: q send matches Help");
+                            let id = plan.push(
+                                w,
+                                t,
+                                PlanOp::Compute {
+                                    kernel: Kernel::attn(owner, w, pscale(owner, w)),
+                                    pair: Some((owner, w)),
+                                },
+                                vec![q],
+                            );
+                            // result rides the helper's comm stream; it can
+                            // leave only once the helper has both received q
+                            // and finished the kernel
+                            let rid = plan.push(
+                                w,
+                                t,
+                                PlanOp::Xfer {
+                                    src: w,
+                                    dst: owner,
+                                    payload: Payload::helper_result(tscale(owner)),
+                                },
+                                vec![id, q],
+                            );
+                            result_xfer[owner] = Some(rid);
+                        }
+                        if dense || flip {
+                            // owner-side (flipped): the owner computes the
+                            // pair itself off the helper's kv
+                            let kv = flip_kv[w].expect("flip emitted a kv fetch for every Help");
+                            let id = plan.push(
                                 owner,
                                 t,
-                                PlanOp::Xfer { src: owner, dst: w, payload: Payload::KvGrad },
-                                vec![id],
+                                PlanOp::Compute {
+                                    kernel: Kernel::attn(owner, w, pscale(owner, w)),
+                                    pair: Some((owner, w)),
+                                },
+                                vec![kv],
                             );
-                            kvgrad_in[w].push(g);
+                            if pass == Pass::Backward {
+                                let g = plan.push(
+                                    owner,
+                                    t,
+                                    PlanOp::Xfer {
+                                        src: owner,
+                                        dst: w,
+                                        payload: Payload::kv_grad(tscale(w)),
+                                    },
+                                    vec![id],
+                                );
+                                kvgrad_in[w].push(g);
+                            }
                         }
-                    }
-                    Some(ComputeOp::Help { owner }) => {
-                        let q = q_xfer[w].expect("validated schedule: q send matches Help");
-                        let id = plan.push(
-                            w,
-                            t,
-                            PlanOp::Compute {
-                                kernel: Kernel::AttnFull,
-                                pair: Some((owner, w)),
-                            },
-                            vec![q],
-                        );
-                        // result rides the helper's comm stream; it can
-                        // leave only once the helper has both received q
-                        // and finished the kernel
-                        let rid = plan.push(
-                            w,
-                            t,
-                            PlanOp::Xfer { src: w, dst: owner, payload: Payload::HelperResult },
-                            vec![id, q],
-                        );
-                        result_xfer[owner] = Some(rid);
                     }
                     None => {}
                 }
             }
             for (w, sp) in row.iter().enumerate() {
-                if !flip && sp.recv_helper_from.is_some() {
-                    let mut deps =
-                        vec![result_xfer[w].expect("validated schedule: helper result present")];
-                    // the owner's own inbound kv also gates the merge
-                    if let Some(kv) = kv_xfer[w] {
-                        deps.push(kv);
+                if let Some(h) = sp.recv_helper_from {
+                    if (dense || !flip_of(h)) && live(w, h) {
+                        let mut deps = vec![
+                            result_xfer[w].expect("validated schedule: helper result present"),
+                        ];
+                        // the owner's own inbound kv also gates the merge
+                        if let Some(kv) = kv_xfer[w] {
+                            deps.push(kv);
+                        }
+                        plan.push(
+                            w,
+                            t,
+                            PlanOp::Compute { kernel: Kernel::rescale(tscale(w)), pair: None },
+                            deps,
+                        );
                     }
-                    plan.push(w, t, PlanOp::Compute { kernel: Kernel::Rescale, pair: None }, deps);
                 }
             }
         }
@@ -603,8 +832,16 @@ impl Plan {
             }
             for q in 0..p {
                 for kv in 0..=q {
+                    // under a varlen spec, chunk pairs whose ragged slices
+                    // share no document carry zero work and are
+                    // legitimately absent (the causal-masking win)
+                    let required = self
+                        .varlen
+                        .as_deref()
+                        .map_or(true, |v| v.pair_weight(q, kv) > 0.0);
                     match count[q][kv] {
                         1 => {}
+                        0 if !required => {}
                         0 => return Err(format!("pair ({q},{kv}) never computed")),
                         n => return Err(format!("pair ({q},{kv}) computed {n} times")),
                     }
@@ -623,18 +860,24 @@ impl Plan {
         self.validate()?;
         let mut kvgrad_expected = 0usize;
         let mut kvgrad_drained = 0usize;
+        let dep_class = |n: &PlanNode, class: PayloadClass, pred: &dyn Fn(usize, usize) -> bool| {
+            n.deps.iter().any(|&d| {
+                matches!(
+                    &self.ops[d].op,
+                    PlanOp::Xfer { src, dst, payload }
+                        if payload.class() == class && pred(*src, *dst)
+                )
+            })
+        };
         for n in &self.ops {
             match &n.op {
-                PlanOp::Compute { kernel: Kernel::AttnFull, pair: Some((q, kv)) } => {
+                PlanOp::Compute {
+                    kernel: Kernel::AttnFull | Kernel::AttnTok { .. },
+                    pair: Some((q, kv)),
+                } if q != kv => {
                     if n.worker == *q {
                         // owner path: direct kv fetch from the home worker
-                        let ok = n.deps.iter().any(|&d| {
-                            matches!(
-                                &self.ops[d].op,
-                                PlanOp::Xfer { src, dst, payload: Payload::Kv }
-                                    if *src == *kv && *dst == *q
-                            )
-                        });
+                        let ok = dep_class(n, PayloadClass::Kv, &|s, d| s == *kv && d == *q);
                         if !ok {
                             return Err(format!(
                                 "op {}: own-path pair ({q},{kv}) lacks kv fetch dep",
@@ -643,13 +886,7 @@ impl Plan {
                         }
                     } else if n.worker == *kv {
                         // helper path: owner's q bundle in, result out
-                        let ok = n.deps.iter().any(|&d| {
-                            matches!(
-                                &self.ops[d].op,
-                                PlanOp::Xfer { src, dst, payload: Payload::QBundle }
-                                    if *src == *q && *dst == *kv
-                            )
-                        });
+                        let ok = dep_class(n, PayloadClass::QBundle, &|s, d| s == *q && d == *kv);
                         if !ok {
                             return Err(format!(
                                 "op {}: helper pair ({q},{kv}) lacks q bundle dep",
@@ -659,8 +896,9 @@ impl Plan {
                         let answered = self.ops.iter().any(|m| {
                             matches!(
                                 &m.op,
-                                PlanOp::Xfer { src, dst, payload: Payload::HelperResult }
-                                    if *src == *kv && *dst == *q && m.deps.contains(&n.id)
+                                PlanOp::Xfer { src, dst, payload }
+                                    if payload.class() == PayloadClass::HelperResult
+                                        && *src == *kv && *dst == *q && m.deps.contains(&n.id)
                             )
                         });
                         if !answered {
@@ -676,14 +914,8 @@ impl Plan {
                         ));
                     }
                 }
-                PlanOp::Compute { kernel: Kernel::Rescale, .. } => {
-                    let ok = n.deps.iter().any(|&d| {
-                        matches!(
-                            &self.ops[d].op,
-                            PlanOp::Xfer { dst, payload: Payload::HelperResult, .. }
-                                if *dst == n.worker
-                        )
-                    });
+                PlanOp::Compute { kernel: Kernel::Rescale | Kernel::RescaleTok { .. }, .. } => {
+                    let ok = dep_class(n, PayloadClass::HelperResult, &|_, d| d == n.worker);
                     if !ok {
                         return Err(format!("op {}: rescale lacks helper-result dep", n.id));
                     }
@@ -691,8 +923,9 @@ impl Plan {
                 PlanOp::Compute { kernel: Kernel::Accum, .. } => {
                     for &d in &n.deps {
                         match &self.ops[d].op {
-                            PlanOp::Xfer { dst, payload: Payload::KvGrad, .. }
-                                if *dst == n.worker =>
+                            PlanOp::Xfer { dst, payload, .. }
+                                if payload.class() == PayloadClass::KvGrad
+                                    && *dst == n.worker =>
                             {
                                 kvgrad_drained += 1;
                             }
@@ -705,7 +938,9 @@ impl Plan {
                         }
                     }
                 }
-                PlanOp::Xfer { payload: Payload::KvGrad, .. } => kvgrad_expected += 1,
+                PlanOp::Xfer { payload, .. } if payload.class() == PayloadClass::KvGrad => {
+                    kvgrad_expected += 1
+                }
                 _ => {}
             }
         }

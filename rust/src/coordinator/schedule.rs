@@ -225,6 +225,207 @@ impl Schedule {
     }
 }
 
+/// Per-chunk shape of a document-packed (variable-length) batch: how many
+/// tokens the chunk holds and how many packed documents overlap it. This
+/// is the first-class generalization of the `Kernel::Raw`/`Payload::Raw`
+/// escape hatch: every compute/transfer op lowered from a varlen schedule
+/// carries a token-exact cost derived from these counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Tokens assigned to this chunk (contiguous slice of the packed batch).
+    pub tokens: usize,
+    /// Packed documents overlapping this chunk.
+    pub docs: usize,
+}
+
+/// A document-packed batch split into `P` contiguous token chunks.
+///
+/// `doc_lens` are the packed document lengths in order; `boundaries` are
+/// the `P + 1` monotone token offsets of the chunk cuts (`boundaries[0] =
+/// 0`, `boundaries[P] = total`). Attention never crosses a document
+/// boundary, so the *token-exact* work of a chunk pair `(q, kv)` is the
+/// number of causal same-document token pairs between the two slices —
+/// that is what [`VarlenSpec::pair_weight`] computes and what the varlen
+/// lowering scales every op by. Chunk pairs that share no document carry
+/// zero weight and are skipped entirely (the causal-masking win of packing
+/// over padding).
+///
+/// All scales are expressed relative to the *reference chunk* `c_ref =
+/// total / P` — the chunk size an `AttnCost` is resolved at — so a uniform
+/// single-document spec lowers to exactly the classic equal-chunk plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VarlenSpec {
+    pub doc_lens: Vec<usize>,
+    pub boundaries: Vec<usize>,
+}
+
+impl VarlenSpec {
+    /// Equal-token boundaries over the given packed documents.
+    pub fn equal_split(doc_lens: Vec<usize>, p: usize) -> VarlenSpec {
+        assert!(p >= 1 && !doc_lens.is_empty());
+        let total: usize = doc_lens.iter().sum();
+        assert!(total >= p, "need at least one token per chunk");
+        let boundaries: Vec<usize> = (0..=p).map(|i| i * total / p).collect();
+        VarlenSpec { doc_lens, boundaries }
+    }
+
+    /// One document spanning the whole batch, equal chunks — the
+    /// degenerate spec whose lowering bit-matches the classic equal-chunk
+    /// plan.
+    pub fn uniform(tokens_per_chunk: usize, p: usize) -> VarlenSpec {
+        VarlenSpec::equal_split(vec![tokens_per_chunk * p], p)
+    }
+
+    /// Deterministic Zipf-skewed packed batch: `n_docs` documents with
+    /// lengths ∝ `1 / rank^alpha` normalized to `total_tokens`, shuffled
+    /// into packing order by `seed`. This is the harness's stand-in for a
+    /// real document-packed pretraining batch (a few huge documents, a
+    /// long tail of short ones).
+    pub fn pack_zipf(n_docs: usize, total_tokens: usize, alpha: f64, seed: u64, p: usize) -> VarlenSpec {
+        assert!(n_docs >= 1 && total_tokens >= n_docs.max(p));
+        let weights: Vec<f64> = (1..=n_docs).map(|r| (r as f64).powf(-alpha)).collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut lens: Vec<usize> = weights
+            .iter()
+            .map(|w| ((total_tokens as f64) * w / wsum).round().max(1.0) as usize)
+            .collect();
+        // absorb the rounding error into the largest document
+        let assigned: usize = lens.iter().sum();
+        if assigned > total_tokens {
+            let mut excess = assigned - total_tokens;
+            for l in lens.iter_mut() {
+                let take = excess.min(l.saturating_sub(1));
+                *l -= take;
+                excess -= take;
+                if excess == 0 {
+                    break;
+                }
+            }
+        } else {
+            lens[0] += total_tokens - assigned;
+        }
+        // deterministic Fisher–Yates shuffle into packing order
+        let mut rng = crate::util::Rng::new(seed ^ 0xda7a_9acc_ed00_0001);
+        for k in (1..lens.len()).rev() {
+            let j = rng.below(k + 1);
+            lens.swap(k, j);
+        }
+        VarlenSpec::equal_split(lens, p)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        *self.boundaries.last().unwrap()
+    }
+
+    /// The reference chunk size the cost classes are resolved at.
+    pub fn ref_tokens(&self) -> f64 {
+        self.total_tokens() as f64 / self.n_chunks() as f64
+    }
+
+    pub fn chunk_tokens(&self, w: usize) -> usize {
+        self.boundaries[w + 1] - self.boundaries[w]
+    }
+
+    /// Tokens of document `d` falling inside chunk `w`.
+    fn overlap(&self, doc_span: (usize, usize), w: usize) -> usize {
+        let lo = doc_span.0.max(self.boundaries[w]);
+        let hi = doc_span.1.min(self.boundaries[w + 1]);
+        hi.saturating_sub(lo)
+    }
+
+    fn doc_spans(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.doc_lens.iter().scan(0usize, |off, &l| {
+            let s = *off;
+            *off += l;
+            Some((s, s + l))
+        })
+    }
+
+    /// Per-chunk `(tokens, docs)` summary.
+    pub fn chunk(&self, w: usize) -> ChunkSpec {
+        let docs = self
+            .doc_spans()
+            .filter(|&span| self.overlap(span, w) > 0)
+            .count();
+        ChunkSpec { tokens: self.chunk_tokens(w), docs }
+    }
+
+    /// Token-exact work of chunk pair `(q, kv)`, `kv <= q`: causal
+    /// same-document token pairs between the two slices. Off-diagonal
+    /// pairs contribute `q_overlap × kv_overlap` per shared document (all
+    /// such pairs are causal — every kv token precedes every q token);
+    /// the diagonal uses the continuous triangle model `t²/2`, matching
+    /// the equal-chunk convention that a diagonal block costs half a full
+    /// block.
+    pub fn pair_weight(&self, q: usize, kv: usize) -> f64 {
+        assert!(kv <= q);
+        let mut w = 0.0f64;
+        for span in self.doc_spans() {
+            let qo = self.overlap(span, q) as f64;
+            if qo == 0.0 {
+                continue;
+            }
+            if kv == q {
+                w += qo * qo / 2.0;
+            } else {
+                w += qo * self.overlap(span, kv) as f64;
+            }
+        }
+        w
+    }
+
+    /// Compute scale of pair `(q, kv)` relative to the reference full
+    /// block (`c_ref²` token pairs). Exactly `1.0` (off-diagonal) / `0.5`
+    /// (diagonal) on a uniform single-document spec.
+    pub fn pair_scale(&self, q: usize, kv: usize) -> f64 {
+        let c = self.ref_tokens();
+        self.pair_weight(q, kv) / (c * c)
+    }
+
+    /// Transfer scale of chunk `w`'s token span relative to the reference
+    /// chunk — kv / q-bundle / result payload bytes all scale linearly.
+    pub fn token_scale(&self, w: usize) -> f64 {
+        self.chunk_tokens(w) as f64 / self.ref_tokens()
+    }
+
+    /// FLOP inflation of the pad-to-max baseline: every document padded to
+    /// the longest, then equal-chunked. Returns the padded-to-real chunk
+    /// ratio (so padded pair time = ratio² × reference pair time).
+    pub fn pad_factor(&self) -> f64 {
+        let max = *self.doc_lens.iter().max().unwrap();
+        (self.doc_lens.len() * max) as f64 / self.total_tokens() as f64
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.boundaries.len() < 2 {
+            return Err("need at least one chunk".into());
+        }
+        if self.boundaries[0] != 0 {
+            return Err("boundaries must start at 0".into());
+        }
+        for w in self.boundaries.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("empty or inverted chunk at offset {}", w[0]));
+            }
+        }
+        let total: usize = self.doc_lens.iter().sum();
+        if total != self.total_tokens() {
+            return Err(format!(
+                "doc lens sum to {total} but boundaries end at {}",
+                self.total_tokens()
+            ));
+        }
+        if self.doc_lens.iter().any(|&l| l == 0) {
+            return Err("zero-length document".into());
+        }
+        Ok(())
+    }
+}
+
 /// Closed-form ring idle fraction over the P×P timeline: `(P²-P)/2P²`.
 pub fn ring_idle_fraction(p: usize) -> f64 {
     ((p * p - p) as f64) / ((2 * p * p) as f64)
@@ -356,6 +557,58 @@ mod tests {
             let s = Schedule::balanced(p);
             assert_eq!(s.computed_pairs().len(), p * (p + 1) / 2, "P={p}");
         }
+    }
+
+    #[test]
+    fn varlen_uniform_is_reference_scale() {
+        let spec = VarlenSpec::uniform(128, 8);
+        spec.validate().unwrap();
+        for w in 0..8 {
+            assert_eq!(spec.token_scale(w), 1.0);
+            assert_eq!(spec.pair_scale(w, w), 0.5);
+            for kv in 0..w {
+                assert_eq!(spec.pair_scale(w, kv), 1.0);
+            }
+        }
+        assert_eq!(spec.pad_factor(), 1.0);
+    }
+
+    #[test]
+    fn varlen_weights_conserve_doc_work() {
+        // sum of causal pair weights == Σ_d t_d²/2 (the continuous model),
+        // independent of where the chunk boundaries fall
+        let spec = VarlenSpec::equal_split(vec![37, 5, 100, 18, 64], 7);
+        spec.validate().unwrap();
+        let total: f64 = (0..7)
+            .flat_map(|q| (0..=q).map(move |kv| (q, kv)))
+            .map(|(q, kv)| spec.pair_weight(q, kv))
+            .sum();
+        let want: f64 = spec.doc_lens.iter().map(|&t| (t * t) as f64 / 2.0).sum();
+        assert!((total - want).abs() < 1e-9, "{total} vs {want}");
+    }
+
+    #[test]
+    fn varlen_doc_disjoint_pairs_have_zero_weight() {
+        // two docs of 64 tokens, 4 chunks of 32: chunks 0-1 hold doc 0,
+        // chunks 2-3 hold doc 1 — cross-doc pairs carry no work
+        let spec = VarlenSpec::equal_split(vec![64, 64], 4);
+        assert_eq!(spec.pair_weight(2, 0), 0.0);
+        assert_eq!(spec.pair_weight(3, 1), 0.0);
+        assert!(spec.pair_weight(1, 0) > 0.0);
+        assert!(spec.pair_weight(3, 2) > 0.0);
+        assert_eq!(spec.chunk(1).docs, 1);
+    }
+
+    #[test]
+    fn zipf_pack_is_deterministic_and_conserves_tokens() {
+        let a = VarlenSpec::pack_zipf(32, 16384, 1.1, 7, 16);
+        let b = VarlenSpec::pack_zipf(32, 16384, 1.1, 7, 16);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert_eq!(a.doc_lens.iter().sum::<usize>(), 16384);
+        assert_eq!(a.doc_lens.len(), 32);
+        // zipf skew: padding to the max doc must inflate noticeably
+        assert!(a.pad_factor() > 1.5, "pad factor {}", a.pad_factor());
     }
 
     #[test]

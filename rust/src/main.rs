@@ -13,8 +13,12 @@
 //!   optimize [--model M] [--cluster C] [--seq N] [--p N] [--schedule S]
 //!            [--pass fwd|bwd|both] [--seed N] cost-model plan optimizer:
 //!            placement + GQA role flipping + prefetch autotune
-//!   bench    [--json] [--out FILE]          optimizer grid; --json writes
-//!                                           BENCH_optimizer.json
+//!            [--varlen [--docs N] [--zipf A] [--pack-seed N]]
+//!            token-level rebalancing of a Zipf-packed document batch
+//!   bench    [--json] [--out FILE] [--varlen-out FILE]
+//!                                           optimizer + varlen grids; --json
+//!                                           writes BENCH_optimizer.json and
+//!                                           BENCH_varlen.json
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
 //! Arg parsing is hand-rolled (offline environment, no clap).
@@ -31,8 +35,8 @@ use distflash::baselines::ulysses::Ulysses;
 use distflash::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    optimize_schedule, run_dist_attention, CkptStrategy, OptimizeOpts, Pass, Plan, Schedule,
-    ScheduleKind,
+    optimize_schedule, optimize_varlen, run_dist_attention, CkptStrategy, OptimizeOpts, Pass,
+    Plan, Schedule, ScheduleKind, VarlenSpec,
 };
 use distflash::simulator::{simulate_plan, EventOpts};
 use distflash::report::paper;
@@ -119,6 +123,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
         "ra" => paper::ring_attention_summary(),
         "exec" => paper::executed_schedules(),
         "opt" => paper::optimized_schedules(),
+        "varlen" => paper::varlen_schedules(),
         _ => [
             paper::table1(),
             paper::table2(),
@@ -127,6 +132,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
             paper::ring_attention_summary(),
             paper::executed_schedules(),
             paper::optimized_schedules(),
+            paper::varlen_schedules(),
             paper::table5(),
             paper::table6(),
         ]
@@ -334,6 +340,9 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let seq = args.usize("seq", 2048);
     let kind = schedule_kind(&args.get("schedule", "balanced"));
     let opts = OptimizeOpts { seed: args.usize("seed", 0) as u64, ..Default::default() };
+    if args.get("varlen", "false") == "true" {
+        return cmd_optimize_varlen(args, &model, &cluster, p, seq, kind, &opts);
+    }
     let schedule = Schedule::build(kind, p);
     let passes: Vec<Pass> = match args.get("pass", "both").as_str() {
         "fwd" => vec![Pass::Forward],
@@ -379,6 +388,75 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro optimize --varlen`: token-level rebalancing of a Zipf-packed
+/// document batch vs the pad-to-max and equal-token baselines.
+fn cmd_optimize_varlen(
+    args: &Args,
+    model: &PaperModel,
+    cluster: &ClusterSpec,
+    p: usize,
+    seq: usize,
+    kind: ScheduleKind,
+    opts: &OptimizeOpts,
+) -> anyhow::Result<()> {
+    let n_docs = args.usize("docs", 64);
+    let alpha = args.f32("zipf", 1.1) as f64;
+    let pack_seed = args.usize("pack-seed", 17) as u64;
+    let spec = VarlenSpec::pack_zipf(n_docs, seq * p, alpha, pack_seed, p);
+    let schedule = Schedule::build(kind, p);
+    println!(
+        "optimize --varlen: {} {kind:?} P={p} on {}x{} GPUs, {n_docs} Zipf({alpha:.2}) docs, \
+         {} tokens packed (pad-to-max would cost x{:.1} tokens/chunk)",
+        model.name,
+        cluster.n_nodes,
+        cluster.gpus_per_node,
+        seq * p,
+        spec.pad_factor()
+    );
+    println!(
+        "{:<5} {:>10} {:>11} {:>11} {:>8} {:>9} {:>7} {:>6} {:>6} {:>6}",
+        "pass", "pad (ms)", "equal (ms)", "rebal (ms)", "vs pad", "vs equal", "depth*", "flips",
+        "cuts", "sims"
+    );
+    let passes: Vec<Pass> = match args.get("pass", "both").as_str() {
+        "fwd" => vec![Pass::Forward],
+        "bwd" => vec![Pass::Backward],
+        _ => vec![Pass::Forward, Pass::Backward],
+    };
+    let mut inc = 0usize;
+    let mut sims = 0usize;
+    for pass in passes {
+        let cost = match pass {
+            Pass::Forward => attn_cost_fwd(model, cluster, seq as f64),
+            Pass::Backward => attn_cost_bwd(model, cluster, seq as f64),
+        };
+        let o = optimize_varlen(&schedule, &spec, pass, cluster, &cost, opts);
+        o.plan
+            .validate_lowered()
+            .map_err(|e| anyhow::anyhow!("rebalanced {pass:?} plan invalid: {e}"))?;
+        inc += o.incremental_rescores;
+        sims += o.sim_calls;
+        println!(
+            "{:<5} {:>10.2} {:>11.2} {:>11.2} {:>7.2}x {:>8.2}x {:>7} {:>6} {:>6} {:>6}",
+            pass.name(),
+            o.pad_s * 1e3,
+            o.equal_s * 1e3,
+            o.optimized_s * 1e3,
+            o.speedup_vs_pad(),
+            o.speedup_vs_equal(),
+            o.prefetch_depth,
+            o.flipped_pairs,
+            o.moved_boundaries,
+            o.sim_calls
+        );
+    }
+    println!(
+        "(pad = pad-to-max equal chunks; equal = equal-token varlen; rebal = token-level \
+         rebalancer; {inc}/{sims} candidate scores replayed incrementally)"
+    );
+    Ok(())
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -410,8 +488,45 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         buf.push_str("  ]\n}\n");
         std::fs::write(&out_path, &buf)?;
         println!("wrote {} optimizer results to {out_path}", rows.len());
+
+        // token-level rebalancer grid -> BENCH_varlen.json
+        let vrows = paper::varlen_rows();
+        let vout_path = args.get("varlen-out", "BENCH_varlen.json");
+        let mut vbuf = String::from(
+            "{\n  \"bench\": \"varlen\",\n  \"schedule\": \"balanced\",\n  \"results\": [\n",
+        );
+        for (i, r) in vrows.iter().enumerate() {
+            vbuf.push_str(&format!(
+                "    {{\"model\": \"{}\", \"cluster\": \"{}\", \"n_docs\": {}, \"zipf_alpha\": {:.2}, \
+                 \"seq_per_gpu\": {}, \"pass\": \"{}\", \"pad_s\": {:.9}, \"equal_s\": {:.9}, \
+                 \"optimized_s\": {:.9}, \"speedup_vs_pad\": {:.4}, \"speedup_vs_equal\": {:.4}, \
+                 \"prefetch_depth\": {}, \"flipped_pairs\": {}, \"moved_boundaries\": {}, \
+                 \"sim_calls\": {}, \"incremental_rescores\": {}}}{}\n",
+                json_escape(r.model),
+                json_escape(r.cluster),
+                r.n_docs,
+                r.zipf_alpha,
+                r.seq_per_gpu,
+                json_escape(r.pass),
+                r.pad_s,
+                r.equal_s,
+                r.optimized_s,
+                r.speedup_vs_pad(),
+                r.speedup_vs_equal(),
+                r.prefetch_depth,
+                r.flipped_pairs,
+                r.moved_boundaries,
+                r.sim_calls,
+                r.incremental_rescores,
+                if i + 1 < vrows.len() { "," } else { "" }
+            ));
+        }
+        vbuf.push_str("  ]\n}\n");
+        std::fs::write(&vout_path, &vbuf)?;
+        println!("wrote {} varlen results to {vout_path}", vrows.len());
     } else {
         println!("{}", paper::optimized_schedules());
+        println!("{}", paper::varlen_schedules());
     }
     Ok(())
 }

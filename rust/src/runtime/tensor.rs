@@ -120,6 +120,34 @@ impl Tensor {
             .collect()
     }
 
+    /// Ragged split of axis 1 at explicit token boundaries — the varlen
+    /// (document-packed) sharding. `bounds` holds `n + 1` monotone offsets
+    /// covering the axis exactly; chunk `i` gets rows
+    /// `bounds[i]..bounds[i+1]`. `cat_axis1` is the inverse.
+    pub fn chunk_axis1_at(&self, bounds: &[usize]) -> Vec<Tensor> {
+        assert_eq!(self.shape.len(), 3);
+        let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert!(bounds.len() >= 2);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), c);
+        let n = bounds.len() - 1;
+        let mut out: Vec<Vec<f32>> = bounds
+            .windows(2)
+            .map(|w| Vec::with_capacity(h * (w[1] - w[0]) * d))
+            .collect();
+        for hh in 0..h {
+            for i in 0..n {
+                let start = hh * c * d + bounds[i] * d;
+                let end = hh * c * d + bounds[i + 1] * d;
+                out[i].extend_from_slice(&self.data[start..end]);
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(i, data)| Tensor::new(vec![h, bounds[i + 1] - bounds[i], d], data))
+            .collect()
+    }
+
     /// Concatenate rank-3 tensors along axis 1 (inverse of `chunk_axis1`).
     pub fn cat_axis1(parts: &[Tensor]) -> Tensor {
         assert!(!parts.is_empty());

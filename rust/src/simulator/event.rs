@@ -42,7 +42,7 @@
 //! a transfer runs concurrently with any compute it does not gate.
 
 use crate::config::ClusterSpec;
-use crate::coordinator::plan::{Kernel, Plan, PlanOp};
+use crate::coordinator::plan::{Kernel, PayloadClass, Plan, PlanOp};
 use crate::simulator::engine::AttnCost;
 
 /// Event-engine knobs. `prefetch_depth` only affects lock-step plans.
@@ -84,14 +84,10 @@ impl EventResult {
     }
 }
 
-fn kernel_seconds(kernel: &Kernel, cost: &AttnCost) -> f64 {
-    match kernel {
-        Kernel::AttnDiag => cost.pair_diag_s,
-        Kernel::AttnFull => cost.pair_full_s,
-        Kernel::Rescale => cost.rescale_s,
-        Kernel::Accum => 0.0,
-        Kernel::Raw(s) => *s,
-    }
+/// Everything `ClusterSpec::link` prices by — two plans checkpointed on
+/// clusters with equal fingerprints time identically.
+fn cluster_fingerprint(c: &ClusterSpec) -> [f64; 5] {
+    [c.intra_bw, c.intra_lat, c.inter_bw, c.inter_lat, c.gpus_per_node as f64]
 }
 
 /// Pre-resolved simulation state for one `(Plan, AttnCost)` pair — the
@@ -101,6 +97,18 @@ fn kernel_seconds(kernel: &Kernel, cost: &AttnCost) -> f64 {
 /// struct and reused, so repeated [`PlanSim::total_s`] calls (hundreds per
 /// optimizer configuration, varying only placement and prefetch depth) do
 /// no per-call allocation and no enum matching.
+///
+/// ## Incremental rescoring
+///
+/// The op stream is partitioned into *segments* (maximal runs of one
+/// `step` value, in plan order), and every pass records a checkpoint of
+/// the scheduler state (stream tails, running max) at each segment entry.
+/// [`PlanSim::set_op_cost`] patches a single op's resolved cost and marks
+/// the earliest segment it touches dirty; [`PlanSim::rescore`] then
+/// replays only the ops from that segment onward, reusing the clean
+/// prefix. A candidate move that touches step `t` of a `T`-step plan costs
+/// `(T - t) / T` of a full pass — the token-level rebalancer's per-pair
+/// flip toggles and late-boundary moves exploit exactly this.
 pub struct PlanSim {
     n_workers: usize,
     n_steps: usize,
@@ -124,6 +132,28 @@ pub struct PlanSim {
     dep_skip_overlap: Vec<bool>,
     comm_bytes: f64,
     busy_s: f64,
+    /// Largest prefetchable kv-class transfer — what one extra unit of
+    /// prefetch depth stages in GPU memory (the autotuner's charge).
+    kv_stage_bytes: f64,
+    // segment structure: maximal runs of one step value, in plan order
+    seg_start: Vec<u32>,
+    seg_step: Vec<u32>,
+    seg_of_op: Vec<u32>,
+    // per-segment checkpoints from the most recent pass
+    ck_compute: Vec<f64>,
+    ck_comm: Vec<f64>,
+    ck_run_max: Vec<f64>,
+    /// Segments whose checkpoints and `op_finish` prefix reflect the
+    /// current cost array (monotonically lowered by `set_op_cost`).
+    valid_segs: usize,
+    /// Configuration the checkpoints were taken under.
+    ck_depth: usize,
+    ck_placement: Vec<usize>,
+    /// Link-pricing fingerprint of the checkpointed cluster — a replayed
+    /// prefix is only valid if every link prices identically.
+    ck_cluster: [f64; 5],
+    have_ck: bool,
+    last_total: f64,
     // reusable scratch
     compute_tail: Vec<f64>,
     comm_tail: Vec<f64>,
@@ -151,6 +181,19 @@ impl PlanSim {
             dep_skip_overlap: Vec::new(),
             comm_bytes: 0.0,
             busy_s: 0.0,
+            kv_stage_bytes: 0.0,
+            seg_start: Vec::new(),
+            seg_step: Vec::new(),
+            seg_of_op: Vec::with_capacity(n_ops),
+            ck_compute: Vec::new(),
+            ck_comm: Vec::new(),
+            ck_run_max: Vec::new(),
+            valid_segs: 0,
+            ck_depth: usize::MAX,
+            ck_placement: Vec::new(),
+            ck_cluster: [0.0; 5],
+            have_ck: false,
+            last_total: 0.0,
             compute_tail: vec![0.0; p],
             comm_tail: vec![0.0; p],
             barrier: vec![0.0; plan.n_steps.max(1)],
@@ -160,10 +203,18 @@ impl PlanSim {
         for node in &plan.ops {
             sim.worker.push(node.worker as u32);
             sim.step.push(node.step as u32);
+            if sim.seg_step.last() != Some(&(node.step as u32)) {
+                sim.seg_start.push(sim.seg_of_op.len() as u32);
+                sim.seg_step.push(node.step as u32);
+            }
+            sim.seg_of_op.push(sim.seg_step.len() as u32 - 1);
             sim.dep_off.push(sim.dep_idx.len() as u32);
             let is_attn = matches!(
                 node.op,
-                PlanOp::Compute { kernel: Kernel::AttnDiag | Kernel::AttnFull, .. }
+                PlanOp::Compute {
+                    kernel: Kernel::AttnDiag | Kernel::AttnFull | Kernel::AttnTok { .. },
+                    ..
+                }
             );
             for &d in &node.deps {
                 sim.dep_idx.push(d as u32);
@@ -176,7 +227,7 @@ impl PlanSim {
             }
             match &node.op {
                 PlanOp::Compute { kernel, .. } => {
-                    let s = kernel_seconds(kernel, cost);
+                    let s = kernel.seconds(cost);
                     sim.busy_s += s;
                     sim.val.push(s);
                     sim.src.push(u32::MAX);
@@ -186,6 +237,12 @@ impl PlanSim {
                 PlanOp::Xfer { src, dst, payload } => {
                     let bytes = payload.bytes(cost);
                     sim.comm_bytes += bytes;
+                    if payload.prefetchable()
+                        && payload.class() == PayloadClass::Kv
+                        && bytes > sim.kv_stage_bytes
+                    {
+                        sim.kv_stage_bytes = bytes;
+                    }
                     sim.val.push(bytes);
                     sim.src.push(*src as u32);
                     sim.dst.push(*dst as u32);
@@ -194,6 +251,10 @@ impl PlanSim {
             }
         }
         sim.dep_off.push(sim.dep_idx.len() as u32);
+        let n_segs = sim.seg_start.len();
+        sim.ck_compute = vec![0.0; n_segs * p];
+        sim.ck_comm = vec![0.0; n_segs * p];
+        sim.ck_run_max = vec![0.0; n_segs];
         sim
     }
 
@@ -207,82 +268,184 @@ impl PlanSim {
         self.busy_s
     }
 
-    /// One scheduling pass; fills `op_start`/`op_finish` scratch and
-    /// returns the makespan. `placement[w]` is the GPU rank `w` runs on.
-    fn pass(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> f64 {
+    /// Bytes one extra unit of prefetch depth stages on a GPU (the largest
+    /// prefetchable kv-class transfer in the plan).
+    pub fn stage_bytes(&self) -> f64 {
+        self.kv_stage_bytes
+    }
+
+    /// Resolved cost of one op (kernel seconds / payload bytes).
+    pub fn op_cost(&self, op: usize) -> f64 {
+        self.val[op]
+    }
+
+    /// First dirty segment index — equals the segment count when the
+    /// scratch fully reflects the current costs (nothing to replay).
+    pub fn dirty_from(&self) -> usize {
+        self.valid_segs
+    }
+
+    /// Patch one op's resolved cost in place (the incremental rescorer's
+    /// entry point — a boundary move or role toggle is a handful of these
+    /// followed by one [`PlanSim::rescore`]). Aggregates stay consistent;
+    /// everything from the op's segment onward is marked dirty.
+    pub fn set_op_cost(&mut self, op: usize, val: f64) {
+        let old = self.val[op];
+        if old == val {
+            return;
+        }
+        if self.src[op] != u32::MAX {
+            self.comm_bytes += val - old;
+        } else {
+            self.busy_s += val - old;
+        }
+        self.val[op] = val;
+        self.valid_segs = self.valid_segs.min(self.seg_of_op[op] as usize);
+    }
+
+    /// One scheduling pass from segment `from_seg` (0 = full pass),
+    /// reusing the checkpointed prefix; fills `op_start`/`op_finish`
+    /// scratch, refreshes checkpoints, and returns the makespan.
+    /// `placement[w]` is the GPU rank `w` runs on.
+    fn pass_from(
+        &mut self,
+        cluster: &ClusterSpec,
+        placement: &[usize],
+        depth: usize,
+        from_seg: usize,
+    ) -> f64 {
         debug_assert_eq!(placement.len(), self.n_workers);
+        let p = self.n_workers;
         let overlap = depth >= 1;
         let back_prefetch = depth.max(1) as u32;
-        self.compute_tail.iter_mut().for_each(|x| *x = 0.0);
-        self.comm_tail.iter_mut().for_each(|x| *x = 0.0);
-        self.barrier.iter_mut().for_each(|x| *x = 0.0);
-        let mut cur_step = 0u32;
-        let mut running_max = 0.0f64;
+        let mut cur_step;
+        let mut running_max;
+        if from_seg == 0 {
+            self.compute_tail.iter_mut().for_each(|x| *x = 0.0);
+            self.comm_tail.iter_mut().for_each(|x| *x = 0.0);
+            self.barrier.iter_mut().for_each(|x| *x = 0.0);
+            cur_step = 0u32;
+            running_max = 0.0f64;
+        } else {
+            self.compute_tail
+                .copy_from_slice(&self.ck_compute[from_seg * p..(from_seg + 1) * p]);
+            self.comm_tail
+                .copy_from_slice(&self.ck_comm[from_seg * p..(from_seg + 1) * p]);
+            running_max = self.ck_run_max[from_seg];
+            cur_step = self.seg_step[from_seg - 1];
+        }
 
-        for i in 0..self.worker.len() {
-            let step = self.step[i];
+        let n_segs = self.seg_start.len();
+        for k in from_seg..n_segs {
+            // checkpoint the state at segment entry (before the barrier
+            // crossing, which a resume replays identically)
+            self.ck_compute[k * p..(k + 1) * p].copy_from_slice(&self.compute_tail);
+            self.ck_comm[k * p..(k + 1) * p].copy_from_slice(&self.comm_tail);
+            self.ck_run_max[k] = running_max;
+            let step = self.seg_step[k];
             if self.lockstep && step > cur_step {
                 for t in cur_step..step {
                     self.barrier[t as usize] = running_max;
                 }
                 cur_step = step;
             }
-            let is_xfer = self.src[i] != u32::MAX;
-            // release barrier: computes and mid-step products bind to the
-            // previous step; prefetchable transfers run up to `depth` early
-            let mut ready = if self.lockstep {
-                let b = if is_xfer && self.prefetchable[i] { back_prefetch } else { 1 };
-                if step >= b { self.barrier[(step - b) as usize] } else { 0.0 }
+            let seg_end = if k + 1 < n_segs {
+                self.seg_start[k + 1] as usize
             } else {
-                0.0
+                self.worker.len()
             };
-            let lo = self.dep_off[i] as usize;
-            let hi = self.dep_off[i + 1] as usize;
-            for j in lo..hi {
-                if !(overlap && self.dep_skip_overlap[j]) {
-                    let f = self.op_finish[self.dep_idx[j] as usize];
-                    if f > ready {
-                        ready = f;
+            for i in self.seg_start[k] as usize..seg_end {
+                let is_xfer = self.src[i] != u32::MAX;
+                // release barrier: computes and mid-step products bind to
+                // the previous step; prefetchable transfers run up to
+                // `depth` early
+                let mut ready = if self.lockstep {
+                    let b = if is_xfer && self.prefetchable[i] { back_prefetch } else { 1 };
+                    if step >= b { self.barrier[(step - b) as usize] } else { 0.0 }
+                } else {
+                    0.0
+                };
+                let lo = self.dep_off[i] as usize;
+                let hi = self.dep_off[i + 1] as usize;
+                for j in lo..hi {
+                    if !(overlap && self.dep_skip_overlap[j]) {
+                        let f = self.op_finish[self.dep_idx[j] as usize];
+                        if f > ready {
+                            ready = f;
+                        }
                     }
                 }
-            }
-            let w = self.worker[i] as usize;
-            let (dur, tail) = if is_xfer {
-                let bytes = self.val[i];
-                let s = if bytes <= 0.0 || (self.lockstep && overlap && !self.prefetchable[i]) {
-                    // mid-step products pipeline into the next kernel on
-                    // the copy stream under overlap (§3.2): no exposed
-                    // wire time. Dataflow plans always pay real time.
-                    0.0
+                let w = self.worker[i] as usize;
+                let (dur, tail) = if is_xfer {
+                    let bytes = self.val[i];
+                    let s = if bytes <= 0.0
+                        || (self.lockstep && overlap && !self.prefetchable[i])
+                    {
+                        // mid-step products pipeline into the next kernel
+                        // on the copy stream under overlap (§3.2): no
+                        // exposed wire time. Dataflow plans always pay
+                        // real time.
+                        0.0
+                    } else {
+                        let (bw, lat) = cluster.link(
+                            placement[self.src[i] as usize],
+                            placement[self.dst[i] as usize],
+                        );
+                        lat + bytes / bw
+                    };
+                    (s, &mut self.comm_tail[w])
                 } else {
-                    let (bw, lat) = cluster
-                        .link(placement[self.src[i] as usize], placement[self.dst[i] as usize]);
-                    lat + bytes / bw
+                    (self.val[i], &mut self.compute_tail[w])
                 };
-                (s, &mut self.comm_tail[w])
-            } else {
-                (self.val[i], &mut self.compute_tail[w])
-            };
-            let start = ready.max(*tail);
-            let finish = start + dur;
-            *tail = finish;
-            self.op_start[i] = start;
-            self.op_finish[i] = finish;
-            if finish > running_max {
-                running_max = finish;
+                let start = ready.max(*tail);
+                let finish = start + dur;
+                *tail = finish;
+                self.op_start[i] = start;
+                self.op_finish[i] = finish;
+                if finish > running_max {
+                    running_max = finish;
+                }
             }
         }
+        self.valid_segs = n_segs;
+        self.ck_depth = depth;
+        self.ck_placement.clear();
+        self.ck_placement.extend_from_slice(placement);
+        self.ck_cluster = cluster_fingerprint(cluster);
+        self.have_ck = true;
+        self.last_total = running_max;
         running_max
     }
 
     /// Allocation-free makespan — the optimizer's scoring call.
     pub fn total_s(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> f64 {
-        self.pass(cluster, placement, depth)
+        self.pass_from(cluster, placement, depth, 0)
+    }
+
+    /// Makespan after [`PlanSim::set_op_cost`] patches, replaying only the
+    /// dirty suffix of the op stream. Falls back to a full pass when the
+    /// cluster, placement, or depth differs from the checkpointed
+    /// configuration; returns the cached total when nothing is dirty.
+    /// Bit-identical to a full re-simulation (pinned by
+    /// `varlen_properties`).
+    pub fn rescore(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> f64 {
+        if !self.have_ck
+            || depth != self.ck_depth
+            || placement != self.ck_placement.as_slice()
+            || cluster_fingerprint(cluster) != self.ck_cluster
+        {
+            return self.pass_from(cluster, placement, depth, 0);
+        }
+        if self.valid_segs >= self.seg_start.len() {
+            return self.last_total;
+        }
+        let from = self.valid_segs;
+        self.pass_from(cluster, placement, depth, from)
     }
 
     /// Full per-op accounting (allocates the returned vectors).
     pub fn run(&mut self, cluster: &ClusterSpec, placement: &[usize], depth: usize) -> EventResult {
-        let total_s = self.pass(cluster, placement, depth);
+        let total_s = self.pass_from(cluster, placement, depth, 0);
         EventResult {
             total_s,
             comm_bytes: self.comm_bytes,

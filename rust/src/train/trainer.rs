@@ -24,7 +24,7 @@ use std::thread;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::ClusterSpec;
-use crate::coordinator::comm::{build_network, WorkerComm};
+use crate::coordinator::comm::{build_network_placed, WorkerComm};
 use crate::coordinator::executor::{AttnCtx, ATTN_ARTIFACTS};
 use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
 use crate::coordinator::harness::{build_plans, build_plans_optimized};
@@ -446,7 +446,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         None => build_plans(cfg.schedule, p)?,
     };
-    let comms = build_network(p);
+    // bind rank i to the optimized plan's GPU slot (identity when not
+    // optimizing) — the trainer-side analogue of the launcher consuming
+    // `Plan::placement`
+    let comms = build_network_placed(p, &fwd_plan.placement);
 
     let mut handles = Vec::new();
     for (rank, comm) in comms.into_iter().enumerate() {

@@ -10,8 +10,10 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::thread;
 
-use distflash::coordinator::comm::{build_network, Tag, WorkerComm};
-use distflash::coordinator::{Kernel, Pass, Payload, Plan, PlanOp, Schedule, ScheduleKind};
+use distflash::coordinator::comm::{build_network, build_network_placed, Tag, WorkerComm};
+use distflash::coordinator::{
+    Kernel, Pass, Payload, PayloadClass, Plan, PlanOp, Schedule, ScheduleKind,
+};
 use distflash::runtime::Tensor;
 use distflash::simulator::AttnCost;
 
@@ -25,25 +27,28 @@ fn f32s(n: usize) -> usize {
     n * 4
 }
 
-/// Per-payload tensor shapes exactly as the executor ships them.
+/// Per-payload tensor shapes exactly as the executor ships them (keyed by
+/// payload *class* — token-scaled variants ship the same tensor kinds).
 fn payload_tensors(payload: &Payload, pass: Pass) -> Vec<Tensor> {
-    match (payload, pass) {
-        (Payload::Kv, _) => vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])],
-        (Payload::QBundle, Pass::Forward) => vec![Tensor::zeros(&[H, C, D])],
-        (Payload::QBundle, Pass::Backward) => vec![
+    match (payload.class(), pass) {
+        (PayloadClass::Kv, _) => vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])],
+        (PayloadClass::QBundle, Pass::Forward) => vec![Tensor::zeros(&[H, C, D])],
+        (PayloadClass::QBundle, Pass::Backward) => vec![
             Tensor::zeros(&[H, C, D]),
             Tensor::zeros(&[H, C, D]),
             Tensor::zeros(&[H, C]),
             Tensor::zeros(&[H, C, D]),
         ],
-        (Payload::HelperResult, Pass::Forward) => vec![
+        (PayloadClass::HelperResult, Pass::Forward) => vec![
             Tensor::zeros(&[H, C, D]),
             Tensor::zeros(&[H, C]),
             Tensor::zeros(&[H, C]),
         ],
-        (Payload::HelperResult, Pass::Backward) => vec![Tensor::zeros(&[H, C, D])],
-        (Payload::KvGrad, _) => vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])],
-        (Payload::Raw(_), _) => vec![],
+        (PayloadClass::HelperResult, Pass::Backward) => vec![Tensor::zeros(&[H, C, D])],
+        (PayloadClass::KvGrad, _) => {
+            vec![Tensor::zeros(&[KVH, C, D]), Tensor::zeros(&[KVH, C, D])]
+        }
+        (PayloadClass::Raw, _) => vec![],
     }
 }
 
@@ -165,6 +170,51 @@ fn executor_bytes_match_plan_prediction_with_collectives_interleaved() {
             totals[0],
             plan_bytes as u64 + all_reduce + all_gather + barrier,
             "{kind:?}: executor bytes diverge from plan prediction"
+        );
+    }
+}
+
+#[test]
+fn placed_network_bytes_match_plan_prediction() {
+    // rank i's mailbox bound to slot placement[i] (the launcher consuming
+    // `Plan::placement`): the wire protocol is placement-agnostic, so the
+    // dry-run executor must complete and its byte counters must still
+    // match the plan's prediction exactly
+    let p = 4usize;
+    let placement: Vec<usize> = (0..p).map(|i| (i + 3) % p).collect();
+    let s = Schedule::build(ScheduleKind::Balanced, p);
+    let mut fwd_plan = s.lower(Pass::Forward);
+    let mut bwd_plan = s.lower(Pass::Backward);
+    fwd_plan.placement = placement.clone();
+    bwd_plan.placement = placement.clone();
+    fwd_plan.validate_lowered().unwrap();
+    bwd_plan.validate_lowered().unwrap();
+    let fwd = Arc::new(fwd_plan);
+    let bwd = Arc::new(bwd_plan);
+    let comms = build_network_placed(p, &placement);
+    let handles: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut comm)| {
+            let fwd = fwd.clone();
+            let bwd = bwd.clone();
+            thread::spawn(move || {
+                dry_run(&fwd, rank, &mut comm, 0);
+                dry_run(&bwd, rank, &mut comm, 1);
+                comm.barrier(3000);
+                comm.bytes_sent_global()
+            })
+        })
+        .collect();
+    let totals: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let plan_bytes =
+        fwd.total_bytes(&wire_cost(Pass::Forward)) + bwd.total_bytes(&wire_cost(Pass::Backward));
+    let barrier = (p * (p - 1) * 4) as u64;
+    for t in &totals {
+        assert_eq!(
+            *t,
+            plan_bytes as u64 + barrier,
+            "placed fabric diverges from plan-predicted bytes"
         );
     }
 }

@@ -57,7 +57,7 @@ fn flip_lowering_preserves_all_invariants() {
     // same pair coverage, for every P and both passes
     for p in 1..=16 {
         let s = Schedule::balanced(p);
-        let all_flipped = LowerOpts { flip_steps: vec![true; s.n_steps()] };
+        let all_flipped = LowerOpts { flip_steps: vec![true; s.n_steps()], ..Default::default() };
         for pass in [Pass::Forward, Pass::Backward] {
             let base = Plan::from_schedule(&s, pass);
             let flipped = Plan::from_schedule_opts(&s, pass, &all_flipped);
@@ -77,7 +77,7 @@ fn flip_lowering_preserves_all_invariants() {
 #[test]
 fn flipped_steps_drop_q_and_result_traffic() {
     let s = Schedule::balanced(16);
-    let all_flipped = LowerOpts { flip_steps: vec![true; s.n_steps()] };
+    let all_flipped = LowerOpts { flip_steps: vec![true; s.n_steps()], ..Default::default() };
     let base = Plan::from_schedule(&s, Pass::Forward);
     let flipped = Plan::from_schedule_opts(&s, Pass::Forward, &all_flipped);
     let cost = test_cost();
