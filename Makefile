@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench bench-json tables optimize optimize-varlen
+.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -14,11 +14,18 @@ test:
 bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
-# machine-readable optimizer + varlen-rebalancer results
-# -> BENCH_optimizer.json + BENCH_varlen.json, tracked across PRs
-# (CI runs this and uploads both as workflow artifacts)
+# machine-readable optimizer + varlen-rebalancer + executor-transport
+# results -> BENCH_optimizer.json + BENCH_varlen.json + BENCH_executor.json,
+# tracked across PRs (CI runs this and uploads all three as workflow
+# artifacts). The executor rows run the real threaded executor with null
+# kernels (clone-vs-Arc send path A/B); pass `--skip-exec` to repro bench
+# to omit them.
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json
+
+# measured-vs-simulated per-op trace table (host-kernel executor)
+trace:
+	cargo run --release --bin repro -- trace --p 8
 
 tables:
 	cargo run --release --bin repro -- tables

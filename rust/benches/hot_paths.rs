@@ -164,7 +164,7 @@ fn main() {
                 std::thread::spawn(move || {
                     let mut t = Tensor::full(&[1 << 20], c.rank as f32);
                     c.all_reduce_sum(1, &mut t);
-                    black_box(t.data[0]);
+                    black_box(t.data()[0]);
                 })
             })
             .collect();
@@ -173,6 +173,25 @@ fn main() {
         }
     });
     println!("{}", s.report());
+
+    // send-path allocation: the executor enqueues payloads via `clone()`.
+    // Pre-PR that was a full 16 MB allocation + memcpy per tensor per
+    // send; post-PR it is an Arc refcount bump. `deep_clone` preserves the
+    // old behavior for comparison (and is what `deep_copy_sends` uses).
+    let kv_chunk = Tensor::zeros(&[8, 4096, 128]);
+    let s = bench("send_path_deep_clone_16MB", 2, 20, || {
+        black_box(kv_chunk.deep_clone());
+    });
+    println!("{}", s.report());
+    let deep_ns = s.mean_ns;
+    let s = bench("send_path_arc_clone_16MB", 2, 20, || {
+        black_box(kv_chunk.clone());
+    });
+    println!(
+        "{}   ({:.0}x cheaper than deep clone)",
+        s.report(),
+        deep_ns / s.mean_ns.max(1.0)
+    );
 
     // tensor shard/gather (executor chunking path)
     let mut rng = Rng::new(0);

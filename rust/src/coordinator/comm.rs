@@ -6,12 +6,23 @@
 //! overlap semantics the paper gets from a second CUDA stream: the payload
 //! is already in the receiver's mailbox by the time it blocks on `recv`.
 //!
+//! Sends are **zero-copy**: tensors are `Arc`-backed
+//! (`runtime::tensor`), so enqueueing a whole (k, v) chunk is a refcount
+//! bump — no allocation, no memcpy (the legacy deep-copy path survives
+//! behind [`WorkerComm::set_deep_copy_sends`] for the executor
+//! micro-bench's A/B comparison). On the receive side,
+//! [`WorkerComm::drain_pending`] sweeps every already-arrived message into
+//! the stash without blocking — the prefetch engine's "posted receives" —
+//! so a `recv` at compute time is a stash hit. Stash queues are
+//! `VecDeque`s: repeated same-tag messages pop FIFO in O(1).
+//!
 //! Per-worker byte counters feed the communication-volume reports (paper
 //! §D); the ring all-reduce implements the gradient synchronization the
 //! trainer needs (the paper trains with FSDP/DDP outside the attention —
 //! here parameters are replicated, so a plain ring all-reduce suffices).
 
-use std::collections::HashMap;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -86,6 +97,7 @@ pub fn build_network_placed(p: usize, placement: &[usize]) -> Vec<WorkerComm> {
                 .expect("placement must be a permutation of 0..p"),
             stash: HashMap::new(),
             bytes_sent: bytes.clone(),
+            deep_copy_sends: false,
         })
         .collect()
 }
@@ -95,13 +107,30 @@ pub struct WorkerComm {
     pub n_workers: usize,
     senders: Vec<Sender<Message>>,
     rx: Receiver<Message>,
-    stash: HashMap<(usize, Tag), Vec<Vec<Tensor>>>,
+    /// Out-of-order / prefetched arrivals, FIFO per (sender, tag).
+    /// Invariant: a present entry's queue is never empty.
+    stash: HashMap<(usize, Tag), VecDeque<Vec<Tensor>>>,
     bytes_sent: Arc<Vec<AtomicU64>>,
+    /// Legacy pre-zero-copy send path: materialize a private allocation
+    /// for every payload tensor before it enters the channel.
+    deep_copy_sends: bool,
 }
 
 impl WorkerComm {
+    /// Model the pre-zero-copy executor (every send pays a full-chunk
+    /// allocation + memcpy). Only the micro-bench and tests flip this.
+    pub fn set_deep_copy_sends(&mut self, on: bool) {
+        self.deep_copy_sends = on;
+    }
+
     /// Non-blocking tagged send (the "second stream": returns immediately).
+    /// Zero-copy: the payload enters the channel as refcount bumps.
     pub fn send(&self, to: usize, tag: Tag, tensors: Vec<Tensor>) {
+        let tensors = if self.deep_copy_sends {
+            tensors.iter().map(Tensor::deep_clone).collect()
+        } else {
+            tensors
+        };
         let nbytes: usize = tensors.iter().map(|t| t.numel() * 4).sum();
         self.bytes_sent[self.rank].fetch_add(nbytes as u64, Ordering::Relaxed);
         self.senders[to]
@@ -109,16 +138,30 @@ impl WorkerComm {
             .expect("peer hung up");
     }
 
-    /// Blocking tagged receive; out-of-order arrivals are stashed.
+    /// Sweep every message already sitting in the mailbox into the stash
+    /// without blocking — the prefetch engine "posting receives ahead of
+    /// need". Returns how many messages were staged.
+    pub fn drain_pending(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push_back(msg.tensors);
+            n += 1;
+        }
+        n
+    }
+
+    /// Blocking tagged receive; a prefetched or out-of-order arrival is a
+    /// single-lookup stash hit.
     pub fn recv(&mut self, from: usize, tag: Tag) -> Vec<Tensor> {
-        if let Some(q) = self.stash.get_mut(&(from, tag)) {
-            if !q.is_empty() {
-                let t = q.remove(0);
-                if q.is_empty() {
-                    self.stash.remove(&(from, tag));
-                }
-                return t;
+        if let Entry::Occupied(mut e) = self.stash.entry((from, tag)) {
+            let t = e.get_mut().pop_front().expect("stash entries are never empty");
+            if e.get().is_empty() {
+                e.remove();
             }
+            return t;
         }
         loop {
             let msg = self.rx.recv().expect("network closed while waiting");
@@ -128,7 +171,7 @@ impl WorkerComm {
             self.stash
                 .entry((msg.from, msg.tag))
                 .or_default()
-                .push(msg.tensors);
+                .push_back(msg.tensors);
         }
     }
 
@@ -145,12 +188,17 @@ impl WorkerComm {
     /// Ring all-reduce (sum): reduce-scatter then all-gather, the standard
     /// 2(P-1)/P · bytes algorithm. `round` must be globally unique per call
     /// site (e.g. derived from train step + param index).
+    ///
+    /// Segment payloads are materialized copies, deliberately NOT
+    /// `flat_view`s: `t` is mutated right after every hop, so a shared
+    /// buffer would trigger a whole-tensor copy-on-write per hop — worse
+    /// than the n/p segment copy.
     pub fn all_reduce_sum(&mut self, round: u32, t: &mut Tensor) {
         let p = self.n_workers;
         if p == 1 {
             return;
         }
-        let n = t.data.len();
+        let n = t.numel();
         // segment boundaries (last segment absorbs the remainder)
         let seg = |i: usize| -> std::ops::Range<usize> {
             let base = n / p;
@@ -168,12 +216,12 @@ impl WorkerComm {
             let tag = Tag::new(Tag::ALL_REDUCE, round, step as u32);
             let payload = Tensor::new(
                 vec![seg(send_seg).len()],
-                t.data[seg(send_seg)].to_vec(),
+                t.data()[seg(send_seg)].to_vec(),
             );
             self.send(next, tag, vec![payload]);
             let got = self.recv(prev, tag);
             let r = seg(recv_seg);
-            for (dst, src) in t.data[r].iter_mut().zip(&got[0].data) {
+            for (dst, src) in t.data_mut()[r].iter_mut().zip(got[0].data()) {
                 *dst += src;
             }
         }
@@ -184,12 +232,12 @@ impl WorkerComm {
             let tag = Tag::new(Tag::ALL_REDUCE, round, (p + step) as u32);
             let payload = Tensor::new(
                 vec![seg(send_seg).len()],
-                t.data[seg(send_seg)].to_vec(),
+                t.data()[seg(send_seg)].to_vec(),
             );
             self.send(next, tag, vec![payload]);
             let got = self.recv(prev, tag);
             let r = seg(recv_seg);
-            t.data[r].copy_from_slice(&got[0].data);
+            t.data_mut()[r].copy_from_slice(got[0].data());
         }
     }
 
@@ -269,6 +317,46 @@ mod tests {
     }
 
     #[test]
+    fn sends_are_zero_copy_and_deep_mode_is_not() {
+        // channels work without threads: exercise both ends in-line
+        let mut comms = build_network(2);
+        let t = Tensor::new(vec![4, 4], (0..16).map(|x| x as f32).collect());
+        comms[0].send(1, Tag::new(9, 1, 0), vec![t.clone()]);
+        let got = comms[1].recv(0, Tag::new(9, 1, 0));
+        assert!(got[0].shares_buffer(&t), "zero-copy send must share storage");
+        assert_eq!(got[0], t);
+
+        comms[0].set_deep_copy_sends(true);
+        comms[0].send(1, Tag::new(9, 1, 1), vec![t.clone()]);
+        let got = comms[1].recv(0, Tag::new(9, 1, 1));
+        assert!(!got[0].shares_buffer(&t), "deep mode must materialize");
+        assert_eq!(got[0], t);
+        // byte accounting identical in both modes
+        assert_eq!(comms[0].bytes_sent(), 2 * 16 * 4);
+    }
+
+    #[test]
+    fn drain_pending_stages_and_recv_hits_fifo() {
+        let mut comms = build_network(2);
+        let tag = Tag::new(9, 2, 0);
+        let other = Tag::new(9, 2, 1);
+        // repeated same-tag sends must pop FIFO; interleave another tag
+        for i in 0..50 {
+            comms[0].send(1, tag, vec![Tensor::scalar(i as f32)]);
+            comms[0].send(1, other, vec![Tensor::scalar(-(i as f32))]);
+        }
+        let staged = comms[1].drain_pending();
+        assert_eq!(staged, 100);
+        assert_eq!(comms[1].drain_pending(), 0, "second drain finds nothing");
+        for i in 0..50 {
+            assert_eq!(comms[1].recv(0, tag)[0].as_scalar(), i as f32);
+        }
+        for i in 0..50 {
+            assert_eq!(comms[1].recv(0, other)[0].as_scalar(), -(i as f32));
+        }
+    }
+
+    #[test]
     fn ring_all_reduce_sums() {
         for p in [1, 2, 3, 4, 7] {
             let res = spawn_workers(p, move |mut c| {
@@ -280,7 +368,7 @@ mod tests {
             });
             let want = (p * (p + 1) / 2) as f32;
             for t in res {
-                assert!(t.data.iter().all(|&x| x == want), "p={p}");
+                assert!(t.data().iter().all(|&x| x == want), "p={p}");
             }
         }
     }

@@ -1,26 +1,33 @@
-//! Multi-threaded harness: spawn P workers (each with its own PJRT runtime,
-//! mirroring one-process-per-GPU) and run a distributed attention call over
-//! a full sequence. Used by `repro verify`, the integration tests, and the
-//! examples.
+//! Multi-threaded harness: spawn P workers (each with its own kernel
+//! backend, mirroring one-process-per-GPU) and run a distributed attention
+//! call over a full sequence. Used by `repro verify`, `repro trace`, the
+//! integration tests, the executor micro-bench, and the examples.
 //!
 //! The harness is where the schedule IR is produced: the chosen
 //! [`Schedule`] is lowered to one forward and one backward [`Plan`], both
 //! validated (`validate_lowered`), and every worker executes those exact
 //! plans — the same objects a simulator would time.
+//!
+//! [`run_dist_attention_exec`] is the general entry point: it picks the
+//! kernel backend ([`BackendSpec`]) — PJRT artifacts, the pure-host
+//! reference kernels, or the zero-work echo — and optionally records
+//! per-op wall-clock traces merged across ranks ([`MergedTrace`]), the
+//! measured side of the trace-vs-sim report.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::comm::build_network_placed;
-use super::executor::{AttnCtx, ATTN_ARTIFACTS};
+use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
 use super::optimize::{optimize_schedule, OptimizeOpts};
 use super::plan::{LowerOpts, Pass, Plan};
 use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
 use crate::config::ClusterSpec;
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{HostKernels, Kernels, NullKernels, Runtime, Tensor};
 use crate::simulator::AttnCost;
 
 /// Gathered results of one distributed attention call over N tokens.
@@ -34,6 +41,46 @@ pub struct DistAttnResult {
     pub grads: Option<(Tensor, Tensor, Tensor)>,
     /// Total bytes moved between workers.
     pub comm_bytes: u64,
+}
+
+/// Which kernel backend each harness worker constructs.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Real PJRT artifacts compiled from this directory (needs
+    /// `make artifacts` plus the real `xla` bindings).
+    Pjrt(PathBuf),
+    /// Pure-Rust reference kernels — runs on a bare checkout.
+    HostRef,
+    /// Zero-work shape echo — transport micro-benchmarks only.
+    Null,
+}
+
+/// Executor knobs for one distributed call.
+#[derive(Clone, Debug)]
+pub struct ExecOpts {
+    pub backend: BackendSpec,
+    /// Record per-op wall-clock spans, merged across ranks in the result.
+    pub trace: bool,
+    /// Model the pre-zero-copy send path (full-chunk allocation + memcpy
+    /// per payload) — the executor micro-bench's baseline arm.
+    pub deep_copy_sends: bool,
+}
+
+impl ExecOpts {
+    pub fn host() -> ExecOpts {
+        ExecOpts { backend: BackendSpec::HostRef, trace: false, deep_copy_sends: false }
+    }
+}
+
+/// One executed distributed call: results plus (when requested) the
+/// rank-merged per-op timelines and the harness wall-clock.
+#[derive(Debug)]
+pub struct ExecRun {
+    pub result: DistAttnResult,
+    pub fwd_trace: Option<MergedTrace>,
+    pub bwd_trace: Option<MergedTrace>,
+    /// Wall-clock of the whole call (thread spawn to last join).
+    pub wall_s: f64,
 }
 
 /// Lower and validate the forward/backward plans for a schedule — shared
@@ -57,7 +104,8 @@ pub fn build_plans(kind: ScheduleKind, n_workers: usize) -> Result<(Arc<Plan>, A
 /// and per-pass cost models, and return validated plans the executor can
 /// run directly. The flipped op stream changes *which worker computes
 /// which pair* — the executor follows it literally — while the placement
-/// is timing metadata for the launcher/simulators.
+/// binds mailboxes and the autotuned `prefetch_depth` drives the posted
+/// receives.
 pub fn build_plans_optimized(
     kind: ScheduleKind,
     n_workers: usize,
@@ -126,10 +174,10 @@ pub fn run_dist_attention(
     run_dist_attention_planned(artifact_dir, fwd_plan, bwd_plan, q, k, v, do_)
 }
 
-/// Run a distributed attention call over *caller-supplied* lowered plans —
-/// the entry point for optimizer-produced plans (`build_plans_optimized`).
-/// Both plans must be schedule lowerings for the same worker count and
-/// already validated.
+/// Run a distributed attention call over *caller-supplied* lowered plans
+/// against PJRT artifacts — the entry point for optimizer-produced plans
+/// (`build_plans_optimized`). Both plans must be schedule lowerings for
+/// the same worker count and already validated.
 pub fn run_dist_attention_planned(
     artifact_dir: &Path,
     fwd_plan: Arc<Plan>,
@@ -139,6 +187,39 @@ pub fn run_dist_attention_planned(
     v: &Tensor,
     do_: Option<&Tensor>,
 ) -> Result<DistAttnResult> {
+    let opts = ExecOpts {
+        backend: BackendSpec::Pjrt(artifact_dir.to_path_buf()),
+        trace: false,
+        deep_copy_sends: false,
+    };
+    Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &opts)?.result)
+}
+
+/// Host-kernel variant: pure-Rust reference kernels, no PJRT, no
+/// artifacts — the bare-checkout executor used by the prefetch stress
+/// tests and `repro trace`.
+pub fn run_dist_attention_host(
+    fwd_plan: Arc<Plan>,
+    bwd_plan: Arc<Plan>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: Option<&Tensor>,
+) -> Result<DistAttnResult> {
+    Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &ExecOpts::host())?.result)
+}
+
+/// The general executor entry point (see module docs): backend selection,
+/// optional per-op tracing, optional deep-copy send baseline.
+pub fn run_dist_attention_exec(
+    fwd_plan: Arc<Plan>,
+    bwd_plan: Arc<Plan>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: Option<&Tensor>,
+    opts: &ExecOpts,
+) -> Result<ExecRun> {
     let n_workers = fwd_plan.n_workers;
     if bwd_plan.n_workers != n_workers {
         return Err(anyhow!(
@@ -168,13 +249,15 @@ pub fn run_dist_attention_planned(
             // the AOT artifacts compile one fixed chunk shape; a ragged
             // chunk would fail the runtime's shape check mid-plan on one
             // worker and deadlock its peers' blocking recvs — reject up
-            // front with the honest story instead
+            // front with the honest story instead. (The host backends have
+            // no such restriction: they accept any chunk shape.)
             let c0 = spec.chunk_tokens(0);
-            if (1..n_workers).any(|w| spec.chunk_tokens(w) != c0) {
+            let uniform = (1..n_workers).all(|w| spec.chunk_tokens(w) == c0);
+            if !uniform && matches!(opts.backend, BackendSpec::Pjrt(_)) {
                 return Err(anyhow!(
                     "ragged varlen boundaries need per-chunk AOT artifacts; the fixed-shape \
-                     manifest executes uniform chunks only (simulate ragged plans with the \
-                     event engine, or rebalance with uniform boundaries)"
+                     manifest executes uniform chunks only (run the host backend, simulate \
+                     ragged plans with the event engine, or rebalance with uniform boundaries)"
                 ));
             }
             (
@@ -198,7 +281,6 @@ pub fn run_dist_attention_planned(
     // are addressed by logical rank, so the forward placement binding
     // stays correct for both passes.)
     let comms = build_network_placed(n_workers, &fwd_plan.placement);
-    let dir: PathBuf = artifact_dir.to_path_buf();
 
     struct WorkerOut {
         rank: usize,
@@ -206,11 +288,16 @@ pub fn run_dist_attention_planned(
         lse: Tensor,
         grads: Option<(Tensor, Tensor, Tensor)>,
         bytes: u64,
+        fwd_trace: RunTrace,
+        bwd_trace: RunTrace,
     }
 
+    let epoch = Instant::now();
     let mut handles = Vec::new();
     for (rank, mut comm) in comms.into_iter().enumerate() {
-        let dir = dir.clone();
+        let backend = opts.backend.clone();
+        let trace = opts.trace;
+        let deep = opts.deep_copy_sends;
         let fwd_plan = fwd_plan.clone();
         let bwd_plan = bwd_plan.clone();
         let q = qs[rank].clone();
@@ -218,33 +305,48 @@ pub fn run_dist_attention_planned(
         let v = vs[rank].clone();
         let do_chunk = dos.as_ref().map(|d| d[rank].clone());
         handles.push(thread::spawn(move || -> Result<WorkerOut> {
-            let runtime = Runtime::load(&dir)?;
-            runtime.precompile(ATTN_ARTIFACTS)?;
-            let (o, lse) = {
+            comm.set_deep_copy_sends(deep);
+            let kernels: Box<dyn Kernels> = match &backend {
+                BackendSpec::Pjrt(dir) => {
+                    let rt = Runtime::load(dir)?;
+                    rt.precompile(ATTN_ARTIFACTS)?;
+                    Box::new(rt)
+                }
+                BackendSpec::HostRef => Box::new(HostKernels),
+                BackendSpec::Null => Box::new(NullKernels),
+            };
+            let epoch = trace.then_some(epoch);
+            let (o, lse, fwd_trace) = {
                 let mut ctx = AttnCtx {
                     rank,
-                    runtime: &runtime,
+                    runtime: &*kernels,
                     comm: &mut comm,
                     plan: &fwd_plan,
                     call_id: 0,
+                    epoch,
+                    trace: RunTrace::default(),
                 };
-                ctx.forward(&q, &k, &v)?
+                let (o, lse) = ctx.forward(&q, &k, &v)?;
+                (o, lse, ctx.trace)
             };
-            let grads = match do_chunk {
+            let (grads, bwd_trace) = match do_chunk {
                 Some(d) => {
                     let mut ctx = AttnCtx {
                         rank,
-                        runtime: &runtime,
+                        runtime: &*kernels,
                         comm: &mut comm,
                         plan: &bwd_plan,
                         call_id: 1,
+                        epoch,
+                        trace: RunTrace::default(),
                     };
-                    Some(ctx.backward(&q, &k, &v, &o, &lse, &d)?)
+                    let g = ctx.backward(&q, &k, &v, &o, &lse, &d)?;
+                    (Some(g), ctx.trace)
                 }
-                None => None,
+                None => (None, RunTrace::default()),
             };
             let bytes = comm.bytes_sent();
-            Ok(WorkerOut { rank, o, lse, grads, bytes })
+            Ok(WorkerOut { rank, o, lse, grads, bytes, fwd_trace, bwd_trace })
         }));
     }
 
@@ -259,22 +361,35 @@ pub fn run_dist_attention_planned(
         let rank = w.rank;
         outs[rank] = Some(w);
     }
+    let wall_s = epoch.elapsed().as_secs_f64();
     let outs: Vec<WorkerOut> = outs.into_iter().map(|o| o.unwrap()).collect();
+
+    let (fwd_trace, bwd_trace) = if opts.trace {
+        let ft: Vec<RunTrace> = outs.iter().map(|w| w.fwd_trace.clone()).collect();
+        let bt: Vec<RunTrace> = outs.iter().map(|w| w.bwd_trace.clone()).collect();
+        (
+            Some(MergedTrace::merge(fwd_plan.n_ops(), &ft)),
+            do_.is_some().then(|| MergedTrace::merge(bwd_plan.n_ops(), &bt)),
+        )
+    } else {
+        (None, None)
+    };
 
     let o = Tensor::cat_axis1(&outs.iter().map(|w| w.o.clone()).collect::<Vec<_>>());
     // lse chunks are (H, C): concatenate along axis 1 by reusing the rank-3
-    // helper on a (H, C, 1) view.
+    // helper on zero-copy (H, C, 1) views.
     let lse = {
         let parts: Vec<Tensor> = outs
             .iter()
             .map(|w| {
                 let mut s = w.lse.shape.clone();
                 s.push(1);
-                Tensor::new(s, w.lse.data.clone())
+                w.lse.reshape(s)
             })
             .collect();
         let cat = Tensor::cat_axis1(&parts);
-        Tensor::new(cat.shape[..2].to_vec(), cat.data)
+        let flat = cat.shape[..2].to_vec();
+        cat.reshape(flat)
     };
     let grads = if do_.is_some() {
         let dq = Tensor::cat_axis1(
@@ -290,5 +405,10 @@ pub fn run_dist_attention_planned(
     } else {
         None
     };
-    Ok(DistAttnResult { o, lse, grads, comm_bytes })
+    Ok(ExecRun {
+        result: DistAttnResult { o, lse, grads, comm_bytes },
+        fwd_trace,
+        bwd_trace,
+        wall_s,
+    })
 }

@@ -20,10 +20,11 @@ pub mod plan;
 pub mod schedule;
 
 pub use checkpoint::CkptStrategy;
-pub use executor::{AttnCtx, ATTN_ARTIFACTS};
+pub use executor::{AttnCtx, MergedTrace, PlanIndex, RunTrace, ATTN_ARTIFACTS};
 pub use harness::{
     build_plans, build_plans_optimized, build_plans_varlen, run_dist_attention,
-    run_dist_attention_planned, DistAttnResult,
+    run_dist_attention_exec, run_dist_attention_host, run_dist_attention_planned,
+    BackendSpec, DistAttnResult, ExecOpts, ExecRun,
 };
 pub use optimize::{
     autotune_depth, optimize_plan, optimize_schedule, optimize_varlen, OptimizeOpts, Optimized,

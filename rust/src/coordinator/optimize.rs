@@ -318,6 +318,7 @@ pub fn optimize_plan(
     let moved_ranks = place.iter().enumerate().filter(|&(i, &g)| i != g).count();
     let mut out = plan.clone();
     out.placement = place;
+    out.prefetch_depth = depth;
     Optimized {
         plan: out,
         prefetch_depth: depth,
@@ -390,6 +391,7 @@ pub fn optimize_schedule(
     sim_calls += calls;
     let moved_ranks = place.iter().enumerate().filter(|&(i, &g)| i != g).count();
     best_plan.placement = place;
+    best_plan.prefetch_depth = depth;
     Optimized {
         plan: best_plan,
         prefetch_depth: depth,
@@ -880,6 +882,7 @@ pub fn optimize_varlen(
         .filter(|(a, b)| a != b)
         .count();
     final_plan.placement = place;
+    final_plan.prefetch_depth = depth;
     VarlenOptimized {
         plan: final_plan,
         spec: final_spec,

@@ -363,6 +363,13 @@ pub struct Plan {
     /// needed by `validate` (zero-weight pairs are legitimately absent)
     /// and by ragged executors splitting tensors at its boundaries.
     pub varlen: Option<Arc<VarlenSpec>>,
+    /// Prefetch pipeline depth this plan should run at: the event engine's
+    /// `EventOpts::prefetch_depth` default, and the executor's switch for
+    /// posting receives ahead of need (`0` = fully blocking point-of-use
+    /// receives, `>= 1` = the mailbox is drained into the stash at every
+    /// step boundary). Lowering defaults to 1 (the paper's §3.2 pipeline);
+    /// the plan optimizer overwrites it with the autotuned knee.
+    pub prefetch_depth: usize,
 }
 
 impl Plan {
@@ -377,6 +384,7 @@ impl Plan {
             ops: Vec::new(),
             placement: (0..n_workers).collect(),
             varlen: None,
+            prefetch_depth: 1,
         }
     }
 

@@ -15,10 +15,17 @@
 //!            placement + GQA role flipping + prefetch autotune
 //!            [--varlen [--docs N] [--zipf A] [--pack-seed N]]
 //!            token-level rebalancing of a Zipf-packed document batch
-//!   bench    [--json] [--out FILE] [--varlen-out FILE]
-//!                                           optimizer + varlen grids; --json
-//!                                           writes BENCH_optimizer.json and
-//!                                           BENCH_varlen.json
+//!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
+//!            [--skip-exec]                  optimizer + varlen grids and the
+//!                                           executor transport micro-bench;
+//!                                           --json writes BENCH_optimizer.json,
+//!                                           BENCH_varlen.json, BENCH_executor.json
+//!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
+//!            [--schedule S] [--depth N] [--seed N]
+//!                                           run the real executor (host kernels)
+//!                                           with per-op tracing and align the
+//!                                           measured timeline against the event
+//!                                           engine's predictions
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
 //! Arg parsing is hand-rolled (offline environment, no clap).
@@ -35,12 +42,13 @@ use distflash::baselines::ulysses::Ulysses;
 use distflash::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    optimize_schedule, optimize_varlen, run_dist_attention, CkptStrategy, OptimizeOpts, Pass,
-    Plan, Schedule, ScheduleKind, VarlenSpec,
+    build_plans, optimize_schedule, optimize_varlen, run_dist_attention,
+    run_dist_attention_exec, BackendSpec, CkptStrategy, ExecOpts, OptimizeOpts, Pass, Plan,
+    Schedule, ScheduleKind, VarlenSpec,
 };
 use distflash::simulator::{simulate_plan, EventOpts};
-use distflash::report::paper;
-use distflash::runtime::{Runtime, Tensor, Value};
+use distflash::report::{paper, trace};
+use distflash::runtime::{HostKernels, Kernels, Runtime, Tensor, Value};
 use distflash::train::{train, AdamConfig, TrainConfig};
 use distflash::util::Rng;
 
@@ -190,7 +198,7 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
         dq.l2_norm(),
         dk.l2_norm(),
         dv.l2_norm(),
-        dq.data.iter().chain(&dk.data).chain(&dv.data).all(|x| x.is_finite())
+        dq.data().iter().chain(dk.data()).chain(dv.data()).all(|x| x.is_finite())
     );
     println!("  comm bytes = {}", res.comm_bytes);
     println!("verify OK");
@@ -457,76 +465,182 @@ fn cmd_optimize_varlen(
     Ok(())
 }
 
+/// `repro trace`: run the real threaded executor (pure-host reference
+/// kernels, so it works on a bare checkout) with per-op tracing, then
+/// align the measured timeline against the event engine's predictions
+/// under a trace-calibrated cost model — the measured validation of the
+/// simulator's per-op error (fwd and bwd).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let p = args.usize("p", 8);
+    let chunk = args.usize("chunk", 96);
+    let h = args.usize("heads", 4);
+    let kvh = args.usize("kv-heads", 2);
+    let d = args.usize("dim", 32);
+    let depth = args.usize("depth", 1);
+    let kind = schedule_kind(&args.get("schedule", "balanced"));
+    let n = p * chunk;
+    println!(
+        "trace: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} depth={depth} (host kernels)"
+    );
+    let (fwd, bwd) = build_plans(kind, p)?;
+    let mut f = (*fwd).clone();
+    f.prefetch_depth = depth;
+    let mut b = (*bwd).clone();
+    b.prefetch_depth = depth;
+    let (fwd, bwd) = (std::sync::Arc::new(f), std::sync::Arc::new(b));
+
+    let mut rng = Rng::new(args.usize("seed", 0) as u64);
+    let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+
+    let opts = ExecOpts { backend: BackendSpec::HostRef, trace: true, deep_copy_sends: false };
+    // warm run (thread spawn + allocator), then the measured run
+    run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)?;
+    let run = run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)?;
+
+    // numerics sanity against the host oracle while we are here
+    let oracle = HostKernels.run(
+        "full_attn_ref",
+        &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+    )?;
+    println!(
+        "  numerics: max|Δo| = {:.3e}  max|Δlse| = {:.3e}  (vs host full_attn_ref)",
+        run.result.o.max_abs_diff(&oracle[0]),
+        run.result.lse.max_abs_diff(&oracle[1])
+    );
+
+    let ft = run.fwd_trace.as_ref().expect("tracing was requested");
+    let bt = run.bwd_trace.as_ref().expect("backward was traced");
+    let fc = trace::compare(&fwd, ft);
+    let bc = trace::compare(&bwd, bt);
+    println!(
+        "{}",
+        trace::render(
+            &format!("Trace vs sim — measured executor timeline vs event engine (P={p}, depth {depth})"),
+            &[("fwd", &fc), ("bwd", &bc)],
+        )
+    );
+    println!(
+        "(dur err = mean per-op |measured - calibrated| / calibrated; start skew = mean \
+         |measured - predicted| start offset as a fraction of the measured makespan; total \
+         err = makespan relative error. Cost model calibrated from the trace's per-class \
+         means — the comparison isolates the *scheduling structure*.)"
+    );
+    Ok(())
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write one bench JSON document (`{"bench": ..., "schedule": "balanced",
+/// "results": [...]}`); `rows` are pre-rendered JSON objects. One emitter
+/// for all three bench grids so the envelope cannot drift.
+fn write_bench_json(path: &str, bench: &str, rows: &[String]) -> anyhow::Result<()> {
+    let mut buf = format!(
+        "{{\n  \"bench\": \"{bench}\",\n  \"schedule\": \"balanced\",\n  \"results\": [\n"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        buf.push_str("    ");
+        buf.push_str(r);
+        buf.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    buf.push_str("  ]\n}\n");
+    std::fs::write(path, &buf)?;
+    println!("wrote {} {bench} results to {path}", rows.len());
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let rows = paper::optimizer_rows();
     if args.get("json", "false") == "true" {
-        let out_path = args.get("out", "BENCH_optimizer.json");
-        let mut buf = String::from("{\n  \"bench\": \"optimizer\",\n  \"schedule\": \"balanced\",\n  \"results\": [\n");
-        for (i, r) in rows.iter().enumerate() {
-            buf.push_str(&format!(
-                "    {{\"model\": \"{}\", \"cluster\": \"{}\", \"seq_per_gpu\": {}, \"pass\": \"{}\", \
-                 \"default_s\": {:.9}, \"optimized_s\": {:.9}, \"speedup\": {:.4}, \
-                 \"prefetch_depth\": {}, \"flipped_steps\": {}, \"moved_ranks\": {}, \"sim_calls\": {}}}{}\n",
-                json_escape(r.model),
-                json_escape(r.cluster),
-                r.seq_per_gpu,
-                json_escape(r.pass),
-                r.default_s,
-                r.optimized_s,
-                r.speedup(),
-                r.prefetch_depth,
-                r.flipped_steps,
-                r.moved_ranks,
-                r.sim_calls,
-                if i + 1 < rows.len() { "," } else { "" }
-            ));
-        }
-        buf.push_str("  ]\n}\n");
-        std::fs::write(&out_path, &buf)?;
-        println!("wrote {} optimizer results to {out_path}", rows.len());
+        let jrows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"model\": \"{}\", \"cluster\": \"{}\", \"seq_per_gpu\": {}, \"pass\": \"{}\", \
+                     \"default_s\": {:.9}, \"optimized_s\": {:.9}, \"speedup\": {:.4}, \
+                     \"prefetch_depth\": {}, \"flipped_steps\": {}, \"moved_ranks\": {}, \"sim_calls\": {}}}",
+                    json_escape(r.model),
+                    json_escape(r.cluster),
+                    r.seq_per_gpu,
+                    json_escape(r.pass),
+                    r.default_s,
+                    r.optimized_s,
+                    r.speedup(),
+                    r.prefetch_depth,
+                    r.flipped_steps,
+                    r.moved_ranks,
+                    r.sim_calls,
+                )
+            })
+            .collect();
+        write_bench_json(&args.get("out", "BENCH_optimizer.json"), "optimizer", &jrows)?;
 
         // token-level rebalancer grid -> BENCH_varlen.json
-        let vrows = paper::varlen_rows();
-        let vout_path = args.get("varlen-out", "BENCH_varlen.json");
-        let mut vbuf = String::from(
-            "{\n  \"bench\": \"varlen\",\n  \"schedule\": \"balanced\",\n  \"results\": [\n",
-        );
-        for (i, r) in vrows.iter().enumerate() {
-            vbuf.push_str(&format!(
-                "    {{\"model\": \"{}\", \"cluster\": \"{}\", \"n_docs\": {}, \"zipf_alpha\": {:.2}, \
-                 \"seq_per_gpu\": {}, \"pass\": \"{}\", \"pad_s\": {:.9}, \"equal_s\": {:.9}, \
-                 \"optimized_s\": {:.9}, \"speedup_vs_pad\": {:.4}, \"speedup_vs_equal\": {:.4}, \
-                 \"prefetch_depth\": {}, \"flipped_pairs\": {}, \"moved_boundaries\": {}, \
-                 \"sim_calls\": {}, \"incremental_rescores\": {}}}{}\n",
-                json_escape(r.model),
-                json_escape(r.cluster),
-                r.n_docs,
-                r.zipf_alpha,
-                r.seq_per_gpu,
-                json_escape(r.pass),
-                r.pad_s,
-                r.equal_s,
-                r.optimized_s,
-                r.speedup_vs_pad(),
-                r.speedup_vs_equal(),
-                r.prefetch_depth,
-                r.flipped_pairs,
-                r.moved_boundaries,
-                r.sim_calls,
-                r.incremental_rescores,
-                if i + 1 < vrows.len() { "," } else { "" }
-            ));
+        let jrows: Vec<String> = paper::varlen_rows()
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"model\": \"{}\", \"cluster\": \"{}\", \"n_docs\": {}, \"zipf_alpha\": {:.2}, \
+                     \"seq_per_gpu\": {}, \"pass\": \"{}\", \"pad_s\": {:.9}, \"equal_s\": {:.9}, \
+                     \"optimized_s\": {:.9}, \"speedup_vs_pad\": {:.4}, \"speedup_vs_equal\": {:.4}, \
+                     \"prefetch_depth\": {}, \"flipped_pairs\": {}, \"moved_boundaries\": {}, \
+                     \"sim_calls\": {}, \"incremental_rescores\": {}}}",
+                    json_escape(r.model),
+                    json_escape(r.cluster),
+                    r.n_docs,
+                    r.zipf_alpha,
+                    r.seq_per_gpu,
+                    json_escape(r.pass),
+                    r.pad_s,
+                    r.equal_s,
+                    r.optimized_s,
+                    r.speedup_vs_pad(),
+                    r.speedup_vs_equal(),
+                    r.prefetch_depth,
+                    r.flipped_pairs,
+                    r.moved_boundaries,
+                    r.sim_calls,
+                    r.incremental_rescores,
+                )
+            })
+            .collect();
+        write_bench_json(&args.get("varlen-out", "BENCH_varlen.json"), "varlen", &jrows)?;
+
+        // executor transport micro-bench -> BENCH_executor.json
+        if args.get("skip-exec", "false") != "true" {
+            let erows = paper::executor_bench_rows();
+            let jrows: Vec<String> = erows
+                .iter()
+                .map(|r| {
+                    format!(
+                        "{{\"preset\": \"{}\", \"p\": {}, \"heads\": {}, \"kv_heads\": {}, \
+                         \"chunk\": {}, \"head_dim\": {}, \"baseline_s\": {:.9}, \
+                         \"zero_copy_s\": {:.9}, \"speedup\": {:.4}}}",
+                        json_escape(r.preset),
+                        r.p,
+                        r.heads,
+                        r.kv_heads,
+                        r.chunk,
+                        r.head_dim,
+                        r.baseline_s,
+                        r.zero_copy_s,
+                        r.speedup(),
+                    )
+                })
+                .collect();
+            write_bench_json(&args.get("exec-out", "BENCH_executor.json"), "executor", &jrows)?;
+            println!("{}", paper::executor_bench_table(&erows));
         }
-        vbuf.push_str("  ]\n}\n");
-        std::fs::write(&vout_path, &vbuf)?;
-        println!("wrote {} varlen results to {vout_path}", vrows.len());
     } else {
         println!("{}", paper::optimized_schedules());
         println!("{}", paper::varlen_schedules());
+        if args.get("skip-exec", "false") != "true" {
+            println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
+        }
     }
     Ok(())
 }
@@ -562,8 +676,9 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|verify|train|simulate|plans|optimize|bench|inspect> [--flag value]...\n\
-         `tables`, `simulate`, `plans`, `optimize`, and `bench` run on a bare checkout;\n\
+         usage: repro <tables|figures|verify|train|simulate|plans|optimize|trace|bench|inspect> [--flag value]...\n\
+         `tables`, `simulate`, `plans`, `optimize`, `trace`, and `bench` run on a bare checkout\n\
+         (`trace` and the executor micro-bench use the pure-host kernel backends);\n\
          `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate"
     );
 }
@@ -583,6 +698,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "plans" => cmd_plans(&args),
         "optimize" => cmd_optimize(&args),
+        "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {

@@ -4,6 +4,7 @@
 
 pub mod paper;
 pub mod table;
+pub mod trace;
 
 pub use table::Table;
 

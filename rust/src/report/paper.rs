@@ -5,6 +5,8 @@
 //!
 //! Used by `repro tables|figures` and by `cargo bench --bench paper_tables`.
 
+use std::sync::Arc;
+
 use crate::baselines::distflash::DistFlashAttn;
 use crate::baselines::megatron::{pp_stage_memory, Megatron};
 use crate::baselines::ring_attention::RingAttention;
@@ -13,7 +15,10 @@ use crate::baselines::ulysses::Ulysses;
 use crate::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
 use crate::config::{ClusterSpec, PaperModel};
 use crate::coordinator::optimize::{autotune_depth, optimize_schedule, optimize_varlen, OptimizeOpts};
-use crate::coordinator::{CkptStrategy, Pass, Schedule, ScheduleKind, VarlenSpec};
+use crate::coordinator::{
+    build_plans, run_dist_attention_exec, BackendSpec, CkptStrategy, ExecOpts, Pass, Plan,
+    Schedule, ScheduleKind, VarlenSpec,
+};
 use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
 use crate::report::Table;
 use crate::simulator::{simulate_plan, EventOpts, EventResult};
@@ -650,6 +655,138 @@ pub fn varlen_schedules() -> String {
             format!("{}", r.flipped_pairs),
             format!("{}", r.moved_boundaries),
             format!("{}", r.sim_calls),
+        ]);
+    }
+    t.render()
+}
+
+/// One row of the executor transport micro-bench — shared by the
+/// `executor_bench` table and `repro bench --json`
+/// (`BENCH_executor.json`). Both arms run the *real* threaded executor
+/// (fwd + bwd) with the zero-work kernel echo, so kernel time is identical
+/// by construction and the measured delta is purely the runtime fabric:
+/// deep-copy sends + fully blocking receives (the pre-zero-copy executor)
+/// vs Arc-backed zero-copy sends + posted receives at the plan's depth.
+#[derive(Clone, Debug)]
+pub struct ExecBenchRow {
+    pub preset: &'static str,
+    pub p: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    /// Tokens per chunk (per worker).
+    pub chunk: usize,
+    pub head_dim: usize,
+    /// Median wall-clock, deep-copy sends + depth-0 blocking receives.
+    pub baseline_s: f64,
+    /// Median wall-clock, zero-copy sends + posted receives.
+    pub zero_copy_s: f64,
+}
+
+impl ExecBenchRow {
+    pub fn speedup(&self) -> f64 {
+        if self.zero_copy_s > 0.0 {
+            self.baseline_s / self.zero_copy_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Median executor wall-clock (fwd + bwd) over `iters` runs of one arm.
+fn exec_bench_arm(
+    fwd: &Arc<Plan>,
+    bwd: &Arc<Plan>,
+    q: &crate::runtime::Tensor,
+    kv: &crate::runtime::Tensor,
+    do_: &crate::runtime::Tensor,
+    deep: bool,
+    iters: usize,
+) -> f64 {
+    let opts = ExecOpts {
+        backend: BackendSpec::Null,
+        trace: false,
+        deep_copy_sends: deep,
+    };
+    let s = crate::util::bench::bench("exec", 1, iters, || {
+        run_dist_attention_exec(
+            fwd.clone(),
+            bwd.clone(),
+            q,
+            kv,
+            kv,
+            Some(do_),
+            &opts,
+        )
+        .expect("executor bench run failed");
+    });
+    s.p50_ns / 1e9
+}
+
+/// Run the executor micro-bench grid. The headline row is the 2x8 dev
+/// preset (16 ranks, LLaMA-ish head geometry): the acceptance gate is a
+/// >= 1.5x wall-clock win for zero-copy sends + posted receives over the
+/// pre-PR deep-copy/blocking executor on that row.
+pub fn executor_bench_rows() -> Vec<ExecBenchRow> {
+    let grid: &[(&'static str, usize, usize, usize, usize, usize)] = &[
+        ("1x8-dev", 8, 8, 8, 1024, 64),
+        ("2x8-dev", 16, 8, 8, 1024, 64),
+    ];
+    // median of 5: the expected gap (multi-GB of memcpy vs refcount
+    // bumps) is far wider than shared-runner noise, but singleton medians
+    // of a 16-thread bench are not
+    let iters = 5;
+    let mut out = Vec::new();
+    for &(preset, p, h, kvh, chunk, d) in grid {
+        let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).expect("plans");
+        // depth-0 twins: the fully blocking pre-PR receive path
+        let mut f0 = (*fwd).clone();
+        f0.prefetch_depth = 0;
+        let mut b0 = (*bwd).clone();
+        b0.prefetch_depth = 0;
+        let (f0, b0) = (Arc::new(f0), Arc::new(b0));
+        let n = p * chunk;
+        // values are irrelevant to the transport layer (Null kernels):
+        // zeros keep setup cheap and deterministic
+        let q = crate::runtime::Tensor::zeros(&[h, n, d]);
+        let kv = crate::runtime::Tensor::zeros(&[kvh, n, d]);
+        let do_ = crate::runtime::Tensor::zeros(&[h, n, d]);
+        let baseline_s = exec_bench_arm(&f0, &b0, &q, &kv, &do_, true, iters);
+        let zero_copy_s = exec_bench_arm(&fwd, &bwd, &q, &kv, &do_, false, iters);
+        out.push(ExecBenchRow {
+            preset,
+            p,
+            heads: h,
+            kv_heads: kvh,
+            chunk,
+            head_dim: d,
+            baseline_s,
+            zero_copy_s,
+        });
+    }
+    out
+}
+
+/// Executor micro-bench as a table (the human-readable side of
+/// `BENCH_executor.json`).
+pub fn executor_bench_table(rows: &[ExecBenchRow]) -> String {
+    let mut t = Table::new(
+        "Executor transport micro-bench — deep-copy/blocking vs zero-copy/prefetch (fwd+bwd, null kernels)",
+    );
+    t.header(
+        ["preset", "P", "H/KVH", "chunk", "d", "baseline (ms)", "zero-copy (ms)", "speedup"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for r in rows {
+        t.row(vec![
+            r.preset.into(),
+            format!("{}", r.p),
+            format!("{}/{}", r.heads, r.kv_heads),
+            k(r.chunk),
+            format!("{}", r.head_dim),
+            format!("{:.2}", r.baseline_s * 1e3),
+            format!("{:.2}", r.zero_copy_s * 1e3),
+            format!("{:.2}x", r.speedup()),
         ]);
     }
     t.render()

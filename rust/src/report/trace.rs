@@ -1,0 +1,289 @@
+//! Measured-vs-simulated: align a merged runtime trace ([`MergedTrace`])
+//! with the event engine's per-op predictions — the first *measured*
+//! validation of the repo's timing claims (ROADMAP: "Real-runtime event
+//! trace").
+//!
+//! The executor and the simulator consume the same [`Plan`], so every
+//! traced span has exactly one predicted op to compare against. Absolute
+//! seconds are not comparable (host threads vs a modeled GPU cluster);
+//! instead the cost model is *calibrated from the trace itself* — each
+//! kernel class (diag / full / rescale) priced at its measured mean, and
+//! transfers priced near zero (an in-process zero-copy send has no wire) —
+//! and the event engine then replays the plan under that calibrated cost
+//! on an idealized one-node cluster. What remains is a pure test of the
+//! *scheduling structure*: do the plan's dependency edges, stream
+//! disciplines, and barriers predict where time actually went? Reported
+//! per op (duration spread and start-time skew) and in total (makespan
+//! relative error).
+
+use crate::config::{ClusterSpec, GpuSpec};
+use crate::coordinator::executor::MergedTrace;
+use crate::coordinator::plan::{Kernel, Plan, PlanOp};
+use crate::report::Table;
+use crate::simulator::{simulate_plan, AttnCost, EventOpts, EventResult};
+
+/// Kernel classes the calibration distinguishes (transfers excluded: an
+/// in-process send has no measurable wire time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Class {
+    Diag,
+    Full,
+    Rescale,
+}
+
+fn class_of(plan: &Plan, op: usize) -> Option<Class> {
+    match &plan.ops[op].op {
+        PlanOp::Compute { kernel, pair } => match kernel {
+            Kernel::AttnDiag => Some(Class::Diag),
+            Kernel::AttnFull => Some(Class::Full),
+            Kernel::AttnTok { .. } => match pair {
+                Some((q, kv)) if q == kv => Some(Class::Diag),
+                _ => Some(Class::Full),
+            },
+            Kernel::Rescale | Kernel::RescaleTok { .. } => Some(Class::Rescale),
+            Kernel::Accum | Kernel::Raw(_) => None,
+        },
+        PlanOp::Xfer { .. } => None,
+    }
+}
+
+/// Per-kernel-class measured/predicted aggregates.
+#[derive(Clone, Debug)]
+pub struct ClassStats {
+    pub name: &'static str,
+    pub count: usize,
+    /// Mean measured kernel seconds (also the calibrated sim cost).
+    pub measured_mean_s: f64,
+    /// Mean |measured - calibrated| / calibrated across the class's ops —
+    /// the per-op duration spread the single-cost model cannot express.
+    pub duration_rel_err: f64,
+}
+
+/// One plan's trace-vs-sim alignment (see module docs).
+#[derive(Clone, Debug)]
+pub struct TraceComparison {
+    pub classes: Vec<ClassStats>,
+    /// Measured wall-clock: first traced start to last traced end.
+    pub measured_total_s: f64,
+    /// Event-engine makespan under the trace-calibrated cost.
+    pub sim_total_s: f64,
+    /// |measured - sim| / measured.
+    pub total_rel_err: f64,
+    /// Mean |measured op duration - predicted| / predicted over compute
+    /// ops (duplicates the per-class spread, aggregated).
+    pub per_op_duration_rel_err: f64,
+    /// Worst per-op duration error.
+    pub per_op_duration_max_err: f64,
+    /// Mean |measured start - predicted start| / measured makespan —
+    /// how well the schedule structure predicts *when* ops run.
+    pub start_skew_frac: f64,
+    pub n_ops_compared: usize,
+}
+
+/// Idealized cluster for calibrated replay: every rank on one node,
+/// links effectively infinite (the in-process fabric has no wire).
+fn host_cluster(p: usize) -> ClusterSpec {
+    ClusterSpec {
+        n_nodes: 1,
+        gpus_per_node: p.max(1),
+        gpu: GpuSpec::a100_80g(),
+        intra_bw: 1e18,
+        intra_lat: 0.0,
+        inter_bw: 1e18,
+        inter_lat: 0.0,
+    }
+}
+
+/// Cost model calibrated from the measured per-class means. Transfer
+/// payloads are priced at one byte (≈ zero seconds on the idealized
+/// cluster) — the sim then answers "given the measured kernel times, when
+/// would the plan's structure run each op?".
+pub fn calibrate_cost(plan: &Plan, trace: &MergedTrace) -> AttnCost {
+    let mut sum = [0.0f64; 3];
+    let mut cnt = [0usize; 3];
+    for op in 0..plan.ops.len() {
+        if !trace.covered[op] {
+            continue;
+        }
+        if let Some(c) = class_of(plan, op) {
+            sum[c as usize] += trace.op_duration(op);
+            cnt[c as usize] += 1;
+        }
+    }
+    let mean = |i: usize| if cnt[i] > 0 { sum[i] / cnt[i] as f64 } else { 0.0 };
+    AttnCost {
+        pair_diag_s: mean(Class::Diag as usize),
+        pair_full_s: mean(Class::Full as usize),
+        rescale_s: mean(Class::Rescale as usize),
+        kv_bytes: 1.0,
+        q_bytes: 1.0,
+        result_bytes: 1.0,
+        overlap: true,
+    }
+}
+
+/// Compare a measured trace against the calibrated event-engine replay.
+pub fn compare(plan: &Plan, trace: &MergedTrace) -> TraceComparison {
+    let cost = calibrate_cost(plan, trace);
+    let cluster = host_cluster(plan.n_workers);
+    let sim: EventResult =
+        simulate_plan(plan, &cluster, &cost, &EventOpts::for_plan(plan));
+
+    // shift measured timestamps so both timelines start at zero
+    let mut t0 = f64::INFINITY;
+    for op in 0..plan.ops.len() {
+        if trace.covered[op] {
+            t0 = t0.min(trace.start_s[op]);
+        }
+    }
+    if !t0.is_finite() {
+        t0 = 0.0;
+    }
+    let measured_total_s = trace.makespan_s();
+
+    let mut classes: Vec<(Class, &'static str, Vec<usize>)> = vec![
+        (Class::Diag, "attn diag", Vec::new()),
+        (Class::Full, "attn full", Vec::new()),
+        (Class::Rescale, "rescale", Vec::new()),
+    ];
+    for op in 0..plan.ops.len() {
+        if !trace.covered[op] {
+            continue;
+        }
+        if let Some(c) = class_of(plan, op) {
+            classes.iter_mut().find(|(k, _, _)| *k == c).unwrap().2.push(op);
+        }
+    }
+
+    let mut dur_err_sum = 0.0;
+    let mut dur_err_max = 0.0f64;
+    let mut start_skew_sum = 0.0;
+    let mut n = 0usize;
+    let mut out_classes = Vec::new();
+    for (_, name, ops) in &classes {
+        if ops.is_empty() {
+            continue;
+        }
+        let mut meas_sum = 0.0;
+        let mut err_sum = 0.0;
+        for &op in ops {
+            let meas = trace.op_duration(op);
+            let pred = sim.op_duration(op);
+            meas_sum += meas;
+            let err = if pred > 0.0 { (meas - pred).abs() / pred } else { 0.0 };
+            err_sum += err;
+            dur_err_sum += err;
+            dur_err_max = dur_err_max.max(err);
+            if measured_total_s > 0.0 {
+                start_skew_sum +=
+                    ((trace.start_s[op] - t0) - sim.op_start[op]).abs() / measured_total_s;
+            }
+            n += 1;
+        }
+        out_classes.push(ClassStats {
+            name,
+            count: ops.len(),
+            measured_mean_s: meas_sum / ops.len() as f64,
+            duration_rel_err: err_sum / ops.len() as f64,
+        });
+    }
+
+    let total_rel_err = if measured_total_s > 0.0 {
+        (measured_total_s - sim.total_s).abs() / measured_total_s
+    } else {
+        0.0
+    };
+    TraceComparison {
+        classes: out_classes,
+        measured_total_s,
+        sim_total_s: sim.total_s,
+        total_rel_err,
+        per_op_duration_rel_err: if n > 0 { dur_err_sum / n as f64 } else { 0.0 },
+        per_op_duration_max_err: dur_err_max,
+        start_skew_frac: if n > 0 { start_skew_sum / n as f64 } else { 0.0 },
+        n_ops_compared: n,
+    }
+}
+
+/// Render one or more labeled comparisons (typically fwd + bwd of one
+/// call) as the `repro trace` table.
+pub fn render(title: &str, rows: &[(&str, &TraceComparison)]) -> String {
+    let mut t = Table::new(title);
+    t.header(
+        [
+            "pass", "class", "ops", "measured mean", "dur err", "start skew",
+            "measured total", "sim total", "total err",
+        ]
+        .map(String::from)
+        .to_vec(),
+    );
+    for (label, c) in rows {
+        for (i, cs) in c.classes.iter().enumerate() {
+            let (tail_meas, tail_sim, tail_err, skew) = if i == 0 {
+                (
+                    format!("{:.2} ms", c.measured_total_s * 1e3),
+                    format!("{:.2} ms", c.sim_total_s * 1e3),
+                    format!("{:.1}%", c.total_rel_err * 100.0),
+                    format!("{:.1}%", c.start_skew_frac * 100.0),
+                )
+            } else {
+                (String::new(), String::new(), String::new(), String::new())
+            };
+            t.row(vec![
+                if i == 0 { (*label).to_string() } else { String::new() },
+                cs.name.to_string(),
+                format!("{}", cs.count),
+                format!("{:.3} ms", cs.measured_mean_s * 1e3),
+                format!("{:.1}%", cs.duration_rel_err * 100.0),
+                skew,
+                tail_meas,
+                tail_sim,
+                tail_err,
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Schedule;
+    use crate::coordinator::plan::Pass;
+
+    /// A synthetic trace that replays the simulator's own timeline must
+    /// align with ~zero error — the comparison is exact on its fixed
+    /// point.
+    #[test]
+    fn self_consistent_trace_has_zero_error() {
+        let plan = Plan::from_schedule(&Schedule::balanced(4), Pass::Forward);
+        let cost = AttnCost {
+            pair_full_s: 2e-3,
+            pair_diag_s: 1e-3,
+            rescale_s: 1e-4,
+            kv_bytes: 1.0,
+            q_bytes: 1.0,
+            result_bytes: 1.0,
+            overlap: true,
+        };
+        let cluster = host_cluster(plan.n_workers);
+        let sim = simulate_plan(&plan, &cluster, &cost, &EventOpts::for_plan(&plan));
+        let mut trace = MergedTrace {
+            start_s: sim.op_start.clone(),
+            end_s: sim.op_finish.clone(),
+            covered: vec![false; plan.n_ops()],
+        };
+        for (op, node) in plan.ops.iter().enumerate() {
+            if matches!(node.op, PlanOp::Compute { .. }) {
+                trace.covered[op] = true;
+            }
+        }
+        let c = compare(&plan, &trace);
+        assert!(c.n_ops_compared > 0);
+        assert!(c.total_rel_err < 1e-9, "total err {}", c.total_rel_err);
+        assert!(c.per_op_duration_rel_err < 1e-9);
+        assert!(c.start_skew_frac < 1e-9, "skew {}", c.start_skew_frac);
+        let s = render("trace", &[("fwd", &c)]);
+        assert!(s.contains("attn full") && s.contains("total err"));
+    }
+}

@@ -107,7 +107,7 @@ impl Runtime {
         let bufs: Vec<xla::PjRtBuffer> = inputs
             .iter()
             .map(|v| match v {
-                Value::F32(t) => self.client.buffer_from_host_buffer(&t.data, &t.shape, None),
+                Value::F32(t) => self.client.buffer_from_host_buffer(t.data(), &t.shape, None),
                 Value::I32(t) => self.client.buffer_from_host_buffer(&t.data, &t.shape, None),
             })
             .collect::<xla::Result<_>>()

@@ -1,13 +1,16 @@
-//! PJRT runtime layer: host tensors, the artifact manifest contract, and the
-//! compile-once/execute-many client wrapper.
+//! PJRT runtime layer: host tensors, the artifact manifest contract, the
+//! compile-once/execute-many client wrapper, and the kernel-backend seam
+//! ([`Kernels`]) with the pure-host reference/null implementations.
 //!
 //! Pattern adapted from /opt/xla-example/load_hlo: HLO text ->
 //! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
 
 pub mod artifacts;
 pub mod client;
+pub mod hostref;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ModelConfigJson};
 pub use client::{Runtime, RuntimeStats};
+pub use hostref::{HostKernels, Kernels, NullKernels};
 pub use tensor::{ITensor, Tensor, Value};

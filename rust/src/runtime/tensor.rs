@@ -3,14 +3,40 @@
 //! Workers exchange these over channels (the NCCL-P2P substitute) and feed
 //! them to PJRT executables. Everything on the coordinator hot path is
 //! `f32`; token ids are `i32` (the only integer inputs any artifact takes).
+//!
+//! ## Zero-copy fabric
+//!
+//! `Tensor` storage is a shared `Arc<Vec<f32>>`, so `clone()` is a
+//! refcount bump plus the (tiny) shape vector — `WorkerComm::send` of a
+//! whole (k, v) chunk allocates nothing and copies nothing. Mutation goes
+//! through [`Tensor::data_mut`], which is copy-on-write (`Arc::make_mut`):
+//! a tensor whose buffer is shared, or which is a borrowed *view* of a
+//! larger buffer, privatizes its window first, so aliasing is never
+//! observable through the public API.
+//!
+//! Views are contiguous windows (`off .. off + numel`) of a parent buffer:
+//! [`Tensor::chunk0`], [`Tensor::flat_view`], [`Tensor::reshape`], and the
+//! axis-1 chunkers when the head axis is 1 all return non-materializing
+//! slices. Axis-1 chunks of a multi-head tensor interleave head-major rows
+//! and are necessarily copies.
+
+use std::sync::Arc;
 
 use xla::Literal;
 
-/// Dense row-major f32 host tensor.
-#[derive(Clone, Debug, PartialEq)]
+/// Dense row-major f32 host tensor backed by shared, copy-on-write storage
+/// (see the module docs).
+#[derive(Clone, Debug)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    buf: Arc<Vec<f32>>,
+    off: usize,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl Tensor {
@@ -21,43 +47,101 @@ impl Tensor {
             "shape {shape:?} does not match data len {}",
             data.len()
         );
-        Tensor { shape, data }
+        Tensor { shape, buf: Arc::new(data), off: 0 }
+    }
+
+    /// Window of `buf` starting at `off`, sized by `shape`.
+    fn view_of(buf: Arc<Vec<f32>>, shape: Vec<usize>, off: usize) -> Self {
+        debug_assert!(off + shape.iter().product::<usize>() <= buf.len());
+        Tensor { shape, buf, off }
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor::new(shape.to_vec(), vec![0.0; n])
     }
 
     /// Filled with `v` (e.g. `f32::NEG_INFINITY` for the `m` statistic).
     pub fn full(shape: &[usize], v: f32) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+        Tensor::new(shape.to_vec(), vec![v; n])
     }
 
     pub fn scalar(v: f32) -> Self {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor::new(vec![], vec![v])
     }
 
     pub fn numel(&self) -> usize {
-        self.data.len()
+        self.shape.iter().product()
+    }
+
+    /// The elements, row-major. Always contiguous (views are windows).
+    pub fn data(&self) -> &[f32] {
+        &self.buf[self.off..self.off + self.numel()]
+    }
+
+    /// Mutable elements — copy-on-write: a shared or view-backed buffer is
+    /// privatized first, so writes never alias another tensor.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        let n = self.numel();
+        if self.off != 0 || self.buf.len() != n {
+            // view of a larger buffer: materialize just the window
+            let owned: Vec<f32> = self.data().to_vec();
+            self.buf = Arc::new(owned);
+            self.off = 0;
+        }
+        Arc::make_mut(&mut self.buf).as_mut_slice()
+    }
+
+    /// Force a private, tightly-sized allocation. Models the pre-zero-copy
+    /// send path in the executor micro-bench, and detaches a small view
+    /// from a large parent buffer it would otherwise keep alive.
+    pub fn deep_clone(&self) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data().to_vec())
+    }
+
+    /// Whether two tensors share one underlying allocation (zero-copy
+    /// assertions in tests and benches).
+    pub fn shares_buffer(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// Zero-copy reshape: same elements, new shape.
+    pub fn reshape(&self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.numel(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        Tensor::view_of(self.buf.clone(), shape, self.off)
+    }
+
+    /// Zero-copy rank-1 window over the row-major elements.
+    pub fn flat_view(&self, range: std::ops::Range<usize>) -> Tensor {
+        assert!(range.start <= range.end && range.end <= self.numel());
+        Tensor::view_of(
+            self.buf.clone(),
+            vec![range.end - range.start],
+            self.off + range.start,
+        )
     }
 
     pub fn as_scalar(&self) -> f32 {
-        assert_eq!(self.data.len(), 1, "not a scalar: shape {:?}", self.shape);
-        self.data[0]
+        assert_eq!(self.numel(), 1, "not a scalar: shape {:?}", self.shape);
+        self.data()[0]
     }
 
     /// Elementwise accumulate (gradient reduction on the host).
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
             *a += b;
         }
     }
 
     pub fn scale(&mut self, s: f32) {
-        for a in &mut self.data {
+        for a in self.data_mut() {
             *a *= s;
         }
     }
@@ -65,18 +149,19 @@ impl Tensor {
     /// Max |a - b|; panics on shape mismatch. Used by verification paths.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
-        self.data
+        self.data()
             .iter()
-            .zip(&other.data)
+            .zip(other.data())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
 
     pub fn l2_norm(&self) -> f32 {
-        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+        self.data().iter().map(|x| x * x).sum::<f32>().sqrt()
     }
 
-    /// Split axis-0 into `n` equal chunks (sequence sharding).
+    /// Split axis-0 into `n` equal chunks (sequence sharding) — zero-copy
+    /// views into the parent buffer.
     pub fn chunk0(&self, n: usize) -> Vec<Tensor> {
         assert!(!self.shape.is_empty() && self.shape[0] % n == 0);
         let rows = self.shape[0] / n;
@@ -84,7 +169,7 @@ impl Tensor {
         let mut shape = self.shape.clone();
         shape[0] = rows;
         (0..n)
-            .map(|i| Tensor::new(shape.clone(), self.data[i * stride..(i + 1) * stride].to_vec()))
+            .map(|i| Tensor::view_of(self.buf.clone(), shape.clone(), self.off + i * stride))
             .collect()
     }
 
@@ -96,23 +181,36 @@ impl Tensor {
         let mut data = Vec::with_capacity(shape.iter().product());
         for p in parts {
             assert_eq!(p.shape[1..], parts[0].shape[1..], "cat0 trailing dims differ");
-            data.extend_from_slice(&p.data);
+            data.extend_from_slice(p.data());
         }
         Tensor::new(shape, data)
     }
 
     /// Split axis-1 of a rank-3 tensor (H, N, D) into `n` chunks of the N
     /// axis — the layout used to shard per-head q/k/v across workers.
+    /// Zero-copy when H == 1 (the chunks are contiguous windows).
     pub fn chunk_axis1(&self, n: usize) -> Vec<Tensor> {
         assert_eq!(self.shape.len(), 3);
         let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
         assert_eq!(c % n, 0);
         let rows = c / n;
+        if h == 1 {
+            return (0..n)
+                .map(|i| {
+                    Tensor::view_of(
+                        self.buf.clone(),
+                        vec![1, rows, d],
+                        self.off + i * rows * d,
+                    )
+                })
+                .collect();
+        }
+        let src = self.data();
         let mut out = vec![Vec::with_capacity(h * rows * d); n];
         for hh in 0..h {
-            for i in 0..n {
+            for (i, chunk) in out.iter_mut().enumerate() {
                 let start = hh * c * d + i * rows * d;
-                out[i].extend_from_slice(&self.data[start..start + rows * d]);
+                chunk.extend_from_slice(&src[start..start + rows * d]);
             }
         }
         out.into_iter()
@@ -123,7 +221,8 @@ impl Tensor {
     /// Ragged split of axis 1 at explicit token boundaries — the varlen
     /// (document-packed) sharding. `bounds` holds `n + 1` monotone offsets
     /// covering the axis exactly; chunk `i` gets rows
-    /// `bounds[i]..bounds[i+1]`. `cat_axis1` is the inverse.
+    /// `bounds[i]..bounds[i+1]`. `cat_axis1` is the inverse. Zero-copy
+    /// when H == 1.
     pub fn chunk_axis1_at(&self, bounds: &[usize]) -> Vec<Tensor> {
         assert_eq!(self.shape.len(), 3);
         let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
@@ -131,15 +230,28 @@ impl Tensor {
         assert_eq!(bounds[0], 0);
         assert_eq!(*bounds.last().unwrap(), c);
         let n = bounds.len() - 1;
+        if h == 1 {
+            return bounds
+                .windows(2)
+                .map(|w| {
+                    Tensor::view_of(
+                        self.buf.clone(),
+                        vec![1, w[1] - w[0], d],
+                        self.off + w[0] * d,
+                    )
+                })
+                .collect();
+        }
+        let src = self.data();
         let mut out: Vec<Vec<f32>> = bounds
             .windows(2)
             .map(|w| Vec::with_capacity(h * (w[1] - w[0]) * d))
             .collect();
         for hh in 0..h {
-            for i in 0..n {
+            for (i, chunk) in out.iter_mut().enumerate() {
                 let start = hh * c * d + bounds[i] * d;
                 let end = hh * c * d + bounds[i + 1] * d;
-                out[i].extend_from_slice(&self.data[start..end]);
+                chunk.extend_from_slice(&src[start..end]);
             }
         }
         out.into_iter()
@@ -159,7 +271,7 @@ impl Tensor {
             for p in parts {
                 let rows = p.shape[1];
                 let start = hh * rows * d;
-                data.extend_from_slice(&p.data[start..start + rows * d]);
+                data.extend_from_slice(&p.data()[start..start + rows * d]);
             }
         }
         Tensor::new(vec![h, c, d], data)
@@ -168,9 +280,9 @@ impl Tensor {
     pub fn to_literal(&self) -> xla::Result<Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         if dims.is_empty() {
-            return Ok(Literal::scalar(self.data[0]));
+            return Ok(Literal::scalar(self.data()[0]));
         }
-        Literal::vec1(&self.data).reshape(&dims)
+        Literal::vec1(self.data()).reshape(&dims)
     }
 
     pub fn from_literal(lit: &Literal) -> xla::Result<Tensor> {
@@ -252,7 +364,7 @@ mod tests {
         let t = Tensor::new(vec![4, 3], (0..12).map(|x| x as f32).collect());
         let parts = t.chunk0(2);
         assert_eq!(parts[0].shape, vec![2, 3]);
-        assert_eq!(parts[1].data[0], 6.0);
+        assert_eq!(parts[1].data()[0], 6.0);
         assert_eq!(Tensor::cat0(&parts), t);
     }
 
@@ -263,8 +375,8 @@ mod tests {
         let parts = t.chunk_axis1(2);
         assert_eq!(parts[0].shape, vec![2, 2, 3]);
         // head 0 rows 0-1 then head 1 rows 0-1
-        assert_eq!(parts[0].data[0], 0.0);
-        assert_eq!(parts[0].data[6], 12.0);
+        assert_eq!(parts[0].data()[0], 0.0);
+        assert_eq!(parts[0].data()[6], 12.0);
         assert_eq!(Tensor::cat_axis1(&parts), t);
     }
 
@@ -282,5 +394,56 @@ mod tests {
     #[should_panic]
     fn bad_shape_panics() {
         Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_and_cow_unshares() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        assert!(a.shares_buffer(&b), "clone must share storage");
+        b.data_mut()[0] = 9.0;
+        assert!(!a.shares_buffer(&b), "write must privatize");
+        assert_eq!(a.data()[0], 1.0, "original untouched by CoW write");
+        assert_eq!(b.data()[0], 9.0);
+        assert!(!a.deep_clone().shares_buffer(&a));
+    }
+
+    #[test]
+    fn chunk0_views_share_until_written() {
+        let t = Tensor::new(vec![4, 3], (0..12).map(|x| x as f32).collect());
+        let mut parts = t.chunk0(2);
+        assert!(parts[0].shares_buffer(&t));
+        assert_eq!(parts[1].data(), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        parts[1].data_mut()[0] = -1.0;
+        assert!(!parts[1].shares_buffer(&t), "mutated view privatizes");
+        assert_eq!(t.data()[6], 6.0, "parent untouched");
+        assert_eq!(parts[1].data()[0], -1.0);
+        assert_eq!(parts[1].numel(), 6);
+    }
+
+    #[test]
+    fn single_head_axis1_chunks_are_views() {
+        let t = Tensor::new(vec![1, 6, 2], (0..12).map(|x| x as f32).collect());
+        let parts = t.chunk_axis1(3);
+        assert!(parts.iter().all(|p| p.shares_buffer(&t)));
+        assert_eq!(Tensor::cat_axis1(&parts), t);
+        let ragged = t.chunk_axis1_at(&[0, 1, 4, 6]);
+        assert!(ragged.iter().all(|p| p.shares_buffer(&t)));
+        assert_eq!(ragged[1].shape, vec![1, 3, 2]);
+        assert_eq!(Tensor::cat_axis1(&ragged), t);
+    }
+
+    #[test]
+    fn reshape_and_flat_view() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.reshape(vec![3, 2]);
+        assert!(r.shares_buffer(&t));
+        assert_eq!(r.data(), t.data());
+        let w = t.flat_view(2..5);
+        assert!(w.shares_buffer(&t));
+        assert_eq!(w.shape, vec![3]);
+        assert_eq!(w.data(), &[2.0, 3.0, 4.0]);
+        // view of a view composes
+        assert_eq!(w.flat_view(1..3).data(), &[3.0, 4.0]);
     }
 }

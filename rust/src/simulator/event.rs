@@ -57,6 +57,14 @@ impl Default for EventOpts {
     }
 }
 
+impl EventOpts {
+    /// Run the plan at its own carried depth (`Plan::prefetch_depth`) —
+    /// what the executor does, so trace-vs-sim comparisons line up.
+    pub fn for_plan(plan: &Plan) -> EventOpts {
+        EventOpts { prefetch_depth: plan.prefetch_depth }
+    }
+}
+
 /// Per-op timing plus the aggregate accounting the reports use.
 #[derive(Clone, Debug)]
 pub struct EventResult {
@@ -74,6 +82,11 @@ pub struct EventResult {
 }
 
 impl EventResult {
+    /// Predicted duration of one op (trace-vs-sim alignment).
+    pub fn op_duration(&self, op: usize) -> f64 {
+        self.op_finish[op] - self.op_start[op]
+    }
+
     /// Fraction of worker-slots spent neither computing (Fig. 1 metric).
     pub fn idle_fraction(&self) -> f64 {
         let denom = self.total_s * self.n_workers as f64;

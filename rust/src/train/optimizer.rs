@@ -41,7 +41,7 @@ impl Adam {
     pub fn grad_norm(grads: &[Tensor]) -> f32 {
         grads
             .iter()
-            .map(|g| g.data.iter().map(|x| x * x).sum::<f32>())
+            .map(|g| g.data().iter().map(|x| x * x).sum::<f32>())
             .sum::<f32>()
             .sqrt()
     }
@@ -71,13 +71,17 @@ impl Adam {
             .zip(grads)
             .zip(self.m.iter_mut().zip(self.v.iter_mut()))
         {
-            for i in 0..p.data.len() {
-                let gi = g.data[i] * scale;
-                m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
-                v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
-                let mhat = m.data[i] / bc1;
-                let vhat = v.data[i] / bc2;
-                p.data[i] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
+            let pd = p.data_mut();
+            let gd = g.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                let gi = gd[i] * scale;
+                md[i] = b1 * md[i] + (1.0 - b1) * gi;
+                vd[i] = b2 * vd[i] + (1.0 - b2) * gi * gi;
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                pd[i] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
             }
         }
     }
@@ -98,11 +102,11 @@ mod tests {
         for _ in 0..200 {
             let grads = vec![Tensor::new(
                 vec![4],
-                params[0].data.iter().map(|x| 2.0 * (x - 3.0)).collect(),
+                params[0].data().iter().map(|x| 2.0 * (x - 3.0)).collect(),
             )];
             adam.step(&mut params, &grads);
         }
-        for &x in &params[0].data {
+        for &x in params[0].data() {
             assert!((x - 3.0).abs() < 0.05, "converged to {x}");
         }
     }
@@ -118,7 +122,7 @@ mod tests {
         adam.step(&mut params, &huge);
         // first-step Adam update magnitude ≈ lr regardless, but clipped
         // grads keep m/v sane; just assert finiteness and small step
-        assert!(params[0].data.iter().all(|x| x.is_finite() && x.abs() < 0.2));
+        assert!(params[0].data().iter().all(|x| x.is_finite() && x.abs() < 0.2));
     }
 
     #[test]
@@ -133,6 +137,6 @@ mod tests {
             oa.step(&mut a, &g);
             ob.step(&mut b, &g);
         }
-        assert_eq!(a[0].data, b[0].data);
+        assert_eq!(a[0], b[0]);
     }
 }

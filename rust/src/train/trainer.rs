@@ -25,7 +25,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::ClusterSpec;
 use crate::coordinator::comm::{build_network_placed, WorkerComm};
-use crate::coordinator::executor::{AttnCtx, ATTN_ARTIFACTS};
+use crate::coordinator::executor::{AttnCtx, PlanIndex, RunTrace, ATTN_ARTIFACTS};
 use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
 use crate::coordinator::harness::{build_plans, build_plans_optimized};
 use crate::coordinator::optimize::OptimizeOpts;
@@ -162,6 +162,10 @@ struct Worker {
     /// Lowered schedule IR, shared with the simulators (one per pass).
     fwd_plan: Arc<Plan>,
     bwd_plan: Arc<Plan>,
+    /// Pre-resolved op walks for this rank — built once, reused by every
+    /// layer of every training step.
+    fwd_idx: PlanIndex,
+    bwd_idx: PlanIndex,
     cfg: TrainConfig,
     params: Vec<Tensor>,
     layout: ParamLayout,
@@ -194,17 +198,23 @@ impl Worker {
         &mut self,
         call_id: u32,
         backward: bool,
-        f: impl FnOnce(&mut AttnCtx) -> Result<Vec<Tensor>>,
+        f: impl FnOnce(&mut AttnCtx, &PlanIndex) -> Result<Vec<Tensor>>,
     ) -> Result<Vec<Tensor>> {
-        let plan = if backward { self.bwd_plan.clone() } else { self.fwd_plan.clone() };
+        let (plan, idx) = if backward {
+            (self.bwd_plan.clone(), &self.bwd_idx)
+        } else {
+            (self.fwd_plan.clone(), &self.fwd_idx)
+        };
         let mut ctx = AttnCtx {
             rank: self.rank,
             runtime: &self.runtime,
             comm: &mut self.comm,
             plan: &plan,
             call_id,
+            epoch: None,
+            trace: RunTrace::default(),
         };
-        f(&mut ctx)
+        f(&mut ctx, idx)
     }
 
     /// One full forward over the local chunk; returns (loss_local, ckpts,
@@ -235,8 +245,8 @@ impl Worker {
             )?;
             let (q, k, vv) = (&qkv[0], &qkv[1], &qkv[2]);
             let call = call_id(step, l, Pass::Fwd);
-            let out = self.attn_call(call, false, |ctx| {
-                let (o, lse) = ctx.forward(q, k, vv)?;
+            let out = self.attn_call(call, false, |ctx, idx| {
+                let (o, lse) = ctx.forward_indexed(idx, q, k, vv)?;
                 Ok(vec![o, lse])
             })?;
             let (o, lse) = (out[0].clone(), out[1].clone());
@@ -330,8 +340,8 @@ impl Worker {
                 Some((o, lse)) => (o.clone(), lse.clone()),
                 None => {
                     let call = call_id(step, l, Pass::Recompute);
-                    let out = self.attn_call(call, false, |ctx| {
-                        let (o, lse) = ctx.forward(&q, &k, &vv)?;
+                    let out = self.attn_call(call, false, |ctx, idx| {
+                        let (o, lse) = ctx.forward_indexed(idx, &q, &k, &vv)?;
                         Ok(vec![o, lse])
                     })?;
                     (out[0].clone(), out[1].clone())
@@ -361,8 +371,8 @@ impl Worker {
             grads[self.layout.layer(l, Self::W2)].add_assign(&p2[6]);
             // distributed attention backward (no fwd recompute — §3.3)
             let call = call_id(step, l, Pass::Bwd);
-            let attn_grads = self.attn_call(call, true, |ctx| {
-                let (dq, dk, dv) = ctx.backward(&q, &k, &vv, &o, &lse, &d_o)?;
+            let attn_grads = self.attn_call(call, true, |ctx, idx| {
+                let (dq, dk, dv) = ctx.backward_indexed(idx, &q, &k, &vv, &o, &lse, &d_o)?;
                 Ok(vec![dq, dk, dv])
             })?;
             // part1 backward
@@ -474,12 +484,20 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 n_layers: runtime.manifest().config.n_layers,
                 per_layer: runtime.manifest().layer_params.len(),
             };
+            // pre-resolve both plan walks once; every layer of every step
+            // reuses them (dep lookups never repeat)
+            let fwd_idx =
+                PlanIndex::new(&fwd_plan, rank, crate::coordinator::plan::Pass::Forward)?;
+            let bwd_idx =
+                PlanIndex::new(&bwd_plan, rank, crate::coordinator::plan::Pass::Backward)?;
             let mut w = Worker {
                 rank,
                 runtime,
                 comm,
                 fwd_plan,
                 bwd_plan,
+                fwd_idx,
+                bwd_idx,
                 cfg: cfg.clone(),
                 params,
                 layout,

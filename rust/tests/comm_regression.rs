@@ -12,7 +12,8 @@ use std::thread;
 
 use distflash::coordinator::comm::{build_network, build_network_placed, Tag, WorkerComm};
 use distflash::coordinator::{
-    Kernel, Pass, Payload, PayloadClass, Plan, PlanOp, Schedule, ScheduleKind,
+    build_plans, run_dist_attention_exec, BackendSpec, ExecOpts, Kernel, Pass, Payload,
+    PayloadClass, Plan, PlanOp, Schedule, ScheduleKind,
 };
 use distflash::runtime::Tensor;
 use distflash::simulator::AttnCost;
@@ -145,7 +146,7 @@ fn executor_bytes_match_plan_prediction_with_collectives_interleaved() {
                     // cross-talk with schedule messages)
                     let mut t = Tensor::full(&[12], (rank + 1) as f32);
                     comm.all_reduce_sum(1000, &mut t);
-                    assert!(t.data.iter().all(|&x| x == 10.0), "all-reduce corrupted");
+                    assert!(t.data().iter().all(|&x| x == 10.0), "all-reduce corrupted");
                     let all = comm.all_gather(2000, &Tensor::scalar(rank as f32));
                     for (i, g) in all.iter().enumerate() {
                         assert_eq!(g.as_scalar(), i as f32, "all-gather corrupted");
@@ -216,6 +217,52 @@ fn placed_network_bytes_match_plan_prediction() {
             plan_bytes as u64 + barrier,
             "placed fabric diverges from plan-predicted bytes"
         );
+    }
+}
+
+#[test]
+fn real_executor_traced_bytes_match_plan_prediction() {
+    // the full executor (not the dry-run walk): zero-work kernels, real
+    // sends/receives/stash/prefetch — its byte counters must still equal
+    // the plan-predicted totals exactly, in both send-path modes and at
+    // both prefetch depths
+    let p = 4usize;
+    let n = p * C;
+    let q = Tensor::zeros(&[H, n, D]);
+    let kv = Tensor::zeros(&[KVH, n, D]);
+    let do_ = Tensor::zeros(&[H, n, D]);
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        let (fwd, bwd) = build_plans(kind, p).unwrap();
+        let plan_bytes = fwd.total_bytes(&wire_cost(Pass::Forward))
+            + bwd.total_bytes(&wire_cost(Pass::Backward));
+        for deep in [false, true] {
+            let opts = ExecOpts {
+                backend: BackendSpec::Null,
+                trace: true,
+                deep_copy_sends: deep,
+            };
+            let run = run_dist_attention_exec(
+                fwd.clone(),
+                bwd.clone(),
+                &q,
+                &kv,
+                &kv,
+                Some(&do_),
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(
+                run.result.comm_bytes, plan_bytes as u64,
+                "{kind:?} deep={deep}: executor bytes diverge from plan prediction"
+            );
+            // every transfer op was traced by its sender
+            let ft = run.fwd_trace.unwrap();
+            for (i, node) in fwd.ops.iter().enumerate() {
+                if matches!(node.op, PlanOp::Xfer { .. }) {
+                    assert!(ft.covered[i], "{kind:?}: transfer op {i} untraced");
+                }
+            }
+        }
     }
 }
 

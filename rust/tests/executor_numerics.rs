@@ -86,7 +86,7 @@ fn check_forward_backward(cfg: &str, kind: ScheduleKind, seed: u64) {
     let (dq, dk, dv) = res.grads.unwrap();
     for (name, g) in [("dq", &dq), ("dk", &dk), ("dv", &dv)] {
         assert!(
-            g.data.iter().all(|x| x.is_finite()),
+            g.data().iter().all(|x| x.is_finite()),
             "{cfg} {kind:?}: {name} has non-finite entries"
         );
         assert!(g.l2_norm() > 1e-3, "{cfg} {kind:?}: {name} suspiciously zero");

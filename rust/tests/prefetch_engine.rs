@@ -1,0 +1,308 @@
+//! Prefetch-engine + zero-copy fabric stress tests.
+//!
+//! These run the *real* threaded executor end to end on the pure-host
+//! kernel backend (no PJRT, no artifacts), which is what makes the
+//! numerics pinnable on a bare checkout:
+//!
+//! * the distributed forward/backward must reproduce the monolithic
+//!   host `full_attn_ref` oracle (and its saved-statistics backward);
+//! * the depth-0 (fully blocking) path and the deep-prefetch path must be
+//!   **bit-identical** — posting receives only changes message transport,
+//!   never kernel order — including under adversarial cross-call
+//!   interleaving (P=8 workers racing through stacked attention calls at
+//!   their own pace, so late ranks find early ranks' future-call traffic
+//!   in their mailboxes);
+//! * the stash must stay FIFO per (sender, tag) under shuffled arrival.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use distflash::coordinator::comm::{build_network, Tag};
+use distflash::coordinator::executor::{AttnCtx, RunTrace};
+use distflash::coordinator::{
+    build_plans, run_dist_attention_exec, ExecOpts, Pass, Plan, Schedule, ScheduleKind,
+};
+use distflash::runtime::{HostKernels, Kernels, Tensor, Value};
+use distflash::util::Rng;
+
+const H: usize = 4;
+const KVH: usize = 2;
+const C: usize = 12;
+const D: usize = 8;
+
+fn inputs(p: usize, seed: u64) -> (Tensor, Tensor, Tensor, Tensor) {
+    let n = p * C;
+    let mut rng = Rng::new(seed);
+    (
+        Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D)),
+        Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D)),
+        Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D)),
+        Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D)),
+    )
+}
+
+fn with_depth(plan: &Arc<Plan>, depth: usize) -> Arc<Plan> {
+    let mut p = (**plan).clone();
+    p.prefetch_depth = depth;
+    Arc::new(p)
+}
+
+/// Run `layers` stacked attention calls (fwd + bwd each, distinct call
+/// ids) through the real executor on every rank, at each rank's own pace —
+/// the adversarial interleaving: a fast rank's call-k+1 traffic lands in a
+/// slow rank's mailbox while it is still inside call k. `skew` staggers
+/// rank start times to force exactly that. Returns every per-rank output
+/// tensor in a deterministic order.
+fn run_layers(
+    fwd: &Arc<Plan>,
+    bwd: &Arc<Plan>,
+    layers: usize,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: &Tensor,
+    skew: bool,
+) -> Vec<Vec<Tensor>> {
+    let p = fwd.n_workers;
+    let qs = q.chunk_axis1(p);
+    let ks = k.chunk_axis1(p);
+    let vs = v.chunk_axis1(p);
+    let dos = do_.chunk_axis1(p);
+    let comms = build_network(p);
+    let mut handles = Vec::new();
+    for (rank, mut comm) in comms.into_iter().enumerate() {
+        let fwd = fwd.clone();
+        let bwd = bwd.clone();
+        let (q, k, v, d) = (
+            qs[rank].clone(),
+            ks[rank].clone(),
+            vs[rank].clone(),
+            dos[rank].clone(),
+        );
+        handles.push(thread::spawn(move || -> Vec<Tensor> {
+            if skew {
+                thread::sleep(Duration::from_millis(3 * rank as u64));
+            }
+            let kernels = HostKernels;
+            let mut out = Vec::new();
+            for layer in 0..layers {
+                let (o, lse) = {
+                    let mut ctx = AttnCtx {
+                        rank,
+                        runtime: &kernels,
+                        comm: &mut comm,
+                        plan: &fwd,
+                        call_id: (2 * layer) as u32,
+                        epoch: None,
+                        trace: RunTrace::default(),
+                    };
+                    ctx.forward(&q, &k, &v).expect("forward failed")
+                };
+                let (dq, dk, dv) = {
+                    let mut ctx = AttnCtx {
+                        rank,
+                        runtime: &kernels,
+                        comm: &mut comm,
+                        plan: &bwd,
+                        call_id: (2 * layer + 1) as u32,
+                        epoch: None,
+                        trace: RunTrace::default(),
+                    };
+                    ctx.backward(&q, &k, &v, &o, &lse, &d).expect("backward failed")
+                };
+                out.extend([o, lse, dq, dk, dv]);
+            }
+            out
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn host_executor_matches_oracle_p8_both_schedules() {
+    let p = 8;
+    let (q, k, v, do_) = inputs(p, 42);
+    let oracle = HostKernels
+        .run(
+            "full_attn_ref",
+            &[
+                Value::F32(q.clone()),
+                Value::F32(k.clone()),
+                Value::F32(v.clone()),
+            ],
+        )
+        .unwrap();
+    // monolithic causal backward over the whole sequence (one diag kernel
+    // spanning N) — the gradient oracle
+    let grads_ref = HostKernels
+        .run(
+            "attn_bwd_diag",
+            &[
+                Value::F32(q.clone()),
+                Value::F32(k.clone()),
+                Value::F32(v.clone()),
+                Value::F32(oracle[0].clone()),
+                Value::F32(oracle[1].clone()),
+                Value::F32(do_.clone()),
+            ],
+        )
+        .unwrap();
+
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        let (fwd, bwd) = build_plans(kind, p).unwrap();
+        let run = run_dist_attention_exec(
+            fwd,
+            bwd,
+            &q,
+            &k,
+            &v,
+            Some(&do_),
+            &ExecOpts::host(),
+        )
+        .unwrap();
+        let o_err = run.result.o.max_abs_diff(&oracle[0]);
+        let lse_err = run.result.lse.max_abs_diff(&oracle[1]);
+        assert!(o_err < 1e-4, "{kind:?}: o err {o_err}");
+        assert!(lse_err < 1e-4, "{kind:?}: lse err {lse_err}");
+        let (dq, dk, dv) = run.result.grads.unwrap();
+        assert!(dq.max_abs_diff(&grads_ref[0]) < 1e-3, "{kind:?}: dq diverges");
+        assert!(dk.max_abs_diff(&grads_ref[1]) < 1e-3, "{kind:?}: dk diverges");
+        assert!(dv.max_abs_diff(&grads_ref[2]) < 1e-3, "{kind:?}: dv diverges");
+        assert!(run.result.comm_bytes > 0);
+    }
+}
+
+#[test]
+fn depth0_and_deep_prefetch_bit_identical_under_interleaving() {
+    let p = 8;
+    let layers = 4;
+    let (q, k, v, do_) = inputs(p, 7);
+    let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).unwrap();
+    // depth 0: no drains, every receive blocks at point of use
+    let blocking = run_layers(
+        &with_depth(&fwd, 0),
+        &with_depth(&bwd, 0),
+        layers,
+        &q,
+        &k,
+        &v,
+        &do_,
+        false,
+    );
+    // deep prefetch + skewed rank starts: maximal stash traffic, future
+    // calls' messages drained while earlier calls are still in flight
+    let prefetched = run_layers(
+        &with_depth(&fwd, 8),
+        &with_depth(&bwd, 8),
+        layers,
+        &q,
+        &k,
+        &v,
+        &do_,
+        true,
+    );
+    assert_eq!(blocking.len(), prefetched.len());
+    for (rank, (a, b)) in blocking.iter().zip(&prefetched).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                ta, tb,
+                "rank {rank} output {i}: prefetch path is not bit-identical"
+            );
+        }
+    }
+    // and the executor's own default (depth 1) agrees too
+    let default = run_layers(&fwd, &bwd, layers, &q, &k, &v, &do_, false);
+    assert_eq!(blocking, default, "depth-1 drain path diverged");
+}
+
+#[test]
+fn stash_fifo_under_shuffled_arrival_p8() {
+    // every rank sends 3 messages per (peer, tag) across 4 tags, in a
+    // rank-dependent shuffled order; receivers drain (racing the senders)
+    // then receive in canonical order — per-(sender, tag) FIFO must hold
+    let p = 8;
+    let comms = build_network(p);
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|mut comm| {
+            thread::spawn(move || {
+                let rank = comm.rank;
+                // lanes = (peer, tag); interleave lanes randomly but keep
+                // each lane's own send order (FIFO is a per-lane contract)
+                let mut lanes: Vec<(usize, u32, u32)> = Vec::new();
+                for peer in 0..p {
+                    if peer == rank {
+                        continue;
+                    }
+                    for t in 0..4u32 {
+                        lanes.push((peer, t, 0));
+                    }
+                }
+                let mut rng = Rng::new(rank as u64 + 1);
+                let mut remaining = lanes.len() * 3;
+                while remaining > 0 {
+                    let li = rng.below(lanes.len());
+                    let (peer, t, s) = lanes[li];
+                    if s >= 3 {
+                        continue;
+                    }
+                    // seq carried in the payload; tag identifies the lane
+                    let val = (rank * 1000 + t as usize * 10 + s as usize) as f32;
+                    comm.send(peer, Tag::new(9, t, 0), vec![Tensor::scalar(val)]);
+                    lanes[li].2 += 1;
+                    remaining -= 1;
+                }
+                comm.drain_pending();
+                for peer in 0..p {
+                    if peer == rank {
+                        continue;
+                    }
+                    for t in 0..4u32 {
+                        for s in 0..3 {
+                            let got = comm.recv(peer, Tag::new(9, t, 0))[0].as_scalar();
+                            let want = (peer * 1000 + t as usize * 10 + s) as f32;
+                            assert_eq!(got, want, "rank {rank} lane ({peer},{t}) seq {s}");
+                        }
+                    }
+                }
+                comm.barrier(77);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn executor_rejects_dataflow_plans_at_index_time() {
+    let plan = Plan::ring_attention(4);
+    let comms = build_network(4);
+    let mut comm = comms.into_iter().next().unwrap();
+    let kernels = HostKernels;
+    let ctx = AttnCtx {
+        rank: 0,
+        runtime: &kernels,
+        comm: &mut comm,
+        plan: &plan,
+        call_id: 0,
+        epoch: None,
+        trace: RunTrace::default(),
+    };
+    let err = ctx.check_and_index(Pass::Forward).unwrap_err();
+    assert!(format!("{err}").contains("schedule-lowered"));
+    // and a pass mismatch is caught before any communication
+    let lowered = Schedule::balanced(4).lower(Pass::Forward);
+    let ctx = AttnCtx {
+        rank: 0,
+        runtime: &kernels,
+        comm: &mut comm,
+        plan: &lowered,
+        call_id: 0,
+        epoch: None,
+        trace: RunTrace::default(),
+    };
+    assert!(ctx.check_and_index(Pass::Backward).is_err());
+}
