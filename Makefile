@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace
+.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace run
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -26,6 +26,10 @@ bench-json:
 # measured-vs-simulated per-op trace table (host-kernel executor)
 trace:
 	cargo run --release --bin repro -- trace --p 8
+
+# spec-driven Session pipeline smoke (host kernels, traced)
+run:
+	cargo run --release --bin repro -- run
 
 tables:
 	cargo run --release --bin repro -- tables

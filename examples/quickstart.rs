@@ -4,7 +4,7 @@
 //!
 //!     make artifacts && cargo run --offline --example quickstart
 
-use distflash::coordinator::{run_dist_attention, Schedule, ScheduleKind};
+use distflash::coordinator::{RunSpec, Schedule, ScheduleKind, Session};
 use distflash::runtime::{Runtime, Tensor, Value};
 use distflash::util::Rng;
 use std::path::PathBuf;
@@ -35,9 +35,21 @@ fn main() -> anyhow::Result<()> {
     let oracle = rt.run("full_attn_ref",
         &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())])?;
 
-    // 3. DISTFLASHATTN: P worker threads, chunked sequence, P2P channels
+    // 3. DISTFLASHATTN: P worker threads, chunked sequence, P2P channels —
+    //    one declarative RunSpec per schedule, driven through the Session
+    //    pipeline (the workload comes from the manifest loaded above)
     for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
-        let res = run_dist_attention(&dir, kind, c.n_workers, &q, &k, &v, None)?;
+        let mut spec = RunSpec::pjrt(&dir, kind);
+        spec.workload = Some(distflash::coordinator::Workload::new(
+            c.n_heads,
+            c.n_kv_heads,
+            c.head_dim,
+            c.chunk_len,
+        ));
+        spec.n_workers = c.n_workers;
+        let mut session = Session::new(spec)?;
+        session.execute_with(&q, &k, &v, None)?;
+        let res = session.take_run().expect("executed").result;
         println!(
             "{kind:?}: max|Δ| vs oracle = {:.2e}, comm = {} bytes",
             res.o.max_abs_diff(&oracle[0]),

@@ -37,9 +37,10 @@ pub fn attn_cost_fwd(model: &PaperModel, cluster: &ClusterSpec, chunk_tokens: f6
 }
 
 /// The canonical forward cost-class resolution, from raw dimensions — for
-/// callers that only have an artifact manifest (trainer `optimize_for`,
-/// verify) rather than a [`PaperModel`]. [`attn_cost_fwd`] is a thin
-/// delegate, so there is exactly one definition of these formulas.
+/// callers that only have a resolved workload (a `Session` over an
+/// artifact manifest, verify) rather than a [`PaperModel`].
+/// [`attn_cost_fwd`] is a thin delegate, so there is exactly one
+/// definition of these formulas.
 pub fn attn_cost_from_dims(
     cluster: &ClusterSpec,
     chunk_tokens: f64,
@@ -78,8 +79,8 @@ pub fn attn_cost_bwd(model: &PaperModel, cluster: &ClusterSpec, chunk_tokens: f6
 
 /// Derive the backward cost classes from already-resolved forward classes —
 /// the single definition of the bwd/fwd relationship, shared by
-/// [`attn_cost_bwd`] and dimension-only callers (the trainer's
-/// `optimize_for` path, which has a manifest instead of a `PaperModel`).
+/// [`attn_cost_bwd`] and dimension-only callers (the `Session`, which
+/// resolves a workload instead of a `PaperModel`).
 pub fn bwd_cost_from_fwd(fwd: &AttnCost, head_dim: usize) -> AttnCost {
     AttnCost {
         pair_full_s: 2.5 * fwd.pair_full_s,

@@ -8,8 +8,8 @@
 //! Attention: 4.5× vs 7.5× attention speedup over one GPU, 1.67× e2e.
 //!
 //! Two views of the system live here:
-//! * [`RingAttention::as_distflash`]-based [`SystemModel`] — the analytic
-//!   end-to-end iteration model (unchanged);
+//! * the `as_distflash`-based [`SystemModel`] — the analytic end-to-end
+//!   iteration model (unchanged);
 //! * [`RingAttention::plan`] / [`RingAttention::executed_attn`] — the
 //!   rotating-kv pipeline expressed in the schedule IR and *executed* by
 //!   the event engine, so the comparison against our schedules is a run

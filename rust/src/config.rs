@@ -133,7 +133,7 @@ impl PaperModel {
 }
 
 /// One GPU's roofline for the analytic model.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GpuSpec {
     /// Dense bf16 peak, FLOP/s.
     pub peak_flops: f64,
@@ -162,7 +162,7 @@ impl GpuSpec {
 
 /// Cluster topology: `n_nodes` boxes of `gpus_per_node`, NVLink inside,
 /// InfiniBand between.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterSpec {
     pub n_nodes: usize,
     pub gpus_per_node: usize,
@@ -206,6 +206,16 @@ impl ClusterSpec {
     /// 16 GPU A100-40GB cluster used by Table 2 / Table 3.
     pub fn cluster_16x40g() -> Self {
         Self::dev_2x8_40g()
+    }
+
+    /// Preset lookup by the CLI / `RunSpec` JSON names.
+    pub fn by_name(name: &str) -> Option<ClusterSpec> {
+        match name {
+            "1x8" => Some(Self::dgx_1x8()),
+            "2x8" => Some(Self::dgx_2x8()),
+            "16x40g" | "dev" | "2x8-dev" => Some(Self::cluster_16x40g()),
+            _ => None,
+        }
     }
 
     pub fn n_gpus(&self) -> usize {

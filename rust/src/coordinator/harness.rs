@@ -1,111 +1,58 @@
-//! Multi-threaded harness: spawn P workers (each with its own kernel
-//! backend, mirroring one-process-per-GPU) and run a distributed attention
-//! call over a full sequence. Used by `repro verify`, `repro trace`, the
-//! integration tests, the executor micro-bench, and the examples.
+//! Deprecated free-function front door, kept as thin shims over the
+//! [`Session`](super::session::Session) pipeline.
 //!
-//! The harness is where the schedule IR is produced: the chosen
-//! [`Schedule`] is lowered to one forward and one backward [`Plan`], both
-//! validated (`validate_lowered`), and every worker executes those exact
-//! plans — the same objects a simulator would time.
+//! Every entry point here predates the spec-driven API: each one
+//! hand-threads a different subset of {schedule kind, varlen spec,
+//! cluster, backend, tracing} through its own signature. The
+//! [`RunSpec`](super::session::RunSpec) + `Session` pipeline replaces all
+//! of them with one declarative surface; these shims survive only so
+//! out-of-tree callers keep compiling, and each is pinned **bit-identical**
+//! to its `RunSpec` translation by `rust/tests/session_golden.rs`.
 //!
-//! [`run_dist_attention_exec`] is the general entry point: it picks the
-//! kernel backend ([`BackendSpec`]) — PJRT artifacts, the pure-host
-//! reference kernels, or the zero-work echo — and optionally records
-//! per-op wall-clock traces merged across ranks ([`MergedTrace`]), the
-//! measured side of the trace-vs-sim report.
+//! Migration table (see README "Public API" for the full map):
+//!
+//! | deprecated fn                | `RunSpec` translation                          |
+//! |------------------------------|------------------------------------------------|
+//! | `build_plans`                | `RunSpec::plans_only(kind, p)` → `plans()`     |
+//! | `build_plans_optimized`      | `optimize: Schedule(opts)` + `set_costs`       |
+//! | `build_plans_varlen`         | `varlen: Some(spec)` → `plans()`               |
+//! | `run_dist_attention`         | `RunSpec::pjrt(dir, kind)` → `execute_with`    |
+//! | `run_dist_attention_planned` | `Session::with_plans` (Pjrt) → `execute_with`  |
+//! | `run_dist_attention_host`    | `Session::with_plans` (HostRef) → `execute_with` |
+//! | `run_dist_attention_exec`    | `Session::with_plans` + trace/deep-copy fields |
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Arc;
-use std::thread;
-use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
 
-use super::comm::build_network_placed;
-use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
-use super::optimize::{optimize_schedule, OptimizeOpts};
-use super::plan::{LowerOpts, Pass, Plan};
-use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
+use super::optimize::OptimizeOpts;
+use super::plan::Plan;
+use super::schedule::{ScheduleKind, VarlenSpec};
+use super::session::{OptimizePolicy, RunSpec, Session, Workload};
 use crate::config::ClusterSpec;
-use crate::runtime::{HostKernels, Kernels, NullKernels, Runtime, Tensor};
+use crate::runtime::Tensor;
 use crate::simulator::AttnCost;
 
-/// Gathered results of one distributed attention call over N tokens.
-#[derive(Debug)]
-pub struct DistAttnResult {
-    /// Normalized attention output (H, N, D).
-    pub o: Tensor,
-    /// Logsumexp (H, N).
-    pub lse: Tensor,
-    /// Gradients, present iff `do_` was supplied.
-    pub grads: Option<(Tensor, Tensor, Tensor)>,
-    /// Total bytes moved between workers.
-    pub comm_bytes: u64,
-}
+pub use super::session::{BackendSpec, DistAttnResult, ExecOpts, ExecRun};
 
-/// Which kernel backend each harness worker constructs.
-#[derive(Clone, Debug)]
-pub enum BackendSpec {
-    /// Real PJRT artifacts compiled from this directory (needs
-    /// `make artifacts` plus the real `xla` bindings).
-    Pjrt(PathBuf),
-    /// Pure-Rust reference kernels — runs on a bare checkout.
-    HostRef,
-    /// Zero-work shape echo — transport micro-benchmarks only.
-    Null,
-}
-
-/// Executor knobs for one distributed call.
-#[derive(Clone, Debug)]
-pub struct ExecOpts {
-    pub backend: BackendSpec,
-    /// Record per-op wall-clock spans, merged across ranks in the result.
-    pub trace: bool,
-    /// Model the pre-zero-copy send path (full-chunk allocation + memcpy
-    /// per payload) — the executor micro-bench's baseline arm.
-    pub deep_copy_sends: bool,
-}
-
-impl ExecOpts {
-    pub fn host() -> ExecOpts {
-        ExecOpts { backend: BackendSpec::HostRef, trace: false, deep_copy_sends: false }
-    }
-}
-
-/// One executed distributed call: results plus (when requested) the
-/// rank-merged per-op timelines and the harness wall-clock.
-#[derive(Debug)]
-pub struct ExecRun {
-    pub result: DistAttnResult,
-    pub fwd_trace: Option<MergedTrace>,
-    pub bwd_trace: Option<MergedTrace>,
-    /// Wall-clock of the whole call (thread spawn to last join).
-    pub wall_s: f64,
-}
-
-/// Lower and validate the forward/backward plans for a schedule — shared
-/// by the harness and the trainer so every consumer runs checked IR.
+/// Lower and validate the forward/backward plans for a schedule.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a RunSpec (RunSpec::plans_only) and call Session::plans()"
+)]
 pub fn build_plans(kind: ScheduleKind, n_workers: usize) -> Result<(Arc<Plan>, Arc<Plan>)> {
-    let schedule = Schedule::build(kind, n_workers);
-    schedule
-        .validate()
-        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
-    let fwd = Plan::from_schedule(&schedule, Pass::Forward);
-    fwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid forward plan: {e}"))?;
-    let bwd = Plan::from_schedule(&schedule, Pass::Backward);
-    bwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid backward plan: {e}"))?;
-    Ok((Arc::new(fwd), Arc::new(bwd)))
+    Session::new(RunSpec::plans_only(kind, n_workers))?.plans()
 }
 
 /// Optimizer-backed variant of [`build_plans`]: run the full pass pipeline
 /// (role flipping, placement, prefetch autotune) against the given cluster
-/// and per-pass cost models, and return validated plans the executor can
-/// run directly. The flipped op stream changes *which worker computes
-/// which pair* — the executor follows it literally — while the placement
-/// binds mailboxes and the autotuned `prefetch_depth` drives the posted
-/// receives.
+/// and per-pass cost models.
+#[deprecated(
+    since = "0.2.0",
+    note = "set RunSpec::optimize = OptimizePolicy::Schedule(opts) (plus Session::set_costs \
+            for explicit cost models) and call Session::plans()"
+)]
 pub fn build_plans_optimized(
     kind: ScheduleKind,
     n_workers: usize,
@@ -114,53 +61,35 @@ pub fn build_plans_optimized(
     bwd_cost: &AttnCost,
     opts: &OptimizeOpts,
 ) -> Result<(Arc<Plan>, Arc<Plan>)> {
-    let schedule = Schedule::build(kind, n_workers);
-    schedule
-        .validate()
-        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
-    let fwd = optimize_schedule(&schedule, Pass::Forward, cluster, fwd_cost, opts).plan;
-    fwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid optimized forward plan: {e}"))?;
-    let bwd = optimize_schedule(&schedule, Pass::Backward, cluster, bwd_cost, opts).plan;
-    bwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid optimized backward plan: {e}"))?;
-    Ok((Arc::new(fwd), Arc::new(bwd)))
+    let mut spec = RunSpec::plans_only(kind, n_workers);
+    spec.cluster = *cluster;
+    spec.optimize = OptimizePolicy::Schedule(opts.clone());
+    let mut session = Session::new(spec)?;
+    session.set_costs(*fwd_cost, *bwd_cost);
+    session.plans()
 }
 
 /// Varlen (document-packed) variant of [`build_plans`]: token-exact
-/// lowering against the given chunk spec — every op priced by its ragged
-/// slice, chunk pairs sharing no document skipped.
-/// [`run_dist_attention_planned`] splits tensors at `spec.boundaries`,
-/// but note the current AOT manifests compile fixed chunk shapes: only
-/// *uniform* boundaries are executable today (which still exercises the
-/// doc-masked plan structure — skipped pairs never communicate); ragged
-/// execution needs per-chunk artifacts (see ROADMAP, "Intra-chunk
-/// document masking"). The simulators have no such restriction.
+/// lowering against the given chunk spec.
+#[deprecated(
+    since = "0.2.0",
+    note = "set RunSpec::varlen = Some(spec) and call Session::plans()"
+)]
 pub fn build_plans_varlen(
     kind: ScheduleKind,
     spec: &VarlenSpec,
 ) -> Result<(Arc<Plan>, Arc<Plan>)> {
-    spec.validate().map_err(|e| anyhow!("invalid varlen spec: {e}"))?;
-    let schedule = Schedule::build(kind, spec.n_chunks());
-    schedule
-        .validate()
-        .map_err(|e| anyhow!("invalid schedule: {e}"))?;
-    let lopts = LowerOpts { varlen: Some(Arc::new(spec.clone())), ..Default::default() };
-    let fwd = Plan::from_schedule_opts(&schedule, Pass::Forward, &lopts);
-    fwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid varlen forward plan: {e}"))?;
-    let bwd = Plan::from_schedule_opts(&schedule, Pass::Backward, &lopts);
-    bwd.validate_lowered()
-        .map_err(|e| anyhow!("invalid varlen backward plan: {e}"))?;
-    Ok((Arc::new(fwd), Arc::new(bwd)))
+    let mut rs = RunSpec::plans_only(kind, spec.n_chunks());
+    rs.varlen = Some(spec.clone());
+    Session::new(rs)?.plans()
 }
 
 /// Run DISTFLASHATTN forward (and optionally backward) over full-sequence
-/// tensors: q (H, N, D), k/v (KVH, N, D), do (H, N, D).
-///
-/// The sequence is split into P chunks along the token axis; P OS threads
-/// execute the lowered plans against the AOT artifacts in `artifact_dir`
-/// and the per-chunk results are re-concatenated.
+/// tensors against the AOT artifacts in `artifact_dir`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a RunSpec (RunSpec::pjrt) and call Session::execute_with()"
+)]
 pub fn run_dist_attention(
     artifact_dir: &Path,
     kind: ScheduleKind,
@@ -170,14 +99,20 @@ pub fn run_dist_attention(
     v: &Tensor,
     do_: Option<&Tensor>,
 ) -> Result<DistAttnResult> {
-    let (fwd_plan, bwd_plan) = build_plans(kind, n_workers)?;
-    run_dist_attention_planned(artifact_dir, fwd_plan, bwd_plan, q, k, v, do_)
+    let mut spec = RunSpec::pjrt(artifact_dir, kind);
+    spec.workload = Some(Workload::from_tensors(q, k, n_workers));
+    spec.n_workers = n_workers;
+    let mut session = Session::new(spec)?;
+    session.execute_with(q, k, v, do_)?;
+    Ok(session.take_run().expect("execute_with stored a run").result)
 }
 
 /// Run a distributed attention call over *caller-supplied* lowered plans
-/// against PJRT artifacts — the entry point for optimizer-produced plans
-/// (`build_plans_optimized`). Both plans must be schedule lowerings for
-/// the same worker count and already validated.
+/// against PJRT artifacts.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Session::with_plans with a Pjrt backend and call execute_with()"
+)]
 pub fn run_dist_attention_planned(
     artifact_dir: &Path,
     fwd_plan: Arc<Plan>,
@@ -192,12 +127,16 @@ pub fn run_dist_attention_planned(
         trace: false,
         deep_copy_sends: false,
     };
+    #[allow(deprecated)]
     Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &opts)?.result)
 }
 
 /// Host-kernel variant: pure-Rust reference kernels, no PJRT, no
-/// artifacts — the bare-checkout executor used by the prefetch stress
-/// tests and `repro trace`.
+/// artifacts.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Session::with_plans with BackendSpec::HostRef and call execute_with()"
+)]
 pub fn run_dist_attention_host(
     fwd_plan: Arc<Plan>,
     bwd_plan: Arc<Plan>,
@@ -206,11 +145,17 @@ pub fn run_dist_attention_host(
     v: &Tensor,
     do_: Option<&Tensor>,
 ) -> Result<DistAttnResult> {
+    #[allow(deprecated)]
     Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &ExecOpts::host())?.result)
 }
 
-/// The general executor entry point (see module docs): backend selection,
-/// optional per-op tracing, optional deep-copy send baseline.
+/// The general executor entry point: backend selection, optional per-op
+/// tracing, optional deep-copy send baseline.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Session::with_plans (backend/trace/deep_copy_sends are RunSpec fields) and \
+            call execute_with()"
+)]
 pub fn run_dist_attention_exec(
     fwd_plan: Arc<Plan>,
     bwd_plan: Arc<Plan>,
@@ -220,195 +165,10 @@ pub fn run_dist_attention_exec(
     do_: Option<&Tensor>,
     opts: &ExecOpts,
 ) -> Result<ExecRun> {
-    let n_workers = fwd_plan.n_workers;
-    if bwd_plan.n_workers != n_workers {
-        return Err(anyhow!(
-            "fwd plan has {n_workers} workers, bwd plan {}",
-            bwd_plan.n_workers
-        ));
-    }
-    // both passes must agree on the chunking — a backward plan lowered
-    // against different boundaries would expect different shapes and
-    // pair structure than the tensors sharded below
-    if fwd_plan.varlen.as_deref() != bwd_plan.varlen.as_deref() {
-        return Err(anyhow!(
-            "fwd and bwd plans carry different varlen chunk specs"
-        ));
-    }
-
-    // equal chunks by default; ragged token boundaries for varlen plans
-    let (qs, ks, vs, dos) = match fwd_plan.varlen.as_deref() {
-        Some(spec) => {
-            if spec.total_tokens() != q.shape[1] {
-                return Err(anyhow!(
-                    "varlen spec covers {} tokens but q has {}",
-                    spec.total_tokens(),
-                    q.shape[1]
-                ));
-            }
-            // the AOT artifacts compile one fixed chunk shape; a ragged
-            // chunk would fail the runtime's shape check mid-plan on one
-            // worker and deadlock its peers' blocking recvs — reject up
-            // front with the honest story instead. (The host backends have
-            // no such restriction: they accept any chunk shape.)
-            let c0 = spec.chunk_tokens(0);
-            let uniform = (1..n_workers).all(|w| spec.chunk_tokens(w) == c0);
-            if !uniform && matches!(opts.backend, BackendSpec::Pjrt(_)) {
-                return Err(anyhow!(
-                    "ragged varlen boundaries need per-chunk AOT artifacts; the fixed-shape \
-                     manifest executes uniform chunks only (run the host backend, simulate \
-                     ragged plans with the event engine, or rebalance with uniform boundaries)"
-                ));
-            }
-            (
-                q.chunk_axis1_at(&spec.boundaries),
-                k.chunk_axis1_at(&spec.boundaries),
-                v.chunk_axis1_at(&spec.boundaries),
-                do_.map(|d| d.chunk_axis1_at(&spec.boundaries)),
-            )
-        }
-        None => (
-            q.chunk_axis1(n_workers),
-            k.chunk_axis1(n_workers),
-            v.chunk_axis1(n_workers),
-            do_.map(|d| d.chunk_axis1(n_workers)),
-        ),
-    };
-
-    // bind rank i's mailbox to slot placement[i] — the in-process
-    // analogue of the launcher pinning rank i to that GPU. (A backward
-    // plan optimized separately may carry a different placement; messages
-    // are addressed by logical rank, so the forward placement binding
-    // stays correct for both passes.)
-    let comms = build_network_placed(n_workers, &fwd_plan.placement);
-
-    struct WorkerOut {
-        rank: usize,
-        o: Tensor,
-        lse: Tensor,
-        grads: Option<(Tensor, Tensor, Tensor)>,
-        bytes: u64,
-        fwd_trace: RunTrace,
-        bwd_trace: RunTrace,
-    }
-
-    let epoch = Instant::now();
-    let mut handles = Vec::new();
-    for (rank, mut comm) in comms.into_iter().enumerate() {
-        let backend = opts.backend.clone();
-        let trace = opts.trace;
-        let deep = opts.deep_copy_sends;
-        let fwd_plan = fwd_plan.clone();
-        let bwd_plan = bwd_plan.clone();
-        let q = qs[rank].clone();
-        let k = ks[rank].clone();
-        let v = vs[rank].clone();
-        let do_chunk = dos.as_ref().map(|d| d[rank].clone());
-        handles.push(thread::spawn(move || -> Result<WorkerOut> {
-            comm.set_deep_copy_sends(deep);
-            let kernels: Box<dyn Kernels> = match &backend {
-                BackendSpec::Pjrt(dir) => {
-                    let rt = Runtime::load(dir)?;
-                    rt.precompile(ATTN_ARTIFACTS)?;
-                    Box::new(rt)
-                }
-                BackendSpec::HostRef => Box::new(HostKernels),
-                BackendSpec::Null => Box::new(NullKernels),
-            };
-            let epoch = trace.then_some(epoch);
-            let (o, lse, fwd_trace) = {
-                let mut ctx = AttnCtx {
-                    rank,
-                    runtime: &*kernels,
-                    comm: &mut comm,
-                    plan: &fwd_plan,
-                    call_id: 0,
-                    epoch,
-                    trace: RunTrace::default(),
-                };
-                let (o, lse) = ctx.forward(&q, &k, &v)?;
-                (o, lse, ctx.trace)
-            };
-            let (grads, bwd_trace) = match do_chunk {
-                Some(d) => {
-                    let mut ctx = AttnCtx {
-                        rank,
-                        runtime: &*kernels,
-                        comm: &mut comm,
-                        plan: &bwd_plan,
-                        call_id: 1,
-                        epoch,
-                        trace: RunTrace::default(),
-                    };
-                    let g = ctx.backward(&q, &k, &v, &o, &lse, &d)?;
-                    (Some(g), ctx.trace)
-                }
-                None => (None, RunTrace::default()),
-            };
-            let bytes = comm.bytes_sent();
-            Ok(WorkerOut { rank, o, lse, grads, bytes, fwd_trace, bwd_trace })
-        }));
-    }
-
-    let mut outs: Vec<Option<WorkerOut>> = (0..n_workers).map(|_| None).collect();
-    let mut comm_bytes = 0;
-    for h in handles {
-        let w = h
-            .join()
-            .map_err(|_| anyhow!("worker thread panicked"))?
-            .context("worker failed")?;
-        comm_bytes += w.bytes;
-        let rank = w.rank;
-        outs[rank] = Some(w);
-    }
-    let wall_s = epoch.elapsed().as_secs_f64();
-    let outs: Vec<WorkerOut> = outs.into_iter().map(|o| o.unwrap()).collect();
-
-    let (fwd_trace, bwd_trace) = if opts.trace {
-        let ft: Vec<RunTrace> = outs.iter().map(|w| w.fwd_trace.clone()).collect();
-        let bt: Vec<RunTrace> = outs.iter().map(|w| w.bwd_trace.clone()).collect();
-        (
-            Some(MergedTrace::merge(fwd_plan.n_ops(), &ft)),
-            do_.is_some().then(|| MergedTrace::merge(bwd_plan.n_ops(), &bt)),
-        )
-    } else {
-        (None, None)
-    };
-
-    let o = Tensor::cat_axis1(&outs.iter().map(|w| w.o.clone()).collect::<Vec<_>>());
-    // lse chunks are (H, C): concatenate along axis 1 by reusing the rank-3
-    // helper on zero-copy (H, C, 1) views.
-    let lse = {
-        let parts: Vec<Tensor> = outs
-            .iter()
-            .map(|w| {
-                let mut s = w.lse.shape.clone();
-                s.push(1);
-                w.lse.reshape(s)
-            })
-            .collect();
-        let cat = Tensor::cat_axis1(&parts);
-        let flat = cat.shape[..2].to_vec();
-        cat.reshape(flat)
-    };
-    let grads = if do_.is_some() {
-        let dq = Tensor::cat_axis1(
-            &outs.iter().map(|w| w.grads.as_ref().unwrap().0.clone()).collect::<Vec<_>>(),
-        );
-        let dk = Tensor::cat_axis1(
-            &outs.iter().map(|w| w.grads.as_ref().unwrap().1.clone()).collect::<Vec<_>>(),
-        );
-        let dv = Tensor::cat_axis1(
-            &outs.iter().map(|w| w.grads.as_ref().unwrap().2.clone()).collect::<Vec<_>>(),
-        );
-        Some((dq, dk, dv))
-    } else {
-        None
-    };
-    Ok(ExecRun {
-        result: DistAttnResult { o, lse, grads, comm_bytes },
-        fwd_trace,
-        bwd_trace,
-        wall_s,
-    })
+    let mut spec = RunSpec::for_plans(&fwd_plan, opts.backend.clone(), q, k);
+    spec.trace = opts.trace;
+    spec.deep_copy_sends = opts.deep_copy_sends;
+    let mut session = Session::with_plans(spec, fwd_plan, bwd_plan)?;
+    session.execute_with(q, k, v, do_)?;
+    Ok(session.take_run().expect("execute_with stored a run"))
 }

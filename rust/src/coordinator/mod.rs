@@ -6,10 +6,15 @@
 //! * `comm` — P2P mailboxes, ring all-reduce (the NCCL substitute)
 //! * `executor` — runs a lowered plan with real tensors against PJRT
 //!   artifacts
-//! * `harness` — spawn-P-workers front door used by verify/tests/examples
+//! * `session` — the public front door: a declarative [`RunSpec`] lowered
+//!   once and driven through plan → optimize → execute → trace →
+//!   calibrate ([`Session`])
+//! * `harness` — the pre-`Session` free functions, now thin deprecated
+//!   shims pinned bit-identical to their `RunSpec` translations
 //! * `checkpoint` — HF-style vs rematerialization-aware strategies (§3.3)
 //! * `optimize` — cost-model-driven plan optimizer (placement, GQA role
-//!   flipping, prefetch autotuning) over the lowered IR
+//!   flipping, prefetch autotuning, token-level varlen rebalancing) over
+//!   the lowered IR
 
 pub mod checkpoint;
 pub mod comm;
@@ -18,13 +23,14 @@ pub mod harness;
 pub mod optimize;
 pub mod plan;
 pub mod schedule;
+pub mod session;
 
 pub use checkpoint::CkptStrategy;
 pub use executor::{AttnCtx, MergedTrace, PlanIndex, RunTrace, ATTN_ARTIFACTS};
+#[allow(deprecated)]
 pub use harness::{
     build_plans, build_plans_optimized, build_plans_varlen, run_dist_attention,
     run_dist_attention_exec, run_dist_attention_host, run_dist_attention_planned,
-    BackendSpec, DistAttnResult, ExecOpts, ExecRun,
 };
 pub use optimize::{
     autotune_depth, optimize_plan, optimize_schedule, optimize_varlen, OptimizeOpts, Optimized,
@@ -32,3 +38,7 @@ pub use optimize::{
 };
 pub use plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanNode, PlanOp};
 pub use schedule::{ChunkSpec, ComputeOp, Schedule, ScheduleKind, StepPlan, VarlenSpec};
+pub use session::{
+    BackendSpec, DistAttnResult, ExecOpts, ExecRun, OptimizePolicy, RunSpec, Session,
+    SessionTrace, StageAudit, Workload,
+};

@@ -53,7 +53,7 @@ use crate::simulator::{AttnCost, PlanSim};
 use crate::util::Rng;
 
 /// Knobs for the optimization passes. Defaults are the benchmarked budget.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct OptimizeOpts {
     /// Seed for the hill climb's swap visiting order.
     pub seed: u64,
@@ -78,6 +78,18 @@ pub struct OptimizeOpts {
     /// Maximum boundary+flip sweeps of the token-level rebalancer
     /// (stops early on a sweep with no accepted move).
     pub rebalance_rounds: usize,
+    /// Align varlen boundary-move candidates to document edges — the kinks
+    /// of the pair-weight function, where the token-exact cost model is
+    /// non-smooth and the optimum tends to sit. When a cut's move window
+    /// contains document edges, they *replace* the grid candidates for
+    /// that cut (fewer, better-aimed sims on doc-heavy mixes); windows
+    /// without any edge keep the `c_ref/16` grid as the fallback.
+    pub align_doc_cuts: bool,
+    /// Enable the boundary-move half of the varlen rebalancer (per-pair
+    /// flip sweeps always run). `Session` shares one chunking between the
+    /// forward and backward plans by rebalancing boundaries on one pass
+    /// and re-optimizing the other at fixed cuts with this switched off.
+    pub move_boundaries: bool,
 }
 
 impl Default for OptimizeOpts {
@@ -91,6 +103,8 @@ impl Default for OptimizeOpts {
             flip: true,
             placement: true,
             rebalance_rounds: 3,
+            align_doc_cuts: true,
+            move_boundaries: true,
         }
     }
 }
@@ -796,17 +810,59 @@ pub fn optimize_varlen(
 
     let grain = (spec0.ref_tokens() / 16.0).max(1.0) as i64;
     let deltas: [i64; 6] = [-4 * grain, -2 * grain, -grain, grain, 2 * grain, 4 * grain];
+    // document edges (token prefix sums) — the kinks of the pair-weight
+    // function, where boundary moves change slope; candidate cuts snap to
+    // them when `align_doc_cuts` is set and any fall inside the window
+    let kinks: Vec<usize> = {
+        let mut off = 0usize;
+        spec0
+            .doc_lens
+            .iter()
+            .map(|&l| {
+                off += l;
+                off
+            })
+            .collect()
+    };
     let mut undo: Vec<(usize, f64)> = Vec::new();
     let mut touched: Vec<usize> = Vec::new();
+    // candidate buffer: absolute positions (aligned) or deltas (grid)
+    let mut cands: Vec<i64> = Vec::new();
     for _ in 0..opts.rebalance_rounds {
         let mut improved = false;
         // boundary moves: shift the cut between chunks b-1 and b
         for b in 1..p {
-            for &d in &deltas {
+            if !opts.move_boundaries {
+                break;
+            }
+            // candidate moves for this cut: absolute document-edge
+            // positions (nearest first, capped at the grid size) when
+            // alignment is on and any edge sits strictly inside the
+            // window; otherwise the legacy relative grid, each delta
+            // chaining off the then-current position
+            cands.clear();
+            let cur = reb.spec.boundaries[b];
+            let (lo, hi) = (reb.spec.boundaries[b - 1], reb.spec.boundaries[b + 1]);
+            if opts.align_doc_cuts {
+                cands.extend(
+                    kinks
+                        .iter()
+                        .filter(|&&t| t > lo && t < hi && t != cur)
+                        .map(|&t| t as i64),
+                );
+                cands.sort_by_key(|&t| t.abs_diff(cur as i64));
+                cands.truncate(deltas.len());
+            }
+            let aligned = !cands.is_empty();
+            if !aligned {
+                cands.extend_from_slice(&deltas);
+            }
+            for &mv in &cands {
                 let old_b = reb.spec.boundaries[b];
-                let nb = old_b as i64 + d;
+                let nb = if aligned { mv } else { old_b as i64 + mv };
                 if nb <= reb.spec.boundaries[b - 1] as i64
                     || nb >= reb.spec.boundaries[b + 1] as i64
+                    || nb == old_b as i64
                 {
                     continue; // every chunk keeps at least one token
                 }

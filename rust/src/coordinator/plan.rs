@@ -340,7 +340,7 @@ impl LowerOpts {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub name: String,
     pub n_workers: usize,

@@ -1,0 +1,1641 @@
+//! The `Session` pipeline: one spec-driven path from a declared workload
+//! to a planned, optimized, executed, traced — and *calibrated* — run.
+//!
+//! DISTFLASHATTN's contribution is a composition: balanced scheduling,
+//! overlapped KV communication, and checkpointing working as one system.
+//! [`RunSpec`] declares every axis of one distributed attention run —
+//! workload shape (heads / GQA / varlen packing), cluster topology,
+//! schedule kind, kernel backend, optimization policy, prefetch, tracing —
+//! and [`Session`] lowers it exactly once into the `(fwd, bwd)` plan pair
+//! that the executor, the simulators, and the reports all consume.
+//!
+//! Typed stages, each idempotent and each returning the session for
+//! chaining:
+//!
+//! ```text
+//! RunSpec ──Session::new──▶ plan() ──▶ optimize() ──▶ execute() ──▶ trace()
+//!                              ▲                          │
+//!                              └────── calibrate() ◀──────┘
+//! ```
+//!
+//! * [`Session::plan`] — lower the schedule to validated forward/backward
+//!   plans (token-exact when the spec carries a [`VarlenSpec`]).
+//! * [`Session::optimize`] — run the cost-model-driven pass pipeline
+//!   (role flips, placement, memory-capped prefetch depth; token-level
+//!   rebalancing for varlen specs) under the session's *current* cost
+//!   model, keeping a candidate only when it scores no worse than the
+//!   plan it would replace.
+//! * [`Session::execute`] / [`Session::execute_with`] — launch the placed
+//!   worker network and run the plans with real tensors on the chosen
+//!   backend (PJRT artifacts, pure-host reference kernels, or the
+//!   zero-work echo).
+//! * [`Session::trace`] — the merged per-op timelines of the last run,
+//!   aligned against the event engine's predictions.
+//! * [`Session::calibrate`] — fit the cost model's kernel classes from the
+//!   last run's own measured trace (transfer classes keep their modeled
+//!   byte sizes — the in-process fabric measures no wire), so a second
+//!   `optimize()` tunes against *measured* rather than modeled kernel
+//!   times. This closes the measure→model loop the ROADMAP asked for.
+//!
+//! The legacy free functions in [`super::harness`] survive as thin
+//! deprecated shims over this pipeline; the golden-equivalence suite
+//! (`rust/tests/session_golden.rs`) pins each one bit-identical to its
+//! `RunSpec` translation.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::comm::build_network_placed;
+use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
+use super::optimize::{optimize_plan, optimize_schedule, optimize_varlen, OptimizeOpts};
+use super::plan::{LowerOpts, Pass, Plan};
+use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
+use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
+use crate::config::ClusterSpec;
+use crate::report::trace as trace_report;
+use crate::runtime::{HostKernels, Kernels, NullKernels, Runtime, Tensor};
+use crate::simulator::{AttnCost, PlanSim};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Declarative spec
+// ---------------------------------------------------------------------------
+
+/// Attention workload geometry for one distributed call. Shapes only — the
+/// token axis layout (uniform vs document-packed) lives in
+/// [`RunSpec::varlen`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Tokens per worker chunk — the reference chunk size the cost classes
+    /// are resolved at. With a varlen spec this is the *mean* chunk
+    /// (`total / P`); the ragged per-chunk sizes come from the spec.
+    pub chunk_tokens: usize,
+}
+
+impl Workload {
+    pub fn new(
+        n_heads: usize,
+        n_kv_heads: usize,
+        head_dim: usize,
+        chunk_tokens: usize,
+    ) -> Workload {
+        Workload { n_heads, n_kv_heads, head_dim, chunk_tokens }
+    }
+
+    /// Infer the workload from full-sequence tensors: q is `(H, N, D)`,
+    /// k is `(KVH, N, D)`, split over `n_workers` chunks.
+    pub fn from_tensors(q: &Tensor, k: &Tensor, n_workers: usize) -> Workload {
+        Workload {
+            n_heads: q.shape[0],
+            n_kv_heads: k.shape[0],
+            head_dim: q.shape[2],
+            chunk_tokens: (q.shape[1] / n_workers.max(1)).max(1),
+        }
+    }
+}
+
+/// Which optimizer pipeline [`Session::optimize`] runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizePolicy {
+    /// Keep the default lowering. An *explicit* `optimize()` call still
+    /// runs the schedule pipeline with default knobs; `execute()` does not
+    /// auto-optimize.
+    Off,
+    /// `optimize_schedule` passes: GQA role flipping, placement, prefetch
+    /// depth.
+    Schedule(OptimizeOpts),
+    /// Token-level varlen rebalancing (`optimize_varlen`): boundary moves +
+    /// per-pair flips, then placement and depth. Requires
+    /// [`RunSpec::varlen`]. Boundaries are rebalanced on the forward pass
+    /// and shared with the backward lowering (one sharding feeds both
+    /// passes), which re-optimizes flips/placement/depth at fixed cuts.
+    Varlen(OptimizeOpts),
+}
+
+impl OptimizePolicy {
+    pub fn is_off(&self) -> bool {
+        matches!(self, OptimizePolicy::Off)
+    }
+}
+
+/// Which kernel backend each worker constructs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendSpec {
+    /// Real PJRT artifacts compiled from this directory (needs
+    /// `make artifacts` plus the real `xla` bindings).
+    Pjrt(PathBuf),
+    /// Pure-Rust reference kernels — runs on a bare checkout.
+    HostRef,
+    /// Zero-work shape echo — transport micro-benchmarks only.
+    Null,
+}
+
+/// Everything one distributed attention run depends on, declared up front.
+/// Construct with one of the presets ([`RunSpec::host`],
+/// [`RunSpec::plans_only`], [`RunSpec::pjrt`]) and override fields with
+/// struct-update syntax; serialize with [`RunSpec::to_json`] /
+/// [`RunSpec::from_json`] (the `repro run --spec` contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Head geometry + chunk size. `None` = resolve from the PJRT artifact
+    /// manifest (requires a [`BackendSpec::Pjrt`] backend).
+    pub workload: Option<Workload>,
+    /// Worker count. `0` = resolve from the PJRT artifact manifest.
+    pub n_workers: usize,
+    pub schedule: ScheduleKind,
+    /// Document-packed token layout; `None` = uniform equal chunks.
+    pub varlen: Option<VarlenSpec>,
+    /// Topology the cost models and the optimizer price links against.
+    pub cluster: ClusterSpec,
+    pub backend: BackendSpec,
+    pub optimize: OptimizePolicy,
+    /// Pin the executed prefetch depth; `None` = the plan's own depth
+    /// (1 by default, the autotuned knee after `optimize()`).
+    pub prefetch_depth: Option<usize>,
+    /// Stacked attention calls per `execute()` (fwd + bwd each, distinct
+    /// call ids) — the per-layer timeline harness. 1 = one call.
+    pub layers: usize,
+    /// Run the backward pass in `execute()` (synthesized-input runs).
+    pub backward: bool,
+    /// Record per-op wall-clock spans, merged across ranks.
+    pub trace: bool,
+    /// Model the pre-zero-copy send path (executor bench baseline arm).
+    pub deep_copy_sends: bool,
+    /// Seed for synthesized inputs (`execute()` without tensors).
+    pub seed: u64,
+}
+
+impl RunSpec {
+    fn base(
+        schedule: ScheduleKind,
+        n_workers: usize,
+        workload: Option<Workload>,
+        backend: BackendSpec,
+    ) -> RunSpec {
+        RunSpec {
+            workload,
+            n_workers,
+            schedule,
+            varlen: None,
+            cluster: ClusterSpec::dgx_1x8(),
+            backend,
+            optimize: OptimizePolicy::Off,
+            prefetch_depth: None,
+            layers: 1,
+            backward: true,
+            trace: false,
+            deep_copy_sends: false,
+            seed: 0,
+        }
+    }
+
+    /// Pure-host run: reference kernels, no artifacts needed.
+    pub fn host(schedule: ScheduleKind, n_workers: usize, workload: Workload) -> RunSpec {
+        RunSpec::base(schedule, n_workers, Some(workload), BackendSpec::HostRef)
+    }
+
+    /// Minimal spec for plan-structure work (lowering, simulation): Null
+    /// backend, unit workload — cost classes never matter until
+    /// `optimize()`/`execute()` price or run them.
+    pub fn plans_only(schedule: ScheduleKind, n_workers: usize) -> RunSpec {
+        RunSpec::base(schedule, n_workers, Some(Workload::new(1, 1, 1, 1)), BackendSpec::Null)
+    }
+
+    /// Artifact-backed run; workload and worker count resolve from the
+    /// manifest at session construction.
+    pub fn pjrt(artifact_dir: &Path, schedule: ScheduleKind) -> RunSpec {
+        RunSpec::base(schedule, 0, None, BackendSpec::Pjrt(artifact_dir.to_path_buf()))
+    }
+
+    /// Spec matching already-lowered plans (the deprecated-shim path):
+    /// worker count, varlen layout, and depth come from the plan, head
+    /// geometry from the tensors.
+    pub fn for_plans(plan: &Plan, backend: BackendSpec, q: &Tensor, k: &Tensor) -> RunSpec {
+        let mut spec = RunSpec::base(
+            ScheduleKind::Balanced,
+            plan.n_workers,
+            Some(Workload::from_tensors(q, k, plan.n_workers)),
+            backend,
+        );
+        spec.varlen = plan.varlen.as_deref().cloned();
+        spec
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0 {
+            bail!("layers must be >= 1");
+        }
+        if (self.workload.is_none() || self.n_workers == 0)
+            && !matches!(self.backend, BackendSpec::Pjrt(_))
+        {
+            bail!(
+                "workload and n_workers can only be manifest-resolved with a Pjrt backend; \
+                 set them explicitly for HostRef/Null runs"
+            );
+        }
+        if let Some(w) = &self.workload {
+            if w.n_heads == 0 || w.n_kv_heads == 0 || w.head_dim == 0 || w.chunk_tokens == 0 {
+                bail!("workload dimensions must all be >= 1");
+            }
+            if w.n_heads % w.n_kv_heads != 0 {
+                bail!(
+                    "n_heads ({}) must be a multiple of n_kv_heads ({}) for GQA grouping",
+                    w.n_heads,
+                    w.n_kv_heads
+                );
+            }
+        }
+        if let Some(v) = &self.varlen {
+            v.validate().map_err(|e| anyhow!("invalid varlen spec: {e}"))?;
+            if self.n_workers != 0 && v.n_chunks() != self.n_workers {
+                bail!(
+                    "varlen spec has {} chunks but the run declares {} workers",
+                    v.n_chunks(),
+                    self.n_workers
+                );
+            }
+        }
+        if matches!(self.optimize, OptimizePolicy::Varlen(_)) && self.varlen.is_none() {
+            bail!("OptimizePolicy::Varlen requires RunSpec::varlen");
+        }
+        // the schedule pipeline re-lowers *without* the varlen spec, so its
+        // candidates could never execute against a doc-masked plan pair —
+        // a packed layout must optimize through the varlen pipeline
+        if matches!(self.optimize, OptimizePolicy::Schedule(_)) && self.varlen.is_some() {
+            bail!(
+                "OptimizePolicy::Schedule ignores the declared varlen layout; use \
+                 OptimizePolicy::Varlen for document-packed runs"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution results (moved from `harness`, which now re-exports them)
+// ---------------------------------------------------------------------------
+
+/// Gathered results of one distributed attention call over N tokens.
+#[derive(Debug)]
+pub struct DistAttnResult {
+    /// Normalized attention output (H, N, D).
+    pub o: Tensor,
+    /// Logsumexp (H, N).
+    pub lse: Tensor,
+    /// Gradients, present iff `do_` was supplied.
+    pub grads: Option<(Tensor, Tensor, Tensor)>,
+    /// Total bytes moved between workers.
+    pub comm_bytes: u64,
+}
+
+/// Executor knobs for one distributed call — the imperative subset of a
+/// [`RunSpec`], kept for the deprecated `run_dist_attention_exec` shim.
+#[derive(Clone, Debug)]
+pub struct ExecOpts {
+    pub backend: BackendSpec,
+    /// Record per-op wall-clock spans, merged across ranks in the result.
+    pub trace: bool,
+    /// Model the pre-zero-copy send path (full-chunk allocation + memcpy
+    /// per payload) — the executor micro-bench's baseline arm.
+    pub deep_copy_sends: bool,
+}
+
+impl ExecOpts {
+    pub fn host() -> ExecOpts {
+        ExecOpts { backend: BackendSpec::HostRef, trace: false, deep_copy_sends: false }
+    }
+}
+
+/// One executed distributed call: results plus (when requested) the
+/// rank-merged per-op timelines and the harness wall-clock.
+#[derive(Debug)]
+pub struct ExecRun {
+    pub result: DistAttnResult,
+    /// Last layer's merged forward timeline (when tracing).
+    pub fwd_trace: Option<MergedTrace>,
+    /// Last layer's merged backward timeline (when tracing a backward).
+    pub bwd_trace: Option<MergedTrace>,
+    /// Per-layer merged `(fwd, bwd)` timelines when tracing a stacked
+    /// (`layers > 1`) run; empty otherwise.
+    pub layer_traces: Vec<(Option<MergedTrace>, Option<MergedTrace>)>,
+    /// Wall-clock of the whole call (thread spawn to last join).
+    pub wall_s: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Audit record of one `optimize()` stage for one pass — what the
+/// optimizer found and whether the session kept it.
+#[derive(Clone, Debug)]
+pub struct StageAudit {
+    pub pass: Pass,
+    /// Simulated seconds of the default lowering under the stage's cost
+    /// model (pad/equal baselines for varlen live in `pad_s`/`equal_s`).
+    pub default_s: f64,
+    /// Simulated seconds of the candidate at its placement and depth.
+    pub optimized_s: f64,
+    pub prefetch_depth: usize,
+    /// Flipped schedule steps (schedule pipeline; empty for varlen).
+    pub flipped_steps: Vec<usize>,
+    /// Flipped helper pairs (varlen pipeline).
+    pub flipped_pairs: usize,
+    pub moved_ranks: usize,
+    /// Chunk cuts moved off the incoming boundaries (varlen pipeline).
+    pub moved_boundaries: usize,
+    /// Event-engine passes this stage spent searching.
+    pub sim_calls: usize,
+    /// Whether the candidate replaced the session's current plan.
+    pub accepted: bool,
+    /// Whether the stage ran under a trace-calibrated cost model.
+    pub calibrated: bool,
+    /// Pad-to-max baseline seconds (varlen pipeline; 0 otherwise).
+    pub pad_s: f64,
+    /// Equal-token baseline seconds (varlen pipeline; 0 otherwise).
+    pub equal_s: f64,
+}
+
+/// Merged traces of the last executed run plus their event-engine
+/// alignment — the `trace()` stage's view.
+pub struct SessionTrace<'a> {
+    pub fwd: &'a MergedTrace,
+    pub bwd: Option<&'a MergedTrace>,
+    pub fwd_cmp: trace_report::TraceComparison,
+    pub bwd_cmp: Option<trace_report::TraceComparison>,
+    /// Per-layer `(fwd, bwd)` timelines for stacked runs.
+    pub layers: &'a [(Option<MergedTrace>, Option<MergedTrace>)],
+}
+
+impl<'a> SessionTrace<'a> {
+    /// The standard trace-vs-sim table (see [`trace_report::render`]).
+    pub fn render(&self, title: &str) -> String {
+        let mut rows: Vec<(&str, &trace_report::TraceComparison)> = vec![("fwd", &self.fwd_cmp)];
+        if let Some(b) = &self.bwd_cmp {
+            rows.push(("bwd", b));
+        }
+        trace_report::render(title, &rows)
+    }
+
+    /// Per-layer timeline rows (stacked runs); `None` when the run had a
+    /// single layer.
+    pub fn layer_timeline(&self, title: &str) -> Option<String> {
+        if self.layers.len() <= 1 {
+            return None;
+        }
+        let mut rows: Vec<(String, &MergedTrace)> = Vec::new();
+        for (l, (f, b)) in self.layers.iter().enumerate() {
+            if let Some(f) = f {
+                rows.push((format!("L{l} fwd"), f));
+            }
+            if let Some(b) = b {
+                rows.push((format!("L{l} bwd"), b));
+            }
+        }
+        Some(trace_report::layer_timeline(title, &rows))
+    }
+}
+
+/// Score a finished plan under a cost model at its own placement/depth.
+fn score_plan(plan: &Plan, cluster: &ClusterSpec, cost: &AttnCost) -> f64 {
+    PlanSim::new(plan, cost).total_s(cluster, &plan.placement, plan.prefetch_depth)
+}
+
+/// One spec-driven run pipeline (see module docs).
+pub struct Session {
+    spec: RunSpec,
+    /// Resolved geometry (manifest-filled when the spec left it blank).
+    workload: Workload,
+    n_workers: usize,
+    fwd_cost: AttnCost,
+    bwd_cost: AttnCost,
+    calibrated: bool,
+    plans: Option<(Arc<Plan>, Arc<Plan>)>,
+    optimized: bool,
+    /// Plans were supplied by the caller (`with_plans`): `optimize()`
+    /// must tune them in place rather than re-lower a schedule.
+    caller_plans: bool,
+    last_run: Option<ExecRun>,
+    sim_calls: usize,
+    audits: Vec<StageAudit>,
+}
+
+impl Session {
+    /// Validate the spec, resolve the workload (from the artifact manifest
+    /// when blank), and resolve the modeled cost classes.
+    pub fn new(spec: RunSpec) -> Result<Session> {
+        spec.validate()?;
+        let (workload, n_workers) = match (&spec.workload, spec.n_workers) {
+            (Some(w), n) if n > 0 => (w.clone(), n),
+            _ => {
+                let BackendSpec::Pjrt(dir) = &spec.backend else {
+                    unreachable!("validate() requires Pjrt for manifest resolution");
+                };
+                let rt = Runtime::load(dir)
+                    .context("resolving the workload from the artifact manifest")?;
+                let c = rt.manifest().config.clone();
+                let w = spec.workload.clone().unwrap_or_else(|| {
+                    Workload::new(c.n_heads, c.n_kv_heads, c.head_dim, c.chunk_len)
+                });
+                let n = if spec.n_workers > 0 { spec.n_workers } else { c.n_workers };
+                (w, n)
+            }
+        };
+        if let Some(v) = &spec.varlen {
+            if v.n_chunks() != n_workers {
+                bail!(
+                    "varlen spec has {} chunks but the run resolved to {} workers",
+                    v.n_chunks(),
+                    n_workers
+                );
+            }
+        }
+        let c_ref = match &spec.varlen {
+            Some(v) => v.ref_tokens(),
+            None => workload.chunk_tokens as f64,
+        };
+        let fwd_cost = attn_cost_from_dims(
+            &spec.cluster,
+            c_ref,
+            workload.n_heads,
+            workload.n_kv_heads,
+            workload.head_dim,
+        );
+        let bwd_cost = bwd_cost_from_fwd(&fwd_cost, workload.head_dim);
+        Ok(Session {
+            spec,
+            workload,
+            n_workers,
+            fwd_cost,
+            bwd_cost,
+            calibrated: false,
+            plans: None,
+            optimized: false,
+            caller_plans: false,
+            last_run: None,
+            sim_calls: 0,
+            audits: Vec::new(),
+        })
+    }
+
+    /// Session over caller-supplied lowered plans (the deprecated shims'
+    /// path): the spec must carry an explicit workload and worker count.
+    /// `plan()` keeps the given plans as-is; an explicit `optimize()`
+    /// tunes them *in place* (placement + prefetch depth via
+    /// [`optimize_plan`]) — it never re-lowers a schedule over them, so
+    /// the caller's op stream is preserved.
+    pub fn with_plans(spec: RunSpec, fwd: Arc<Plan>, bwd: Arc<Plan>) -> Result<Session> {
+        if spec.workload.is_none() || spec.n_workers == 0 {
+            bail!("Session::with_plans needs an explicit workload and worker count");
+        }
+        let mut s = Session::new(spec)?;
+        s.plans = Some((fwd, bwd));
+        s.optimized = true;
+        s.caller_plans = true;
+        Ok(s)
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Current `(fwd, bwd)` cost models — modeled at construction,
+    /// measured after [`Session::calibrate`].
+    pub fn costs(&self) -> (&AttnCost, &AttnCost) {
+        (&self.fwd_cost, &self.bwd_cost)
+    }
+
+    /// Replace the cost models (externally measured classes, exotic
+    /// hardware). [`Session::calibrate`] is the trace-fitted version.
+    pub fn set_costs(&mut self, fwd: AttnCost, bwd: AttnCost) -> &mut Session {
+        self.fwd_cost = fwd;
+        self.bwd_cost = bwd;
+        self
+    }
+
+    pub fn calibrated(&self) -> bool {
+        self.calibrated
+    }
+
+    /// Event-engine passes spent across every `optimize()` stage so far —
+    /// the search budget the acceptance criteria report.
+    pub fn sim_calls(&self) -> usize {
+        self.sim_calls
+    }
+
+    /// Audit trail of every `optimize()` stage (one record per pass).
+    pub fn audits(&self) -> &[StageAudit] {
+        &self.audits
+    }
+
+    /// Lower the schedule to validated forward/backward plans. Idempotent;
+    /// does nothing when plans already exist (lowered, optimized, or
+    /// caller-supplied).
+    pub fn plan(&mut self) -> Result<&mut Session> {
+        if self.plans.is_some() {
+            return Ok(self);
+        }
+        let schedule = Schedule::build(self.spec.schedule, self.n_workers);
+        schedule
+            .validate()
+            .map_err(|e| anyhow!("invalid schedule: {e}"))?;
+        let lopts = match &self.spec.varlen {
+            Some(v) => LowerOpts { varlen: Some(Arc::new(v.clone())), ..Default::default() },
+            None => LowerOpts::default(),
+        };
+        let mut fwd = Plan::from_schedule_opts(&schedule, Pass::Forward, &lopts);
+        fwd.validate_lowered()
+            .map_err(|e| anyhow!("invalid forward plan: {e}"))?;
+        let mut bwd = Plan::from_schedule_opts(&schedule, Pass::Backward, &lopts);
+        bwd.validate_lowered()
+            .map_err(|e| anyhow!("invalid backward plan: {e}"))?;
+        if let Some(d) = self.spec.prefetch_depth {
+            fwd.prefetch_depth = d;
+            bwd.prefetch_depth = d;
+        }
+        self.plans = Some((Arc::new(fwd), Arc::new(bwd)));
+        Ok(self)
+    }
+
+    /// Run the optimizer pass pipeline under the current cost model and
+    /// keep each candidate only if it scores no worse than the plan it
+    /// would replace (so repeated calls — e.g. after [`Session::calibrate`]
+    /// — are monotone under the model in force). Appends one
+    /// [`StageAudit`] per pass.
+    pub fn optimize(&mut self) -> Result<&mut Session> {
+        self.plan()?;
+        let opts = match &self.spec.optimize {
+            OptimizePolicy::Schedule(o) | OptimizePolicy::Varlen(o) => o.clone(),
+            OptimizePolicy::Off => OptimizeOpts::default(),
+        };
+        if self.caller_plans {
+            // caller-supplied plans: tune placement + depth in place,
+            // never re-lower (the op stream is the caller's contract)
+            self.optimize_given_stage(Pass::Forward, &opts)?;
+            self.optimize_given_stage(Pass::Backward, &opts)?;
+            self.optimized = true;
+            return Ok(self);
+        }
+        let varlen_mode = match &self.spec.optimize {
+            OptimizePolicy::Varlen(_) => true,
+            OptimizePolicy::Schedule(_) => false,
+            OptimizePolicy::Off => self.spec.varlen.is_some(),
+        };
+        let schedule = Schedule::build(self.spec.schedule, self.n_workers);
+        if varlen_mode {
+            self.optimize_varlen_stage(&schedule, &opts)?;
+        } else {
+            self.optimize_schedule_stage(&schedule, Pass::Forward, &opts)?;
+            self.optimize_schedule_stage(&schedule, Pass::Backward, &opts)?;
+        }
+        self.optimized = true;
+        Ok(self)
+    }
+
+    fn cost_for(&self, pass: Pass) -> AttnCost {
+        match pass {
+            Pass::Forward => self.fwd_cost,
+            Pass::Backward => self.bwd_cost,
+        }
+    }
+
+    /// The shared acceptance tail: score `cand` against the current plan
+    /// for `pass` under `cost`, keep whichever is not worse, and drop the
+    /// recorded run on a swap (a trace no longer aligns with changed
+    /// plans op-for-op). Returns `(accepted, kept score, kept depth)` —
+    /// the audit's `optimized_s`/`prefetch_depth`, describing the plan
+    /// the session actually holds.
+    fn accept_candidate(
+        &mut self,
+        pass: Pass,
+        mut cand: Plan,
+        cost: &AttnCost,
+    ) -> (bool, f64, usize) {
+        if let Some(d) = self.spec.prefetch_depth {
+            cand.prefetch_depth = d;
+        }
+        let (cur_fwd, cur_bwd) = self.plans.as_ref().expect("plan() ran").clone();
+        let current = match pass {
+            Pass::Forward => cur_fwd.clone(),
+            Pass::Backward => cur_bwd.clone(),
+        };
+        let cur_s = score_plan(&current, &self.spec.cluster, cost);
+        let cand_s = score_plan(&cand, &self.spec.cluster, cost);
+        self.sim_calls += 2;
+        let accepted = cand_s <= cur_s;
+        if accepted && cand != *current {
+            // the plan actually changed: a recorded trace no longer aligns
+            // with it op-for-op (an identical candidate keeps the run)
+            self.last_run = None;
+        }
+        let chosen = if accepted { Arc::new(cand) } else { current };
+        let kept_depth = chosen.prefetch_depth;
+        self.plans = Some(match pass {
+            Pass::Forward => (chosen, cur_bwd),
+            Pass::Backward => (cur_fwd, chosen),
+        });
+        (accepted, if accepted { cand_s } else { cur_s }, kept_depth)
+    }
+
+    fn optimize_schedule_stage(
+        &mut self,
+        schedule: &Schedule,
+        pass: Pass,
+        opts: &OptimizeOpts,
+    ) -> Result<()> {
+        let cost = self.cost_for(pass);
+        let o = optimize_schedule(schedule, pass, &self.spec.cluster, &cost, opts);
+        self.sim_calls += o.sim_calls;
+        o.plan
+            .validate_lowered()
+            .map_err(|e| anyhow!("optimized {} plan invalid: {e}", pass.name()))?;
+        let (accepted, kept_s, kept_depth) = self.accept_candidate(pass, o.plan, &cost);
+        self.audits.push(StageAudit {
+            pass,
+            default_s: o.default_s,
+            optimized_s: kept_s,
+            prefetch_depth: kept_depth,
+            flipped_steps: o.flipped_steps,
+            flipped_pairs: 0,
+            moved_ranks: o.moved_ranks,
+            moved_boundaries: 0,
+            sim_calls: o.sim_calls,
+            accepted,
+            calibrated: self.calibrated,
+            pad_s: 0.0,
+            equal_s: 0.0,
+        });
+        Ok(())
+    }
+
+    /// Caller-plan stage: placement + memory-capped depth over the given
+    /// plan ([`optimize_plan`] — no re-lowering), with the same
+    /// accept-only-if-not-worse rule as the schedule stage.
+    fn optimize_given_stage(&mut self, pass: Pass, opts: &OptimizeOpts) -> Result<()> {
+        let cost = self.cost_for(pass);
+        let current = {
+            let (cur_fwd, cur_bwd) = self.plans.as_ref().expect("plan() ran");
+            match pass {
+                Pass::Forward => cur_fwd.clone(),
+                Pass::Backward => cur_bwd.clone(),
+            }
+        };
+        let o = optimize_plan(&current, &self.spec.cluster, &cost, opts);
+        self.sim_calls += o.sim_calls;
+        let (accepted, kept_s, kept_depth) = self.accept_candidate(pass, o.plan, &cost);
+        self.audits.push(StageAudit {
+            pass,
+            default_s: o.default_s,
+            optimized_s: kept_s,
+            prefetch_depth: kept_depth,
+            flipped_steps: Vec::new(),
+            flipped_pairs: 0,
+            moved_ranks: o.moved_ranks,
+            moved_boundaries: 0,
+            sim_calls: o.sim_calls,
+            accepted,
+            calibrated: self.calibrated,
+            pad_s: 0.0,
+            equal_s: 0.0,
+        });
+        Ok(())
+    }
+
+    /// Varlen stage: rebalance boundaries on the forward pass, then
+    /// re-optimize the backward at the chosen cuts (flips, placement,
+    /// depth), and accept or reject the `(fwd, bwd)` pair *jointly* so the
+    /// two passes always share one chunking.
+    fn optimize_varlen_stage(&mut self, schedule: &Schedule, opts: &OptimizeOpts) -> Result<()> {
+        let (cur_fwd, cur_bwd) = self.plans.as_ref().expect("plan() ran").clone();
+        // continue from wherever the current plans' boundaries are
+        let spec0: VarlenSpec = cur_fwd
+            .varlen
+            .as_deref()
+            .cloned()
+            .or_else(|| self.spec.varlen.clone())
+            .ok_or_else(|| anyhow!("varlen optimization needs a varlen spec"))?;
+        let of = optimize_varlen(
+            schedule,
+            &spec0,
+            Pass::Forward,
+            &self.spec.cluster,
+            &self.fwd_cost,
+            opts,
+        );
+        self.sim_calls += of.sim_calls;
+        let bwd_opts = OptimizeOpts { move_boundaries: false, ..opts.clone() };
+        let ob = optimize_varlen(
+            schedule,
+            &of.spec,
+            Pass::Backward,
+            &self.spec.cluster,
+            &self.bwd_cost,
+            &bwd_opts,
+        );
+        self.sim_calls += ob.sim_calls;
+        let mut cand_fwd = of.plan.clone();
+        let mut cand_bwd = ob.plan.clone();
+        cand_fwd
+            .validate_lowered()
+            .map_err(|e| anyhow!("rebalanced fwd plan invalid: {e}"))?;
+        cand_bwd
+            .validate_lowered()
+            .map_err(|e| anyhow!("rebalanced bwd plan invalid: {e}"))?;
+        if let Some(d) = self.spec.prefetch_depth {
+            cand_fwd.prefetch_depth = d;
+            cand_bwd.prefetch_depth = d;
+        }
+        let cur_f = score_plan(&cur_fwd, &self.spec.cluster, &self.fwd_cost);
+        let cur_b = score_plan(&cur_bwd, &self.spec.cluster, &self.bwd_cost);
+        let cand_f = score_plan(&cand_fwd, &self.spec.cluster, &self.fwd_cost);
+        let cand_b = score_plan(&cand_bwd, &self.spec.cluster, &self.bwd_cost);
+        self.sim_calls += 4;
+        let accepted = cand_f + cand_b <= cur_f + cur_b;
+        // audit the score and depth of whichever pair the session keeps
+        let (audit_f, audit_b) = if accepted { (cand_f, cand_b) } else { (cur_f, cur_b) };
+        let (depth_f, depth_b) = if accepted {
+            (cand_fwd.prefetch_depth, cand_bwd.prefetch_depth)
+        } else {
+            (cur_fwd.prefetch_depth, cur_bwd.prefetch_depth)
+        };
+        for (o, pass, own_s, depth) in [
+            (&of, Pass::Forward, audit_f, depth_f),
+            (&ob, Pass::Backward, audit_b, depth_b),
+        ] {
+            self.audits.push(StageAudit {
+                pass,
+                default_s: o.equal_s,
+                optimized_s: own_s,
+                prefetch_depth: depth,
+                flipped_steps: Vec::new(),
+                flipped_pairs: o.flipped_pairs,
+                moved_ranks: o.moved_ranks,
+                moved_boundaries: o.moved_boundaries,
+                sim_calls: o.sim_calls,
+                accepted,
+                calibrated: self.calibrated,
+                pad_s: o.pad_s,
+                equal_s: o.equal_s,
+            });
+        }
+        if accepted {
+            if cand_fwd != *cur_fwd || cand_bwd != *cur_bwd {
+                // rebalanced boundaries change the skipped-pair set (and
+                // so the op count): a recorded trace cannot describe the
+                // new plans (an identical pair keeps the run)
+                self.last_run = None;
+            }
+            self.plans = Some((Arc::new(cand_fwd), Arc::new(cand_bwd)));
+        }
+        Ok(())
+    }
+
+    fn ensure_ready(&mut self) -> Result<()> {
+        self.plan()?;
+        if !self.optimized && !self.spec.optimize.is_off() {
+            self.optimize()?;
+        }
+        Ok(())
+    }
+
+    /// The `(fwd, bwd)` plan pair, lowering (and optimizing, per policy)
+    /// on demand.
+    pub fn plans(&mut self) -> Result<(Arc<Plan>, Arc<Plan>)> {
+        self.ensure_ready()?;
+        Ok(self.plans.as_ref().expect("ensure_ready built plans").clone())
+    }
+
+    /// Execute with inputs synthesized from the spec's shapes and seed
+    /// (q, k, v, and — when `spec.backward` — do, drawn in that order).
+    pub fn execute(&mut self) -> Result<&mut Session> {
+        self.ensure_ready()?;
+        let w = &self.workload;
+        let n = match &self.spec.varlen {
+            Some(v) => v.total_tokens(),
+            None => w.chunk_tokens * self.n_workers,
+        };
+        let (h, kvh, d) = (w.n_heads, w.n_kv_heads, w.head_dim);
+        let mut rng = Rng::new(self.spec.seed);
+        let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+        let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+        let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+        let do_ = self
+            .spec
+            .backward
+            .then(|| Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d)));
+        self.execute_with(&q, &k, &v, do_.as_ref())
+    }
+
+    /// Execute with caller-supplied full-sequence tensors: q `(H, N, D)`,
+    /// k/v `(KVH, N, D)`, do `(H, N, D)`. Plans are built (and optimized,
+    /// per policy) on demand; the placed worker network is launched from
+    /// the forward plan's rank→GPU binding.
+    pub fn execute_with(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        do_: Option<&Tensor>,
+    ) -> Result<&mut Session> {
+        self.ensure_ready()?;
+        let (fwd, bwd) = self.plans.as_ref().expect("ensure_ready built plans").clone();
+        let opts = ExecOpts {
+            backend: self.spec.backend.clone(),
+            trace: self.spec.trace,
+            deep_copy_sends: self.spec.deep_copy_sends,
+        };
+        let run = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers)?;
+        self.last_run = Some(run);
+        Ok(self)
+    }
+
+    /// The last executed run.
+    pub fn run(&self) -> Result<&ExecRun> {
+        self.last_run
+            .as_ref()
+            .ok_or_else(|| anyhow!("no run yet — call execute() first"))
+    }
+
+    /// The last executed run's gathered results.
+    pub fn result(&self) -> Result<&DistAttnResult> {
+        Ok(&self.run()?.result)
+    }
+
+    /// Take ownership of the last executed run (the shims' return path).
+    pub fn take_run(&mut self) -> Option<ExecRun> {
+        self.last_run.take()
+    }
+
+    /// The `trace()` stage: merged per-op timelines of the last run plus
+    /// their event-engine alignment. Requires `spec.trace`. An
+    /// `optimize()` that swaps plans drops the recorded run (the trace no
+    /// longer aligns with the plans op-for-op) — re-`execute()` first.
+    pub fn trace(&self) -> Result<SessionTrace<'_>> {
+        let run = self.run()?;
+        let ft = run.fwd_trace.as_ref().ok_or_else(|| {
+            anyhow!("the last run was not traced — set RunSpec::trace before execute()")
+        })?;
+        let (fwd_plan, bwd_plan) = self.plans.as_ref().expect("a run implies plans");
+        let fwd_cmp = trace_report::compare(fwd_plan, ft);
+        let bwd_cmp = run.bwd_trace.as_ref().map(|bt| trace_report::compare(bwd_plan, bt));
+        Ok(SessionTrace {
+            fwd: ft,
+            bwd: run.bwd_trace.as_ref(),
+            fwd_cmp,
+            bwd_cmp,
+            layers: &run.layer_traces,
+        })
+    }
+
+    /// Fit the cost model's kernel classes from the last run's own
+    /// measured trace (per-class means; transfer classes keep their
+    /// modeled byte sizes — the in-process fabric has no measurable wire).
+    /// A subsequent [`Session::optimize`] then tunes against measured
+    /// rather than modeled kernel times.
+    pub fn calibrate(&mut self) -> Result<&mut Session> {
+        let (ft, bt) = {
+            let run = self
+                .last_run
+                .as_ref()
+                .ok_or_else(|| anyhow!("nothing to calibrate from — call execute() first"))?;
+            let ft = run.fwd_trace.as_ref().ok_or_else(|| {
+                anyhow!("the last run was not traced — set RunSpec::trace before execute()")
+            })?;
+            (ft.clone(), run.bwd_trace.clone())
+        };
+        let (fwd_plan, bwd_plan) = self.plans.as_ref().expect("a run implies plans").clone();
+        self.fwd_cost = trace_report::calibrate_cost_with_bytes(&fwd_plan, &ft, &self.fwd_cost);
+        if let Some(bt) = bt {
+            self.bwd_cost = trace_report::calibrate_cost_with_bytes(&bwd_plan, &bt, &self.bwd_cost);
+        }
+        self.calibrated = true;
+        Ok(self)
+    }
+
+    /// Human-readable pipeline summary: spec, plans, optimizer audit,
+    /// last run.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let backend = match &self.spec.backend {
+            BackendSpec::Pjrt(d) => format!("pjrt:{}", d.display()),
+            BackendSpec::HostRef => "hostref".into(),
+            BackendSpec::Null => "null".into(),
+        };
+        out.push_str(&format!(
+            "session: {:?} P={} heads {}/{} d{} chunk {}{} backend={backend} layers={}\n",
+            self.spec.schedule,
+            self.n_workers,
+            self.workload.n_heads,
+            self.workload.n_kv_heads,
+            self.workload.head_dim,
+            self.workload.chunk_tokens,
+            if self.spec.varlen.is_some() { " (varlen)" } else { "" },
+            self.spec.layers,
+        ));
+        if let Some((f, b)) = &self.plans {
+            out.push_str(&format!(
+                "plans: fwd {} ops / bwd {} ops, depth {}/{}, placement moved {}\n",
+                f.n_ops(),
+                b.n_ops(),
+                f.prefetch_depth,
+                b.prefetch_depth,
+                f.placement.iter().enumerate().filter(|&(i, &g)| i != g).count(),
+            ));
+        }
+        for a in &self.audits {
+            out.push_str(&format!(
+                "optimize[{}{}]: {:.3} -> {:.3} ms ({:.2}x, {} sims{}{})\n",
+                a.pass.name(),
+                if a.calibrated { ", calibrated" } else { "" },
+                a.default_s * 1e3,
+                a.optimized_s * 1e3,
+                if a.optimized_s > 0.0 { a.default_s / a.optimized_s } else { 1.0 },
+                a.sim_calls,
+                if a.accepted { "" } else { ", rejected" },
+                if a.moved_boundaries > 0 {
+                    format!(", {} cuts moved", a.moved_boundaries)
+                } else {
+                    String::new()
+                },
+            ));
+        }
+        if let Some(run) = &self.last_run {
+            out.push_str(&format!(
+                "executed: wall {:.2} ms, comm {:.2} MB{}\n",
+                run.wall_s * 1e3,
+                run.result.comm_bytes as f64 / 1e6,
+                if run.fwd_trace.is_some() { ", traced" } else { "" },
+            ));
+        }
+        out.push_str(&format!(
+            "budget: {} sim calls{}\n",
+            self.sim_calls,
+            if self.calibrated { ", cost model calibrated from trace" } else { "" },
+        ));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The executor engine (moved from `harness::run_dist_attention_exec`)
+// ---------------------------------------------------------------------------
+
+/// Launch the placed worker network and run `layers` stacked attention
+/// calls (fwd + optional bwd each) over the given plans — the engine
+/// behind [`Session::execute_with`] and the deprecated harness shims.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn execute_plans(
+    fwd_plan: Arc<Plan>,
+    bwd_plan: Arc<Plan>,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: Option<&Tensor>,
+    opts: &ExecOpts,
+    layers: usize,
+) -> Result<ExecRun> {
+    let n_workers = fwd_plan.n_workers;
+    if layers == 0 {
+        return Err(anyhow!("layers must be >= 1"));
+    }
+    if bwd_plan.n_workers != n_workers {
+        return Err(anyhow!(
+            "fwd plan has {n_workers} workers, bwd plan {}",
+            bwd_plan.n_workers
+        ));
+    }
+    // both passes must agree on the chunking — a backward plan lowered
+    // against different boundaries would expect different shapes and
+    // pair structure than the tensors sharded below
+    if fwd_plan.varlen.as_deref() != bwd_plan.varlen.as_deref() {
+        return Err(anyhow!(
+            "fwd and bwd plans carry different varlen chunk specs"
+        ));
+    }
+
+    // equal chunks by default; ragged token boundaries for varlen plans
+    let (qs, ks, vs, dos) = match fwd_plan.varlen.as_deref() {
+        Some(spec) => {
+            if spec.total_tokens() != q.shape[1] {
+                return Err(anyhow!(
+                    "varlen spec covers {} tokens but q has {}",
+                    spec.total_tokens(),
+                    q.shape[1]
+                ));
+            }
+            // the AOT artifacts compile one fixed chunk shape; a ragged
+            // chunk would fail the runtime's shape check mid-plan on one
+            // worker and deadlock its peers' blocking recvs — reject up
+            // front with the honest story instead. (The host backends have
+            // no such restriction: they accept any chunk shape.)
+            let c0 = spec.chunk_tokens(0);
+            let uniform = (1..n_workers).all(|w| spec.chunk_tokens(w) == c0);
+            if !uniform && matches!(opts.backend, BackendSpec::Pjrt(_)) {
+                return Err(anyhow!(
+                    "ragged varlen boundaries need per-chunk AOT artifacts; the fixed-shape \
+                     manifest executes uniform chunks only (run the host backend, simulate \
+                     ragged plans with the event engine, or rebalance with uniform boundaries)"
+                ));
+            }
+            (
+                q.chunk_axis1_at(&spec.boundaries),
+                k.chunk_axis1_at(&spec.boundaries),
+                v.chunk_axis1_at(&spec.boundaries),
+                do_.map(|d| d.chunk_axis1_at(&spec.boundaries)),
+            )
+        }
+        None => (
+            q.chunk_axis1(n_workers),
+            k.chunk_axis1(n_workers),
+            v.chunk_axis1(n_workers),
+            do_.map(|d| d.chunk_axis1(n_workers)),
+        ),
+    };
+
+    // bind rank i's mailbox to slot placement[i] — the in-process
+    // analogue of the launcher pinning rank i to that GPU. (A backward
+    // plan optimized separately may carry a different placement; messages
+    // are addressed by logical rank, so the forward placement binding
+    // stays correct for both passes.)
+    let comms = build_network_placed(n_workers, &fwd_plan.placement);
+
+    struct WorkerOut {
+        rank: usize,
+        o: Tensor,
+        lse: Tensor,
+        grads: Option<(Tensor, Tensor, Tensor)>,
+        bytes: u64,
+        /// Per-layer (fwd, bwd) traces (empty bwd trace when no backward).
+        layer_traces: Vec<(RunTrace, RunTrace)>,
+    }
+
+    let epoch = Instant::now();
+    let mut handles = Vec::new();
+    for (rank, mut comm) in comms.into_iter().enumerate() {
+        let backend = opts.backend.clone();
+        let trace = opts.trace;
+        let deep = opts.deep_copy_sends;
+        let fwd_plan = fwd_plan.clone();
+        let bwd_plan = bwd_plan.clone();
+        let q = qs[rank].clone();
+        let k = ks[rank].clone();
+        let v = vs[rank].clone();
+        let do_chunk = dos.as_ref().map(|d| d[rank].clone());
+        handles.push(thread::spawn(move || -> Result<WorkerOut> {
+            comm.set_deep_copy_sends(deep);
+            let kernels: Box<dyn Kernels> = match &backend {
+                BackendSpec::Pjrt(dir) => {
+                    let rt = Runtime::load(dir)?;
+                    rt.precompile(ATTN_ARTIFACTS)?;
+                    Box::new(rt)
+                }
+                BackendSpec::HostRef => Box::new(HostKernels),
+                BackendSpec::Null => Box::new(NullKernels),
+            };
+            let epoch = trace.then_some(epoch);
+            let mut layer_traces = Vec::with_capacity(if trace { layers } else { 0 });
+            let mut last: Option<(Tensor, Tensor, Option<(Tensor, Tensor, Tensor)>)> = None;
+            for layer in 0..layers {
+                let (o, lse, fwd_trace) = {
+                    let mut ctx = AttnCtx {
+                        rank,
+                        runtime: &*kernels,
+                        comm: &mut comm,
+                        plan: &fwd_plan,
+                        call_id: (2 * layer) as u32,
+                        epoch,
+                        trace: RunTrace::default(),
+                    };
+                    let (o, lse) = ctx.forward(&q, &k, &v)?;
+                    (o, lse, ctx.trace)
+                };
+                let (grads, bwd_trace) = match do_chunk.as_ref() {
+                    Some(d) => {
+                        let mut ctx = AttnCtx {
+                            rank,
+                            runtime: &*kernels,
+                            comm: &mut comm,
+                            plan: &bwd_plan,
+                            call_id: (2 * layer + 1) as u32,
+                            epoch,
+                            trace: RunTrace::default(),
+                        };
+                        let g = ctx.backward(&q, &k, &v, &o, &lse, d)?;
+                        (Some(g), ctx.trace)
+                    }
+                    None => (None, RunTrace::default()),
+                };
+                if trace {
+                    layer_traces.push((fwd_trace, bwd_trace));
+                }
+                last = Some((o, lse, grads));
+            }
+            let (o, lse, grads) = last.expect("layers >= 1");
+            let bytes = comm.bytes_sent();
+            Ok(WorkerOut { rank, o, lse, grads, bytes, layer_traces })
+        }));
+    }
+
+    let mut outs: Vec<Option<WorkerOut>> = (0..n_workers).map(|_| None).collect();
+    let mut comm_bytes = 0;
+    for h in handles {
+        let w = h
+            .join()
+            .map_err(|_| anyhow!("worker thread panicked"))?
+            .context("worker failed")?;
+        comm_bytes += w.bytes;
+        let rank = w.rank;
+        outs[rank] = Some(w);
+    }
+    let wall_s = epoch.elapsed().as_secs_f64();
+    let outs: Vec<WorkerOut> = outs.into_iter().map(|o| o.unwrap()).collect();
+
+    let (fwd_trace, bwd_trace, layer_traces) = if opts.trace {
+        let mut lt: Vec<(Option<MergedTrace>, Option<MergedTrace>)> = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let ft: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].0.clone()).collect();
+            let bt: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].1.clone()).collect();
+            lt.push((
+                Some(MergedTrace::merge(fwd_plan.n_ops(), &ft)),
+                do_.is_some().then(|| MergedTrace::merge(bwd_plan.n_ops(), &bt)),
+            ));
+        }
+        let (lf, lb) = lt.last().cloned().expect("layers >= 1");
+        (lf, lb, lt)
+    } else {
+        (None, None, Vec::new())
+    };
+
+    let o = Tensor::cat_axis1(&outs.iter().map(|w| w.o.clone()).collect::<Vec<_>>());
+    // lse chunks are (H, C): concatenate along axis 1 by reusing the rank-3
+    // helper on zero-copy (H, C, 1) views.
+    let lse = {
+        let parts: Vec<Tensor> = outs
+            .iter()
+            .map(|w| {
+                let mut s = w.lse.shape.clone();
+                s.push(1);
+                w.lse.reshape(s)
+            })
+            .collect();
+        let cat = Tensor::cat_axis1(&parts);
+        let flat = cat.shape[..2].to_vec();
+        cat.reshape(flat)
+    };
+    let grads = if do_.is_some() {
+        let dq = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().0.clone()).collect::<Vec<_>>(),
+        );
+        let dk = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().1.clone()).collect::<Vec<_>>(),
+        );
+        let dv = Tensor::cat_axis1(
+            &outs.iter().map(|w| w.grads.as_ref().unwrap().2.clone()).collect::<Vec<_>>(),
+        );
+        Some((dq, dk, dv))
+    } else {
+        None
+    };
+    Ok(ExecRun {
+        result: DistAttnResult { o, lse, grads, comm_bytes },
+        fwd_trace,
+        bwd_trace,
+        layer_traces,
+        wall_s,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization — the `repro run --spec` contract
+// ---------------------------------------------------------------------------
+
+use crate::util::json::escape as json_escape;
+
+fn usize_list(xs: &[usize]) -> String {
+    let parts: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+/// Largest integer a JSON number (f64-backed in the in-tree parser) can
+/// carry exactly.
+const JSON_SAFE_INT: u64 = 1 << 53;
+
+/// Seeds serialize as plain numbers when exactly representable and as
+/// decimal strings from 2^53 up — so the round trip is exact for every
+/// u64 (the parse side refuses numbers in the inexact range).
+fn u64_to_json(x: u64) -> String {
+    if x >= JSON_SAFE_INT {
+        format!("\"{x}\"")
+    } else {
+        x.to_string()
+    }
+}
+
+/// Accept both forms; `None` for a missing/null field.
+fn u64_from_json(j: &Json, what: &str) -> Result<Option<u64>> {
+    match j {
+        Json::Null => Ok(None),
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| anyhow!("{what} must be a u64 (got {s:?})")),
+        Json::Num(_) => {
+            let v = j
+                .as_usize()
+                .ok_or_else(|| anyhow!("{what} must be a non-negative integer"))?;
+            // the f64-backed parser may have rounded anything at or above
+            // 2^53 (2^53 + 1 already lands *on* 2^53) — refuse rather
+            // than run with a silently different value
+            if v as u64 >= JSON_SAFE_INT {
+                bail!(
+                    "{what} is 2^53 or larger and cannot ride a JSON number exactly; \
+                     write it as a decimal string"
+                );
+            }
+            Ok(Some(v as u64))
+        }
+        _ => Err(anyhow!("{what} must be a u64 (number or decimal string)")),
+    }
+}
+
+// Optional-field getters: missing/null falls back to the default, but a
+// present field of the wrong type is an ERROR — a spec must never silently
+// run with a knob other than the one it declares.
+fn opt_usize(j: &Json, k: &str, what: &str, dv: usize) -> Result<usize> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(dv),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow!("{what}{k} must be a non-negative integer")),
+    }
+}
+
+fn opt_f64(j: &Json, k: &str, what: &str, dv: f64) -> Result<f64> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(dv),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("{what}{k} must be a number")),
+    }
+}
+
+fn opt_bool(j: &Json, k: &str, what: &str, dv: bool) -> Result<bool> {
+    match j.get(k) {
+        None | Some(Json::Null) => Ok(dv),
+        Some(v) => v.as_bool().ok_or_else(|| anyhow!("{what}{k} must be a boolean")),
+    }
+}
+
+fn opts_to_json(o: &OptimizeOpts) -> String {
+    format!(
+        "{{\"seed\": {}, \"swap_rounds\": {}, \"depths\": {}, \"knee_rel_tol\": {}, \
+         \"stage_mem_frac\": {}, \"flip\": {}, \"placement\": {}, \"rebalance_rounds\": {}, \
+         \"align_doc_cuts\": {}, \"move_boundaries\": {}}}",
+        u64_to_json(o.seed),
+        o.swap_rounds,
+        usize_list(&o.depths),
+        o.knee_rel_tol,
+        o.stage_mem_frac,
+        o.flip,
+        o.placement,
+        o.rebalance_rounds,
+        o.align_doc_cuts,
+        o.move_boundaries,
+    )
+}
+
+fn opts_from_json(j: &Json) -> Result<OptimizeOpts> {
+    let d = OptimizeOpts::default();
+    let w = "optimize.";
+    let depths = match j.get("depths") {
+        None | Some(Json::Null) => d.depths.clone(),
+        Some(v) => v
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("optimize.depths must be an array of integers"))?,
+    };
+    Ok(OptimizeOpts {
+        seed: u64_from_json(j.at("seed"), "optimize.seed")?.unwrap_or(d.seed),
+        swap_rounds: opt_usize(j, "swap_rounds", w, d.swap_rounds)?,
+        depths,
+        knee_rel_tol: opt_f64(j, "knee_rel_tol", w, d.knee_rel_tol)?,
+        stage_mem_frac: opt_f64(j, "stage_mem_frac", w, d.stage_mem_frac)?,
+        flip: opt_bool(j, "flip", w, d.flip)?,
+        placement: opt_bool(j, "placement", w, d.placement)?,
+        rebalance_rounds: opt_usize(j, "rebalance_rounds", w, d.rebalance_rounds)?,
+        align_doc_cuts: opt_bool(j, "align_doc_cuts", w, d.align_doc_cuts)?,
+        move_boundaries: opt_bool(j, "move_boundaries", w, d.move_boundaries)?,
+    })
+}
+
+impl RunSpec {
+    /// Serialize to the `repro run --spec` JSON document. Floats print in
+    /// Rust's shortest round-trip form, so `from_json(to_json(s)) == s`
+    /// exactly (pinned by `rust/tests/session_spec.rs`).
+    pub fn to_json(&self) -> String {
+        let workload = match &self.workload {
+            None => "null".to_string(),
+            Some(w) => format!(
+                "{{\"n_heads\": {}, \"n_kv_heads\": {}, \"head_dim\": {}, \"chunk_tokens\": {}}}",
+                w.n_heads, w.n_kv_heads, w.head_dim, w.chunk_tokens
+            ),
+        };
+        let varlen = match &self.varlen {
+            None => "null".to_string(),
+            Some(v) => format!(
+                "{{\"doc_lens\": {}, \"boundaries\": {}}}",
+                usize_list(&v.doc_lens),
+                usize_list(&v.boundaries)
+            ),
+        };
+        let c = &self.cluster;
+        let cluster = format!(
+            "{{\"n_nodes\": {}, \"gpus_per_node\": {}, \"gpu\": {{\"peak_flops\": {}, \
+             \"mfu_attn\": {}, \"mfu_gemm\": {}, \"mem_bytes\": {}}}, \"intra_bw\": {}, \
+             \"intra_lat\": {}, \"inter_bw\": {}, \"inter_lat\": {}}}",
+            c.n_nodes,
+            c.gpus_per_node,
+            c.gpu.peak_flops,
+            c.gpu.mfu_attn,
+            c.gpu.mfu_gemm,
+            c.gpu.mem_bytes,
+            c.intra_bw,
+            c.intra_lat,
+            c.inter_bw,
+            c.inter_lat,
+        );
+        let backend = match &self.backend {
+            BackendSpec::Pjrt(p) => {
+                format!("{{\"pjrt\": \"{}\"}}", json_escape(&p.display().to_string()))
+            }
+            BackendSpec::HostRef => "\"hostref\"".to_string(),
+            BackendSpec::Null => "\"null\"".to_string(),
+        };
+        let optimize = match &self.optimize {
+            OptimizePolicy::Off => "\"off\"".to_string(),
+            OptimizePolicy::Schedule(o) => format!("{{\"schedule\": {}}}", opts_to_json(o)),
+            OptimizePolicy::Varlen(o) => format!("{{\"varlen\": {}}}", opts_to_json(o)),
+        };
+        let schedule = match self.schedule {
+            ScheduleKind::Ring => "ring",
+            ScheduleKind::Balanced => "balanced",
+        };
+        let depth = match self.prefetch_depth {
+            None => "null".to_string(),
+            Some(d) => d.to_string(),
+        };
+        let seed = u64_to_json(self.seed);
+        format!(
+            "{{\n  \"workload\": {workload},\n  \"n_workers\": {},\n  \"schedule\": \"{schedule}\",\n  \
+             \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
+             \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
+             \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \"seed\": {seed}\n}}\n",
+            self.n_workers,
+            self.layers,
+            self.backward,
+            self.trace,
+            self.deep_copy_sends,
+        )
+    }
+
+    /// Parse a `repro run --spec` document. The `cluster` field also
+    /// accepts a preset name (`"1x8"`, `"2x8"`, `"dev"`); missing optional
+    /// fields fall back to [`RunSpec::plans_only`]-style defaults.
+    pub fn from_json(s: &str) -> Result<RunSpec> {
+        let j = Json::parse(s).map_err(|e| anyhow!("bad RunSpec JSON: {e}"))?;
+        let workload = match j.get("workload") {
+            None | Some(Json::Null) => None,
+            Some(w) => Some(Workload {
+                n_heads: w
+                    .at("n_heads")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.n_heads must be an integer"))?,
+                n_kv_heads: w
+                    .at("n_kv_heads")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.n_kv_heads must be an integer"))?,
+                head_dim: w
+                    .at("head_dim")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.head_dim must be an integer"))?,
+                chunk_tokens: w
+                    .at("chunk_tokens")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.chunk_tokens must be an integer"))?,
+            }),
+        };
+        let varlen = match j.get("varlen") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(VarlenSpec {
+                doc_lens: v
+                    .at("doc_lens")
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow!("varlen.doc_lens must be an integer array"))?,
+                boundaries: v
+                    .at("boundaries")
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow!("varlen.boundaries must be an integer array"))?,
+            }),
+        };
+        let cluster = match j.get("cluster") {
+            None | Some(Json::Null) => ClusterSpec::dgx_1x8(),
+            Some(Json::Str(name)) => ClusterSpec::by_name(name)
+                .ok_or_else(|| anyhow!("unknown cluster preset {name:?}"))?,
+            Some(c) => {
+                let gpu = c.at("gpu");
+                let base = crate::config::GpuSpec::a100_80g();
+                ClusterSpec {
+                    n_nodes: c
+                        .at("n_nodes")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("cluster.n_nodes must be an integer"))?,
+                    gpus_per_node: c
+                        .at("gpus_per_node")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("cluster.gpus_per_node must be an integer"))?,
+                    gpu: crate::config::GpuSpec {
+                        peak_flops: opt_f64(gpu, "peak_flops", "cluster.gpu.", base.peak_flops)?,
+                        mfu_attn: opt_f64(gpu, "mfu_attn", "cluster.gpu.", base.mfu_attn)?,
+                        mfu_gemm: opt_f64(gpu, "mfu_gemm", "cluster.gpu.", base.mfu_gemm)?,
+                        mem_bytes: opt_f64(gpu, "mem_bytes", "cluster.gpu.", base.mem_bytes)?,
+                    },
+                    intra_bw: c
+                        .at("intra_bw")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("cluster.intra_bw must be a number"))?,
+                    intra_lat: opt_f64(c, "intra_lat", "cluster.", 0.0)?,
+                    inter_bw: c
+                        .at("inter_bw")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("cluster.inter_bw must be a number"))?,
+                    inter_lat: opt_f64(c, "inter_lat", "cluster.", 0.0)?,
+                }
+            }
+        };
+        let backend = match j.get("backend") {
+            None | Some(Json::Null) => BackendSpec::HostRef,
+            Some(Json::Str(s)) => match s.as_str() {
+                "hostref" | "host" => BackendSpec::HostRef,
+                "null" => BackendSpec::Null,
+                other => bail!("unknown backend {other:?} (hostref | null | {{\"pjrt\": dir}})"),
+            },
+            Some(b) => match b.at("pjrt").as_str() {
+                Some(dir) => BackendSpec::Pjrt(PathBuf::from(dir)),
+                None => bail!("backend object must be {{\"pjrt\": \"<artifact dir>\"}}"),
+            },
+        };
+        let optimize = match j.get("optimize") {
+            None | Some(Json::Null) => OptimizePolicy::Off,
+            Some(Json::Str(s)) if s == "off" => OptimizePolicy::Off,
+            Some(Json::Str(s)) if s == "schedule" => {
+                OptimizePolicy::Schedule(OptimizeOpts::default())
+            }
+            Some(Json::Str(s)) if s == "varlen" => OptimizePolicy::Varlen(OptimizeOpts::default()),
+            Some(o) => {
+                if let Some(inner) = o.get("schedule") {
+                    OptimizePolicy::Schedule(opts_from_json(inner)?)
+                } else if let Some(inner) = o.get("varlen") {
+                    OptimizePolicy::Varlen(opts_from_json(inner)?)
+                } else {
+                    bail!("optimize must be \"off\" | {{\"schedule\": ...}} | {{\"varlen\": ...}}")
+                }
+            }
+        };
+        let schedule = match j.get("schedule") {
+            None | Some(Json::Null) => ScheduleKind::Balanced,
+            Some(Json::Str(s)) => match s.as_str() {
+                "balanced" => ScheduleKind::Balanced,
+                "ring" | "unbalanced" => ScheduleKind::Ring,
+                other => bail!("unknown schedule {other:?} (ring | balanced)"),
+            },
+            Some(_) => bail!("schedule must be a string (ring | balanced)"),
+        };
+        let prefetch_depth = match j.get("prefetch_depth") {
+            None | Some(Json::Null) => None,
+            Some(d) => Some(
+                d.as_usize()
+                    .ok_or_else(|| anyhow!("prefetch_depth must be an integer or null"))?,
+            ),
+        };
+        Ok(RunSpec {
+            workload,
+            n_workers: opt_usize(&j, "n_workers", "", 0)?,
+            schedule,
+            varlen,
+            cluster,
+            backend,
+            optimize,
+            prefetch_depth,
+            layers: opt_usize(&j, "layers", "", 1)?,
+            backward: opt_bool(&j, "backward", "", true)?,
+            trace: opt_bool(&j, "trace", "", false)?,
+            deep_copy_sends: opt_bool(&j, "deep_copy_sends", "", false)?,
+            seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_stage_matches_direct_lowering() {
+        for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+            for p in [2usize, 5, 8] {
+                let mut s = Session::new(RunSpec::plans_only(kind, p)).unwrap();
+                let (fwd, bwd) = s.plans().unwrap();
+                let sched = Schedule::build(kind, p);
+                assert_eq!(*fwd, Plan::from_schedule(&sched, Pass::Forward));
+                assert_eq!(*bwd, Plan::from_schedule(&sched, Pass::Backward));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_inconsistent_runs() {
+        // manifest resolution requires a Pjrt backend
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.workload = None;
+        assert!(spec.validate().is_err());
+        // varlen chunk count must match the worker count
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.varlen = Some(VarlenSpec::uniform(8, 2));
+        assert!(spec.validate().is_err());
+        // varlen policy without a varlen layout
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.optimize = OptimizePolicy::Varlen(OptimizeOpts::default());
+        assert!(spec.validate().is_err());
+        // schedule policy over a varlen layout (would discard the masking)
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.varlen = Some(VarlenSpec::uniform(8, 4));
+        spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
+        assert!(spec.validate().is_err());
+        // GQA grouping must divide
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.workload = Some(Workload::new(4, 3, 8, 16));
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn prefetch_depth_override_pins_both_plans() {
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.prefetch_depth = Some(3);
+        let (fwd, bwd) = Session::new(spec).unwrap().plans().unwrap();
+        assert_eq!(fwd.prefetch_depth, 3);
+        assert_eq!(bwd.prefetch_depth, 3);
+    }
+
+    #[test]
+    fn host_execute_runs_and_traces() {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, 4, Workload::new(2, 1, 8, 12));
+        spec.trace = true;
+        let mut s = Session::new(spec).unwrap();
+        s.execute().unwrap();
+        let run = s.run().unwrap();
+        assert_eq!(run.result.o.shape, vec![2, 48, 8]);
+        assert!(run.result.grads.is_some());
+        assert!(run.fwd_trace.is_some() && run.bwd_trace.is_some());
+        let tr = s.trace().unwrap();
+        assert!(tr.fwd_cmp.n_ops_compared > 0);
+        assert!(tr.render("t").contains("total err"));
+    }
+
+    #[test]
+    fn stacked_layers_produce_per_layer_traces() {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, 4, Workload::new(2, 1, 8, 12));
+        spec.trace = true;
+        spec.layers = 3;
+        let mut s = Session::new(spec).unwrap();
+        s.execute().unwrap();
+        let run = s.run().unwrap();
+        assert_eq!(run.layer_traces.len(), 3);
+        let tr = s.trace().unwrap();
+        let timeline = tr.layer_timeline("layers").expect("stacked run has a timeline");
+        assert!(timeline.contains("L0 fwd") && timeline.contains("L2 bwd"));
+    }
+
+    #[test]
+    fn calibrate_requires_a_traced_run() {
+        let spec = RunSpec::host(ScheduleKind::Balanced, 2, Workload::new(2, 1, 8, 8));
+        let mut s = Session::new(spec).unwrap();
+        assert!(s.calibrate().is_err());
+        s.execute().unwrap();
+        // trace was off — still an error, with a pointer to the knob
+        let err = format!("{}", s.calibrate().unwrap_err());
+        assert!(err.contains("trace"), "{err}");
+    }
+}

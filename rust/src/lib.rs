@@ -9,16 +9,20 @@
 //!   sequence-parallel trainer.
 //!
 //! Public API tour:
+//! * [`coordinator::Session`] + [`coordinator::RunSpec`] — the front door:
+//!   one declarative spec (workload / cluster / schedule / backend /
+//!   optimize / trace) lowered once and driven through plan → optimize →
+//!   execute → trace → calibrate. The pre-`Session` free functions in
+//!   [`coordinator::harness`] are deprecated shims over this pipeline.
 //! * [`coordinator::plan::Plan`] — the schedule IR: one op DAG consumed by
 //!   the executor, the simulators, and the baseline comparisons alike.
 //! * [`coordinator::optimize`] — the cost-model-driven plan optimizer:
 //!   topology-aware rank→GPU placement, GQA-aware owner/helper role
-//!   flipping, and prefetch-depth autotuning, every pass scored by the
-//!   event engine and never worse than the default lowering.
-//! * [`coordinator::run_dist_attention`] — distributed attention over real
-//!   tensors, P worker threads, verified against the monolithic oracle.
-//! * [`train::Trainer`] — end-to-end sequence-parallel training with both
-//!   checkpointing strategies.
+//!   flipping, prefetch-depth autotuning, and token-level varlen
+//!   rebalancing, every pass scored by the event engine and never worse
+//!   than the default lowering.
+//! * [`train::train`] — end-to-end sequence-parallel training with both
+//!   checkpointing strategies, planned through the same `Session`.
 //! * [`simulator`] — the lock-step reference engine plus the event-driven
 //!   engine (per-worker compute/comm streams, per-link topology,
 //!   configurable prefetch depth) over lowered plans.

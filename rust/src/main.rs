@@ -3,10 +3,15 @@
 //! Subcommands:
 //!   tables   [--id N]                       regenerate paper tables (default all)
 //!   figures  [--id N]                       regenerate paper figures
+//!   run      [--spec FILE.json]             spec-driven Session pipeline: plan ->
+//!                                           optimize -> execute -> trace, from a
+//!                                           serialized RunSpec (default: a host-
+//!                                           kernel smoke spec)
 //!   verify   [--config tiny] [--schedule S] distributed attention vs oracle
 //!   train    [--config tiny] [--steps N] [--ckpt hf|remat] [--schedule S]
 //!            [--lr F] [--seed N]            run the distributed trainer
 //!            [--optimize [--cluster C]]     (with optimizer-derived plans)
+//!            [--trace]                      (per-layer attention timelines)
 //!   simulate --model M --cluster C --seq N  one-off iteration estimate
 //!   plans    [--p N] [--cluster C] [--seq N] executed schedule-IR timings
 //!            [--model M]                    (event engine, prefetch sweep)
@@ -21,14 +26,17 @@
 //!                                           --json writes BENCH_optimizer.json,
 //!                                           BENCH_varlen.json, BENCH_executor.json
 //!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
-//!            [--schedule S] [--depth N] [--seed N]
+//!            [--schedule S] [--depth N] [--seed N] [--layers L]
 //!                                           run the real executor (host kernels)
 //!                                           with per-op tracing and align the
 //!                                           measured timeline against the event
-//!                                           engine's predictions
+//!                                           engine; --layers L stacks L calls and
+//!                                           prints a per-layer timeline
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
-//! Arg parsing is hand-rolled (offline environment, no clap).
+//! Arg parsing is hand-rolled (offline environment, no clap). Every
+//! executing subcommand is a thin `RunSpec` construction driven through
+//! `coordinator::Session`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -39,16 +47,15 @@ use distflash::baselines::megatron::Megatron;
 use distflash::baselines::ring_attention::RingAttention;
 use distflash::baselines::rsa::RingSelfAttention;
 use distflash::baselines::ulysses::Ulysses;
-use distflash::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
+use distflash::baselines::SystemModel;
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    build_plans, optimize_schedule, optimize_varlen, run_dist_attention,
-    run_dist_attention_exec, BackendSpec, CkptStrategy, ExecOpts, OptimizeOpts, Pass, Plan,
-    Schedule, ScheduleKind, VarlenSpec,
+    CkptStrategy, OptimizeOpts, OptimizePolicy, Pass, Plan, RunSpec, Schedule, ScheduleKind,
+    Session, VarlenSpec, Workload,
 };
-use distflash::simulator::{simulate_plan, EventOpts};
 use distflash::report::{paper, trace};
 use distflash::runtime::{HostKernels, Kernels, Runtime, Tensor, Value};
+use distflash::simulator::{simulate_plan, EventOpts};
 use distflash::train::{train, AdamConfig, TrainConfig};
 use distflash::util::Rng;
 
@@ -108,15 +115,36 @@ fn schedule_kind(s: &str) -> ScheduleKind {
 }
 
 fn cluster_by_name(s: &str) -> ClusterSpec {
-    match s {
-        "1x8" => ClusterSpec::dgx_1x8(),
-        "2x8" => ClusterSpec::dgx_2x8(),
-        "16x40g" | "dev" => ClusterSpec::cluster_16x40g(),
-        other => {
-            eprintln!("unknown cluster {other:?}, using 1x8");
-            ClusterSpec::dgx_1x8()
-        }
-    }
+    ClusterSpec::by_name(s).unwrap_or_else(|| {
+        eprintln!("unknown cluster {s:?}, using 1x8");
+        ClusterSpec::dgx_1x8()
+    })
+}
+
+/// The shared model/cluster/shape argument block every cost-model
+/// subcommand used to re-parse by hand: one `RunSpec` (Null backend — the
+/// caller picks backend/policy) plus the resolved `PaperModel`.
+fn spec_from_args(
+    args: &Args,
+    default_model: &str,
+    default_cluster: &str,
+    default_seq: usize,
+) -> anyhow::Result<(PaperModel, RunSpec)> {
+    let model = PaperModel::by_name(&args.get("model", default_model))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let cluster = cluster_by_name(&args.get("cluster", default_cluster));
+    let p = args.usize("p", cluster.n_gpus());
+    let seq = args.usize("seq", default_seq);
+    let mut spec = RunSpec::plans_only(schedule_kind(&args.get("schedule", "balanced")), p);
+    spec.workload = Some(Workload::new(
+        model.n_heads,
+        model.n_kv_heads,
+        model.head_dim,
+        seq,
+    ));
+    spec.cluster = cluster;
+    spec.seed = args.usize("seed", 0) as u64;
+    Ok((model, spec))
 }
 
 fn cmd_tables(args: &Args) -> anyhow::Result<()> {
@@ -170,6 +198,39 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro run`: the whole Session pipeline from a serialized `RunSpec`
+/// (plan -> optimize (per policy) -> execute -> trace/report). Without
+/// `--spec` a host-kernel smoke spec runs, so the command works on a bare
+/// checkout.
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let spec = match args.flags.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            RunSpec::from_json(&text)?
+        }
+        None => {
+            let mut spec = RunSpec::host(ScheduleKind::Balanced, 8, Workload::new(4, 2, 32, 64));
+            spec.trace = true;
+            spec
+        }
+    };
+    let mut session = Session::new(spec)?;
+    session.execute()?;
+    print!("{}", session.report());
+    if session.spec().trace {
+        let tr = session.trace()?;
+        println!(
+            "{}",
+            tr.render("Trace vs sim — measured executor timeline vs event engine")
+        );
+        if let Some(tl) = tr.layer_timeline("Per-layer timeline — stacked attention calls") {
+            println!("{tl}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     let cfg = args.get("config", "tiny");
     let kind = schedule_kind(&args.get("schedule", "balanced"));
@@ -189,7 +250,14 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
         "full_attn_ref",
         &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
     )?;
-    let res = run_dist_attention(&dir, kind, p, &q, &k, &v, Some(&do_))?;
+    // fill the workload from the manifest already loaded above so the
+    // session does not probe the runtime a second time
+    let mut spec = RunSpec::pjrt(&dir, kind);
+    spec.workload = Some(Workload::new(h, kvh, d, mc.chunk_len));
+    spec.n_workers = p;
+    let mut session = Session::new(spec)?;
+    session.execute_with(&q, &k, &v, Some(&do_))?;
+    let res = session.take_run().expect("execute stored a run").result;
     println!("  forward  max|Δo|   = {:.3e}", res.o.max_abs_diff(&oracle[0]));
     println!("  forward  max|Δlse| = {:.3e}", res.lse.max_abs_diff(&oracle[1]));
     let (dq, dk, dv) = res.grads.unwrap();
@@ -207,26 +275,30 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg_name = args.get("config", "tiny");
+    let seed = args.usize("seed", 42) as u64;
+    let mut run = RunSpec::pjrt(
+        &artifact_dir(&cfg_name),
+        schedule_kind(&args.get("schedule", "balanced")),
+    );
+    if args.get("optimize", "false") == "true" {
+        run.cluster = cluster_by_name(&args.get("cluster", "1x8"));
+        run.optimize = OptimizePolicy::Schedule(OptimizeOpts { seed, ..Default::default() });
+    }
+    run.trace = args.get("trace", "false") == "true";
     let cfg = TrainConfig {
-        schedule: schedule_kind(&args.get("schedule", "balanced")),
+        run,
         ckpt: args
             .get("ckpt", "remat")
             .parse::<CkptStrategy>()
             .unwrap_or(CkptStrategy::RematAware),
         steps: args.usize("steps", 30),
         adam: AdamConfig { lr: args.f32("lr", 3e-3), ..Default::default() },
-        seed: args.usize("seed", 42) as u64,
+        seed,
         log_every: args.usize("log-every", 1),
-        optimize_for: if args.get("optimize", "false") == "true" {
-            Some(cluster_by_name(&args.get("cluster", "1x8")))
-        } else {
-            None
-        },
-        ..TrainConfig::new(&artifact_dir(&cfg_name))
     };
     println!(
         "train: config={cfg_name} schedule={:?} ckpt={} steps={}",
-        cfg.schedule,
+        cfg.run.schedule,
         cfg.ckpt.name(),
         cfg.steps
     );
@@ -242,6 +314,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 log.comm_bytes as f64 / 1e6
             );
         }
+    }
+    if !report.layer_traces.is_empty() {
+        let rows: Vec<_> = report
+            .layer_traces
+            .iter()
+            .map(|lt| (format!("L{} {}", lt.layer, lt.pass), &lt.trace))
+            .collect();
+        println!(
+            "{}",
+            trace::layer_timeline(
+                "Per-layer attention timeline — final training step (shared epoch)",
+                &rows
+            )
+        );
     }
     println!(
         "done: {:.1}s total, {} kernel calls ({:.1}s in kernels, {:.0}% of wall)",
@@ -292,12 +378,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_plans(args: &Args) -> anyhow::Result<()> {
-    let cluster = cluster_by_name(&args.get("cluster", "1x8"));
-    let p = args.usize("p", cluster.n_gpus());
-    let seq = args.usize("seq", 8192);
-    let model = PaperModel::by_name(&args.get("model", "llama-7b"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let cost = attn_cost_fwd(&model, &cluster, seq as f64);
+    let (model, spec) = spec_from_args(args, "llama-7b", "1x8", 8192)?;
+    let (cluster, p) = (spec.cluster, spec.n_workers);
+    let seq = spec.workload.as_ref().expect("spec_from_args sets a workload").chunk_tokens;
+    let cost = distflash::baselines::attn_cost_fwd(&model, &cluster, seq as f64);
     println!(
         "executed schedule-IR plans: {} P={p} seq/GPU={seq} (event engine; fwd cost classes)",
         model.name
@@ -334,10 +418,9 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
-    let model = PaperModel::by_name(&args.get("model", "llama-gqa"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
-    let cluster = cluster_by_name(&args.get("cluster", "2x8"));
-    let p = args.usize("p", cluster.n_gpus());
+    let (model, mut spec) = spec_from_args(args, "llama-gqa", "2x8", 2048)?;
+    let (cluster, p) = (spec.cluster, spec.n_workers);
+    let seq = spec.workload.as_ref().expect("spec_from_args sets a workload").chunk_tokens;
     if p > cluster.n_gpus() {
         eprintln!(
             "note: P={p} exceeds the cluster's {} GPUs; ranks beyond it are priced as if on \
@@ -345,123 +428,103 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
             cluster.n_gpus()
         );
     }
-    let seq = args.usize("seq", 2048);
-    let kind = schedule_kind(&args.get("schedule", "balanced"));
-    let opts = OptimizeOpts { seed: args.usize("seed", 0) as u64, ..Default::default() };
-    if args.get("varlen", "false") == "true" {
-        return cmd_optimize_varlen(args, &model, &cluster, p, seq, kind, &opts);
-    }
-    let schedule = Schedule::build(kind, p);
-    let passes: Vec<Pass> = match args.get("pass", "both").as_str() {
-        "fwd" => vec![Pass::Forward],
-        "bwd" => vec![Pass::Backward],
-        _ => vec![Pass::Forward, Pass::Backward],
-    };
-    println!(
-        "optimize: {} {kind:?} P={p} on {}x{} GPUs, seq/GPU={seq} (seed {})",
-        model.name, cluster.n_nodes, cluster.gpus_per_node, opts.seed
-    );
-    println!(
-        "{:<5} {:>13} {:>15} {:>8} {:>7} {:>6} {:>6} {:>6}",
-        "pass", "default (ms)", "optimized (ms)", "speedup", "depth*", "flips", "moves", "sims"
-    );
-    for pass in passes {
-        let cost = match pass {
-            Pass::Forward => attn_cost_fwd(&model, &cluster, seq as f64),
-            Pass::Backward => attn_cost_bwd(&model, &cluster, seq as f64),
-        };
-        let o = optimize_schedule(&schedule, pass, &cluster, &cost, &opts);
-        o.plan
-            .validate_lowered()
-            .map_err(|e| anyhow::anyhow!("optimized {pass:?} plan invalid: {e}"))?;
+    let opts = OptimizeOpts { seed: spec.seed, ..Default::default() };
+    let varlen = args.get("varlen", "false") == "true";
+    if varlen {
+        let n_docs = args.usize("docs", 64);
+        let alpha = args.f32("zipf", 1.1) as f64;
+        let pack_seed = args.usize("pack-seed", 17) as u64;
+        let vspec = VarlenSpec::pack_zipf(n_docs, seq * p, alpha, pack_seed, p);
         println!(
-            "{:<5} {:>13.2} {:>15.2} {:>7.2}x {:>7} {:>6} {:>6} {:>6}",
-            pass.name(),
-            o.default_s * 1e3,
-            o.optimized_s * 1e3,
-            o.speedup(),
-            o.prefetch_depth,
-            o.flipped_steps.len(),
-            o.moved_ranks,
-            o.sim_calls
+            "optimize --varlen: {} {:?} P={p} on {}x{} GPUs, {n_docs} Zipf({alpha:.2}) docs, \
+             {} tokens packed (pad-to-max would cost x{:.1} tokens/chunk)",
+            model.name,
+            spec.schedule,
+            cluster.n_nodes,
+            cluster.gpus_per_node,
+            seq * p,
+            vspec.pad_factor()
         );
-        if !o.flipped_steps.is_empty() {
-            println!("      flipped steps: {:?} (helper pairs computed owner-side)", o.flipped_steps);
+        spec.varlen = Some(vspec);
+        spec.optimize = OptimizePolicy::Varlen(opts);
+    } else {
+        println!(
+            "optimize: {} {:?} P={p} on {}x{} GPUs, seq/GPU={seq} (seed {})",
+            model.name, spec.schedule, cluster.n_nodes, cluster.gpus_per_node, spec.seed
+        );
+        spec.optimize = OptimizePolicy::Schedule(opts);
+    }
+    let mut session = Session::new(spec)?;
+    session.optimize()?;
+    let want = args.get("pass", "both");
+    if want != "both" {
+        println!(
+            "(--pass {want} filters the table; the session optimizes both passes — one spec \
+             yields one fwd/bwd plan pair)"
+        );
+    }
+    let shown = session
+        .audits()
+        .iter()
+        .filter(|a| want == "both" || a.pass.name() == want);
+    if varlen {
+        println!(
+            "{:<5} {:>10} {:>11} {:>11} {:>8} {:>9} {:>7} {:>6} {:>6} {:>6}",
+            "pass", "pad (ms)", "equal (ms)", "rebal (ms)", "vs pad", "vs equal", "depth*",
+            "flips", "cuts", "sims"
+        );
+        for a in shown {
+            println!(
+                "{:<5} {:>10.2} {:>11.2} {:>11.2} {:>7.2}x {:>8.2}x {:>7} {:>6} {:>6} {:>6}{}",
+                a.pass.name(),
+                a.pad_s * 1e3,
+                a.equal_s * 1e3,
+                a.optimized_s * 1e3,
+                if a.optimized_s > 0.0 { a.pad_s / a.optimized_s } else { 1.0 },
+                if a.optimized_s > 0.0 { a.equal_s / a.optimized_s } else { 1.0 },
+                a.prefetch_depth,
+                a.flipped_pairs,
+                a.moved_boundaries,
+                a.sim_calls,
+                if a.accepted { "" } else { "  (candidate rejected — prior plan kept)" }
+            );
         }
-        if o.moved_ranks > 0 {
-            println!("      placement: {:?}", o.plan.placement);
+        println!(
+            "(pad = pad-to-max equal chunks; equal = equal-token varlen; rebal = token-level \
+             rebalancer; boundaries rebalanced on fwd and shared with bwd — one sharding \
+             feeds both passes)"
+        );
+    } else {
+        println!(
+            "{:<5} {:>13} {:>15} {:>8} {:>7} {:>6} {:>6} {:>6}",
+            "pass", "default (ms)", "optimized (ms)", "speedup", "depth*", "flips", "moves", "sims"
+        );
+        for a in shown {
+            println!(
+                "{:<5} {:>13.2} {:>15.2} {:>7.2}x {:>7} {:>6} {:>6} {:>6}{}",
+                a.pass.name(),
+                a.default_s * 1e3,
+                a.optimized_s * 1e3,
+                if a.optimized_s > 0.0 { a.default_s / a.optimized_s } else { 1.0 },
+                a.prefetch_depth,
+                a.flipped_steps.len(),
+                a.moved_ranks,
+                a.sim_calls,
+                if a.accepted { "" } else { "  (candidate rejected — prior plan kept)" }
+            );
+            if a.accepted && !a.flipped_steps.is_empty() {
+                println!(
+                    "      flipped steps: {:?} (helper pairs computed owner-side)",
+                    a.flipped_steps
+                );
+            }
+        }
+        let (fwd, _) = session.plans()?;
+        if fwd.placement.iter().enumerate().any(|(i, &g)| i != g) {
+            println!("      placement: {:?}", fwd.placement);
         }
     }
     println!("(depth* = autotuned prefetch knee; default column is identity placement, no flips, depth 1)");
-    Ok(())
-}
-
-/// `repro optimize --varlen`: token-level rebalancing of a Zipf-packed
-/// document batch vs the pad-to-max and equal-token baselines.
-fn cmd_optimize_varlen(
-    args: &Args,
-    model: &PaperModel,
-    cluster: &ClusterSpec,
-    p: usize,
-    seq: usize,
-    kind: ScheduleKind,
-    opts: &OptimizeOpts,
-) -> anyhow::Result<()> {
-    let n_docs = args.usize("docs", 64);
-    let alpha = args.f32("zipf", 1.1) as f64;
-    let pack_seed = args.usize("pack-seed", 17) as u64;
-    let spec = VarlenSpec::pack_zipf(n_docs, seq * p, alpha, pack_seed, p);
-    let schedule = Schedule::build(kind, p);
-    println!(
-        "optimize --varlen: {} {kind:?} P={p} on {}x{} GPUs, {n_docs} Zipf({alpha:.2}) docs, \
-         {} tokens packed (pad-to-max would cost x{:.1} tokens/chunk)",
-        model.name,
-        cluster.n_nodes,
-        cluster.gpus_per_node,
-        seq * p,
-        spec.pad_factor()
-    );
-    println!(
-        "{:<5} {:>10} {:>11} {:>11} {:>8} {:>9} {:>7} {:>6} {:>6} {:>6}",
-        "pass", "pad (ms)", "equal (ms)", "rebal (ms)", "vs pad", "vs equal", "depth*", "flips",
-        "cuts", "sims"
-    );
-    let passes: Vec<Pass> = match args.get("pass", "both").as_str() {
-        "fwd" => vec![Pass::Forward],
-        "bwd" => vec![Pass::Backward],
-        _ => vec![Pass::Forward, Pass::Backward],
-    };
-    let mut inc = 0usize;
-    let mut sims = 0usize;
-    for pass in passes {
-        let cost = match pass {
-            Pass::Forward => attn_cost_fwd(model, cluster, seq as f64),
-            Pass::Backward => attn_cost_bwd(model, cluster, seq as f64),
-        };
-        let o = optimize_varlen(&schedule, &spec, pass, cluster, &cost, opts);
-        o.plan
-            .validate_lowered()
-            .map_err(|e| anyhow::anyhow!("rebalanced {pass:?} plan invalid: {e}"))?;
-        inc += o.incremental_rescores;
-        sims += o.sim_calls;
-        println!(
-            "{:<5} {:>10.2} {:>11.2} {:>11.2} {:>7.2}x {:>8.2}x {:>7} {:>6} {:>6} {:>6}",
-            pass.name(),
-            o.pad_s * 1e3,
-            o.equal_s * 1e3,
-            o.optimized_s * 1e3,
-            o.speedup_vs_pad(),
-            o.speedup_vs_equal(),
-            o.prefetch_depth,
-            o.flipped_pairs,
-            o.moved_boundaries,
-            o.sim_calls
-        );
-    }
-    println!(
-        "(pad = pad-to-max equal chunks; equal = equal-token varlen; rebal = token-level \
-         rebalancer; {inc}/{sims} candidate scores replayed incrementally)"
-    );
     Ok(())
 }
 
@@ -469,7 +532,8 @@ fn cmd_optimize_varlen(
 /// kernels, so it works on a bare checkout) with per-op tracing, then
 /// align the measured timeline against the event engine's predictions
 /// under a trace-calibrated cost model — the measured validation of the
-/// simulator's per-op error (fwd and bwd).
+/// simulator's per-op error (fwd and bwd). `--layers L` stacks L calls
+/// and adds a per-layer timeline.
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let p = args.usize("p", 8);
     let chunk = args.usize("chunk", 96);
@@ -477,51 +541,59 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let kvh = args.usize("kv-heads", 2);
     let d = args.usize("dim", 32);
     let depth = args.usize("depth", 1);
+    let layers = args.usize("layers", 1);
     let kind = schedule_kind(&args.get("schedule", "balanced"));
     let n = p * chunk;
     println!(
-        "trace: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} depth={depth} (host kernels)"
+        "trace: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} depth={depth} layers={layers} (host kernels)"
     );
-    let (fwd, bwd) = build_plans(kind, p)?;
-    let mut f = (*fwd).clone();
-    f.prefetch_depth = depth;
-    let mut b = (*bwd).clone();
-    b.prefetch_depth = depth;
-    let (fwd, bwd) = (std::sync::Arc::new(f), std::sync::Arc::new(b));
+    let mut spec = RunSpec::host(kind, p, Workload::new(h, kvh, d, chunk));
+    spec.trace = true;
+    spec.prefetch_depth = Some(depth);
+    spec.layers = layers;
+    spec.seed = args.usize("seed", 0) as u64;
 
-    let mut rng = Rng::new(args.usize("seed", 0) as u64);
+    let mut rng = Rng::new(spec.seed);
     let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
     let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
     let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
     let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
 
-    let opts = ExecOpts { backend: BackendSpec::HostRef, trace: true, deep_copy_sends: false };
-    // warm run (thread spawn + allocator), then the measured run
-    run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)?;
-    let run = run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)?;
+    // warm run (thread spawn + allocator) — one call regardless of
+    // --layers — then the measured stacked run
+    let mut warm_spec = spec.clone();
+    warm_spec.layers = 1;
+    Session::new(warm_spec)?.execute_with(&q, &k, &v, Some(&do_))?;
+    let mut session = Session::new(spec)?;
+    session.execute_with(&q, &k, &v, Some(&do_))?;
 
     // numerics sanity against the host oracle while we are here
     let oracle = HostKernels.run(
         "full_attn_ref",
         &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
     )?;
-    println!(
-        "  numerics: max|Δo| = {:.3e}  max|Δlse| = {:.3e}  (vs host full_attn_ref)",
-        run.result.o.max_abs_diff(&oracle[0]),
-        run.result.lse.max_abs_diff(&oracle[1])
-    );
+    {
+        let res = session.result()?;
+        println!(
+            "  numerics: max|Δo| = {:.3e}  max|Δlse| = {:.3e}  (vs host full_attn_ref)",
+            res.o.max_abs_diff(&oracle[0]),
+            res.lse.max_abs_diff(&oracle[1])
+        );
+    }
 
-    let ft = run.fwd_trace.as_ref().expect("tracing was requested");
-    let bt = run.bwd_trace.as_ref().expect("backward was traced");
-    let fc = trace::compare(&fwd, ft);
-    let bc = trace::compare(&bwd, bt);
+    let tr = session.trace()?;
     println!(
         "{}",
-        trace::render(
-            &format!("Trace vs sim — measured executor timeline vs event engine (P={p}, depth {depth})"),
-            &[("fwd", &fc), ("bwd", &bc)],
-        )
+        tr.render(&format!(
+            "Trace vs sim — measured executor timeline vs event engine (P={p}, depth {depth})"
+        ))
     );
+    if let Some(tl) = tr.layer_timeline(&format!(
+        "Per-layer timeline — {layers} stacked attention calls (shared epoch; last layer \
+         feeds the calibration above)"
+    )) {
+        println!("{tl}");
+    }
     println!(
         "(dur err = mean per-op |measured - calibrated| / calibrated; start skew = mean \
          |measured - predicted| start offset as a fraction of the measured makespan; total \
@@ -531,9 +603,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
+use distflash::util::json::escape as json_escape;
 
 /// Write one bench JSON document (`{"bench": ..., "schedule": "balanced",
 /// "results": [...]}`); `rows` are pre-rendered JSON objects. One emitter
@@ -676,10 +746,11 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|verify|train|simulate|plans|optimize|trace|bench|inspect> [--flag value]...\n\
-         `tables`, `simulate`, `plans`, `optimize`, `trace`, and `bench` run on a bare checkout\n\
-         (`trace` and the executor micro-bench use the pure-host kernel backends);\n\
-         `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate"
+         usage: repro <tables|figures|run|verify|train|simulate|plans|optimize|trace|bench|inspect> [--flag value]...\n\
+         `tables`, `run`, `simulate`, `plans`, `optimize`, `trace`, and `bench` run on a bare checkout\n\
+         (`run`/`trace` and the executor micro-bench use the pure-host kernel backends);\n\
+         `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate.\n\
+         `run --spec FILE.json` drives the whole Session pipeline from a serialized RunSpec."
     );
 }
 
@@ -693,6 +764,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "tables" => cmd_tables(&args),
         "figures" => cmd_figures(&args),
+        "run" => cmd_run(&args),
         "verify" => cmd_verify(&args),
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),

@@ -16,8 +16,7 @@ use crate::baselines::{attn_cost_bwd, attn_cost_fwd, SystemModel};
 use crate::config::{ClusterSpec, PaperModel};
 use crate::coordinator::optimize::{autotune_depth, optimize_schedule, optimize_varlen, OptimizeOpts};
 use crate::coordinator::{
-    build_plans, run_dist_attention_exec, BackendSpec, CkptStrategy, ExecOpts, Pass, Plan,
-    Schedule, ScheduleKind, VarlenSpec,
+    BackendSpec, CkptStrategy, Pass, Plan, RunSpec, Schedule, ScheduleKind, Session, VarlenSpec,
 };
 use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
 use crate::report::Table;
@@ -692,7 +691,8 @@ impl ExecBenchRow {
     }
 }
 
-/// Median executor wall-clock (fwd + bwd) over `iters` runs of one arm.
+/// Median executor wall-clock (fwd + bwd) over `iters` runs of one arm —
+/// each run a `Session` over the given plans with the Null backend.
 fn exec_bench_arm(
     fwd: &Arc<Plan>,
     bwd: &Arc<Plan>,
@@ -702,22 +702,15 @@ fn exec_bench_arm(
     deep: bool,
     iters: usize,
 ) -> f64 {
-    let opts = ExecOpts {
-        backend: BackendSpec::Null,
-        trace: false,
-        deep_copy_sends: deep,
-    };
     let s = crate::util::bench::bench("exec", 1, iters, || {
-        run_dist_attention_exec(
-            fwd.clone(),
-            bwd.clone(),
-            q,
-            kv,
-            kv,
-            Some(do_),
-            &opts,
-        )
-        .expect("executor bench run failed");
+        let mut spec = RunSpec::for_plans(fwd, BackendSpec::Null, q, kv);
+        spec.deep_copy_sends = deep;
+        Session::with_plans(spec, fwd.clone(), bwd.clone())
+            .and_then(|mut s| {
+                s.execute_with(q, kv, kv, Some(do_))?;
+                Ok(())
+            })
+            .expect("executor bench run failed");
     });
     s.p50_ns / 1e9
 }
@@ -737,7 +730,9 @@ pub fn executor_bench_rows() -> Vec<ExecBenchRow> {
     let iters = 5;
     let mut out = Vec::new();
     for &(preset, p, h, kvh, chunk, d) in grid {
-        let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).expect("plans");
+        let (fwd, bwd) = Session::new(RunSpec::plans_only(ScheduleKind::Balanced, p))
+            .and_then(|mut s| s.plans())
+            .expect("plans");
         // depth-0 twins: the fully blocking pre-PR receive path
         let mut f0 = (*fwd).clone();
         f0.prefetch_depth = 0;

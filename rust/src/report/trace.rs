@@ -94,31 +94,71 @@ fn host_cluster(p: usize) -> ClusterSpec {
     }
 }
 
-/// Cost model calibrated from the measured per-class means. Transfer
-/// payloads are priced at one byte (≈ zero seconds on the idealized
-/// cluster) — the sim then answers "given the measured kernel times, when
-/// would the plan's structure run each op?".
+/// The `(cost class, scale)` a kernel is actually *priced* with by
+/// [`Kernel::seconds`] — the fit must invert exactly that mapping.
+/// Token-scaled kernels price off the full/rescale class at their scale
+/// (even on the diagonal), unlike the *reporting* buckets of `class_of`.
+fn pricing_class(kernel: &Kernel) -> Option<(Class, f64)> {
+    match kernel {
+        Kernel::AttnDiag => Some((Class::Diag, 1.0)),
+        Kernel::AttnFull => Some((Class::Full, 1.0)),
+        Kernel::AttnTok { scale } => Some((Class::Full, *scale)),
+        Kernel::Rescale => Some((Class::Rescale, 1.0)),
+        Kernel::RescaleTok { scale } => Some((Class::Rescale, *scale)),
+        Kernel::Accum | Kernel::Raw(_) => None,
+    }
+}
+
+/// Cost model calibrated from the measured kernel durations: each class is
+/// fitted scale-normalized — `class_s = Σ duration / Σ scale` over the ops
+/// priced with that class — so `scale × class_s` reproduces the measured
+/// total exactly even on ragged (token-scaled) plans. Transfer payloads
+/// are priced at one byte (≈ zero seconds on the idealized cluster) — the
+/// sim then answers "given the measured kernel times, when would the
+/// plan's structure run each op?".
 pub fn calibrate_cost(plan: &Plan, trace: &MergedTrace) -> AttnCost {
-    let mut sum = [0.0f64; 3];
-    let mut cnt = [0usize; 3];
+    let mut dur = [0.0f64; 3];
+    let mut scale = [0.0f64; 3];
     for op in 0..plan.ops.len() {
         if !trace.covered[op] {
             continue;
         }
-        if let Some(c) = class_of(plan, op) {
-            sum[c as usize] += trace.op_duration(op);
-            cnt[c as usize] += 1;
+        if let PlanOp::Compute { kernel, .. } = &plan.ops[op].op {
+            if let Some((c, s)) = pricing_class(kernel) {
+                dur[c as usize] += trace.op_duration(op);
+                scale[c as usize] += s;
+            }
         }
     }
-    let mean = |i: usize| if cnt[i] > 0 { sum[i] / cnt[i] as f64 } else { 0.0 };
+    let fit = |i: usize| if scale[i] > 0.0 { dur[i] / scale[i] } else { 0.0 };
     AttnCost {
-        pair_diag_s: mean(Class::Diag as usize),
-        pair_full_s: mean(Class::Full as usize),
-        rescale_s: mean(Class::Rescale as usize),
+        pair_diag_s: fit(Class::Diag as usize),
+        pair_full_s: fit(Class::Full as usize),
+        rescale_s: fit(Class::Rescale as usize),
         kv_bytes: 1.0,
         q_bytes: 1.0,
         result_bytes: 1.0,
         overlap: true,
+    }
+}
+
+/// Trace-calibrated cost model with a *modeled* transfer story: kernel
+/// classes priced at their measured per-class means (exactly
+/// [`calibrate_cost`]), byte classes carried over from `base`. The
+/// in-process fabric measures no wire, so the modeled payload sizes remain
+/// the honest transfer cost when the calibrated model is fed back into the
+/// plan optimizer — this is what `Session::calibrate` installs before a
+/// measured-cost `optimize()` pass.
+pub fn calibrate_cost_with_bytes(plan: &Plan, trace: &MergedTrace, base: &AttnCost) -> AttnCost {
+    let measured = calibrate_cost(plan, trace);
+    AttnCost {
+        pair_diag_s: measured.pair_diag_s,
+        pair_full_s: measured.pair_full_s,
+        rescale_s: measured.rescale_s,
+        kv_bytes: base.kv_bytes,
+        q_bytes: base.q_bytes,
+        result_bytes: base.result_bytes,
+        overlap: base.overlap,
     }
 }
 
@@ -245,6 +285,53 @@ pub fn render(title: &str, rows: &[(&str, &TraceComparison)]) -> String {
     t.render()
 }
 
+/// Per-layer timeline rows for a stacked (multi-call) traced run: one row
+/// per labeled trace (layer × pass) with start offset, end, and makespan
+/// relative to the earliest span across all rows — the layer-level view
+/// `repro trace --layers` and the trainer's trace sink surface.
+pub fn layer_timeline(title: &str, rows: &[(String, &MergedTrace)]) -> String {
+    let mut t0 = f64::INFINITY;
+    for (_, tr) in rows {
+        for i in 0..tr.covered.len() {
+            if tr.covered[i] {
+                t0 = t0.min(tr.start_s[i]);
+            }
+        }
+    }
+    if !t0.is_finite() {
+        t0 = 0.0;
+    }
+    let mut t = Table::new(title);
+    t.header(
+        ["span", "start (ms)", "end (ms)", "makespan (ms)", "ops"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for (label, tr) in rows {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut n = 0usize;
+        for i in 0..tr.covered.len() {
+            if tr.covered[i] {
+                lo = lo.min(tr.start_s[i]);
+                hi = hi.max(tr.end_s[i]);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            continue;
+        }
+        t.row(vec![
+            label.clone(),
+            format!("{:.3}", (lo - t0) * 1e3),
+            format!("{:.3}", (hi - t0) * 1e3),
+            format!("{:.3}", (hi - lo) * 1e3),
+            format!("{n}"),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,5 +372,16 @@ mod tests {
         assert!(c.start_skew_frac < 1e-9, "skew {}", c.start_skew_frac);
         let s = render("trace", &[("fwd", &c)]);
         assert!(s.contains("attn full") && s.contains("total err"));
+
+        // the byte-preserving calibration keeps the modeled transfer
+        // classes while adopting the measured kernel means
+        let cal = calibrate_cost_with_bytes(&plan, &trace, &cost);
+        assert_eq!(cal.kv_bytes, cost.kv_bytes);
+        assert_eq!(cal.q_bytes, cost.q_bytes);
+        assert!((cal.pair_full_s - cost.pair_full_s).abs() < 1e-12);
+
+        // and the same trace renders as a (single-row) layer timeline
+        let tl = layer_timeline("layers", &[("L0 fwd".to_string(), &trace)]);
+        assert!(tl.contains("L0 fwd") && tl.contains("makespan"));
     }
 }

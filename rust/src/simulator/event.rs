@@ -40,6 +40,8 @@
 //! Ulysses' all-to-all) have no barriers and no prefetch convention:
 //! every dependency edge is honored and overlap *emerges* from the DAG —
 //! a transfer runs concurrently with any compute it does not gate.
+//!
+//! [`Schedule`]: crate::coordinator::schedule::Schedule
 
 use crate::config::ClusterSpec;
 use crate::coordinator::plan::{Kernel, PayloadClass, Plan, PlanOp};

@@ -9,4 +9,4 @@ pub mod trainer;
 
 pub use data::MarkovCorpus;
 pub use optimizer::{Adam, AdamConfig};
-pub use trainer::{oracle_first_step, train, StepLog, TrainConfig, TrainReport};
+pub use trainer::{oracle_first_step, train, LayerTrace, StepLog, TrainConfig, TrainReport};

@@ -9,6 +9,14 @@
 //! sharding is modeled in `baselines`, not materialized here, since memory
 //! pressure is not what the CPU testbed measures).
 //!
+//! The attention pipeline is configured by the [`RunSpec`] embedded in
+//! [`TrainConfig::run`] and lowered through the same [`Session`] every
+//! other entry point uses: schedule kind, optimizer policy (plans the
+//! workers execute), document-packed batches (`RunSpec::varlen` — batch
+//! token slices follow the spec's chunk boundaries), and per-layer
+//! tracing (`RunSpec::trace` — every `attn_call` records spans against a
+//! shared epoch, merged into [`TrainReport::layer_traces`]).
+//!
 //! Checkpointing strategies (paper §3.3) are implemented exactly as the
 //! data-flow dictates:
 //! * `HfStyle`   — store layer input x; backward re-runs part1 AND the
@@ -17,20 +25,18 @@
 //!   output; backward re-runs only part1. No attention forward, no
 //!   forward communication. Numerically identical (asserted in tests).
 
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::ClusterSpec;
 use crate::coordinator::comm::{build_network_placed, WorkerComm};
-use crate::coordinator::executor::{AttnCtx, PlanIndex, RunTrace, ATTN_ARTIFACTS};
-use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
-use crate::coordinator::harness::{build_plans, build_plans_optimized};
-use crate::coordinator::optimize::OptimizeOpts;
+use crate::coordinator::executor::{AttnCtx, MergedTrace, PlanIndex, RunTrace, ATTN_ARTIFACTS};
 use crate::coordinator::plan::Plan;
-use crate::coordinator::{CkptStrategy, ScheduleKind};
+use crate::coordinator::session::{BackendSpec, RunSpec, Session, Workload};
+use crate::coordinator::CkptStrategy;
 use crate::runtime::{ITensor, Runtime, Tensor, Value};
 use crate::train::data::MarkovCorpus;
 use crate::train::optimizer::{Adam, AdamConfig};
@@ -38,31 +44,34 @@ use crate::util::Rng;
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    pub artifact_dir: PathBuf,
-    pub schedule: ScheduleKind,
+    /// The attention pipeline spec: Pjrt backend (artifact dir), schedule
+    /// kind, cluster + optimize policy, varlen batch layout, tracing.
+    /// Workload and worker count resolve from the artifact manifest.
+    pub run: RunSpec,
     pub ckpt: CkptStrategy,
     pub steps: usize,
     pub adam: AdamConfig,
     pub seed: u64,
     pub log_every: usize,
-    /// When set, run the plan optimizer (`coordinator::optimize`) against
-    /// this cluster before training: the workers then execute the
-    /// cost-optimal flipped/placed plans instead of the default lowering.
-    /// Numerics are identical either way (same pair coverage).
-    pub optimize_for: Option<ClusterSpec>,
 }
 
 impl TrainConfig {
     pub fn new(artifact_dir: &Path) -> Self {
         TrainConfig {
-            artifact_dir: artifact_dir.to_path_buf(),
-            schedule: ScheduleKind::Balanced,
+            run: RunSpec::pjrt(artifact_dir, crate::coordinator::ScheduleKind::Balanced),
             ckpt: CkptStrategy::RematAware,
             steps: 20,
             adam: AdamConfig::default(),
             seed: 0,
             log_every: 1,
-            optimize_for: None,
+        }
+    }
+
+    /// The artifact directory the embedded spec points at.
+    pub fn artifact_dir(&self) -> Result<&Path> {
+        match &self.run.backend {
+            BackendSpec::Pjrt(dir) => Ok(dir),
+            other => Err(anyhow!("the trainer needs a Pjrt backend, got {other:?}")),
         }
     }
 }
@@ -77,12 +86,25 @@ pub struct StepLog {
     pub comm_bytes: u64,
 }
 
+/// One merged per-op timeline from the trainer's trace sink: attention
+/// call of `layer` during the final training step, one row per pass.
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    pub layer: usize,
+    /// `"fwd"`, `"bwd"`, or `"recompute"` (HF-style checkpointing only).
+    pub pass: &'static str,
+    pub trace: MergedTrace,
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub logs: Vec<StepLog>,
     pub kernel_calls: u64,
     pub kernel_s: f64,
     pub total_s: f64,
+    /// Per-layer attention timelines of the final step, present when
+    /// `TrainConfig::run.trace` is set.
+    pub layer_traces: Vec<LayerTrace>,
 }
 
 /// Parameter layout helper: layer params in manifest order, then globals.
@@ -155,6 +177,15 @@ struct LayerCkpt {
     attn: Option<(Tensor, Tensor)>, // (o, lse)
 }
 
+/// One span record pushed by a worker's `attn_call` into the shared sink.
+struct LayerSpanRec {
+    layer: usize,
+    pass: &'static str,
+    trace: RunTrace,
+}
+
+type TraceSink = Arc<Mutex<Vec<LayerSpanRec>>>;
+
 struct Worker {
     rank: usize,
     runtime: Runtime,
@@ -169,6 +200,13 @@ struct Worker {
     cfg: TrainConfig,
     params: Vec<Tensor>,
     layout: ParamLayout,
+    /// Shared tracing epoch (set iff `cfg.run.trace`): every attention
+    /// call records per-op spans against it.
+    trace_epoch: Option<Instant>,
+    /// Where recorded spans go, keyed by (layer, pass) at merge time.
+    trace_sink: Option<TraceSink>,
+    /// Only this step's spans are recorded (the final step — warmed up).
+    record_step: usize,
 }
 
 impl Worker {
@@ -194,27 +232,43 @@ impl Worker {
         &self.params[self.layout.global(i)]
     }
 
+    /// One distributed attention call: plan/index selection by pass, call
+    /// id derived from (step, layer, pass), spans recorded against the
+    /// shared epoch and pushed to the trace sink on the recorded step.
     fn attn_call(
         &mut self,
-        call_id: u32,
-        backward: bool,
+        step: usize,
+        layer: usize,
+        pass: Pass,
         f: impl FnOnce(&mut AttnCtx, &PlanIndex) -> Result<Vec<Tensor>>,
     ) -> Result<Vec<Tensor>> {
-        let (plan, idx) = if backward {
+        let (plan, idx) = if matches!(pass, Pass::Bwd) {
             (self.bwd_plan.clone(), &self.bwd_idx)
         } else {
             (self.fwd_plan.clone(), &self.fwd_idx)
         };
+        // stamp spans only on the recorded (final) step — earlier steps
+        // would pay the clock reads just to throw the spans away
+        let recording = step == self.record_step;
         let mut ctx = AttnCtx {
             rank: self.rank,
             runtime: &self.runtime,
             comm: &mut self.comm,
             plan: &plan,
-            call_id,
-            epoch: None,
+            call_id: call_id(step, layer, pass),
+            epoch: if recording { self.trace_epoch } else { None },
             trace: RunTrace::default(),
         };
-        f(&mut ctx, idx)
+        let out = f(&mut ctx, idx)?;
+        let trace = ctx.trace;
+        if recording {
+            if let Some(sink) = &self.trace_sink {
+                sink.lock()
+                    .expect("trace sink poisoned")
+                    .push(LayerSpanRec { layer, pass: pass.name(), trace });
+            }
+        }
+        Ok(out)
     }
 
     /// One full forward over the local chunk; returns (loss_local, ckpts,
@@ -244,8 +298,7 @@ impl Worker {
                 ],
             )?;
             let (q, k, vv) = (&qkv[0], &qkv[1], &qkv[2]);
-            let call = call_id(step, l, Pass::Fwd);
-            let out = self.attn_call(call, false, |ctx, idx| {
+            let out = self.attn_call(step, l, Pass::Fwd, |ctx, idx| {
                 let (o, lse) = ctx.forward_indexed(idx, q, k, vv)?;
                 Ok(vec![o, lse])
             })?;
@@ -339,8 +392,7 @@ impl Worker {
             let (o, lse) = match &ck.attn {
                 Some((o, lse)) => (o.clone(), lse.clone()),
                 None => {
-                    let call = call_id(step, l, Pass::Recompute);
-                    let out = self.attn_call(call, false, |ctx, idx| {
+                    let out = self.attn_call(step, l, Pass::Recompute, |ctx, idx| {
                         let (o, lse) = ctx.forward_indexed(idx, &q, &k, &vv)?;
                         Ok(vec![o, lse])
                     })?;
@@ -370,8 +422,7 @@ impl Worker {
             grads[self.layout.layer(l, Self::W3)].add_assign(&p2[5]);
             grads[self.layout.layer(l, Self::W2)].add_assign(&p2[6]);
             // distributed attention backward (no fwd recompute — §3.3)
-            let call = call_id(step, l, Pass::Bwd);
-            let attn_grads = self.attn_call(call, true, |ctx, idx| {
+            let attn_grads = self.attn_call(step, l, Pass::Bwd, |ctx, idx| {
                 let (dq, dk, dv) = ctx.backward_indexed(idx, &q, &k, &vv, &o, &lse, &d_o)?;
                 Ok(vec![dq, dk, dv])
             })?;
@@ -416,6 +467,16 @@ enum Pass {
     Recompute,
 }
 
+impl Pass {
+    fn name(self) -> &'static str {
+        match self {
+            Pass::Fwd => "fwd",
+            Pass::Bwd => "bwd",
+            Pass::Recompute => "recompute",
+        }
+    }
+}
+
 /// Unique attention call id per (step, layer, pass) — keeps channel tags
 /// from colliding across the whole run.
 fn call_id(step: usize, layer: usize, pass: Pass) -> u32 {
@@ -429,45 +490,77 @@ fn call_id(step: usize, layer: usize, pass: Pass) -> u32 {
 
 /// Run distributed training; returns the rank-0 report.
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
-    let probe = Runtime::load(&cfg.artifact_dir)?;
+    let dir = cfg.artifact_dir()?.to_path_buf();
+    let probe = Runtime::load(&dir)?;
     let mc = probe.manifest().config.clone();
-    let p = mc.n_workers;
-    let n = mc.seq_len;
     drop(probe);
 
-    let (fwd_plan, bwd_plan) = match &cfg.optimize_for {
-        Some(cluster) => {
-            let fwd_cost = attn_cost_from_dims(
-                cluster,
-                mc.chunk_len as f64,
-                mc.n_heads,
-                mc.n_kv_heads,
-                mc.head_dim,
-            );
-            let bwd_cost = bwd_cost_from_fwd(&fwd_cost, mc.head_dim);
-            build_plans_optimized(
-                cfg.schedule,
-                p,
-                cluster,
-                &fwd_cost,
-                &bwd_cost,
-                &OptimizeOpts { seed: cfg.seed, ..Default::default() },
-            )?
+    // one Session lowers (and, per the spec's policy, optimizes) the plans
+    // every worker executes; fill the workload from the manifest we already
+    // probed so Session::new does not load the runtime a second time
+    let mut run_spec = cfg.run.clone();
+    if run_spec.workload.is_none() {
+        run_spec.workload =
+            Some(Workload::new(mc.n_heads, mc.n_kv_heads, mc.head_dim, mc.chunk_len));
+    }
+    if run_spec.n_workers == 0 {
+        run_spec.n_workers = mc.n_workers;
+    }
+    let mut session = Session::new(run_spec)?;
+    let p = session.n_workers();
+    if p != mc.n_workers {
+        bail!(
+            "run spec declares {p} workers but the artifacts were compiled for {}",
+            mc.n_workers
+        );
+    }
+    let n = mc.seq_len;
+    let (fwd_plan, bwd_plan) = session.plans()?;
+    // per-rank token slices: manifest-equal chunks, or the document-packed
+    // layout *the lowered plan actually carries* — a varlen optimize
+    // policy may have rebalanced the cuts, and the data sharding must
+    // follow the plan, not the spec it started from. Uniform cuts only:
+    // the AOT artifacts compile one fixed chunk shape (document-masked
+    // pair skipping still applies).
+    let boundaries: Vec<usize> = match fwd_plan.varlen.as_deref() {
+        Some(vspec) => {
+            if vspec.total_tokens() != n {
+                bail!(
+                    "varlen spec covers {} tokens but the model trains on {n}",
+                    vspec.total_tokens()
+                );
+            }
+            let c0 = vspec.chunk_tokens(0);
+            if !(1..p).all(|w| vspec.chunk_tokens(w) == c0) {
+                bail!(
+                    "ragged varlen boundaries need per-chunk AOT artifacts; pack with uniform \
+                     boundaries (zero-weight chunk pairs are still skipped)"
+                );
+            }
+            vspec.boundaries.clone()
         }
-        None => build_plans(cfg.schedule, p)?,
+        None => (0..=p).map(|r| r * mc.chunk_len).collect(),
     };
     // bind rank i to the optimized plan's GPU slot (identity when not
     // optimizing) — the trainer-side analogue of the launcher consuming
     // `Plan::placement`
     let comms = build_network_placed(p, &fwd_plan.placement);
 
+    // shared tracing epoch + sink: every worker's attn_call stamps spans
+    // against the same clock, so per-layer timelines merge across ranks
+    let trace_epoch = cfg.run.trace.then(Instant::now);
+    let sink: TraceSink = Arc::new(Mutex::new(Vec::new()));
+    let record_step = cfg.steps.saturating_sub(1);
+
     let mut handles = Vec::new();
     for (rank, comm) in comms.into_iter().enumerate() {
         let cfg = cfg.clone();
         let fwd_plan = fwd_plan.clone();
         let bwd_plan = bwd_plan.clone();
+        let boundaries = boundaries.clone();
+        let trace_sink = cfg.run.trace.then(|| sink.clone());
         handles.push(thread::spawn(move || -> Result<Option<TrainReport>> {
-            let runtime = Runtime::load(&cfg.artifact_dir)?;
+            let runtime = Runtime::load(cfg.artifact_dir()?)?;
             runtime.precompile(ATTN_ARTIFACTS)?;
             runtime.precompile(&[
                 "embed_fwd",
@@ -501,13 +594,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 cfg: cfg.clone(),
                 params,
                 layout,
+                trace_epoch,
+                trace_sink,
+                record_step,
             };
             let mut adam = Adam::new(cfg.adam, &w.params);
             let mut corpus = MarkovCorpus::new(
                 w.runtime.manifest().config.vocab,
                 cfg.seed,
             );
-            let chunk = w.runtime.manifest().config.chunk_len;
             let inv_total = 1.0 / n as f32;
             let mut logs = Vec::new();
             let t_start = std::time::Instant::now();
@@ -515,16 +610,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             for step in 0..cfg.steps {
                 let t0 = std::time::Instant::now();
                 // every worker generates the identical sequence, takes its
-                // chunk
+                // token slice (equal chunks, or the varlen boundaries)
                 let (ids_full, tgts_full) = corpus.sample(n);
-                let ids = ITensor::new(
-                    vec![chunk],
-                    ids_full[rank * chunk..(rank + 1) * chunk].to_vec(),
-                );
-                let tgts = ITensor::new(
-                    vec![chunk],
-                    tgts_full[rank * chunk..(rank + 1) * chunk].to_vec(),
-                );
+                let (lo, hi) = (boundaries[rank], boundaries[rank + 1]);
+                let ids = ITensor::new(vec![hi - lo], ids_full[lo..hi].to_vec());
+                let tgts = ITensor::new(vec![hi - lo], tgts_full[lo..hi].to_vec());
 
                 let (loss_local, ckpts, x_final) =
                     w.forward(step, &ids, &tgts, inv_total)?;
@@ -559,6 +649,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                     kernel_calls: stats.calls,
                     kernel_s: stats.kernel_nanos as f64 / 1e9,
                     total_s: t_start.elapsed().as_secs_f64(),
+                    layer_traces: Vec::new(),
                 }))
             } else {
                 Ok(None)
@@ -576,14 +667,42 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             report = Some(r);
         }
     }
-    report.ok_or_else(|| anyhow!("no report from rank 0"))
+    let mut report = report.ok_or_else(|| anyhow!("no report from rank 0"))?;
+
+    if cfg.run.trace {
+        let recs: Vec<LayerSpanRec> =
+            std::mem::take(&mut *sink.lock().expect("trace sink poisoned"));
+        let pass_rank = |p: &str| match p {
+            "fwd" => 0usize,
+            "bwd" => 1,
+            _ => 2,
+        };
+        let mut keys: Vec<(usize, &'static str)> =
+            recs.iter().map(|r| (r.layer, r.pass)).collect();
+        keys.sort_by_key(|&(l, p)| (l, pass_rank(p)));
+        keys.dedup();
+        for (layer, pass) in keys {
+            let traces: Vec<RunTrace> = recs
+                .iter()
+                .filter(|r| r.layer == layer && r.pass == pass)
+                .map(|r| r.trace.clone())
+                .collect();
+            let n_ops = if pass == "bwd" { bwd_plan.n_ops() } else { fwd_plan.n_ops() };
+            report.layer_traces.push(LayerTrace {
+                layer,
+                pass,
+                trace: MergedTrace::merge(n_ops, &traces),
+            });
+        }
+    }
+    Ok(report)
 }
 
 /// Evaluate the monolithic `full_model_grads` oracle with the same
 /// deterministic init + first corpus sample; returns (loss, grads).
 /// Only available for configs exported with `export_ref_grads`.
 pub fn oracle_first_step(cfg: &TrainConfig) -> Result<(f32, Vec<Tensor>)> {
-    let rt = Runtime::load(&cfg.artifact_dir)?;
+    let rt = Runtime::load(cfg.artifact_dir()?)?;
     let mc = rt.manifest().config.clone();
     anyhow::ensure!(
         mc.export_ref_grads,

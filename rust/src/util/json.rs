@@ -106,6 +106,25 @@ impl Json {
     }
 }
 
+/// Escape a string for embedding in a JSON document (the emit-side
+/// counterpart of this parser, shared by every hand-rolled JSON writer in
+/// the crate): backslash, quote, and control characters.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -317,6 +336,13 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{'a': 1}").is_err());
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parse() {
+        let raw = "a\"b\\c\nd\te\u{1}";
+        let doc = format!("\"{}\"", escape(raw));
+        assert_eq!(Json::parse(&doc).unwrap().as_str(), Some(raw));
     }
 
     #[test]

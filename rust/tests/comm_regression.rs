@@ -12,8 +12,8 @@ use std::thread;
 
 use distflash::coordinator::comm::{build_network, build_network_placed, Tag, WorkerComm};
 use distflash::coordinator::{
-    build_plans, run_dist_attention_exec, BackendSpec, ExecOpts, Kernel, Pass, Payload,
-    PayloadClass, Plan, PlanOp, Schedule, ScheduleKind,
+    BackendSpec, Kernel, Pass, Payload, PayloadClass, Plan, PlanOp, RunSpec, Schedule,
+    ScheduleKind, Session,
 };
 use distflash::runtime::Tensor;
 use distflash::simulator::AttnCost;
@@ -232,25 +232,19 @@ fn real_executor_traced_bytes_match_plan_prediction() {
     let kv = Tensor::zeros(&[KVH, n, D]);
     let do_ = Tensor::zeros(&[H, n, D]);
     for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
-        let (fwd, bwd) = build_plans(kind, p).unwrap();
-        let plan_bytes = fwd.total_bytes(&wire_cost(Pass::Forward))
-            + bwd.total_bytes(&wire_cost(Pass::Backward));
-        for deep in [false, true] {
-            let opts = ExecOpts {
-                backend: BackendSpec::Null,
-                trace: true,
-                deep_copy_sends: deep,
-            };
-            let run = run_dist_attention_exec(
-                fwd.clone(),
-                bwd.clone(),
-                &q,
-                &kv,
-                &kv,
-                Some(&do_),
-                &opts,
-            )
+        let (fwd, bwd) = Session::new(RunSpec::plans_only(kind, p))
+            .unwrap()
+            .plans()
             .unwrap();
+        let plan_bytes =
+            fwd.total_bytes(&wire_cost(Pass::Forward)) + bwd.total_bytes(&wire_cost(Pass::Backward));
+        for deep in [false, true] {
+            let mut spec = RunSpec::for_plans(&fwd, BackendSpec::Null, &q, &kv);
+            spec.trace = true;
+            spec.deep_copy_sends = deep;
+            let mut session = Session::with_plans(spec, fwd.clone(), bwd.clone()).unwrap();
+            session.execute_with(&q, &kv, &kv, Some(&do_)).unwrap();
+            let run = session.take_run().unwrap();
             assert_eq!(
                 run.result.comm_bytes, plan_bytes as u64,
                 "{kind:?} deep={deep}: executor bytes diverge from plan prediction"

@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use distflash::coordinator::{run_dist_attention, ScheduleKind};
+use distflash::coordinator::{DistAttnResult, RunSpec, ScheduleKind, Session, Workload};
 use distflash::runtime::{Runtime, Tensor, Value};
 use distflash::util::Rng;
 
@@ -22,6 +22,27 @@ fn have(cfg: &str) -> bool {
         eprintln!("skipping: artifacts/{cfg} missing (run `make artifacts`)");
     }
     ok
+}
+
+
+/// Distributed attention via the Session pipeline (the legacy
+/// `run_dist_attention` call sites, spec-driven).
+#[allow(clippy::too_many_arguments)]
+fn dist(
+    dir: &std::path::Path,
+    kind: ScheduleKind,
+    p: usize,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    do_: Option<&Tensor>,
+) -> DistAttnResult {
+    let mut spec = RunSpec::pjrt(dir, kind);
+    spec.workload = Some(Workload::from_tensors(q, k, p));
+    spec.n_workers = p;
+    let mut session = Session::new(spec).unwrap();
+    session.execute_with(q, k, v, do_).unwrap();
+    session.take_run().unwrap().result
 }
 
 struct Case {
@@ -67,7 +88,7 @@ fn check_forward_backward(cfg: &str, kind: ScheduleKind, seed: u64) {
     let case = make_case(cfg, seed);
     let rt = Runtime::load(&artifact_dir(cfg)).unwrap();
     let p = rt.manifest().config.n_workers;
-    let res = run_dist_attention(
+    let res = dist(
         &artifact_dir(cfg),
         kind,
         p,
@@ -75,8 +96,7 @@ fn check_forward_backward(cfg: &str, kind: ScheduleKind, seed: u64) {
         &case.k,
         &case.v,
         Some(&case.do_),
-    )
-    .unwrap();
+    );
 
     let o_err = res.o.max_abs_diff(&case.o_ref);
     let lse_err = res.lse.max_abs_diff(&case.lse_ref);
@@ -137,26 +157,8 @@ fn ring_and_balanced_grads_agree() {
     let case = make_case("tiny", 7);
     let dir = artifact_dir("tiny");
     let p = 4;
-    let a = run_dist_attention(
-        &dir,
-        ScheduleKind::Ring,
-        p,
-        &case.q,
-        &case.k,
-        &case.v,
-        Some(&case.do_),
-    )
-    .unwrap();
-    let b = run_dist_attention(
-        &dir,
-        ScheduleKind::Balanced,
-        p,
-        &case.q,
-        &case.k,
-        &case.v,
-        Some(&case.do_),
-    )
-    .unwrap();
+    let a = dist(&dir, ScheduleKind::Ring, p, &case.q, &case.k, &case.v, Some(&case.do_));
+    let b = dist(&dir, ScheduleKind::Balanced, p, &case.q, &case.k, &case.v, Some(&case.do_));
     let (adq, adk, adv) = a.grads.unwrap();
     let (bdq, bdk, bdv) = b.grads.unwrap();
     assert!(adq.max_abs_diff(&bdq) < 2e-5);
@@ -174,31 +176,13 @@ fn backward_dq_of_first_chunk_is_local() {
     }
     let case = make_case("tiny", 8);
     let dir = artifact_dir("tiny");
-    let full = run_dist_attention(
-        &dir,
-        ScheduleKind::Balanced,
-        4,
-        &case.q,
-        &case.k,
-        &case.v,
-        Some(&case.do_),
-    )
-    .unwrap();
+    let full = dist(&dir, ScheduleKind::Balanced, 4, &case.q, &case.k, &case.v, Some(&case.do_));
 
     let qs = case.q.chunk_axis1(4);
     let ks = case.k.chunk_axis1(4);
     let vs = case.v.chunk_axis1(4);
     let dos = case.do_.chunk_axis1(4);
-    let solo = run_dist_attention(
-        &dir,
-        ScheduleKind::Ring,
-        1,
-        &qs[0],
-        &ks[0],
-        &vs[0],
-        Some(&dos[0]),
-    )
-    .unwrap();
+    let solo = dist(&dir, ScheduleKind::Ring, 1, &qs[0], &ks[0], &vs[0], Some(&dos[0]));
     let full_o = full.o.chunk_axis1(4);
     assert!(full_o[0].max_abs_diff(&solo.o) < 2e-5);
     let (dq_full, _, _) = full.grads.unwrap();
@@ -219,8 +203,7 @@ fn comm_volume_halved_by_causality() {
     let rt = Runtime::load(&dir).unwrap();
     let mc = rt.manifest().config.clone();
     let p = mc.n_workers;
-    let res = run_dist_attention(&dir, ScheduleKind::Ring, p, &case.q, &case.k, &case.v, None)
-        .unwrap();
+    let res = dist(&dir, ScheduleKind::Ring, p, &case.q, &case.k, &case.v, None);
     let chunk_kv_bytes = (2 * mc.n_kv_heads * mc.chunk_len * mc.head_dim * 4) as u64;
     let expect = (p * (p - 1) / 2) as u64 * chunk_kv_bytes;
     assert_eq!(res.comm_bytes, expect, "ring fwd comm bytes");

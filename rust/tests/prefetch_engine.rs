@@ -21,10 +21,19 @@ use std::time::Duration;
 use distflash::coordinator::comm::{build_network, Tag};
 use distflash::coordinator::executor::{AttnCtx, RunTrace};
 use distflash::coordinator::{
-    build_plans, run_dist_attention_exec, ExecOpts, Pass, Plan, Schedule, ScheduleKind,
+    BackendSpec, Pass, Plan, RunSpec, Schedule, ScheduleKind, Session,
 };
 use distflash::runtime::{HostKernels, Kernels, Tensor, Value};
 use distflash::util::Rng;
+
+/// Lower a schedule through the Session pipeline (the `build_plans`
+/// replacement).
+fn plans(kind: ScheduleKind, p: usize) -> (Arc<Plan>, Arc<Plan>) {
+    Session::new(RunSpec::plans_only(kind, p))
+        .unwrap()
+        .plans()
+        .unwrap()
+}
 
 const H: usize = 4;
 const KVH: usize = 2;
@@ -150,17 +159,11 @@ fn host_executor_matches_oracle_p8_both_schedules() {
         .unwrap();
 
     for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
-        let (fwd, bwd) = build_plans(kind, p).unwrap();
-        let run = run_dist_attention_exec(
-            fwd,
-            bwd,
-            &q,
-            &k,
-            &v,
-            Some(&do_),
-            &ExecOpts::host(),
-        )
-        .unwrap();
+        let (fwd, bwd) = plans(kind, p);
+        let spec = RunSpec::for_plans(&fwd, BackendSpec::HostRef, &q, &k);
+        let mut session = Session::with_plans(spec, fwd, bwd).unwrap();
+        session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+        let run = session.take_run().unwrap();
         let o_err = run.result.o.max_abs_diff(&oracle[0]);
         let lse_err = run.result.lse.max_abs_diff(&oracle[1]);
         assert!(o_err < 1e-4, "{kind:?}: o err {o_err}");
@@ -178,7 +181,7 @@ fn depth0_and_deep_prefetch_bit_identical_under_interleaving() {
     let p = 8;
     let layers = 4;
     let (q, k, v, do_) = inputs(p, 7);
-    let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).unwrap();
+    let (fwd, bwd) = plans(ScheduleKind::Balanced, p);
     // depth 0: no drains, every receive blocks at point of use
     let blocking = run_layers(
         &with_depth(&fwd, 0),

@@ -1,0 +1,106 @@
+//! The measure→model loop (ISSUE 5 acceptance criterion): a Session on
+//! the HostRef backend over the 2×8-dev cluster runs
+//! `execute().calibrate().optimize()` — fitting the cost model's kernel
+//! classes from the run's own measured trace and re-optimizing under it —
+//! and the recalibrated plan's simulated makespan under the *measured*
+//! cost model must be ≤ the uncalibrated optimized plan's, with the
+//! `sim_calls` search budget reported.
+
+use distflash::config::ClusterSpec;
+use distflash::coordinator::{
+    OptimizeOpts, OptimizePolicy, Plan, RunSpec, ScheduleKind, Session, Workload,
+};
+use distflash::simulator::{AttnCost, PlanSim};
+
+fn score(plan: &Plan, cluster: &ClusterSpec, cost: &AttnCost) -> f64 {
+    PlanSim::new(plan, cost).total_s(cluster, &plan.placement, plan.prefetch_depth)
+}
+
+#[test]
+fn calibrated_reoptimize_never_worse_under_measured_costs() {
+    let cluster = ClusterSpec::cluster_16x40g(); // the 2×8-dev preset
+    let p = cluster.n_gpus();
+    let mut spec = RunSpec::host(ScheduleKind::Balanced, p, Workload::new(4, 2, 16, 24));
+    spec.cluster = cluster;
+    spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
+    spec.trace = true;
+    let mut session = Session::new(spec).unwrap();
+
+    // execute() auto-runs plan + optimize under the *modeled* costs, then
+    // runs the real threaded executor with per-op tracing
+    session.execute().unwrap();
+    let (fwd_a, bwd_a) = session.plans().unwrap();
+    assert!(!session.calibrated());
+    let sims_before = session.sim_calls();
+    assert!(sims_before > 0, "the modeled optimize pass spent no sims");
+
+    // the typed-stage chain from the issue: execute().calibrate().optimize()
+    session.calibrate().unwrap().optimize().unwrap();
+    assert!(session.calibrated());
+    let (fwd_cost, bwd_cost) = {
+        let (f, b) = session.costs();
+        (*f, *b)
+    };
+    // calibration really measured something: kernel classes are positive
+    // and differ from the analytic model's GPU-roofline numbers
+    assert!(fwd_cost.pair_full_s > 0.0 && fwd_cost.pair_diag_s > 0.0);
+    assert!(bwd_cost.pair_full_s > 0.0);
+
+    let (fwd_b, bwd_b) = session.plans().unwrap();
+    // the acceptance bound: under the measured cost model, the
+    // recalibrated plans are never worse than the uncalibrated optimized
+    // plans (the session only swaps a plan on a non-worse score)
+    let a_f = score(&fwd_a, &cluster, &fwd_cost);
+    let b_f = score(&fwd_b, &cluster, &fwd_cost);
+    assert!(
+        b_f <= a_f * (1.0 + 1e-9),
+        "fwd: recalibrated {b_f} vs uncalibrated {a_f} under measured costs"
+    );
+    let a_b = score(&bwd_a, &cluster, &bwd_cost);
+    let b_b = score(&bwd_b, &cluster, &bwd_cost);
+    assert!(
+        b_b <= a_b * (1.0 + 1e-9),
+        "bwd: recalibrated {b_b} vs uncalibrated {a_b} under measured costs"
+    );
+
+    // sim_calls budget reported and growing across the second search
+    let sims_after = session.sim_calls();
+    assert!(
+        sims_after > sims_before,
+        "recalibrated optimize spent no additional sims ({sims_before} -> {sims_after})"
+    );
+    println!(
+        "calibration loop: sim budget {sims_before} (modeled) -> {sims_after} (total); \
+         fwd {a_f:.6}s -> {b_f:.6}s, bwd {a_b:.6}s -> {b_b:.6}s under measured costs"
+    );
+
+    // both audit trails are on record: a modeled stage and a calibrated one
+    let audits = session.audits();
+    assert!(audits.iter().any(|a| !a.calibrated));
+    assert!(audits.iter().any(|a| a.calibrated));
+}
+
+#[test]
+fn calibrated_costs_feed_varlen_reoptimization_too() {
+    // same loop on a document-packed spec: the varlen rebalancer accepts
+    // the (fwd, bwd) pair jointly, so both plans always share one chunking
+    let cluster = ClusterSpec::dgx_2x8();
+    let p = 8usize;
+    let vspec = distflash::coordinator::VarlenSpec::pack_zipf(12, 24 * p, 1.2, 3, p);
+    let mut spec = RunSpec::host(ScheduleKind::Balanced, p, Workload::new(2, 1, 8, 24));
+    spec.cluster = cluster;
+    spec.varlen = Some(vspec);
+    spec.optimize = OptimizePolicy::Varlen(OptimizeOpts::default());
+    spec.trace = true;
+    let mut session = Session::new(spec).unwrap();
+    session.execute().unwrap().calibrate().unwrap().optimize().unwrap();
+    let (fwd, bwd) = session.plans().unwrap();
+    assert_eq!(
+        fwd.varlen.as_deref(),
+        bwd.varlen.as_deref(),
+        "fwd/bwd diverged on chunk boundaries"
+    );
+    fwd.validate_lowered().unwrap();
+    bwd.validate_lowered().unwrap();
+    assert!(session.sim_calls() > 0);
+}

@@ -1,0 +1,269 @@
+//! Golden equivalence suite: every deprecated harness entry point must be
+//! **bit-identical** to its `RunSpec`/`Session` translation — the contract
+//! that lets the old free functions shrink to shims without any caller
+//! observing a change. Covers all four `run_dist_attention*` paths, all
+//! three `build_plans*` builders, P ∈ {2, 8}, varlen and uniform layouts,
+//! both schedules, traced and deep-copy modes. (PJRT paths self-skip on a
+//! bare checkout like every artifact-backed suite.)
+
+#![allow(deprecated)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use distflash::baselines::{attn_cost_bwd, attn_cost_fwd};
+use distflash::config::{ClusterSpec, PaperModel};
+use distflash::coordinator::{
+    build_plans, build_plans_optimized, build_plans_varlen, run_dist_attention,
+    run_dist_attention_exec, run_dist_attention_host, run_dist_attention_planned, BackendSpec,
+    DistAttnResult, ExecOpts, OptimizeOpts, OptimizePolicy, Plan, RunSpec, ScheduleKind, Session,
+    VarlenSpec, Workload,
+};
+use distflash::runtime::{Runtime, Tensor};
+use distflash::util::Rng;
+
+const H: usize = 4;
+const KVH: usize = 2;
+const D: usize = 8;
+const CHUNK: usize = 12;
+
+fn inputs(p: usize, seed: u64) -> (Tensor, Tensor, Tensor, Tensor) {
+    let n = p * CHUNK;
+    let mut rng = Rng::new(seed);
+    (
+        Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D)),
+        Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D)),
+        Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D)),
+        Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D)),
+    )
+}
+
+fn assert_plans_eq(a: &(Arc<Plan>, Arc<Plan>), b: &(Arc<Plan>, Arc<Plan>), what: &str) {
+    assert_eq!(*a.0, *b.0, "{what}: forward plans differ");
+    assert_eq!(*a.1, *b.1, "{what}: backward plans differ");
+}
+
+fn assert_results_eq(a: &DistAttnResult, b: &DistAttnResult, what: &str) {
+    assert_eq!(a.o, b.o, "{what}: o differs");
+    assert_eq!(a.lse, b.lse, "{what}: lse differs");
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{what}: comm bytes differ");
+    match (&a.grads, &b.grads) {
+        (None, None) => {}
+        (Some((adq, adk, adv)), Some((bdq, bdk, bdv))) => {
+            assert_eq!(adq, bdq, "{what}: dq differs");
+            assert_eq!(adk, bdk, "{what}: dk differs");
+            assert_eq!(adv, bdv, "{what}: dv differs");
+        }
+        _ => panic!("{what}: gradient presence differs"),
+    }
+}
+
+#[test]
+fn build_plans_matches_session_plans() {
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        for p in [2usize, 8] {
+            let legacy = build_plans(kind, p).unwrap();
+            let spec = Session::new(RunSpec::plans_only(kind, p)).unwrap().plans().unwrap();
+            assert_plans_eq(&legacy, &spec, &format!("build_plans {kind:?} P={p}"));
+        }
+    }
+}
+
+#[test]
+fn build_plans_varlen_matches_session_plans() {
+    for p in [2usize, 8] {
+        for spec in [
+            VarlenSpec::uniform(32, p),
+            VarlenSpec::pack_zipf(3 * p, 32 * p, 1.2, 7, p),
+        ] {
+            let legacy = build_plans_varlen(ScheduleKind::Balanced, &spec).unwrap();
+            let mut rs = RunSpec::plans_only(ScheduleKind::Balanced, p);
+            rs.varlen = Some(spec.clone());
+            let session = Session::new(rs).unwrap().plans().unwrap();
+            assert_plans_eq(&legacy, &session, &format!("build_plans_varlen P={p}"));
+        }
+    }
+}
+
+#[test]
+fn build_plans_optimized_matches_session_plans() {
+    let model = PaperModel::llama_gqa();
+    let cluster = ClusterSpec::dgx_2x8();
+    for p in [2usize, 8] {
+        let fwd_cost = attn_cost_fwd(&model, &cluster, 1024.0);
+        let bwd_cost = attn_cost_bwd(&model, &cluster, 1024.0);
+        let opts = OptimizeOpts::default();
+        let legacy = build_plans_optimized(
+            ScheduleKind::Balanced,
+            p,
+            &cluster,
+            &fwd_cost,
+            &bwd_cost,
+            &opts,
+        )
+        .unwrap();
+        let mut rs = RunSpec::plans_only(ScheduleKind::Balanced, p);
+        rs.cluster = cluster;
+        rs.optimize = OptimizePolicy::Schedule(opts.clone());
+        let mut session = Session::new(rs).unwrap();
+        session.set_costs(fwd_cost, bwd_cost);
+        let got = session.plans().unwrap();
+        assert_plans_eq(&legacy, &got, &format!("build_plans_optimized P={p}"));
+        // the session accounted for the search it ran
+        assert!(session.sim_calls() > 0);
+        // ...and both agree with the *direct* optimizer call (the true
+        // pre-Session behavior) — the session's acceptance layer must not
+        // change what the pass pipeline produces
+        let schedule = distflash::coordinator::Schedule::build(ScheduleKind::Balanced, p);
+        let direct_fwd = distflash::coordinator::optimize_schedule(
+            &schedule,
+            distflash::coordinator::Pass::Forward,
+            &cluster,
+            &fwd_cost,
+            &opts,
+        )
+        .plan;
+        let direct_bwd = distflash::coordinator::optimize_schedule(
+            &schedule,
+            distflash::coordinator::Pass::Backward,
+            &cluster,
+            &bwd_cost,
+            &opts,
+        )
+        .plan;
+        assert_eq!(*got.0, direct_fwd, "P={p}: session fwd differs from direct optimizer");
+        assert_eq!(*got.1, direct_bwd, "P={p}: session bwd differs from direct optimizer");
+    }
+}
+
+#[test]
+fn run_dist_attention_host_matches_session_execute() {
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        for p in [2usize, 8] {
+            let (q, k, v, do_) = inputs(p, 11);
+            let (fwd, bwd) = build_plans(kind, p).unwrap();
+            let legacy =
+                run_dist_attention_host(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_)).unwrap();
+            let spec = RunSpec::for_plans(&fwd, BackendSpec::HostRef, &q, &k);
+            let mut session = Session::with_plans(spec, fwd, bwd).unwrap();
+            session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+            let got = session.take_run().unwrap().result;
+            assert_results_eq(&legacy, &got, &format!("host {kind:?} P={p}"));
+        }
+    }
+}
+
+#[test]
+fn run_dist_attention_host_matches_spec_lowered_session() {
+    // the spec-lowered path (no caller plans at all) must also agree:
+    // RunSpec::host lowers the same schedule the legacy builder did
+    for p in [2usize, 8] {
+        let (q, k, v, do_) = inputs(p, 23);
+        let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).unwrap();
+        let legacy = run_dist_attention_host(fwd, bwd, &q, &k, &v, Some(&do_)).unwrap();
+        let mut session = Session::new(RunSpec::host(
+            ScheduleKind::Balanced,
+            p,
+            Workload::new(H, KVH, D, CHUNK),
+        ))
+        .unwrap();
+        session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+        let got = session.take_run().unwrap().result;
+        assert_results_eq(&legacy, &got, &format!("spec-lowered P={p}"));
+    }
+}
+
+#[test]
+fn run_dist_attention_exec_matches_session_all_modes() {
+    // trace on/off × deep-copy on/off × Null/HostRef backends
+    let p = 8usize;
+    let (q, k, v, do_) = inputs(p, 31);
+    let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).unwrap();
+    for backend in [BackendSpec::HostRef, BackendSpec::Null] {
+        for (trace, deep) in [(false, false), (true, false), (false, true), (true, true)] {
+            let opts = ExecOpts { backend: backend.clone(), trace, deep_copy_sends: deep };
+            let legacy =
+                run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)
+                    .unwrap();
+            let mut spec = RunSpec::for_plans(&fwd, backend.clone(), &q, &k);
+            spec.trace = trace;
+            spec.deep_copy_sends = deep;
+            let mut session = Session::with_plans(spec, fwd.clone(), bwd.clone()).unwrap();
+            session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+            let got = session.take_run().unwrap();
+            let what = format!("exec {backend:?} trace={trace} deep={deep}");
+            assert_results_eq(&legacy.result, &got.result, &what);
+            assert_eq!(legacy.fwd_trace.is_some(), got.fwd_trace.is_some(), "{what}");
+            assert_eq!(legacy.bwd_trace.is_some(), got.bwd_trace.is_some(), "{what}");
+        }
+    }
+}
+
+#[test]
+fn varlen_exec_matches_session_on_ragged_host_run() {
+    // ragged boundaries execute on the host backend; both routes must
+    // shard at the same cuts and produce identical bits
+    let p = 4usize;
+    let mut spec = VarlenSpec::pack_zipf(6, 96, 1.1, 5, p);
+    // knock the packing off the equal-token grid so the chunks are
+    // genuinely ragged (pack_zipf itself cuts equal-token boundaries)
+    spec.boundaries[2] += 3;
+    spec.validate().unwrap();
+    let n = spec.total_tokens();
+    let mut rng = Rng::new(41);
+    let q = Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D));
+    let k = Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D));
+    let v = Tensor::new(vec![KVH, n, D], rng.normal_vec(KVH * n * D));
+    let do_ = Tensor::new(vec![H, n, D], rng.normal_vec(H * n * D));
+    let (fwd, bwd) = build_plans_varlen(ScheduleKind::Balanced, &spec).unwrap();
+    let legacy =
+        run_dist_attention_host(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_)).unwrap();
+    let mut rs = RunSpec::host(ScheduleKind::Balanced, p, Workload::from_tensors(&q, &k, p));
+    rs.varlen = Some(spec);
+    let mut session = Session::new(rs).unwrap();
+    session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+    let got = session.take_run().unwrap().result;
+    assert_results_eq(&legacy, &got, "varlen ragged host");
+}
+
+// --- artifact-backed (PJRT) paths: self-skip on a bare checkout ----------
+
+fn artifact_dir(cfg: &str) -> PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap();
+    PathBuf::from(root).join("artifacts").join(cfg)
+}
+
+fn have(cfg: &str) -> bool {
+    let ok = artifact_dir(cfg).join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/{cfg} missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn run_dist_attention_pjrt_matches_session() {
+    if !have("tiny") {
+        return;
+    }
+    let dir = artifact_dir("tiny");
+    let mc = Runtime::load(&dir).unwrap().manifest().config.clone();
+    let (h, kvh, n, d, p) = (mc.n_heads, mc.n_kv_heads, mc.seq_len, mc.head_dim, mc.n_workers);
+    let mut rng = Rng::new(3);
+    let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+        let legacy = run_dist_attention(&dir, kind, p, &q, &k, &v, Some(&do_)).unwrap();
+        let mut session = Session::new(RunSpec::pjrt(&dir, kind)).unwrap();
+        session.execute_with(&q, &k, &v, Some(&do_)).unwrap();
+        let got = session.take_run().unwrap().result;
+        assert_results_eq(&legacy, &got, &format!("pjrt {kind:?}"));
+        // the planned variant over explicit plans agrees too
+        let (fwd, bwd) = build_plans(kind, p).unwrap();
+        let planned =
+            run_dist_attention_planned(&dir, fwd, bwd, &q, &k, &v, Some(&do_)).unwrap();
+        assert_results_eq(&legacy, &planned, &format!("pjrt planned {kind:?}"));
+    }
+}

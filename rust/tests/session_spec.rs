@@ -1,0 +1,146 @@
+//! `RunSpec` serde contract (`repro run --spec`): exact JSON round-trips
+//! for every field shape — floats serialize in Rust's shortest
+//! round-trip form, so `from_json(to_json(s)) == s` bit-for-bit — plus
+//! preset-name cluster parsing and rejection of malformed documents.
+
+use std::path::PathBuf;
+
+use distflash::config::ClusterSpec;
+use distflash::coordinator::{
+    BackendSpec, OptimizeOpts, OptimizePolicy, RunSpec, ScheduleKind, Session, VarlenSpec,
+    Workload,
+};
+
+fn roundtrip(spec: &RunSpec) -> RunSpec {
+    let json = spec.to_json();
+    RunSpec::from_json(&json)
+        .unwrap_or_else(|e| panic!("round-trip parse failed: {e}\n{json}"))
+}
+
+#[test]
+fn default_host_spec_roundtrips_exactly() {
+    let spec = RunSpec::host(ScheduleKind::Balanced, 8, Workload::new(4, 2, 32, 64));
+    assert_eq!(roundtrip(&spec), spec);
+}
+
+#[test]
+fn every_field_shape_roundtrips_exactly() {
+    // exercise each serialized variant: pjrt backend, varlen layout, both
+    // optimize policies with non-default knobs, overrides on every scalar
+    let mut spec = RunSpec::pjrt(&PathBuf::from("artifacts/tiny"), ScheduleKind::Ring);
+    assert_eq!(roundtrip(&spec), spec, "manifest-resolved pjrt spec");
+
+    spec = RunSpec::host(ScheduleKind::Balanced, 4, Workload::new(8, 4, 16, 48));
+    spec.varlen = Some(VarlenSpec::pack_zipf(6, 4 * 48, 1.3, 11, 4));
+    spec.cluster = ClusterSpec::cluster_16x40g();
+    spec.optimize = OptimizePolicy::Varlen(OptimizeOpts {
+        seed: 9,
+        swap_rounds: 5,
+        depths: vec![1, 2, 7],
+        knee_rel_tol: 0.025,
+        stage_mem_frac: 0.125,
+        flip: false,
+        placement: true,
+        rebalance_rounds: 2,
+        align_doc_cuts: false,
+        move_boundaries: true,
+    });
+    spec.prefetch_depth = Some(3);
+    spec.layers = 4;
+    spec.backward = false;
+    spec.trace = true;
+    spec.deep_copy_sends = true;
+    spec.seed = 123;
+    assert_eq!(roundtrip(&spec), spec, "varlen + optimize spec");
+
+    spec.backend = BackendSpec::Null;
+    spec.varlen = None;
+    spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
+    assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy");
+
+    // seeds above 2^53 cannot ride a JSON f64 — they serialize as decimal
+    // strings and still round-trip exactly
+    spec.seed = u64::MAX - 1;
+    spec.optimize = OptimizePolicy::Schedule(OptimizeOpts {
+        seed: (1u64 << 60) + 1,
+        ..Default::default()
+    });
+    assert_eq!(roundtrip(&spec), spec, "u64 seeds beyond 2^53");
+}
+
+#[test]
+fn cluster_presets_parse_by_name() {
+    let json = r#"{
+        "workload": {"n_heads": 4, "n_kv_heads": 2, "head_dim": 16, "chunk_tokens": 32},
+        "n_workers": 16,
+        "cluster": "2x8",
+        "backend": "hostref"
+    }"#;
+    let spec = RunSpec::from_json(json).unwrap();
+    assert_eq!(spec.cluster, ClusterSpec::dgx_2x8());
+    assert_eq!(spec.backend, BackendSpec::HostRef);
+    assert_eq!(spec.schedule, ScheduleKind::Balanced); // default
+    assert_eq!(spec.layers, 1);
+    assert!(spec.backward && !spec.trace);
+    // and the parsed spec actually drives a session
+    Session::new(spec).unwrap().plans().unwrap();
+}
+
+#[test]
+fn shorthand_policies_and_backends_parse() {
+    let json = r#"{
+        "workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+        "n_workers": 4,
+        "schedule": "ring",
+        "backend": "null",
+        "optimize": "schedule"
+    }"#;
+    let spec = RunSpec::from_json(json).unwrap();
+    assert_eq!(spec.schedule, ScheduleKind::Ring);
+    assert_eq!(spec.backend, BackendSpec::Null);
+    assert_eq!(spec.optimize, OptimizePolicy::Schedule(OptimizeOpts::default()));
+}
+
+#[test]
+fn malformed_specs_are_rejected_with_context() {
+    // not JSON at all
+    assert!(RunSpec::from_json("not json").is_err());
+    // unknown backend string
+    let err = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "backend": "cuda"}"#,
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("backend"), "{err}");
+    // unknown cluster preset
+    assert!(RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "cluster": "9x9"}"#,
+    )
+    .is_err());
+    // bad workload field type
+    assert!(RunSpec::from_json(
+        r#"{"workload": {"n_heads": "two", "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4}"#,
+    )
+    .is_err());
+    // wrong-typed *optional* fields are errors too, never silent defaults
+    assert!(RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "layers": "3"}"#,
+    )
+    .is_err());
+    assert!(RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "optimize": {"schedule": {"swap_rounds": "20"}}}"#,
+    )
+    .is_err());
+    // a parseable spec can still fail validation (varlen/worker mismatch)
+    let spec = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4,
+            "varlen": {"doc_lens": [32], "boundaries": [0, 16, 32]}}"#,
+    )
+    .unwrap();
+    assert!(Session::new(spec).is_err());
+}

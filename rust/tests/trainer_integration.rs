@@ -84,9 +84,9 @@ fn schedules_numerically_identical() {
     }
     let steps = 3;
     let mut ring = base_cfg("tiny", steps);
-    ring.schedule = ScheduleKind::Ring;
+    ring.run.schedule = ScheduleKind::Ring;
     let mut bal = base_cfg("tiny", steps);
-    bal.schedule = ScheduleKind::Balanced;
+    bal.run.schedule = ScheduleKind::Balanced;
     let a = train(&ring).unwrap();
     let b = train(&bal).unwrap();
     for (la, lb) in a.logs.iter().zip(&b.logs) {
@@ -142,4 +142,67 @@ fn odd_worker_count_trains() {
     let cfg = base_cfg("tiny-p3", 4);
     let report = train(&cfg).unwrap();
     assert!(report.logs.iter().all(|l| l.loss.is_finite()));
+}
+
+#[test]
+fn traced_training_step_yields_per_layer_timelines() {
+    // RunSpec::trace threads the shared epoch + sink through every
+    // worker's attn_call: the final step must produce one merged timeline
+    // per (layer, pass), numerically identical to an untraced run
+    if !have("tiny") {
+        return;
+    }
+    let steps = 2;
+    let plain = base_cfg("tiny", steps);
+    let mut traced = base_cfg("tiny", steps);
+    traced.run.trace = true;
+    let a = train(&plain).unwrap();
+    let b = train(&traced).unwrap();
+    for (la, lb) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(la.loss, lb.loss, "tracing changed the numerics at step {}", la.step);
+    }
+    assert!(a.layer_traces.is_empty());
+    assert!(!b.layer_traces.is_empty(), "traced run produced no layer timelines");
+    // one fwd and one bwd timeline per layer (remat-aware: no recompute)
+    let fwd = b.layer_traces.iter().filter(|t| t.pass == "fwd").count();
+    let bwd = b.layer_traces.iter().filter(|t| t.pass == "bwd").count();
+    assert_eq!(fwd, bwd, "unbalanced fwd/bwd timelines");
+    assert!(fwd >= 1);
+    for lt in &b.layer_traces {
+        assert!(lt.trace.makespan_s() > 0.0, "layer {} {} trace is empty", lt.layer, lt.pass);
+    }
+}
+
+#[test]
+fn varlen_uniform_boundaries_train_and_ragged_rejected() {
+    // the embedded RunSpec carries the document-packed layout: uniform
+    // boundaries run (doc-masked pair skipping applies), ragged ones are
+    // rejected up front (fixed-shape AOT artifacts)
+    if !have("tiny") {
+        return;
+    }
+    let dir = artifact_dir("tiny");
+    let rt = distflash::runtime::Runtime::load(&dir).unwrap();
+    let mc = rt.manifest().config.clone();
+    drop(rt);
+    let (n, p) = (mc.seq_len, mc.n_workers);
+    // uniform chunks, one doc spanning everything: must train exactly like
+    // the unpacked path (degenerate spec lowers to the classic plan)
+    let mut cfg = base_cfg("tiny", 2);
+    cfg.run.varlen = Some(distflash::coordinator::VarlenSpec::uniform(n / p, p));
+    let packed = train(&cfg).unwrap();
+    let plain = train(&base_cfg("tiny", 2)).unwrap();
+    for (la, lb) in packed.logs.iter().zip(&plain.logs) {
+        assert_eq!(la.loss, lb.loss, "uniform varlen changed the numerics");
+    }
+    // ragged boundaries: clear upfront error, no deadlocked workers
+    let mut ragged = base_cfg("tiny", 1);
+    let mut boundaries: Vec<usize> = (0..=p).map(|r| r * (n / p)).collect();
+    boundaries[1] += 1; // make chunk 0 one token fatter
+    ragged.run.varlen = Some(distflash::coordinator::VarlenSpec {
+        doc_lens: vec![n],
+        boundaries,
+    });
+    let err = train(&ragged).unwrap_err();
+    assert!(format!("{err:#}").contains("ragged"), "{err:#}");
 }

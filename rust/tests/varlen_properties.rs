@@ -15,8 +15,8 @@ use std::sync::Arc;
 use distflash::baselines::{attn_cost_bwd, attn_cost_fwd};
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    build_plans_varlen, optimize_varlen, ComputeOp, LowerOpts, OptimizeOpts, Pass, Plan, PlanOp,
-    Schedule, ScheduleKind, VarlenSpec,
+    optimize_varlen, ComputeOp, LowerOpts, OptimizeOpts, Pass, Plan, PlanOp, RunSpec, Schedule,
+    ScheduleKind, Session, VarlenSpec,
 };
 use distflash::runtime::Tensor;
 use distflash::simulator::{AttnCost, PlanSim};
@@ -265,9 +265,70 @@ fn rebalancer_clears_acceptance_bar_on_zipf_2x8() {
 }
 
 #[test]
+fn doc_aligned_cuts_converge_in_fewer_sims_on_doc_heavy_mixes() {
+    // ISSUE satellite: when documents are comparable in size to chunks,
+    // the pair-weight function is kinked at the (few) document edges —
+    // snapping candidate cuts to those kinks should reach convergence in
+    // fewer-or-equal simulator calls than blindly walking the c_ref/16
+    // grid, summed over several packings so one lucky seed can't decide.
+    let cluster = ClusterSpec::dgx_2x8();
+    let cost = test_cost();
+    let p = 8usize;
+    let s = Schedule::balanced(p);
+    let mut aligned_sims = 0usize;
+    let mut grid_sims = 0usize;
+    for seed in [3u64, 5, 9] {
+        let spec = VarlenSpec::pack_zipf(6, 192 * p, 1.3, seed, p);
+        let aligned =
+            optimize_varlen(&s, &spec, Pass::Forward, &cluster, &cost, &OptimizeOpts::default());
+        let grid = optimize_varlen(
+            &s,
+            &spec,
+            Pass::Forward,
+            &cluster,
+            &cost,
+            &OptimizeOpts { align_doc_cuts: false, ..Default::default() },
+        );
+        aligned_sims += aligned.sim_calls;
+        grid_sims += grid.sim_calls;
+        // alignment is a search-policy change only: the never-worse
+        // contract vs the equal-token default must still hold
+        assert!(aligned.optimized_s <= aligned.equal_s * (1.0 + 1e-9), "seed {seed}");
+        aligned.plan.validate_lowered().unwrap();
+    }
+    assert!(
+        aligned_sims <= grid_sims,
+        "doc-aligned candidates should not need more sims: {aligned_sims} vs {grid_sims}"
+    );
+}
+
+#[test]
+fn move_boundaries_off_fixes_cuts_but_still_flips() {
+    // the Session's shared-chunking backward pass relies on this knob:
+    // boundary sweeps disabled, flip sweeps (and placement/depth) intact
+    let cluster = ClusterSpec::dgx_2x8();
+    let p = cluster.n_gpus();
+    let spec = VarlenSpec::pack_zipf(48, 512 * p, 1.2, 5, p);
+    let o = optimize_varlen(
+        &Schedule::balanced(p),
+        &spec,
+        Pass::Backward,
+        &cluster,
+        &test_cost(),
+        &OptimizeOpts { move_boundaries: false, ..Default::default() },
+    );
+    assert_eq!(o.moved_boundaries, 0, "cuts moved despite move_boundaries=false");
+    assert_eq!(o.spec.boundaries, spec.boundaries);
+    assert!(o.optimized_s <= o.equal_s * (1.0 + 1e-9));
+    o.plan.validate_lowered().unwrap();
+}
+
+#[test]
 fn varlen_harness_plans_build_and_shard_raggedly() {
     let spec = VarlenSpec::pack_zipf(10, 96, 1.0, 1, 4);
-    let (fwd, bwd) = build_plans_varlen(ScheduleKind::Balanced, &spec).unwrap();
+    let mut rs = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+    rs.varlen = Some(spec.clone());
+    let (fwd, bwd) = Session::new(rs).unwrap().plans().unwrap();
     assert_eq!(fwd.n_workers, 4);
     assert!(fwd.varlen.is_some() && bwd.varlen.is_some());
     // ragged shard/gather round-trip at the spec's boundaries
