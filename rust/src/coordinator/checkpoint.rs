@@ -12,10 +12,31 @@
 //!   the attention forward — the dominant O(N²/P) term — is never
 //!   recomputed and its forward communication is never repeated.
 //!
-//! Numerically the two are identical (the paper's claim; asserted by
-//! `rust/tests/trainer_integration.rs`); they differ only in time and in
-//! stored bytes. The accounting helpers below feed the simulator's Table 5
-//! reproduction.
+//! Both strategies now exist *in the plan IR*, not just in trainer
+//! numerics. Backward lowering under `HfStyle`
+//! (`LowerOpts { ckpt: Some(CkptStrategy::HfStyle), .. }`) prepends the
+//! recompute subgraph — the attention forward's computes and kv transfers
+//! replayed before the backward ops:
+//!
+//! ```text
+//!   HfStyle backward plan (one layer, steps on the x-axis):
+//!
+//!   step:   0 .. T-1         |  T .. 2T-1            | 2T
+//!           recompute prefix |  original backward    | accum
+//!           kv xfer ─▶ attn  |  kv/q xfers ─▶ d(attn)| dk/dv
+//!           (rebuild o, lse) |  (uses rebuilt o/lse) | drains
+//!
+//!   RematAware backward plan: no prefix — o/lse were checkpointed at the
+//!   FlashAttention output, costing `extra_saved_floats` resident bytes.
+//! ```
+//!
+//! Numerically the two are identical (the paper's claim; asserted at the
+//! plan level by `rust/tests/ckpt_properties.rs`, which executes the
+//! HfStyle recompute subgraph on HostRef and checks it bit-identical to
+//! the no-checkpoint path and to the `full_attn_ref` oracle, and
+//! end-to-end by `rust/tests/trainer_integration.rs`); they differ only
+//! in time and in stored bytes. The accounting helpers below feed the
+//! simulator's Table 5 reproduction and the `ckpt_tradeoff` report.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CkptStrategy {
@@ -51,10 +72,13 @@ impl CkptStrategy {
 impl std::str::FromStr for CkptStrategy {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "hf" | "hf-style" | "layer" => Ok(CkptStrategy::HfStyle),
             "remat" | "remat-aware" | "ours" => Ok(CkptStrategy::RematAware),
-            other => Err(format!("unknown checkpoint strategy {other:?}")),
+            other => Err(format!(
+                "unknown checkpoint strategy {other:?}; accepted (case-insensitive): \
+                 \"hf\", \"hf-style\", \"layer\", \"remat\", \"remat-aware\", \"ours\""
+            )),
         }
     }
 }
@@ -71,6 +95,20 @@ mod tests {
         assert!(!ours.recomputes_attention_fwd());
         assert_eq!(hf.extra_saved_floats(4, 32, 16), 0);
         assert_eq!(ours.extra_saved_floats(4, 32, 16), 4 * 32 * 16 + 4 * 32);
-        assert!("bogus".parse::<CkptStrategy>().is_err());
+        let err = "bogus".parse::<CkptStrategy>().unwrap_err();
+        for spelling in ["hf", "hf-style", "layer", "remat", "remat-aware", "ours"] {
+            assert!(err.contains(spelling), "error must list {spelling:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!("HF".parse::<CkptStrategy>().unwrap(), CkptStrategy::HfStyle);
+        assert_eq!("Hf-Style".parse::<CkptStrategy>().unwrap(), CkptStrategy::HfStyle);
+        assert_eq!("Remat".parse::<CkptStrategy>().unwrap(), CkptStrategy::RematAware);
+        assert_eq!(
+            "REMAT-AWARE".parse::<CkptStrategy>().unwrap(),
+            CkptStrategy::RematAware
+        );
     }
 }

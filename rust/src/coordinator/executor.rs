@@ -132,6 +132,10 @@ struct IndexedOp {
 #[derive(Debug)]
 pub struct PlanIndex {
     ops: Vec<IndexedOp>,
+    /// Leading indexed ops that belong to the plan's recompute prefix
+    /// ([`Plan::recompute_ops`]) — this rank's share of the replayed
+    /// attention forward. 0 for plans without a prefix.
+    n_prefix: usize,
 }
 
 impl PlanIndex {
@@ -150,6 +154,7 @@ impl PlanIndex {
             bail!("executor requires a schedule-lowered plan, got {:?}", plan.name);
         }
         let mut ops = Vec::new();
+        let mut n_prefix = 0;
         for node in &plan.ops {
             let action = match &node.op {
                 PlanOp::Xfer { src, dst, payload } if *src == rank => {
@@ -209,8 +214,19 @@ impl PlanIndex {
                 _ => continue,
             };
             ops.push(IndexedOp { op: node.id, step: node.step, action });
+            // recompute-prefix ops lead the op stream in id order, so the
+            // indexed prefix is a leading run of `ops`
+            if node.id < plan.recompute_ops {
+                n_prefix += 1;
+            }
         }
-        Ok(PlanIndex { ops })
+        Ok(PlanIndex { ops, n_prefix })
+    }
+
+    /// This rank's share of the plan's recompute prefix (leading indexed
+    /// ops that replay the attention forward); 0 without checkpoints.
+    pub fn n_recompute(&self) -> usize {
+        self.n_prefix
     }
 }
 
@@ -341,6 +357,18 @@ impl<'a> AttnCtx<'a> {
         k: &Tensor,
         v_t: &Tensor,
     ) -> Result<(Tensor, Tensor)> {
+        self.forward_walk(&index.ops, q, k, v_t)
+    }
+
+    /// Forward semantics over a slice of indexed ops — the whole stream
+    /// for a forward plan, or a backward plan's recompute prefix.
+    fn forward_walk(
+        &mut self,
+        ops: &[IndexedOp],
+        q: &Tensor,
+        k: &Tensor,
+        v_t: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
         let h = q.shape[0];
         let c = q.shape[1];
         let d = q.shape[2];
@@ -351,7 +379,7 @@ impl<'a> AttnCtx<'a> {
         let mut helper_out: Option<Vec<Tensor>> = None;
         let mut cur_step = usize::MAX;
 
-        for iop in &index.ops {
+        for iop in ops {
             self.drain_at_boundary(&mut cur_step, iop.step);
             match &iop.action {
                 Action::SendKv { dst, step } => {
@@ -453,9 +481,13 @@ impl<'a> AttnCtx<'a> {
     /// schedule. Owners re-fetch remote (k, v) and return (dk, dv)
     /// partials; helpers receive the owner's (q, o, lse, do) bundle and
     /// return a dq partial; a trailing Accum node drains every lender's
-    /// (dk, dv) returns. Thanks to the saved `o`/`lse`
-    /// (rematerialization-aware checkpointing, §3.3) NO forward attention
-    /// is recomputed here.
+    /// (dk, dv) returns. Whether forward attention is recomputed first is
+    /// the *plan's* decision (§3.3): under rematerialization-aware
+    /// checkpointing the plan has no recompute prefix and the saved
+    /// `o`/`lse` arguments are used directly; under an HF-style lowering
+    /// (`Plan::recompute_ops > 0`) the leading ops replay the attention
+    /// forward — same kernels, same wire traffic — and the rebuilt
+    /// `o`/`lse` supersede the passed-in pair.
     pub fn backward(
         &mut self,
         q: &Tensor,
@@ -481,6 +513,55 @@ impl<'a> AttnCtx<'a> {
         lse: &Tensor,
         do_: &Tensor,
     ) -> Result<(Tensor, Tensor, Tensor)> {
+        // HF-style recompute prefix: replay this rank's share of the
+        // attention forward to rebuild (o, lse) before the backward body
+        // touches them — the passed-in pair is ignored, exactly as a
+        // layer-boundary checkpoint would not have saved it. Step numbers
+        // (and so wire tags) are disjoint from the body's, so the replay's
+        // traffic cannot collide with backward traffic.
+        let rebuilt: Option<(Tensor, Tensor)> = if index.n_prefix > 0 {
+            Some(self.recompute_indexed(index, q, k, v_t)?)
+        } else {
+            None
+        };
+        let (o, lse) = match &rebuilt {
+            Some((ro, rl)) => (ro, rl),
+            None => (o, lse),
+        };
+        self.backward_body_indexed(index, q, k, v_t, o, lse, do_)
+    }
+
+    /// Replay the backward plan's recompute prefix alone, rebuilding
+    /// `(o, lse)` — for callers (the trainer) that need the attention
+    /// output *before* the upstream gradient exists. Pair with
+    /// [`AttnCtx::backward_body_indexed`]; calling [`AttnCtx::backward_indexed`]
+    /// afterwards would replay the prefix a second time.
+    pub fn recompute_indexed(
+        &mut self,
+        index: &PlanIndex,
+        q: &Tensor,
+        k: &Tensor,
+        v_t: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        if index.n_prefix == 0 {
+            bail!("plan has no recompute prefix (not an HF-style checkpoint lowering)");
+        }
+        self.forward_walk(&index.ops[..index.n_prefix], q, k, v_t)
+    }
+
+    /// Backward body only — skips the recompute prefix (if any) and trusts
+    /// the caller-supplied `o`/`lse`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_body_indexed(
+        &mut self,
+        index: &PlanIndex,
+        q: &Tensor,
+        k: &Tensor,
+        v_t: &Tensor,
+        o: &Tensor,
+        lse: &Tensor,
+        do_: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
         let mut dq = Tensor::zeros(&q.shape);
         let mut dk = Tensor::zeros(&k.shape);
         let mut dv = Tensor::zeros(&v_t.shape);
@@ -490,7 +571,7 @@ impl<'a> AttnCtx<'a> {
         let mut grad_out: Option<Vec<Tensor>> = None;
         let mut cur_step = usize::MAX;
 
-        for iop in &index.ops {
+        for iop in &index.ops[index.n_prefix..] {
             self.drain_at_boundary(&mut cur_step, iop.step);
             match &iop.action {
                 Action::SendKv { dst, step } => {

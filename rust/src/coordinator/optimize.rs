@@ -47,6 +47,7 @@
 use std::sync::Arc;
 
 use crate::config::ClusterSpec;
+use crate::coordinator::checkpoint::CkptStrategy;
 use crate::coordinator::plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanOp};
 use crate::coordinator::schedule::{ComputeOp, Schedule, VarlenSpec};
 use crate::simulator::{AttnCost, PlanSim};
@@ -166,7 +167,22 @@ fn autotune_depth_sim(
     placement: &[usize],
     opts: &OptimizeOpts,
 ) -> (usize, f64, usize) {
-    let budget = opts.stage_mem_frac * cluster.gpu.mem_bytes;
+    autotune_depth_sim_reserved(sim, cluster, placement, opts, 0.0)
+}
+
+/// Depth knee with part of the staging budget already spoken for:
+/// `reserve_bytes` is per-GPU memory a checkpoint strategy holds resident
+/// (RematAware's `extra_saved_floats`), which comes out of the same
+/// `stage_mem_frac` headroom the prefetch pipeline stages into — the
+/// joint §3.2 × §3.3 trade.
+fn autotune_depth_sim_reserved(
+    sim: &mut PlanSim,
+    cluster: &ClusterSpec,
+    placement: &[usize],
+    opts: &OptimizeOpts,
+    reserve_bytes: f64,
+) -> (usize, f64, usize) {
+    let budget = (opts.stage_mem_frac * cluster.gpu.mem_bytes - reserve_bytes).max(0.0);
     let stage = sim.stage_bytes();
     let ds: Vec<usize> = depth_candidates(opts)
         .into_iter()
@@ -355,9 +371,28 @@ pub fn optimize_schedule(
     cost: &AttnCost,
     opts: &OptimizeOpts,
 ) -> Optimized {
+    optimize_schedule_ckpt(schedule, pass, cluster, cost, opts, None)
+}
+
+/// [`optimize_schedule`] with an explicit checkpoint strategy: every
+/// lowering in the flip search (and the baseline) carries `ckpt`, so an
+/// HfStyle backward plan is optimized *with* its recompute prefix priced
+/// in rather than having checkpointing bolted on afterwards.
+pub fn optimize_schedule_ckpt(
+    schedule: &Schedule,
+    pass: Pass,
+    cluster: &ClusterSpec,
+    cost: &AttnCost,
+    opts: &OptimizeOpts,
+    ckpt: Option<CkptStrategy>,
+) -> Optimized {
     let p = schedule.n_workers;
     let identity: Vec<usize> = (0..p).collect();
-    let base = Plan::from_schedule(schedule, pass);
+    let base = Plan::from_schedule_opts(
+        schedule,
+        pass,
+        &LowerOpts { ckpt, ..Default::default() },
+    );
     let mut sim = PlanSim::new(&base, cost);
     let default_s = sim.total_s(cluster, &identity, 1);
     let mut sim_calls = 1usize;
@@ -377,7 +412,7 @@ pub fn optimize_schedule(
                 Plan::from_schedule_opts(
                     schedule,
                     pass,
-                    &LowerOpts { flip_steps: flips.clone(), ..Default::default() },
+                    &LowerOpts { flip_steps: flips.clone(), ckpt, ..Default::default() },
                 );
             let mut cand_sim = PlanSim::new(&cand, cost);
             let s = cand_sim.total_s(cluster, &identity, 1);
@@ -417,6 +452,121 @@ pub fn optimize_schedule(
             .filter_map(|(t, &f)| if f { Some(t) } else { None })
             .collect(),
         moved_ranks,
+        sim_calls,
+    }
+}
+
+/// One strategy's audited outcome inside the joint checkpoint × prefetch
+/// search (`optimize_ckpt`).
+#[derive(Clone, Debug)]
+pub struct CkptArm {
+    pub strategy: CkptStrategy,
+    /// Depth knee under the strategy's remaining staging headroom.
+    pub prefetch_depth: usize,
+    /// Simulated backward makespan at that depth (recompute prefix
+    /// included for HfStyle).
+    pub total_s: f64,
+    /// Memory-timeline high-water mark: resident floor (+ checkpoint
+    /// bytes for RematAware) plus live staged payloads.
+    pub peak_bytes: f64,
+    /// Whether the peak fits in `GpuSpec::mem_bytes`.
+    pub fits: bool,
+}
+
+/// Result of the joint §3.2 × §3.3 search: both strategies priced with
+/// the event engine's memory timeline, the faster *feasible* one chosen.
+#[derive(Clone, Debug)]
+pub struct CkptOptimized {
+    /// The winning strategy's backward plan (recompute prefix included
+    /// under HfStyle), placement and depth applied.
+    pub plan: Plan,
+    pub choice: CkptStrategy,
+    /// Audit of both arms, `HfStyle` first.
+    pub arms: Vec<CkptArm>,
+    pub sim_calls: usize,
+}
+
+impl CkptOptimized {
+    pub fn arm(&self, s: CkptStrategy) -> &CkptArm {
+        self.arms.iter().find(|a| a.strategy == s).expect("both arms present")
+    }
+}
+
+/// Search checkpoint strategy *jointly* with prefetch depth for one
+/// backward pass. Both knobs spend the same per-GPU memory headroom the
+/// depth autotuner budgets via `stage_mem_frac`: RematAware's
+/// `ckpt_extra_bytes` (its `o`/`lse` floats, per layer, per worker) is
+/// reserved out of the staging budget before the depth sweep, while
+/// HfStyle keeps the full budget but pays the recompute prefix in time.
+/// Each arm's peak (resident floor + checkpoint bytes + staged payloads,
+/// from [`PlanSim::mem_timeline`]) is then priced against
+/// `GpuSpec::mem_bytes`; arms that do not fit are rejected, and the
+/// faster feasible arm wins (ties to RematAware, the paper's default).
+/// `resident_bytes` is the per-worker floor both strategies share
+/// (weights slice + layer-input activations).
+pub fn optimize_ckpt(
+    schedule: &Schedule,
+    cluster: &ClusterSpec,
+    cost: &AttnCost,
+    opts: &OptimizeOpts,
+    resident_bytes: f64,
+    ckpt_extra_bytes: f64,
+) -> CkptOptimized {
+    let mut sim_calls = 0usize;
+    let mut arms: Vec<CkptArm> = Vec::with_capacity(2);
+    let mut plans: Vec<Plan> = Vec::with_capacity(2);
+    for strategy in [CkptStrategy::HfStyle, CkptStrategy::RematAware] {
+        let lopts = LowerOpts { ckpt: Some(strategy), ..Default::default() };
+        let mut plan = Plan::from_schedule_opts(schedule, Pass::Backward, &lopts);
+        let mut sim = PlanSim::new(&plan, cost);
+        let mut place = plan.placement.clone();
+        if opts.placement {
+            let (pl, _s, calls) =
+                placement_pass(&plan, &mut sim, cluster, cost, opts, &place);
+            sim_calls += calls;
+            place = pl;
+        }
+        let reserve = match strategy {
+            CkptStrategy::HfStyle => 0.0,
+            CkptStrategy::RematAware => ckpt_extra_bytes,
+        };
+        let (depth, total_s, calls) =
+            autotune_depth_sim_reserved(&mut sim, cluster, &place, opts, reserve);
+        sim_calls += calls;
+        // re-run at the chosen depth so the memory sweep sees its timeline
+        sim.total_s(cluster, &place, depth);
+        sim_calls += 1;
+        let peak_bytes = sim.mem_timeline(resident_bytes + reserve).max_peak();
+        arms.push(CkptArm {
+            strategy,
+            prefetch_depth: depth,
+            total_s,
+            peak_bytes,
+            fits: peak_bytes <= cluster.gpu.mem_bytes,
+        });
+        plan.placement = place;
+        plan.prefetch_depth = depth;
+        plans.push(plan);
+    }
+    // faster feasible arm wins; with no feasible arm, the smaller peak.
+    // `<=` on the second (RematAware) arm sends ties to the paper's
+    // default.
+    let mut pick = 0usize;
+    for i in 1..arms.len() {
+        let better = match (arms[i].fits, arms[pick].fits) {
+            (true, false) => true,
+            (false, true) => false,
+            (true, true) => arms[i].total_s <= arms[pick].total_s,
+            (false, false) => arms[i].peak_bytes <= arms[pick].peak_bytes,
+        };
+        if better {
+            pick = i;
+        }
+    }
+    CkptOptimized {
+        plan: plans.swap_remove(pick),
+        choice: arms[pick].strategy,
+        arms,
         sim_calls,
     }
 }

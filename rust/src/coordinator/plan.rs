@@ -43,6 +43,7 @@
 
 use std::sync::Arc;
 
+use super::checkpoint::CkptStrategy;
 use super::comm::Tag;
 use super::schedule::{ComputeOp, Schedule, VarlenSpec};
 use crate::simulator::AttnCost;
@@ -307,6 +308,18 @@ pub struct LowerOpts {
     /// they deliberately violate the compute-once invariant and must not
     /// be validated or executed.
     pub dense_duals: bool,
+    /// Gradient-checkpointing strategy the backward plan is lowered for
+    /// (paper §3.3). `Some(HfStyle)` prepends the *recompute subgraph* to
+    /// backward plans: a verbatim replay of the forward lowering (its
+    /// computes and kv/q/result transfers) on steps `0..T`, with the
+    /// backward body shifted to `T..2T+1`, so rebuilding `o`/`lse` from
+    /// the layer-boundary checkpoint is priced and executed in the IR.
+    /// `Some(RematAware)` and `None` leave the DAG unchanged — `o`/`lse`
+    /// are already checkpointed at the FlashAttention output; the memory
+    /// engine charges their `extra_saved_floats` bytes instead. Ignored
+    /// for forward plans and in `dense_duals` search mode (the
+    /// rebalancer's role arithmetic assumes a prefix-free DAG).
+    pub ckpt: Option<CkptStrategy>,
 }
 
 impl LowerOpts {
@@ -370,6 +383,15 @@ pub struct Plan {
     /// step boundary). Lowering defaults to 1 (the paper's §3.2 pipeline);
     /// the plan optimizer overwrites it with the autotuned knee.
     pub prefetch_depth: usize,
+    /// Number of leading ops forming the HfStyle *recompute subgraph*
+    /// (`ops[..recompute_ops]`): a replay of the forward lowering that a
+    /// backward pass must run first to rebuild `o`/`lse` from a
+    /// layer-boundary checkpoint. `0` (the default, and always for
+    /// forward plans) means no recompute — the plan body starts at op 0.
+    /// `validate` checks the prefix and the body each cover the causal
+    /// pair set exactly once; executors run the prefix with forward
+    /// semantics before the backward body.
+    pub recompute_ops: usize,
 }
 
 impl Plan {
@@ -385,6 +407,7 @@ impl Plan {
             placement: (0..n_workers).collect(),
             varlen: None,
             prefetch_depth: 1,
+            recompute_ops: 0,
         }
     }
 
@@ -415,18 +438,32 @@ impl Plan {
     pub fn from_schedule_opts(schedule: &Schedule, pass: Pass, lopts: &LowerOpts) -> Plan {
         let p = schedule.n_workers;
         let t_steps = schedule.n_steps();
+        let vl: Option<&VarlenSpec> = lopts.varlen.as_deref();
+        let dense = lopts.dense_duals;
+        // HfStyle checkpoints only the layer input, so the backward plan
+        // must first replay the whole attention forward (steps 0..T) to
+        // rebuild o/lse before the backward body (steps T..2T+1) can run.
+        // Dense search plans stay prefix-free: the rebalancer's role
+        // classification keys on step distances of the original body.
+        let recompute = pass == Pass::Backward
+            && !dense
+            && lopts.ckpt == Some(CkptStrategy::HfStyle);
+        let off = if recompute { t_steps } else { 0 };
         let n_steps = match pass {
             Pass::Forward => t_steps,
             // +1: the trailing kv-grad accumulation step
-            Pass::Backward => t_steps + 1,
+            Pass::Backward => off + t_steps + 1,
         };
-        let vl: Option<&VarlenSpec> = lopts.varlen.as_deref();
-        let dense = lopts.dense_duals;
         let suffix = match (vl.is_some(), dense) {
             (true, true) => "-varlen-dense",
             (true, false) => "-varlen",
             (false, true) => "-dense",
             (false, false) => "",
+        };
+        let suffix = if recompute {
+            format!("{suffix}-ckpt-hf")
+        } else {
+            suffix.to_string()
         };
         // token-exact scales; the reference (equal-chunk) lowering is the
         // special case where every scale collapses to 1 (or 0.5 diag)
@@ -447,9 +484,30 @@ impl Plan {
             pass,
         );
         plan.varlen = lopts.varlen.clone();
+        // HfStyle recompute subgraph: a verbatim copy of the forward
+        // lowering's op list on steps 0..T. Copying (rather than
+        // re-emitting) guarantees the replay runs the identical kernel
+        // sequence in the identical order as the real forward pass, so
+        // the recomputed o/lse are bit-identical to the checkpointed ones
+        // on a deterministic backend. Per-worker last prefix compute ids
+        // gate the backward q bundles, which carry the rebuilt o/lse.
+        let mut prefix_last_compute: Vec<Option<OpId>> = vec![None; p];
+        if recompute {
+            let fwd_opts = LowerOpts { ckpt: None, ..lopts.clone() };
+            let fwd = Plan::from_schedule_opts(schedule, Pass::Forward, &fwd_opts);
+            for n in &fwd.ops {
+                if matches!(n.op, PlanOp::Compute { .. }) {
+                    prefix_last_compute[n.worker] = Some(n.id);
+                }
+                plan.ops.push(n.clone());
+            }
+            plan.recompute_ops = plan.ops.len();
+        }
         // kv-grad transfers awaiting each lender's trailing Accum
         let mut kvgrad_in: Vec<Vec<OpId>> = vec![Vec::new(); p];
         for (t, row) in schedule.steps.iter().enumerate() {
+            // plan step: schedule steps shift past the recompute prefix
+            let bt = off + t;
             let step_flip = lopts.flip(t);
             let flip_of = |helper: usize| step_flip || lopts.flip_pair(t, helper, p);
             let mut kv_xfer: Vec<Option<OpId>> = vec![None; p]; // by dst
@@ -462,7 +520,7 @@ impl Plan {
                     if live(dst, w) {
                         let id = plan.push(
                             dst,
-                            t,
+                            bt,
                             PlanOp::Xfer { src: w, dst, payload: Payload::kv(tscale(w)) },
                             vec![],
                         );
@@ -477,7 +535,7 @@ impl Plan {
                     if (dense || flip_of(w)) && live(owner, w) {
                         let id = plan.push(
                             owner,
-                            t,
+                            bt,
                             PlanOp::Xfer { src: w, dst: owner, payload: Payload::kv(tscale(w)) },
                             vec![],
                         );
@@ -487,11 +545,14 @@ impl Plan {
                 // unflipped helper pairs: the owner ships its q bundle
                 if let Some(dst) = sp.send_q_to {
                     if (dense || !flip_of(dst)) && live(w, dst) {
+                        // under HfStyle recompute the backward bundle's
+                        // o/lse only exist once the sender's replay is done
+                        let deps: Vec<OpId> = prefix_last_compute[w].into_iter().collect();
                         let id = plan.push(
                             dst,
-                            t,
+                            bt,
                             PlanOp::Xfer { src: w, dst, payload: Payload::q_bundle(tscale(w)) },
-                            vec![],
+                            deps,
                         );
                         q_xfer[dst] = Some(id);
                     }
@@ -502,7 +563,7 @@ impl Plan {
                     Some(ComputeOp::Diag) => {
                         plan.push(
                             w,
-                            t,
+                            bt,
                             PlanOp::Compute {
                                 kernel: Kernel::attn(w, w, pscale(w, w)),
                                 pair: Some((w, w)),
@@ -517,7 +578,7 @@ impl Plan {
                         let kv = kv_xfer[w].expect("validated schedule: kv send matches Own");
                         let id = plan.push(
                             w,
-                            t,
+                            bt,
                             PlanOp::Compute {
                                 kernel: Kernel::attn(w, kv_from, pscale(w, kv_from)),
                                 pair: Some((w, kv_from)),
@@ -527,7 +588,7 @@ impl Plan {
                         if pass == Pass::Backward {
                             let g = plan.push(
                                 w,
-                                t,
+                                bt,
                                 PlanOp::Xfer {
                                     src: w,
                                     dst: kv_from,
@@ -549,7 +610,7 @@ impl Plan {
                             let q = q_xfer[w].expect("validated schedule: q send matches Help");
                             let id = plan.push(
                                 w,
-                                t,
+                                bt,
                                 PlanOp::Compute {
                                     kernel: Kernel::attn(owner, w, pscale(owner, w)),
                                     pair: Some((owner, w)),
@@ -561,7 +622,7 @@ impl Plan {
                             // and finished the kernel
                             let rid = plan.push(
                                 w,
-                                t,
+                                bt,
                                 PlanOp::Xfer {
                                     src: w,
                                     dst: owner,
@@ -577,7 +638,7 @@ impl Plan {
                             let kv = flip_kv[w].expect("flip emitted a kv fetch for every Help");
                             let id = plan.push(
                                 owner,
-                                t,
+                                bt,
                                 PlanOp::Compute {
                                     kernel: Kernel::attn(owner, w, pscale(owner, w)),
                                     pair: Some((owner, w)),
@@ -587,7 +648,7 @@ impl Plan {
                             if pass == Pass::Backward {
                                 let g = plan.push(
                                     owner,
-                                    t,
+                                    bt,
                                     PlanOp::Xfer {
                                         src: owner,
                                         dst: w,
@@ -614,7 +675,7 @@ impl Plan {
                         }
                         plan.push(
                             w,
-                            t,
+                            bt,
                             PlanOp::Compute { kernel: Kernel::rescale(tscale(w)), pair: None },
                             deps,
                         );
@@ -627,7 +688,7 @@ impl Plan {
                 if !deps.is_empty() {
                     plan.push(
                         w,
-                        t_steps,
+                        off + t_steps,
                         PlanOp::Compute { kernel: Kernel::Accum, pair: None },
                         deps,
                     );
@@ -827,16 +888,38 @@ impl Plan {
                 return Err(format!("duplicate wire tag {tag:?} on {src}->{dst}"));
             }
         }
+        if self.recompute_ops > self.ops.len() {
+            return Err(format!(
+                "recompute_ops {} exceeds op count {}",
+                self.recompute_ops,
+                self.ops.len()
+            ));
+        }
+        if self.recompute_ops > 0 && self.pass != Pass::Backward {
+            return Err("recompute prefix on a non-backward plan".into());
+        }
         if self.causal {
+            // separate pair maps for the recompute prefix and the plan
+            // body: under HfStyle checkpointing the backward plan replays
+            // the whole forward, so the prefix must itself cover the
+            // causal set exactly once, independently of the body
             let mut count = vec![vec![0usize; p]; p];
-            for ((q, kv), (t, w)) in self.computed_pairs() {
-                if q >= p || kv >= p {
-                    return Err(format!("pair ({q},{kv}) out of range at t={t} w={w}"));
+            let mut rcount = vec![vec![0usize; p]; p];
+            for n in &self.ops {
+                if let PlanOp::Compute { pair: Some((q, kv)), .. } = n.op {
+                    let (t, w) = (n.step, n.worker);
+                    if q >= p || kv >= p {
+                        return Err(format!("pair ({q},{kv}) out of range at t={t} w={w}"));
+                    }
+                    if kv > q {
+                        return Err(format!("non-causal pair ({q},{kv}) at t={t} w={w}"));
+                    }
+                    if n.id < self.recompute_ops {
+                        rcount[q][kv] += 1;
+                    } else {
+                        count[q][kv] += 1;
+                    }
                 }
-                if kv > q {
-                    return Err(format!("non-causal pair ({q},{kv}) at t={t} w={w}"));
-                }
-                count[q][kv] += 1;
             }
             for q in 0..p {
                 for kv in 0..=q {
@@ -852,6 +935,22 @@ impl Plan {
                         0 if !required => {}
                         0 => return Err(format!("pair ({q},{kv}) never computed")),
                         n => return Err(format!("pair ({q},{kv}) computed {n} times")),
+                    }
+                    if self.recompute_ops > 0 {
+                        match rcount[q][kv] {
+                            1 => {}
+                            0 if !required => {}
+                            0 => {
+                                return Err(format!(
+                                    "pair ({q},{kv}) missing from recompute prefix"
+                                ))
+                            }
+                            n => {
+                                return Err(format!(
+                                    "pair ({q},{kv}) recomputed {n} times in prefix"
+                                ))
+                            }
+                        }
                     }
                 }
             }
@@ -1028,6 +1127,49 @@ mod tests {
             .count();
         assert_eq!(grads, owns, "one (dk,dv) return per owner-path compute");
         assert!(bwd.n_steps == fwd.n_steps + 1);
+    }
+
+    #[test]
+    fn hf_ckpt_backward_lowers_with_recompute_prefix() {
+        for p in [1usize, 2, 5, 8] {
+            for kind in [ScheduleKind::Ring, ScheduleKind::Balanced] {
+                let s = Schedule::build(kind, p);
+                let lopts =
+                    LowerOpts { ckpt: Some(CkptStrategy::HfStyle), ..Default::default() };
+                let bwd = Plan::from_schedule_opts(&s, Pass::Backward, &lopts);
+                bwd.validate_lowered()
+                    .unwrap_or_else(|e| panic!("{kind:?} P={p}: {e}"));
+                let fwd = Plan::from_schedule(&s, Pass::Forward);
+                // the prefix is a verbatim copy of the forward lowering
+                assert_eq!(bwd.recompute_ops, fwd.n_ops(), "{kind:?} P={p}");
+                assert_eq!(&bwd.ops[..bwd.recompute_ops], &fwd.ops[..]);
+                // the body is the plain backward shifted past the prefix
+                let plain = Plan::from_schedule(&s, Pass::Backward);
+                assert_eq!(bwd.n_ops() - bwd.recompute_ops, plain.n_ops());
+                for (b, o) in bwd.ops[bwd.recompute_ops..].iter().zip(&plain.ops) {
+                    assert_eq!(b.step, o.step + fwd.n_steps);
+                    assert_eq!(b.worker, o.worker);
+                    assert_eq!(b.op, o.op);
+                }
+                assert_eq!(bwd.n_steps, fwd.n_steps + plain.n_steps);
+                assert!(bwd.name.ends_with("-ckpt-hf"), "{}", bwd.name);
+            }
+        }
+    }
+
+    #[test]
+    fn remat_aware_lowering_is_unchanged() {
+        let s = Schedule::balanced(8);
+        let lopts = LowerOpts { ckpt: Some(CkptStrategy::RematAware), ..Default::default() };
+        let bwd = Plan::from_schedule_opts(&s, Pass::Backward, &lopts);
+        assert_eq!(bwd.recompute_ops, 0);
+        assert_eq!(bwd, Plan::from_schedule(&s, Pass::Backward));
+        // forward lowering never grows a prefix, whatever the strategy
+        let fwd = Plan::from_schedule_opts(&s, Pass::Forward, &LowerOpts {
+            ckpt: Some(CkptStrategy::HfStyle),
+            ..Default::default()
+        });
+        assert_eq!(fwd, Plan::from_schedule(&s, Pass::Forward));
     }
 
     #[test]

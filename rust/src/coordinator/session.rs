@@ -49,9 +49,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::checkpoint::CkptStrategy;
 use super::comm::build_network_placed;
 use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
-use super::optimize::{optimize_plan, optimize_schedule, optimize_varlen, OptimizeOpts};
+use super::optimize::{optimize_plan, optimize_schedule_ckpt, optimize_varlen, OptimizeOpts};
 use super::plan::{LowerOpts, Pass, Plan};
 use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
 use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
@@ -169,6 +170,12 @@ pub struct RunSpec {
     pub trace: bool,
     /// Model the pre-zero-copy send path (executor bench baseline arm).
     pub deep_copy_sends: bool,
+    /// Gradient-checkpointing strategy lowered into the backward plan.
+    /// [`CkptStrategy::RematAware`] (the default) keeps the lowering
+    /// unchanged and instead saves the per-layer `(o, lse)` pair;
+    /// [`CkptStrategy::HfStyle`] prepends the attention forward's op
+    /// stream as a recompute prefix to the backward plan.
+    pub ckpt: CkptStrategy,
     /// Seed for synthesized inputs (`execute()` without tensors).
     pub seed: u64,
 }
@@ -193,6 +200,7 @@ impl RunSpec {
             backward: true,
             trace: false,
             deep_copy_sends: false,
+            ckpt: CkptStrategy::RematAware,
             seed: 0,
         }
     }
@@ -273,6 +281,16 @@ impl RunSpec {
             bail!(
                 "OptimizePolicy::Schedule ignores the declared varlen layout; use \
                  OptimizePolicy::Varlen for document-packed runs"
+            );
+        }
+        // the varlen rebalancer re-lowers prefix-free candidate plans, so an
+        // HfStyle recompute prefix would be silently dropped on acceptance
+        if matches!(self.optimize, OptimizePolicy::Varlen(_)) && self.ckpt == CkptStrategy::HfStyle
+        {
+            bail!(
+                "OptimizePolicy::Varlen rebalances prefix-free plans and would drop the \
+                 HfStyle recompute lowering; use CkptStrategy::RematAware with the varlen \
+                 pipeline (or OptimizePolicy::Schedule for HfStyle runs)"
             );
         }
         Ok(())
@@ -556,8 +574,12 @@ impl Session {
             .validate()
             .map_err(|e| anyhow!("invalid schedule: {e}"))?;
         let lopts = match &self.spec.varlen {
-            Some(v) => LowerOpts { varlen: Some(Arc::new(v.clone())), ..Default::default() },
-            None => LowerOpts::default(),
+            Some(v) => LowerOpts {
+                varlen: Some(Arc::new(v.clone())),
+                ckpt: Some(self.spec.ckpt),
+                ..Default::default()
+            },
+            None => LowerOpts { ckpt: Some(self.spec.ckpt), ..Default::default() },
         };
         let mut fwd = Plan::from_schedule_opts(&schedule, Pass::Forward, &lopts);
         fwd.validate_lowered()
@@ -660,7 +682,8 @@ impl Session {
         opts: &OptimizeOpts,
     ) -> Result<()> {
         let cost = self.cost_for(pass);
-        let o = optimize_schedule(schedule, pass, &self.spec.cluster, &cost, opts);
+        let o =
+            optimize_schedule_ckpt(schedule, pass, &self.spec.cluster, &cost, opts, Some(self.spec.ckpt));
         self.sim_calls += o.sim_calls;
         o.plan
             .validate_lowered()
@@ -722,6 +745,12 @@ impl Session {
     /// depth), and accept or reject the `(fwd, bwd)` pair *jointly* so the
     /// two passes always share one chunking.
     fn optimize_varlen_stage(&mut self, schedule: &Schedule, opts: &OptimizeOpts) -> Result<()> {
+        if self.spec.ckpt == CkptStrategy::HfStyle {
+            bail!(
+                "varlen rebalancing re-lowers prefix-free candidate plans and would drop \
+                 the HfStyle recompute lowering; run with CkptStrategy::RematAware"
+            );
+        }
         let (cur_fwd, cur_bwd) = self.plans.as_ref().expect("plan() ran").clone();
         // continue from wherever the current plans' boundaries are
         let spec0: VarlenSpec = cur_fwd
@@ -1398,11 +1427,13 @@ impl RunSpec {
             Some(d) => d.to_string(),
         };
         let seed = u64_to_json(self.seed);
+        let ckpt = self.ckpt.name();
         format!(
             "{{\n  \"workload\": {workload},\n  \"n_workers\": {},\n  \"schedule\": \"{schedule}\",\n  \
              \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
              \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
-             \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \"seed\": {seed}\n}}\n",
+             \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \
+             \"ckpt\": \"{ckpt}\",\n  \"seed\": {seed}\n}}\n",
             self.n_workers,
             self.layers,
             self.backward,
@@ -1530,6 +1561,13 @@ impl RunSpec {
                     .ok_or_else(|| anyhow!("prefetch_depth must be an integer or null"))?,
             ),
         };
+        let ckpt = match j.get("ckpt") {
+            None | Some(Json::Null) => CkptStrategy::RematAware,
+            Some(Json::Str(s)) => s
+                .parse::<CkptStrategy>()
+                .map_err(|e| anyhow!("ckpt: {e}"))?,
+            Some(_) => bail!("ckpt must be a string checkpoint-strategy name or null"),
+        };
         Ok(RunSpec {
             workload,
             n_workers: opt_usize(&j, "n_workers", "", 0)?,
@@ -1543,6 +1581,7 @@ impl RunSpec {
             backward: opt_bool(&j, "backward", "", true)?,
             trace: opt_bool(&j, "trace", "", false)?,
             deep_copy_sends: opt_bool(&j, "deep_copy_sends", "", false)?,
+            ckpt,
             seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(0),
         })
     }

@@ -21,10 +21,12 @@
 //!            [--varlen [--docs N] [--zipf A] [--pack-seed N]]
 //!            token-level rebalancing of a Zipf-packed document batch
 //!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
-//!            [--skip-exec]                  optimizer + varlen grids and the
-//!                                           executor transport micro-bench;
+//!            [--ckpt-out FILE] [--skip-exec] optimizer + varlen grids, the
+//!                                           executor transport micro-bench, and
+//!                                           the checkpoint-strategy trade-off;
 //!                                           --json writes BENCH_optimizer.json,
-//!                                           BENCH_varlen.json, BENCH_executor.json
+//!                                           BENCH_varlen.json, BENCH_executor.json,
+//!                                           BENCH_ckpt.json
 //!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
 //!            [--schedule S] [--depth N] [--seed N] [--layers L]
 //!                                           run the real executor (host kernels)
@@ -160,6 +162,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
         "exec" => paper::executed_schedules(),
         "opt" => paper::optimized_schedules(),
         "varlen" => paper::varlen_schedules(),
+        "ckpt" => paper::ckpt_tradeoff(),
         _ => [
             paper::table1(),
             paper::table2(),
@@ -170,6 +173,7 @@ fn cmd_tables(args: &Args) -> anyhow::Result<()> {
             paper::optimized_schedules(),
             paper::varlen_schedules(),
             paper::table5(),
+            paper::ckpt_tradeoff(),
             paper::table6(),
         ]
         .join("\n"),
@@ -290,7 +294,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ckpt: args
             .get("ckpt", "remat")
             .parse::<CkptStrategy>()
-            .unwrap_or(CkptStrategy::RematAware),
+            .map_err(|e| anyhow::anyhow!("--ckpt: {e}"))?,
         steps: args.usize("steps", 30),
         adam: AdamConfig { lr: args.f32("lr", 3e-3), ..Default::default() },
         seed,
@@ -705,12 +709,34 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             write_bench_json(&args.get("exec-out", "BENCH_executor.json"), "executor", &jrows)?;
             println!("{}", paper::executor_bench_table(&erows));
         }
+
+        // checkpoint strategy micro-bench -> BENCH_ckpt.json
+        let crows = paper::ckpt_tradeoff_rows();
+        let jrows: Vec<String> = crows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"strategy\": \"{}\", \"chosen\": {}, \"prefetch_depth\": {}, \
+                     \"sim_bwd_s\": {:.9}, \"peak_bytes\": {:.1}, \"fits\": {}, \
+                     \"exec_wall_s\": {:.9}}}",
+                    json_escape(r.strategy),
+                    r.chosen,
+                    r.prefetch_depth,
+                    r.sim_bwd_s,
+                    r.peak_bytes,
+                    r.fits,
+                    r.exec_wall_s,
+                )
+            })
+            .collect();
+        write_bench_json(&args.get("ckpt-out", "BENCH_ckpt.json"), "ckpt", &jrows)?;
     } else {
         println!("{}", paper::optimized_schedules());
         println!("{}", paper::varlen_schedules());
         if args.get("skip-exec", "false") != "true" {
             println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
         }
+        println!("{}", paper::ckpt_tradeoff());
     }
     Ok(())
 }

@@ -37,6 +37,8 @@ pub fn fmt_bytes(b: f64) -> String {
         format!("{:.1}GB", b / 1e9)
     } else if b >= 1e6 {
         format!("{:.1}MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1}KB", b / 1e3)
     } else {
         format!("{:.0}B", b)
     }
@@ -70,5 +72,10 @@ mod tests {
         assert_eq!(fmt_seq(64 * 1024), "64K");
         assert_eq!(fmt_seq(1000), "1000");
         assert_eq!(fmt_bytes(31.5e9), "31.5GB");
+        assert_eq!(fmt_bytes(2.5e6), "2.5MB");
+        // the [1e3, 1e6) band used to fall through to raw byte counts
+        assert_eq!(fmt_bytes(500_000.0), "500.0KB");
+        assert_eq!(fmt_bytes(1_000.0), "1.0KB");
+        assert_eq!(fmt_bytes(999.0), "999B");
     }
 }

@@ -105,6 +105,35 @@ fn cluster_fingerprint(c: &ClusterSpec) -> [f64; 5] {
     [c.intra_bw, c.intra_lat, c.inter_bw, c.inter_lat, c.gpus_per_node as f64]
 }
 
+/// Per-worker memory timeline of one simulated pass: a constant resident
+/// floor (weights slice, activations, checkpointed floats — including the
+/// strategy's `extra_saved_floats`) plus every inbound transfer payload,
+/// alive from the moment its bytes start arriving until its last consumer
+/// finishes. This is what prices a plan against `GpuSpec::mem_bytes`: the
+/// §3.2 prefetch pipeline and §3.3 checkpoint placement spend the same
+/// headroom, so the optimizer trades them jointly.
+#[derive(Clone, Debug)]
+pub struct MemTimeline {
+    /// The caller-supplied per-worker resident floor the sweep started at.
+    pub resident_bytes: f64,
+    /// Peak resident bytes per worker (floor + live staged payloads).
+    pub peak_bytes: Vec<f64>,
+}
+
+impl MemTimeline {
+    /// The plan's memory high-water mark: max per-worker peak.
+    pub fn max_peak(&self) -> f64 {
+        self.peak_bytes.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Peak *staged* bytes on one worker — the dynamic component above
+    /// the resident floor (kv chunks, q bundles, helper results, grad
+    /// returns held between arrival and consumption).
+    pub fn staged_peak(&self, w: usize) -> f64 {
+        self.peak_bytes[w] - self.resident_bytes
+    }
+}
+
 /// Pre-resolved simulation state for one `(Plan, AttnCost)` pair — the
 /// plan optimizer's hot path. Kernel seconds and payload bytes are
 /// resolved once into flat per-op arrays; dependency lists are flattened
@@ -470,6 +499,66 @@ impl PlanSim {
             n_workers: self.n_workers,
         }
     }
+
+    /// Per-worker memory timeline of the most recent pass (alloc/free
+    /// sweep over the `op_start`/`op_finish` scratch — call after
+    /// [`PlanSim::total_s`] / [`PlanSim::run`]). Every inbound transfer
+    /// payload is allocated on its destination worker when the transfer
+    /// starts (prefetched bytes are resident from first arrival) and
+    /// freed when its last consuming op finishes; `resident_bytes` is the
+    /// constant per-worker floor (weights slice, activations, checkpoint
+    /// floats) the sweep adds staging on top of.
+    pub fn mem_timeline(&self, resident_bytes: f64) -> MemTimeline {
+        assert!(
+            self.have_ck,
+            "mem_timeline needs a completed pass (call total_s/run first)"
+        );
+        let p = self.n_workers;
+        let n = self.worker.len();
+        // free time per transfer: the last consumer's finish — never
+        // before the transfer itself lands (skipped-for-timing prefetch
+        // edges still consume the staged bytes)
+        let mut free_at: Vec<f64> = self.op_finish[..n].to_vec();
+        for i in 0..n {
+            let lo = self.dep_off[i] as usize;
+            let hi = self.dep_off[i + 1] as usize;
+            for j in lo..hi {
+                let d = self.dep_idx[j] as usize;
+                if self.src[d] != u32::MAX && self.op_finish[i] > free_at[d] {
+                    free_at[d] = self.op_finish[i];
+                }
+            }
+        }
+        let mut events: Vec<(u32, f64, f64)> = Vec::new(); // (worker, time, delta)
+        for i in 0..n {
+            if self.src[i] == u32::MAX || self.val[i] <= 0.0 {
+                continue;
+            }
+            events.push((self.dst[i], self.op_start[i], self.val[i]));
+            events.push((self.dst[i], free_at[i], -self.val[i]));
+        }
+        // per worker, in time order; frees drain before same-instant
+        // allocations (a barrier hand-off is not double-resident)
+        events.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.total_cmp(&b.2))
+        });
+        let mut peak = vec![resident_bytes; p];
+        let mut cur = resident_bytes;
+        let mut cur_w = u32::MAX;
+        for &(w, _, delta) in &events {
+            if w != cur_w {
+                cur = resident_bytes;
+                cur_w = w;
+            }
+            cur += delta;
+            if cur > peak[w as usize] {
+                peak[w as usize] = cur;
+            }
+        }
+        MemTimeline { resident_bytes, peak_bytes: peak }
+    }
 }
 
 /// Simulate a plan on a cluster. `cost` resolves the kernel/payload cost
@@ -585,6 +674,23 @@ mod tests {
         let cc = AttnCost { kv_bytes: 1e9, pair_full_s: 1e-6, pair_diag_s: 1e-6, ..cost(true) };
         let r2 = simulate_plan(&plan, &cluster, &cc, &EventOpts::default());
         assert!(r2.total_s > (p - 1) as f64 * (1e9 / cluster.intra_bw));
+    }
+
+    #[test]
+    fn mem_timeline_counts_staged_payloads() {
+        let cluster = ClusterSpec::dgx_1x8();
+        let s = Schedule::balanced(8);
+        let plan = Plan::from_schedule(&s, Pass::Forward);
+        let c = cost(true);
+        let mut sim = PlanSim::new(&plan, &c);
+        sim.total_s(&cluster, &plan.placement, 1);
+        let tl = sim.mem_timeline(1e9);
+        assert_eq!(tl.peak_bytes.len(), 8);
+        // every worker starts from the resident floor, and at least one
+        // worker stages a full kv chunk on top of it
+        assert!(tl.peak_bytes.iter().all(|&b| b >= 1e9));
+        assert!(tl.max_peak() >= 1e9 + c.kv_bytes);
+        assert!(tl.staged_peak(7) >= 0.0);
     }
 
     #[test]

@@ -22,4 +22,4 @@ pub mod engine;
 pub mod event;
 
 pub use engine::{simulate_attention, AttnCost, SimResult, SlotTrace};
-pub use event::{simulate_plan, EventOpts, EventResult, PlanSim};
+pub use event::{simulate_plan, EventOpts, EventResult, MemTimeline, PlanSim};

@@ -17,13 +17,18 @@
 //! tracing (`RunSpec::trace` — every `attn_call` records spans against a
 //! shared epoch, merged into [`TrainReport::layer_traces`]).
 //!
-//! Checkpointing strategies (paper §3.3) are implemented exactly as the
-//! data-flow dictates:
-//! * `HfStyle`   — store layer input x; backward re-runs part1 AND the
-//!   distributed attention forward (with all its communication).
+//! Checkpointing strategies (paper §3.3) are lowered into the plan IR:
+//! [`TrainConfig::ckpt`] is routed into `RunSpec::ckpt`, so the same
+//! `Session` lowering every other entry point uses decides what backward
+//! replays:
+//! * `HfStyle`   — store layer input x; the backward plan carries a
+//!   recompute prefix (`Plan::recompute_ops`) and the worker replays the
+//!   distributed attention forward — same kernels, same wire traffic —
+//!   before part2's backward consumes the rebuilt (o, lse).
 //! * `RematAware` — additionally store (o, lse) at the FlashAttention
-//!   output; backward re-runs only part1. No attention forward, no
-//!   forward communication. Numerically identical (asserted in tests).
+//!   output; the backward plan is prefix-free and re-runs only part1. No
+//!   attention forward, no forward communication. Numerically identical
+//!   (asserted in tests).
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -242,7 +247,9 @@ impl Worker {
         pass: Pass,
         f: impl FnOnce(&mut AttnCtx, &PlanIndex) -> Result<Vec<Tensor>>,
     ) -> Result<Vec<Tensor>> {
-        let (plan, idx) = if matches!(pass, Pass::Bwd) {
+        // recompute walks the *backward* plan's prefix — the replayed
+        // forward lives in the bwd lowering under HF-style checkpointing
+        let (plan, idx) = if matches!(pass, Pass::Bwd | Pass::Recompute) {
             (self.bwd_plan.clone(), &self.bwd_idx)
         } else {
             (self.fwd_plan.clone(), &self.fwd_idx)
@@ -388,12 +395,13 @@ impl Worker {
                 ],
             )?;
             let (q, k, vv) = (qkv[0].clone(), qkv[1].clone(), qkv[2].clone());
-            // attention output: saved (ours) or recomputed with full comm (HF)
+            // attention output: saved (ours) or rebuilt by replaying the
+            // backward plan's recompute prefix with full comm (HF)
             let (o, lse) = match &ck.attn {
                 Some((o, lse)) => (o.clone(), lse.clone()),
                 None => {
                     let out = self.attn_call(step, l, Pass::Recompute, |ctx, idx| {
-                        let (o, lse) = ctx.forward_indexed(idx, &q, &k, &vv)?;
+                        let (o, lse) = ctx.recompute_indexed(idx, &q, &k, &vv)?;
                         Ok(vec![o, lse])
                     })?;
                     (out[0].clone(), out[1].clone())
@@ -421,9 +429,11 @@ impl Worker {
             grads[self.layout.layer(l, Self::W1)].add_assign(&p2[4]);
             grads[self.layout.layer(l, Self::W3)].add_assign(&p2[5]);
             grads[self.layout.layer(l, Self::W2)].add_assign(&p2[6]);
-            // distributed attention backward (no fwd recompute — §3.3)
+            // distributed attention backward body (the recompute prefix,
+            // when the plan has one, already ran above — §3.3)
             let attn_grads = self.attn_call(step, l, Pass::Bwd, |ctx, idx| {
-                let (dq, dk, dv) = ctx.backward_indexed(idx, &q, &k, &vv, &o, &lse, &d_o)?;
+                let (dq, dk, dv) =
+                    ctx.backward_body_indexed(idx, &q, &k, &vv, &o, &lse, &d_o)?;
                 Ok(vec![dq, dk, dv])
             })?;
             // part1 backward
@@ -499,6 +509,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // every worker executes; fill the workload from the manifest we already
     // probed so Session::new does not load the runtime a second time
     let mut run_spec = cfg.run.clone();
+    // the checkpoint strategy is part of the lowering now: route it into
+    // the spec so the backward plan carries (or omits) the recompute prefix
+    run_spec.ckpt = cfg.ckpt;
     if run_spec.workload.is_none() {
         run_spec.workload =
             Some(Workload::new(mc.n_heads, mc.n_kv_heads, mc.head_dim, mc.chunk_len));
@@ -687,7 +700,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 .filter(|r| r.layer == layer && r.pass == pass)
                 .map(|r| r.trace.clone())
                 .collect();
-            let n_ops = if pass == "bwd" { bwd_plan.n_ops() } else { fwd_plan.n_ops() };
+            // recompute spans carry *backward-plan* op ids (the prefix
+            // lives in the bwd lowering), so only "fwd" merges against the
+            // forward plan
+            let n_ops = if pass == "fwd" { fwd_plan.n_ops() } else { bwd_plan.n_ops() };
             report.layer_traces.push(LayerTrace {
                 layer,
                 pass,

@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::{
-    BackendSpec, OptimizeOpts, OptimizePolicy, RunSpec, ScheduleKind, Session, VarlenSpec,
-    Workload,
+    BackendSpec, CkptStrategy, OptimizeOpts, OptimizePolicy, RunSpec, ScheduleKind, Session,
+    VarlenSpec, Workload,
 };
 
 fn roundtrip(spec: &RunSpec) -> RunSpec {
@@ -56,7 +56,8 @@ fn every_field_shape_roundtrips_exactly() {
     spec.backend = BackendSpec::Null;
     spec.varlen = None;
     spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
-    assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy");
+    spec.ckpt = CkptStrategy::HfStyle;
+    assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy + hf ckpt");
 
     // seeds above 2^53 cannot ride a JSON f64 — they serialize as decimal
     // strings and still round-trip exactly
@@ -135,6 +136,34 @@ fn malformed_specs_are_rejected_with_context() {
             "n_workers": 4, "optimize": {"schedule": {"swap_rounds": "20"}}}"#,
     )
     .is_err());
+    // ckpt must be a known strategy name (case-insensitive) or null —
+    // wrong types and unknown spellings are errors, never silent defaults
+    let err = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "ckpt": 3}"#,
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("ckpt"), "{err}");
+    let err = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "ckpt": "bogus"}"#,
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("remat-aware"), "must list spellings: {err}");
+    // accepted spellings parse case-insensitively; omission = remat-aware
+    for (text, want) in [
+        (r#""HF-Style""#, CkptStrategy::HfStyle),
+        (r#""ours""#, CkptStrategy::RematAware),
+        ("null", CkptStrategy::RematAware),
+    ] {
+        let spec = RunSpec::from_json(&format!(
+            r#"{{"workload": {{"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16}},
+                "n_workers": 4, "ckpt": {text}}}"#,
+        ))
+        .unwrap();
+        assert_eq!(spec.ckpt, want, "{text}");
+    }
+
     // a parseable spec can still fail validation (varlen/worker mismatch)
     let spec = RunSpec::from_json(
         r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
