@@ -15,15 +15,17 @@ bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
 # machine-readable optimizer + varlen-rebalancer + executor-transport +
-# checkpoint-strategy results -> BENCH_optimizer.json + BENCH_varlen.json +
-# BENCH_executor.json + BENCH_ckpt.json, tracked across PRs (CI runs this
-# and uploads all four as workflow artifacts). The executor rows run the
-# real threaded executor with null kernels (clone-vs-Arc send path A/B);
-# pass `--skip-exec` to repro bench to omit them. The ckpt rows run the
-# joint checkpoint x prefetch search at 64K tokens plus a HostRef-executed
-# twin per strategy.
+# checkpoint-strategy + host-kernel results -> BENCH_optimizer.json +
+# BENCH_varlen.json + BENCH_executor.json + BENCH_ckpt.json +
+# BENCH_kernels.json, tracked across PRs (CI runs this and uploads all
+# five as workflow artifacts). The executor rows run the real threaded
+# executor with null kernels (clone-vs-Arc send path A/B); pass
+# `--skip-exec` to repro bench to omit them. The ckpt rows run the joint
+# checkpoint x prefetch search at 64K tokens plus a HostRef-executed twin
+# per strategy. The kernel rows time scalar vs tiled vs multi-threaded
+# flash kernels; CI gates tiled >= 5x scalar at one thread.
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json
 
 # measured-vs-simulated per-op trace table (host-kernel executor)
 trace:

@@ -2,6 +2,8 @@
 //! perf targets from DESIGN.md §9:
 //!   * schedule build: < 1 ms at P=1024
 //!   * schedule simulation: >= 1e6 slots/s
+//!   * host flash kernels: tiled/vectorized >= 5x the scalar oracle at one
+//!     thread (d=128 GQA geometry), and the worker pool must actually scale
 //!   * ring all-reduce (4 threads, 4 MB): memory-bound, not lock-bound
 //!   * tensor chunk/cat (the executor's shard/gather path)
 //!   * JSON manifest parse
@@ -153,6 +155,70 @@ fn main() {
             "varlen rebalance blew its wall budget: {:.1} ms",
             s.mean_ms()
         );
+    }
+
+    // host flash kernels: the tiled/vectorized path vs the scalar oracle —
+    // the kernel floor every measured trace stands on. Gate: >= 5x at a
+    // single thread on the paper-scale d=128 GQA geometry, and real
+    // scaling from the (head, q-tile) worker pool when the box has cores.
+    {
+        use distflash::runtime::{HostKernels, Kernels, Value};
+        let (h, kvh, c, d) = (8usize, 2usize, 256usize, 128usize);
+        let mut rng = Rng::new(11);
+        let q = Tensor::new(vec![h, c, d], rng.normal_vec(h * c * d));
+        let kt = Tensor::new(vec![kvh, c, d], rng.normal_vec(kvh * c * d));
+        let v = Tensor::new(vec![kvh, c, d], rng.normal_vec(kvh * c * d));
+        let do_ = Tensor::new(vec![h, c, d], rng.normal_vec(h * c * d));
+        let o0 = Tensor::zeros(&[h, c, d]);
+        let m0 = Tensor::new(vec![h, c], vec![f32::NEG_INFINITY; h * c]);
+        let l0 = Tensor::zeros(&[h, c]);
+        // a real forward's (o, lse) so the backward arm is representative
+        let fwd_out = HostKernels::tiled(1)
+            .run("full_attn_ref", &[q.clone().into(), kt.clone().into(), v.clone().into()])
+            .unwrap();
+        let fwd_inputs: Vec<Value> = vec![
+            q.clone().into(),
+            kt.clone().into(),
+            v.clone().into(),
+            o0.into(),
+            m0.into(),
+            l0.into(),
+        ];
+        let bwd_inputs: Vec<Value> = vec![
+            q.into(),
+            kt.into(),
+            v.into(),
+            fwd_out[0].clone().into(),
+            fwd_out[1].clone().into(),
+            do_.into(),
+        ];
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for (kernel, inputs) in [("attn_fwd_full", &fwd_inputs), ("attn_bwd_diag", &bwd_inputs)] {
+            let scalar = bench(&format!("kernel_scalar_{kernel}"), 1, 3, || {
+                black_box(HostKernels::scalar().run(kernel, inputs).unwrap());
+            });
+            println!("{}", scalar.report());
+            let tiled = bench(&format!("kernel_tiled1_{kernel}"), 1, 3, || {
+                black_box(HostKernels::tiled(1).run(kernel, inputs).unwrap());
+            });
+            let speedup = scalar.p50_ns / tiled.p50_ns;
+            println!("{}   ({speedup:.1}x vs scalar)", tiled.report());
+            assert!(
+                speedup >= 5.0,
+                "{kernel}: tiled single-thread only {speedup:.2}x over scalar (gate: 5x)"
+            );
+            if hw >= 4 {
+                let mt = bench(&format!("kernel_tiled4_{kernel}"), 1, 3, || {
+                    black_box(HostKernels::tiled(4).run(kernel, inputs).unwrap());
+                });
+                let mt_speedup = tiled.p50_ns / mt.p50_ns;
+                println!("{}   ({mt_speedup:.1}x vs 1 thread)", mt.report());
+                assert!(
+                    mt_speedup >= 1.8,
+                    "{kernel}: 4 threads only {mt_speedup:.2}x over 1 thread (gate: 1.8x)"
+                );
+            }
+        }
     }
 
     // ring all-reduce over real threads (4 workers, 1M f32 each)

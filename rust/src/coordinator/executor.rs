@@ -247,6 +247,11 @@ pub struct MergedTrace {
     pub start_s: Vec<f64>,
     pub end_s: Vec<f64>,
     pub covered: Vec<bool>,
+    /// Effective host-kernel thread count the traced run executed with
+    /// (after the availability clamp) — so a calibration knows what
+    /// machine configuration its durations describe. 1 for backends
+    /// without a thread knob.
+    pub threads: usize,
 }
 
 impl MergedTrace {
@@ -255,6 +260,7 @@ impl MergedTrace {
             start_s: vec![0.0; n_ops],
             end_s: vec![0.0; n_ops],
             covered: vec![false; n_ops],
+            threads: 1,
         };
         for t in traces {
             for &(op, s, e) in &t.spans {

@@ -126,6 +126,7 @@ pub fn run_dist_attention_planned(
         backend: BackendSpec::Pjrt(artifact_dir.to_path_buf()),
         trace: false,
         deep_copy_sends: false,
+        threads: 1,
     };
     #[allow(deprecated)]
     Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &opts)?.result)

@@ -33,8 +33,9 @@ pub use harness::{
     run_dist_attention_exec, run_dist_attention_host, run_dist_attention_planned,
 };
 pub use optimize::{
-    autotune_depth, optimize_ckpt, optimize_plan, optimize_schedule, optimize_schedule_ckpt,
-    optimize_varlen, CkptArm, CkptOptimized, OptimizeOpts, Optimized, VarlenOptimized,
+    autotune_depth, optimize_ckpt, optimize_plan, optimize_plan_with_op_costs, optimize_schedule,
+    optimize_schedule_ckpt, optimize_varlen, CkptArm, CkptOptimized, OptimizeOpts, Optimized,
+    VarlenOptimized,
 };
 pub use plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanNode, PlanOp};
 pub use schedule::{ChunkSpec, ComputeOp, Schedule, ScheduleKind, StepPlan, VarlenSpec};

@@ -91,6 +91,15 @@ pub struct OptimizeOpts {
     /// forward and backward plans by rebalancing boundaries on one pass
     /// and re-optimizing the other at fixed cuts with this switched off.
     pub move_boundaries: bool,
+    /// Opt in to *per-op* calibrated costs: after `Session::calibrate`,
+    /// searches over an unchanged op stream score each compute op at its
+    /// own traced duration ([`crate::simulator::PlanSim::set_op_cost`])
+    /// instead of the three per-class means — so per-pair skew (GQA
+    /// grouping, ragged chunks, cache effects) is visible to acceptance.
+    /// Off by default: per-op overlays only apply where the traced plan's
+    /// op stream is preserved (caller-plan tuning and acceptance scoring),
+    /// and class means remain the honest model for re-lowered candidates.
+    pub per_op_costs: bool,
 }
 
 impl Default for OptimizeOpts {
@@ -106,6 +115,7 @@ impl Default for OptimizeOpts {
             rebalance_rounds: 3,
             align_doc_cuts: true,
             move_boundaries: true,
+            per_op_costs: false,
         }
     }
 }
@@ -329,7 +339,27 @@ pub fn optimize_plan(
     cost: &AttnCost,
     opts: &OptimizeOpts,
 ) -> Optimized {
+    optimize_plan_with_op_costs(plan, cluster, cost, opts, &[])
+}
+
+/// [`optimize_plan`] with a per-op cost overlay: each `(op, seconds)`
+/// entry replaces that op's class-priced cost in the scoring simulator
+/// before the search runs, so placement and depth are tuned against the
+/// ops' *measured* durations (`OptimizeOpts::per_op_costs` +
+/// `Session::calibrate`). The overlay indexes `plan.ops`, so it is only
+/// valid while the op stream matches the traced plan's — callers must
+/// pass `&[]` for any re-lowered candidate.
+pub fn optimize_plan_with_op_costs(
+    plan: &Plan,
+    cluster: &ClusterSpec,
+    cost: &AttnCost,
+    opts: &OptimizeOpts,
+    op_costs: &[(usize, f64)],
+) -> Optimized {
     let mut sim = PlanSim::new(plan, cost);
+    for &(op, s) in op_costs {
+        sim.set_op_cost(op, s);
+    }
     // the baseline is the plan *as given* — including any placement it
     // already carries — so default_s matches what simulate_plan reports
     let default_s = sim.total_s(cluster, &plan.placement, 1);

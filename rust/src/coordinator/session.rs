@@ -52,7 +52,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::checkpoint::CkptStrategy;
 use super::comm::build_network_placed;
 use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
-use super::optimize::{optimize_plan, optimize_schedule_ckpt, optimize_varlen, OptimizeOpts};
+use super::optimize::{
+    optimize_plan_with_op_costs, optimize_schedule_ckpt, optimize_varlen, OptimizeOpts,
+};
 use super::plan::{LowerOpts, Pass, Plan};
 use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
 use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
@@ -170,6 +172,13 @@ pub struct RunSpec {
     pub trace: bool,
     /// Model the pre-zero-copy send path (executor bench baseline arm).
     pub deep_copy_sends: bool,
+    /// Host-kernel worker threads per rank (HostRef backend). Clamped to
+    /// the machine's available parallelism at execution; the effective
+    /// count is recorded in the run's [`MergedTrace::threads`]. The tiled
+    /// kernels are bit-identical across thread counts, so this trades
+    /// wall-clock only — 1 (the default) pins single-threaded execution
+    /// for reproducible traces. 0 is rejected by [`RunSpec::validate`].
+    pub threads: usize,
     /// Gradient-checkpointing strategy lowered into the backward plan.
     /// [`CkptStrategy::RematAware`] (the default) keeps the lowering
     /// unchanged and instead saves the per-layer `(o, lse)` pair;
@@ -200,6 +209,7 @@ impl RunSpec {
             backward: true,
             trace: false,
             deep_copy_sends: false,
+            threads: 1,
             ckpt: CkptStrategy::RematAware,
             seed: 0,
         }
@@ -240,6 +250,9 @@ impl RunSpec {
     pub fn validate(&self) -> Result<()> {
         if self.layers == 0 {
             bail!("layers must be >= 1");
+        }
+        if self.threads == 0 {
+            bail!("threads must be >= 1 (1 pins single-threaded host kernels)");
         }
         if (self.workload.is_none() || self.n_workers == 0)
             && !matches!(self.backend, BackendSpec::Pjrt(_))
@@ -324,11 +337,19 @@ pub struct ExecOpts {
     /// Model the pre-zero-copy send path (full-chunk allocation + memcpy
     /// per payload) — the executor micro-bench's baseline arm.
     pub deep_copy_sends: bool,
+    /// Host-kernel worker threads per rank (clamped to 1..=available
+    /// parallelism at execution; see [`RunSpec::threads`]).
+    pub threads: usize,
 }
 
 impl ExecOpts {
     pub fn host() -> ExecOpts {
-        ExecOpts { backend: BackendSpec::HostRef, trace: false, deep_copy_sends: false }
+        ExecOpts {
+            backend: BackendSpec::HostRef,
+            trace: false,
+            deep_copy_sends: false,
+            threads: 1,
+        }
     }
 }
 
@@ -370,8 +391,13 @@ pub struct StageAudit {
     pub moved_ranks: usize,
     /// Chunk cuts moved off the incoming boundaries (varlen pipeline).
     pub moved_boundaries: usize,
-    /// Event-engine passes this stage spent searching.
+    /// Event-engine passes this stage spent, *including* the session's
+    /// acceptance scoring — the per-stage audits sum to
+    /// [`Session::sim_calls`], so every published budget is attributable.
     pub sim_calls: usize,
+    /// Dirty-suffix incremental rescores the varlen rebalancer's candidate
+    /// scoring reused a checkpointed prefix for (0 for other pipelines).
+    pub incremental_rescores: usize,
     /// Whether the candidate replaced the session's current plan.
     pub accepted: bool,
     /// Whether the stage ran under a trace-calibrated cost model.
@@ -444,6 +470,12 @@ pub struct Session {
     last_run: Option<ExecRun>,
     sim_calls: usize,
     audits: Vec<StageAudit>,
+    /// Per-op traced durations from the last `calibrate()` (when the
+    /// policy opts into `per_op_costs`), keyed by the exact plan they were
+    /// measured against — the overlay only applies while a plan's op
+    /// stream still matches op-for-op.
+    fwd_op_costs: Option<(Arc<Plan>, Vec<(usize, f64)>)>,
+    bwd_op_costs: Option<(Arc<Plan>, Vec<(usize, f64)>)>,
 }
 
 impl Session {
@@ -501,6 +533,8 @@ impl Session {
             last_run: None,
             sim_calls: 0,
             audits: Vec::new(),
+            fwd_op_costs: None,
+            bwd_op_costs: None,
         })
     }
 
@@ -508,8 +542,8 @@ impl Session {
     /// path): the spec must carry an explicit workload and worker count.
     /// `plan()` keeps the given plans as-is; an explicit `optimize()`
     /// tunes them *in place* (placement + prefetch depth via
-    /// [`optimize_plan`]) — it never re-lowers a schedule over them, so
-    /// the caller's op stream is preserved.
+    /// [`super::optimize::optimize_plan`]) — it never re-lowers a
+    /// schedule over them, so the caller's op stream is preserved.
     pub fn with_plans(spec: RunSpec, fwd: Arc<Plan>, bwd: Arc<Plan>) -> Result<Session> {
         if spec.workload.is_none() || spec.n_workers == 0 {
             bail!("Session::with_plans needs an explicit workload and worker count");
@@ -637,6 +671,45 @@ impl Session {
         }
     }
 
+    fn per_op_enabled(&self) -> bool {
+        match &self.spec.optimize {
+            OptimizePolicy::Schedule(o) | OptimizePolicy::Varlen(o) => o.per_op_costs,
+            OptimizePolicy::Off => false,
+        }
+    }
+
+    /// The calibrated per-op overlay for `pass` — only when the policy
+    /// opts in ([`OptimizeOpts::per_op_costs`]) and `plan` still matches
+    /// the traced plan's op stream op-for-op (the overlay indexes ops
+    /// positionally, so a re-lowered candidate must fall back to the
+    /// fitted class means).
+    fn op_overlay_for(&self, pass: Pass, plan: &Plan) -> &[(usize, f64)] {
+        if !self.per_op_enabled() {
+            return &[];
+        }
+        let stored = match pass {
+            Pass::Forward => &self.fwd_op_costs,
+            Pass::Backward => &self.bwd_op_costs,
+        };
+        match stored {
+            Some((traced, ocs)) if traced.ops == plan.ops => ocs,
+            _ => &[],
+        }
+    }
+
+    /// [`score_plan`] with the per-op overlay applied where valid.
+    fn score_plan_overlayed(&self, pass: Pass, plan: &Plan, cost: &AttnCost) -> f64 {
+        let overlay = self.op_overlay_for(pass, plan);
+        if overlay.is_empty() {
+            return score_plan(plan, &self.spec.cluster, cost);
+        }
+        let mut sim = PlanSim::new(plan, cost);
+        for &(op, s) in overlay {
+            sim.set_op_cost(op, s);
+        }
+        sim.total_s(&self.spec.cluster, &plan.placement, plan.prefetch_depth)
+    }
+
     /// The shared acceptance tail: score `cand` against the current plan
     /// for `pass` under `cost`, keep whichever is not worse, and drop the
     /// recorded run on a swap (a trace no longer aligns with changed
@@ -657,8 +730,8 @@ impl Session {
             Pass::Forward => cur_fwd.clone(),
             Pass::Backward => cur_bwd.clone(),
         };
-        let cur_s = score_plan(&current, &self.spec.cluster, cost);
-        let cand_s = score_plan(&cand, &self.spec.cluster, cost);
+        let cur_s = self.score_plan_overlayed(pass, &current, cost);
+        let cand_s = self.score_plan_overlayed(pass, &cand, cost);
         self.sim_calls += 2;
         let accepted = cand_s <= cur_s;
         if accepted && cand != *current {
@@ -698,7 +771,8 @@ impl Session {
             flipped_pairs: 0,
             moved_ranks: o.moved_ranks,
             moved_boundaries: 0,
-            sim_calls: o.sim_calls,
+            sim_calls: o.sim_calls + 2,
+            incremental_rescores: 0,
             accepted,
             calibrated: self.calibrated,
             pad_s: 0.0,
@@ -708,7 +782,8 @@ impl Session {
     }
 
     /// Caller-plan stage: placement + memory-capped depth over the given
-    /// plan ([`optimize_plan`] — no re-lowering), with the same
+    /// plan ([`optimize_plan_with_op_costs`] — no re-lowering, per-op
+    /// calibrated costs when the policy opts in), with the same
     /// accept-only-if-not-worse rule as the schedule stage.
     fn optimize_given_stage(&mut self, pass: Pass, opts: &OptimizeOpts) -> Result<()> {
         let cost = self.cost_for(pass);
@@ -719,7 +794,13 @@ impl Session {
                 Pass::Backward => cur_bwd.clone(),
             }
         };
-        let o = optimize_plan(&current, &self.spec.cluster, &cost, opts);
+        let o = optimize_plan_with_op_costs(
+            &current,
+            &self.spec.cluster,
+            &cost,
+            opts,
+            self.op_overlay_for(pass, &current),
+        );
         self.sim_calls += o.sim_calls;
         let (accepted, kept_s, kept_depth) = self.accept_candidate(pass, o.plan, &cost);
         self.audits.push(StageAudit {
@@ -731,7 +812,8 @@ impl Session {
             flipped_pairs: 0,
             moved_ranks: o.moved_ranks,
             moved_boundaries: 0,
-            sim_calls: o.sim_calls,
+            sim_calls: o.sim_calls + 2,
+            incremental_rescores: 0,
             accepted,
             calibrated: self.calibrated,
             pad_s: 0.0,
@@ -790,10 +872,10 @@ impl Session {
             cand_fwd.prefetch_depth = d;
             cand_bwd.prefetch_depth = d;
         }
-        let cur_f = score_plan(&cur_fwd, &self.spec.cluster, &self.fwd_cost);
-        let cur_b = score_plan(&cur_bwd, &self.spec.cluster, &self.bwd_cost);
-        let cand_f = score_plan(&cand_fwd, &self.spec.cluster, &self.fwd_cost);
-        let cand_b = score_plan(&cand_bwd, &self.spec.cluster, &self.bwd_cost);
+        let cur_f = self.score_plan_overlayed(Pass::Forward, &cur_fwd, &self.fwd_cost);
+        let cur_b = self.score_plan_overlayed(Pass::Backward, &cur_bwd, &self.bwd_cost);
+        let cand_f = self.score_plan_overlayed(Pass::Forward, &cand_fwd, &self.fwd_cost);
+        let cand_b = self.score_plan_overlayed(Pass::Backward, &cand_bwd, &self.bwd_cost);
         self.sim_calls += 4;
         let accepted = cand_f + cand_b <= cur_f + cur_b;
         // audit the score and depth of whichever pair the session keeps
@@ -816,7 +898,8 @@ impl Session {
                 flipped_pairs: o.flipped_pairs,
                 moved_ranks: o.moved_ranks,
                 moved_boundaries: o.moved_boundaries,
-                sim_calls: o.sim_calls,
+                sim_calls: o.sim_calls + 2,
+                incremental_rescores: o.incremental_rescores,
                 accepted,
                 calibrated: self.calibrated,
                 pad_s: o.pad_s,
@@ -888,6 +971,7 @@ impl Session {
             backend: self.spec.backend.clone(),
             trace: self.spec.trace,
             deep_copy_sends: self.spec.deep_copy_sends,
+            threads: self.spec.threads,
         };
         let run = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers)?;
         self.last_run = Some(run);
@@ -950,8 +1034,16 @@ impl Session {
         };
         let (fwd_plan, bwd_plan) = self.plans.as_ref().expect("a run implies plans").clone();
         self.fwd_cost = trace_report::calibrate_cost_with_bytes(&fwd_plan, &ft, &self.fwd_cost);
+        if self.per_op_enabled() {
+            self.fwd_op_costs =
+                Some((fwd_plan.clone(), trace_report::per_op_costs(&fwd_plan, &ft)));
+        }
         if let Some(bt) = bt {
             self.bwd_cost = trace_report::calibrate_cost_with_bytes(&bwd_plan, &bt, &self.bwd_cost);
+            if self.per_op_enabled() {
+                self.bwd_op_costs =
+                    Some((bwd_plan.clone(), trace_report::per_op_costs(&bwd_plan, &bt)));
+            }
         }
         self.calibrated = true;
         Ok(self)
@@ -1114,6 +1206,14 @@ pub(crate) fn execute_plans(
         layer_traces: Vec<(RunTrace, RunTrace)>,
     }
 
+    // Host-kernel worker threads, clamped to the machine (threads=1 pins
+    // the single-threaded deterministic baseline; the tiled kernels are
+    // bit-identical across counts regardless). The effective value is
+    // recorded in every merged trace for provenance.
+    let eff_threads = opts
+        .threads
+        .clamp(1, thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(1));
+
     let epoch = Instant::now();
     let mut handles = Vec::new();
     for (rank, mut comm) in comms.into_iter().enumerate() {
@@ -1134,7 +1234,7 @@ pub(crate) fn execute_plans(
                     rt.precompile(ATTN_ARTIFACTS)?;
                     Box::new(rt)
                 }
-                BackendSpec::HostRef => Box::new(HostKernels),
+                BackendSpec::HostRef => Box::new(HostKernels::tiled(eff_threads)),
                 BackendSpec::Null => Box::new(NullKernels),
             };
             let epoch = trace.then_some(epoch);
@@ -1200,10 +1300,14 @@ pub(crate) fn execute_plans(
         for l in 0..layers {
             let ft: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].0.clone()).collect();
             let bt: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].1.clone()).collect();
-            lt.push((
-                Some(MergedTrace::merge(fwd_plan.n_ops(), &ft)),
-                do_.is_some().then(|| MergedTrace::merge(bwd_plan.n_ops(), &bt)),
-            ));
+            let mut mf = MergedTrace::merge(fwd_plan.n_ops(), &ft);
+            mf.threads = eff_threads;
+            let mb = do_.is_some().then(|| {
+                let mut m = MergedTrace::merge(bwd_plan.n_ops(), &bt);
+                m.threads = eff_threads;
+                m
+            });
+            lt.push((Some(mf), mb));
         }
         let (lf, lb) = lt.last().cloned().expect("layers >= 1");
         (lf, lb, lt)
@@ -1333,7 +1437,7 @@ fn opts_to_json(o: &OptimizeOpts) -> String {
     format!(
         "{{\"seed\": {}, \"swap_rounds\": {}, \"depths\": {}, \"knee_rel_tol\": {}, \
          \"stage_mem_frac\": {}, \"flip\": {}, \"placement\": {}, \"rebalance_rounds\": {}, \
-         \"align_doc_cuts\": {}, \"move_boundaries\": {}}}",
+         \"align_doc_cuts\": {}, \"move_boundaries\": {}, \"per_op_costs\": {}}}",
         u64_to_json(o.seed),
         o.swap_rounds,
         usize_list(&o.depths),
@@ -1344,6 +1448,7 @@ fn opts_to_json(o: &OptimizeOpts) -> String {
         o.rebalance_rounds,
         o.align_doc_cuts,
         o.move_boundaries,
+        o.per_op_costs,
     )
 }
 
@@ -1367,6 +1472,7 @@ fn opts_from_json(j: &Json) -> Result<OptimizeOpts> {
         rebalance_rounds: opt_usize(j, "rebalance_rounds", w, d.rebalance_rounds)?,
         align_doc_cuts: opt_bool(j, "align_doc_cuts", w, d.align_doc_cuts)?,
         move_boundaries: opt_bool(j, "move_boundaries", w, d.move_boundaries)?,
+        per_op_costs: opt_bool(j, "per_op_costs", w, d.per_op_costs)?,
     })
 }
 
@@ -1433,12 +1539,13 @@ impl RunSpec {
              \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
              \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
              \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \
-             \"ckpt\": \"{ckpt}\",\n  \"seed\": {seed}\n}}\n",
+             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"seed\": {seed}\n}}\n",
             self.n_workers,
             self.layers,
             self.backward,
             self.trace,
             self.deep_copy_sends,
+            self.threads,
         )
     }
 
@@ -1581,6 +1688,7 @@ impl RunSpec {
             backward: opt_bool(&j, "backward", "", true)?,
             trace: opt_bool(&j, "trace", "", false)?,
             deep_copy_sends: opt_bool(&j, "deep_copy_sends", "", false)?,
+            threads: opt_usize(&j, "threads", "", 1)?,
             ckpt,
             seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(0),
         })

@@ -21,14 +21,17 @@
 //!            [--varlen [--docs N] [--zipf A] [--pack-seed N]]
 //!            token-level rebalancing of a Zipf-packed document batch
 //!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
-//!            [--ckpt-out FILE] [--skip-exec] optimizer + varlen grids, the
-//!                                           executor transport micro-bench, and
-//!                                           the checkpoint-strategy trade-off;
+//!            [--ckpt-out FILE] [--kernels-out FILE] [--skip-exec]
+//!                                           optimizer + varlen grids (driven
+//!                                           through Session), the executor
+//!                                           transport micro-bench, the
+//!                                           checkpoint-strategy trade-off, and
+//!                                           the host-kernel micro-bench;
 //!                                           --json writes BENCH_optimizer.json,
 //!                                           BENCH_varlen.json, BENCH_executor.json,
-//!                                           BENCH_ckpt.json
+//!                                           BENCH_ckpt.json, BENCH_kernels.json
 //!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
-//!            [--schedule S] [--depth N] [--seed N] [--layers L]
+//!            [--schedule S] [--depth N] [--seed N] [--layers L] [--threads T]
 //!                                           run the real executor (host kernels)
 //!                                           with per-op tracing and align the
 //!                                           measured timeline against the event
@@ -546,15 +549,18 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let d = args.usize("dim", 32);
     let depth = args.usize("depth", 1);
     let layers = args.usize("layers", 1);
+    let threads = args.usize("threads", 1);
     let kind = schedule_kind(&args.get("schedule", "balanced"));
     let n = p * chunk;
     println!(
-        "trace: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} depth={depth} layers={layers} (host kernels)"
+        "trace: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} depth={depth} layers={layers} \
+         threads={threads} (host kernels)"
     );
     let mut spec = RunSpec::host(kind, p, Workload::new(h, kvh, d, chunk));
     spec.trace = true;
     spec.prefetch_depth = Some(depth);
     spec.layers = layers;
+    spec.threads = threads;
     spec.seed = args.usize("seed", 0) as u64;
 
     let mut rng = Rng::new(spec.seed);
@@ -572,7 +578,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     session.execute_with(&q, &k, &v, Some(&do_))?;
 
     // numerics sanity against the host oracle while we are here
-    let oracle = HostKernels.run(
+    let oracle = HostKernels::default().run(
         "full_attn_ref",
         &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
     )?;
@@ -636,7 +642,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 format!(
                     "{{\"model\": \"{}\", \"cluster\": \"{}\", \"seq_per_gpu\": {}, \"pass\": \"{}\", \
                      \"default_s\": {:.9}, \"optimized_s\": {:.9}, \"speedup\": {:.4}, \
-                     \"prefetch_depth\": {}, \"flipped_steps\": {}, \"moved_ranks\": {}, \"sim_calls\": {}}}",
+                     \"prefetch_depth\": {}, \"flipped_steps\": {}, \"moved_ranks\": {}, \
+                     \"sim_calls\": {}, \"accepted\": {}}}",
                     json_escape(r.model),
                     json_escape(r.cluster),
                     r.seq_per_gpu,
@@ -648,6 +655,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     r.flipped_steps,
                     r.moved_ranks,
                     r.sim_calls,
+                    r.accepted,
                 )
             })
             .collect();
@@ -662,7 +670,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                      \"seq_per_gpu\": {}, \"pass\": \"{}\", \"pad_s\": {:.9}, \"equal_s\": {:.9}, \
                      \"optimized_s\": {:.9}, \"speedup_vs_pad\": {:.4}, \"speedup_vs_equal\": {:.4}, \
                      \"prefetch_depth\": {}, \"flipped_pairs\": {}, \"moved_boundaries\": {}, \
-                     \"sim_calls\": {}, \"incremental_rescores\": {}}}",
+                     \"sim_calls\": {}, \"incremental_rescores\": {}, \"accepted\": {}}}",
                     json_escape(r.model),
                     json_escape(r.cluster),
                     r.n_docs,
@@ -679,6 +687,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     r.moved_boundaries,
                     r.sim_calls,
                     r.incremental_rescores,
+                    r.accepted,
                 )
             })
             .collect();
@@ -730,6 +739,32 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             })
             .collect();
         write_bench_json(&args.get("ckpt-out", "BENCH_ckpt.json"), "ckpt", &jrows)?;
+
+        // host-kernel micro-bench -> BENCH_kernels.json
+        let krows = paper::kernel_bench_rows();
+        let jrows: Vec<String> = krows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"kernel\": \"{}\", \"heads\": {}, \"kv_heads\": {}, \"chunk\": {}, \
+                     \"head_dim\": {}, \"threads\": {}, \"scalar_s\": {:.9}, \"tiled_s\": {:.9}, \
+                     \"tiled_mt_s\": {:.9}, \"speedup_tiled\": {:.4}, \"speedup_mt\": {:.4}}}",
+                    json_escape(r.kernel),
+                    r.heads,
+                    r.kv_heads,
+                    r.chunk,
+                    r.head_dim,
+                    r.threads,
+                    r.scalar_s,
+                    r.tiled_s,
+                    r.tiled_mt_s,
+                    r.speedup_tiled(),
+                    r.speedup_mt(),
+                )
+            })
+            .collect();
+        write_bench_json(&args.get("kernels-out", "BENCH_kernels.json"), "kernels", &jrows)?;
+        println!("{}", paper::kernel_bench_table(&krows));
     } else {
         println!("{}", paper::optimized_schedules());
         println!("{}", paper::varlen_schedules());
@@ -737,6 +772,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
         }
         println!("{}", paper::ckpt_tradeoff());
+        println!("{}", paper::kernel_bench_table(&paper::kernel_bench_rows()));
     }
     Ok(())
 }

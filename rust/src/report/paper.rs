@@ -14,15 +14,14 @@ use crate::baselines::rsa::RingSelfAttention;
 use crate::baselines::ulysses::Ulysses;
 use crate::baselines::{attn_cost_bwd, attn_cost_fwd, fsdp_param_bytes, SystemModel};
 use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
-use crate::coordinator::optimize::{
-    autotune_depth, optimize_ckpt, optimize_schedule, optimize_varlen, OptimizeOpts,
-};
+use crate::coordinator::optimize::{autotune_depth, optimize_ckpt, OptimizeOpts};
 use crate::coordinator::{
-    BackendSpec, CkptStrategy, Pass, Plan, RunSpec, Schedule, ScheduleKind, Session, VarlenSpec,
-    Workload,
+    BackendSpec, CkptStrategy, OptimizePolicy, Pass, Plan, RunSpec, Schedule, ScheduleKind,
+    Session, VarlenSpec, Workload,
 };
 use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
 use crate::report::Table;
+use crate::runtime::{HostKernels, Kernels, Tensor, Value};
 use crate::simulator::{simulate_plan, EventOpts, EventResult};
 
 fn k(tokens: usize) -> String {
@@ -455,7 +454,12 @@ pub struct OptRow {
     pub prefetch_depth: usize,
     pub flipped_steps: usize,
     pub moved_ranks: usize,
+    /// Event-engine passes the stage spent, including the session's
+    /// acceptance scoring (from [`crate::coordinator::StageAudit`]).
     pub sim_calls: usize,
+    /// Whether the session's accept-only-if-not-worse rule kept the
+    /// optimized candidate.
+    pub accepted: bool,
 }
 
 impl OptRow {
@@ -470,6 +474,10 @@ impl OptRow {
 /// InfiniBand setup, and the bandwidth-starved dev cluster — with the GQA
 /// model exercising the role-flipping pass and backward passes exercising
 /// the fat (q, o, lse, do) bundles.
+///
+/// Each cell drives the full [`Session`] pipeline (plan → optimize) so
+/// the published numbers carry the session's acceptance rule and audited
+/// sim-call budget, not a bare optimizer invocation.
 pub fn optimizer_rows() -> Vec<OptRow> {
     let grid: &[(&'static str, &'static str, usize, &'static str)] = &[
         ("llama-7b", "1x8", 8192, "fwd"),
@@ -488,28 +496,38 @@ pub fn optimizer_rows() -> Vec<OptRow> {
             _ => ClusterSpec::cluster_16x40g(),
         };
         let p = cluster.n_gpus();
-        let (pass, cost) = match pass_name {
-            "fwd" => (Pass::Forward, attn_cost_fwd(&model, &cluster, seq as f64)),
-            _ => (Pass::Backward, attn_cost_bwd(&model, &cluster, seq as f64)),
+        let pass = match pass_name {
+            "fwd" => Pass::Forward,
+            _ => Pass::Backward,
         };
-        let o = optimize_schedule(
-            &Schedule::balanced(p),
-            pass,
-            &cluster,
-            &cost,
-            &OptimizeOpts::default(),
-        );
+        let fwd_cost = attn_cost_fwd(&model, &cluster, seq as f64);
+        let bwd_cost = attn_cost_bwd(&model, &cluster, seq as f64);
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, p);
+        spec.workload =
+            Some(Workload::new(model.n_heads, model.n_kv_heads, model.head_dim, seq));
+        spec.cluster = cluster;
+        spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
+        let mut session = Session::new(spec).expect("bench spec is valid");
+        session.set_costs(fwd_cost, bwd_cost);
+        session.optimize().expect("bench grid optimizes");
+        let a = session
+            .audits()
+            .iter()
+            .find(|a| a.pass == pass)
+            .expect("optimize() audits both passes")
+            .clone();
         out.push(OptRow {
             model: mname,
             cluster: cname,
             seq_per_gpu: seq,
             pass: pass_name,
-            default_s: o.default_s,
-            optimized_s: o.optimized_s,
-            prefetch_depth: o.prefetch_depth,
-            flipped_steps: o.flipped_steps.len(),
-            moved_ranks: o.moved_ranks,
-            sim_calls: o.sim_calls,
+            default_s: a.default_s,
+            optimized_s: a.optimized_s,
+            prefetch_depth: a.prefetch_depth,
+            flipped_steps: a.flipped_steps.len(),
+            moved_ranks: a.moved_ranks,
+            sim_calls: a.sim_calls,
+            accepted: a.accepted,
         });
     }
     out
@@ -563,8 +581,12 @@ pub struct VarlenRow {
     pub prefetch_depth: usize,
     pub flipped_pairs: usize,
     pub moved_boundaries: usize,
+    /// Event-engine passes the stage spent, including the session's
+    /// joint-acceptance scoring (from [`crate::coordinator::StageAudit`]).
     pub sim_calls: usize,
     pub incremental_rescores: usize,
+    /// Whether the session kept the rebalanced `(fwd, bwd)` pair.
+    pub accepted: bool,
 }
 
 impl VarlenRow {
@@ -581,6 +603,10 @@ impl VarlenRow {
 /// Zipf-packed batches: the paper's 2×8 InfiniBand setup (fwd + bwd, GQA
 /// for the flip-heavy regime) plus the homogeneous box. Deterministic
 /// (fixed packing seed), so the JSON baseline is comparable PR-over-PR.
+///
+/// Each cell drives the full [`Session`] varlen pipeline, so fwd and bwd
+/// share one chunking under the joint accept-only-if-not-worse rule and
+/// the published sim-call budget is the audited one.
 pub fn varlen_rows() -> Vec<VarlenRow> {
     let grid: &[(&'static str, &'static str, usize, f64, usize, &'static str)] = &[
         ("llama-7b", "2x8", 64, 1.1, 2048, "fwd"),
@@ -597,19 +623,28 @@ pub fn varlen_rows() -> Vec<VarlenRow> {
             _ => ClusterSpec::cluster_16x40g(),
         };
         let p = cluster.n_gpus();
-        let spec = VarlenSpec::pack_zipf(n_docs, seq * p, alpha, 17, p);
-        let (pass, cost) = match pass_name {
-            "fwd" => (Pass::Forward, attn_cost_fwd(&model, &cluster, seq as f64)),
-            _ => (Pass::Backward, attn_cost_bwd(&model, &cluster, seq as f64)),
+        let vspec = VarlenSpec::pack_zipf(n_docs, seq * p, alpha, 17, p);
+        let pass = match pass_name {
+            "fwd" => Pass::Forward,
+            _ => Pass::Backward,
         };
-        let o = optimize_varlen(
-            &Schedule::balanced(p),
-            &spec,
-            pass,
-            &cluster,
-            &cost,
-            &OptimizeOpts::default(),
-        );
+        let fwd_cost = attn_cost_fwd(&model, &cluster, seq as f64);
+        let bwd_cost = attn_cost_bwd(&model, &cluster, seq as f64);
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, p);
+        spec.workload =
+            Some(Workload::new(model.n_heads, model.n_kv_heads, model.head_dim, seq));
+        spec.varlen = Some(vspec);
+        spec.cluster = cluster;
+        spec.optimize = OptimizePolicy::Varlen(OptimizeOpts::default());
+        let mut session = Session::new(spec).expect("bench spec is valid");
+        session.set_costs(fwd_cost, bwd_cost);
+        session.optimize().expect("bench grid optimizes");
+        let a = session
+            .audits()
+            .iter()
+            .find(|a| a.pass == pass)
+            .expect("the varlen stage audits both passes")
+            .clone();
         out.push(VarlenRow {
             model: mname,
             cluster: cname,
@@ -617,14 +652,15 @@ pub fn varlen_rows() -> Vec<VarlenRow> {
             zipf_alpha: alpha,
             seq_per_gpu: seq,
             pass: pass_name,
-            pad_s: o.pad_s,
-            equal_s: o.equal_s,
-            optimized_s: o.optimized_s,
-            prefetch_depth: o.prefetch_depth,
-            flipped_pairs: o.flipped_pairs,
-            moved_boundaries: o.moved_boundaries,
-            sim_calls: o.sim_calls,
-            incremental_rescores: o.incremental_rescores,
+            pad_s: a.pad_s,
+            equal_s: a.equal_s,
+            optimized_s: a.optimized_s,
+            prefetch_depth: a.prefetch_depth,
+            flipped_pairs: a.flipped_pairs,
+            moved_boundaries: a.moved_boundaries,
+            sim_calls: a.sim_calls,
+            incremental_rescores: a.incremental_rescores,
+            accepted: a.accepted,
         });
     }
     out
@@ -657,6 +693,139 @@ pub fn varlen_schedules() -> String {
             format!("{}", r.flipped_pairs),
             format!("{}", r.moved_boundaries),
             format!("{}", r.sim_calls),
+        ]);
+    }
+    t.render()
+}
+
+/// One row of the host-kernel micro-bench — shared by the
+/// `kernel_bench_table` and `repro bench --json` (`BENCH_kernels.json`).
+/// Three arms over identical inputs: the scalar oracle
+/// ([`HostKernels::scalar`]), the tiled/vectorized path at one thread
+/// (the executor's default kernels), and the tiled path at `threads`
+/// workers. The acceptance gate is tiled >= 5x scalar at a single thread
+/// on the paper-scale `d = 128` geometry.
+#[derive(Clone, Debug)]
+pub struct KernelBenchRow {
+    pub kernel: &'static str,
+    pub heads: usize,
+    pub kv_heads: usize,
+    /// q rows == kv cols (one square chunk pair per head).
+    pub chunk: usize,
+    pub head_dim: usize,
+    /// Worker threads in the multi-thread arm (available parallelism,
+    /// capped at 4 so shared runners measure the same arm).
+    pub threads: usize,
+    /// Median wall-clock of the scalar oracle.
+    pub scalar_s: f64,
+    /// Median wall-clock of the tiled path at one thread.
+    pub tiled_s: f64,
+    /// Median wall-clock of the tiled path at `threads` threads.
+    pub tiled_mt_s: f64,
+}
+
+impl KernelBenchRow {
+    pub fn speedup_tiled(&self) -> f64 {
+        self.scalar_s / self.tiled_s
+    }
+
+    pub fn speedup_mt(&self) -> f64 {
+        self.scalar_s / self.tiled_mt_s
+    }
+}
+
+/// Median kernel wall-clock for one arm (1 warmup + `iters` measured).
+fn kernel_bench_arm(
+    kk: &HostKernels,
+    kernel: &'static str,
+    inputs: &[Value],
+    iters: usize,
+) -> f64 {
+    let s = crate::util::bench::bench(kernel, 1, iters, || {
+        crate::util::bench::black_box(kk.run(kernel, inputs).expect("bench kernel runs"));
+    });
+    s.p50_ns / 1e9
+}
+
+/// Run the host-kernel micro-bench: streaming-softmax forward and FA2
+/// backward chunks at LLaMA-GQA head geometry (`d = 128`, grouped kv
+/// heads), identical inputs across arms. The backward arm's `(o, lse)`
+/// come from a real forward so its numerics are representative.
+pub fn kernel_bench_rows() -> Vec<KernelBenchRow> {
+    let (h, kvh, c, d) = (8, 2, 512, 128);
+    let threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+    let iters = 3;
+    let mut rng = crate::util::Rng::new(11);
+    let q = Tensor::new(vec![h, c, d], rng.normal_vec(h * c * d));
+    let kt = Tensor::new(vec![kvh, c, d], rng.normal_vec(kvh * c * d));
+    let v = Tensor::new(vec![kvh, c, d], rng.normal_vec(kvh * c * d));
+    let do_ = Tensor::new(vec![h, c, d], rng.normal_vec(h * c * d));
+    let o0 = Tensor::zeros(&[h, c, d]);
+    let m0 = Tensor::new(vec![h, c], vec![f32::NEG_INFINITY; h * c]);
+    let l0 = Tensor::zeros(&[h, c]);
+    let fwd = HostKernels::tiled(1)
+        .run("full_attn_ref", &[q.clone().into(), kt.clone().into(), v.clone().into()])
+        .expect("bench forward runs");
+    let fwd_inputs: Vec<Value> = vec![
+        q.clone().into(),
+        kt.clone().into(),
+        v.clone().into(),
+        o0.into(),
+        m0.into(),
+        l0.into(),
+    ];
+    let bwd_inputs: Vec<Value> = vec![
+        q.into(),
+        kt.into(),
+        v.into(),
+        fwd[0].clone().into(),
+        fwd[1].clone().into(),
+        do_.into(),
+    ];
+    let mut out = Vec::new();
+    for (kernel, inputs) in [("attn_fwd_full", fwd_inputs), ("attn_bwd_diag", bwd_inputs)] {
+        let scalar_s = kernel_bench_arm(&HostKernels::scalar(), kernel, &inputs, iters);
+        let tiled_s = kernel_bench_arm(&HostKernels::tiled(1), kernel, &inputs, iters);
+        let tiled_mt_s = kernel_bench_arm(&HostKernels::tiled(threads), kernel, &inputs, iters);
+        out.push(KernelBenchRow {
+            kernel,
+            heads: h,
+            kv_heads: kvh,
+            chunk: c,
+            head_dim: d,
+            threads,
+            scalar_s,
+            tiled_s,
+            tiled_mt_s,
+        });
+    }
+    out
+}
+
+/// Kernel micro-bench as a table (the human-readable side of
+/// `BENCH_kernels.json`).
+pub fn kernel_bench_table(rows: &[KernelBenchRow]) -> String {
+    let mut t = Table::new(
+        "Host kernel micro-bench — scalar oracle vs tiled/vectorized (d=128 GQA geometry)",
+    );
+    t.header(
+        ["kernel", "H/KVH", "chunk", "d", "scalar (ms)", "tiled (ms)", "speedup", "mt (ms)", "threads", "mt speedup"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for r in rows {
+        t.row(vec![
+            r.kernel.into(),
+            format!("{}/{}", r.heads, r.kv_heads),
+            k(r.chunk),
+            format!("{}", r.head_dim),
+            format!("{:.2}", r.scalar_s * 1e3),
+            format!("{:.2}", r.tiled_s * 1e3),
+            format!("{:.2}x", r.speedup_tiled()),
+            format!("{:.2}", r.tiled_mt_s * 1e3),
+            format!("{}", r.threads),
+            format!("{:.2}x", r.speedup_mt()),
         ]);
     }
     t.render()

@@ -142,6 +142,30 @@ pub fn calibrate_cost(plan: &Plan, trace: &MergedTrace) -> AttnCost {
     }
 }
 
+/// Per-op measured durations for every covered, class-priced compute op:
+/// `(op index, traced seconds)` pairs suitable for
+/// [`crate::simulator::PlanSim::set_op_cost`]. This is the per-op
+/// refinement of [`calibrate_cost`]: instead of collapsing the trace into
+/// three class means, each op keeps its own duration — valid only while
+/// the plan's op stream matches the traced plan's (the indices are
+/// positional). Transfers are left out for the same reason
+/// [`calibrate_cost`] prices them at one byte: the in-process fabric has
+/// no measurable wire.
+pub fn per_op_costs(plan: &Plan, trace: &MergedTrace) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    for op in 0..plan.ops.len() {
+        if !trace.covered[op] {
+            continue;
+        }
+        if let PlanOp::Compute { kernel, .. } = &plan.ops[op].op {
+            if pricing_class(kernel).is_some() {
+                out.push((op, trace.op_duration(op)));
+            }
+        }
+    }
+    out
+}
+
 /// Trace-calibrated cost model with a *modeled* transfer story: kernel
 /// classes priced at their measured per-class means (exactly
 /// [`calibrate_cost`]), byte classes carried over from `base`. The
@@ -359,6 +383,7 @@ mod tests {
             start_s: sim.op_start.clone(),
             end_s: sim.op_finish.clone(),
             covered: vec![false; plan.n_ops()],
+            threads: 1,
         };
         for (op, node) in plan.ops.iter().enumerate() {
             if matches!(node.op, PlanOp::Compute { .. }) {
@@ -379,6 +404,15 @@ mod tests {
         assert_eq!(cal.kv_bytes, cost.kv_bytes);
         assert_eq!(cal.q_bytes, cost.q_bytes);
         assert!((cal.pair_full_s - cost.pair_full_s).abs() < 1e-12);
+
+        // the per-op refinement returns every covered class-priced compute
+        // at its traced duration verbatim
+        let oc = per_op_costs(&plan, &trace);
+        assert!(!oc.is_empty());
+        for &(op, s) in &oc {
+            assert!(trace.covered[op]);
+            assert!((s - trace.op_duration(op)).abs() < 1e-15);
+        }
 
         // and the same trace renders as a (single-row) layer timeline
         let tl = layer_timeline("layers", &[("L0 fwd".to_string(), &trace)]);

@@ -5,12 +5,15 @@
 //!
 //! * [`Runtime`] (the PJRT client) — real AOT artifacts, needs
 //!   `make artifacts` plus the real `xla` bindings;
-//! * [`HostKernels`] — pure-Rust reference implementations of the exact
-//!   kernel contracts the artifacts export (streaming-softmax chunk
+//! * [`HostKernels`] — pure-Rust implementations of the exact kernel
+//!   contracts the artifacts export (streaming-softmax chunk
 //!   forward/backward, rescale merge, finalize, and the monolithic
-//!   `full_attn_ref` oracle), GQA-aware. Runs on a bare checkout, so the
-//!   prefetch-engine stress tests, `repro trace`, and the executor
-//!   micro-bench all execute the *real* executor end to end;
+//!   `full_attn_ref` oracle), GQA-aware. Two interchangeable paths live
+//!   behind it (see [`crate::runtime::kernel`]): the tiled/vectorized
+//!   throughput path (default, optionally multi-threaded) and the
+//!   original scalar oracle (`HostKernels::scalar()`). Runs on a bare
+//!   checkout, so the prefetch-engine stress tests, `repro trace`, and
+//!   the executor micro-bench all execute the *real* executor end to end;
 //! * [`NullKernels`] — zero-work shape echo (outputs are refcount bumps of
 //!   correctly-shaped inputs). Used by the transport micro-bench: kernel
 //!   time is identical across send-path variants by construction, so the
@@ -25,6 +28,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::client::Runtime;
+use super::kernel::{f32t, scalar, tiled};
 use super::tensor::{Tensor, Value};
 
 /// Anything that can execute a named attention kernel. The threaded
@@ -40,278 +44,117 @@ impl Kernels for Runtime {
     }
 }
 
-fn f32t<'a>(name: &str, inputs: &'a [Value], i: usize) -> Result<&'a Tensor> {
-    match inputs.get(i) {
-        Some(Value::F32(t)) => Ok(t),
-        Some(Value::I32(_)) => bail!("{name}: input {i} must be f32"),
-        None => bail!("{name}: missing input {i}"),
+/// Which host implementation a [`HostKernels`] instance dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The original row-at-a-time reference — the correctness oracle.
+    Scalar,
+    /// Cache-blocked, vectorized, optionally multi-threaded.
+    Tiled,
+}
+
+/// Pure-Rust host backend (see module docs). Defaults to the tiled path
+/// at one thread, which keeps runs deterministic while being several
+/// times faster than the scalar oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct HostKernels {
+    mode: KernelMode,
+    threads: usize,
+}
+
+impl Default for HostKernels {
+    fn default() -> Self {
+        Self::tiled(1)
     }
 }
 
-fn dims3(name: &str, t: &Tensor) -> Result<(usize, usize, usize)> {
-    ensure!(t.shape.len() == 3, "{name}: expected rank-3, got {:?}", t.shape);
-    Ok((t.shape[0], t.shape[1], t.shape[2]))
-}
-
-/// q-head-group width for GQA: query head `h` reads kv head `h / group`.
-fn gqa_group(name: &str, h: usize, kvh: usize) -> Result<usize> {
-    ensure!(
-        kvh >= 1 && h % kvh == 0,
-        "{name}: {h} query heads not divisible by {kvh} kv heads"
-    );
-    Ok(h / kvh)
-}
-
-/// Streaming-softmax chunk forward: fold the `(q, k, v)` block into the
-/// running `(o, m, l)` accumulators — the paper's `attn(·)` kernel.
-/// `causal` marks the diagonal chunk pair (in-block lower-triangular mask).
-#[allow(clippy::too_many_arguments)]
-fn chunk_fwd(
-    name: &str,
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o0: &Tensor,
-    m0: &Tensor,
-    l0: &Tensor,
-    causal: bool,
-) -> Result<Vec<Tensor>> {
-    let (h, cq, d) = dims3(name, q)?;
-    let (kvh, ck, dk) = dims3(name, k)?;
-    ensure!(d == dk && k.shape == v.shape, "{name}: k/v shape mismatch");
-    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
-    ensure!(o0.shape == q.shape && m0.shape == [h, cq] && l0.shape == [h, cq]);
-    let group = gqa_group(name, h, kvh)?;
-    let scale = 1.0 / (d as f32).sqrt();
-    let (qd, kd, vd) = (q.data(), k.data(), v.data());
-    let mut o = o0.data().to_vec();
-    let mut m = m0.data().to_vec();
-    let mut l = l0.data().to_vec();
-    let mut s_row = vec![0.0f32; ck];
-    for hh in 0..h {
-        let g = hh / group;
-        for i in 0..cq {
-            let qrow = &qd[(hh * cq + i) * d..(hh * cq + i + 1) * d];
-            let jmax = if causal { i + 1 } else { ck };
-            let mut smax = f32::NEG_INFINITY;
-            for (j, s) in s_row.iter_mut().enumerate().take(jmax) {
-                let krow = &kd[(g * ck + j) * d..(g * ck + j + 1) * d];
-                let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
-                *s = dot * scale;
-                if *s > smax {
-                    smax = *s;
-                }
-            }
-            let ri = hh * cq + i;
-            let m_new = m[ri].max(smax);
-            // exp(-inf - finite) is 0, but -inf - -inf is NaN: the initial
-            // accumulator carries zero weight either way
-            let alpha = if m[ri] == f32::NEG_INFINITY { 0.0 } else { (m[ri] - m_new).exp() };
-            let orow = &mut o[ri * d..(ri + 1) * d];
-            for x in orow.iter_mut() {
-                *x *= alpha;
-            }
-            let mut lsum = 0.0f32;
-            for (j, s) in s_row.iter().enumerate().take(jmax) {
-                let p = (s - m_new).exp();
-                lsum += p;
-                let vrow = &vd[(g * ck + j) * d..(g * ck + j + 1) * d];
-                for (x, vv) in orow.iter_mut().zip(vrow) {
-                    *x += p * vv;
-                }
-            }
-            l[ri] = l[ri] * alpha + lsum;
-            m[ri] = m_new;
-        }
+impl HostKernels {
+    /// The scalar oracle — the exact code every earlier numeric pin was
+    /// built on. Single-threaded by construction.
+    pub fn scalar() -> Self {
+        Self { mode: KernelMode::Scalar, threads: 1 }
     }
-    Ok(vec![
-        Tensor::new(q.shape.clone(), o),
-        Tensor::new(vec![h, cq], m),
-        Tensor::new(vec![h, cq], l),
-    ])
-}
 
-/// The paper's `rescale(·)`: merge two partial `(o, m, l)` triples (the
-/// helper's shipped partial into the owner's accumulator).
-fn rescale(name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
-    ensure!(inputs.len() == 6, "{name}: expected 6 inputs");
-    let o1 = f32t(name, inputs, 0)?;
-    let m1 = f32t(name, inputs, 1)?;
-    let l1 = f32t(name, inputs, 2)?;
-    let o2 = f32t(name, inputs, 3)?;
-    let m2 = f32t(name, inputs, 4)?;
-    let l2 = f32t(name, inputs, 5)?;
-    ensure!(o1.shape == o2.shape && m1.shape == m2.shape && l1.shape == l2.shape);
-    let (h, c, d) = dims3(name, o1)?;
-    ensure!(m1.shape == [h, c] && l1.shape == [h, c]);
-    let mut o = vec![0.0f32; h * c * d];
-    let mut m = vec![0.0f32; h * c];
-    let mut l = vec![0.0f32; h * c];
-    let (o1d, m1d, l1d) = (o1.data(), m1.data(), l1.data());
-    let (o2d, m2d, l2d) = (o2.data(), m2.data(), l2.data());
-    for ri in 0..h * c {
-        let mx = m1d[ri].max(m2d[ri]);
-        let a1 = if m1d[ri] == f32::NEG_INFINITY { 0.0 } else { (m1d[ri] - mx).exp() };
-        let a2 = if m2d[ri] == f32::NEG_INFINITY { 0.0 } else { (m2d[ri] - mx).exp() };
-        m[ri] = mx;
-        l[ri] = l1d[ri] * a1 + l2d[ri] * a2;
-        for t in 0..d {
-            o[ri * d + t] = o1d[ri * d + t] * a1 + o2d[ri * d + t] * a2;
-        }
+    /// The tiled/vectorized path on `threads` workers (clamped to ≥ 1).
+    /// Results are bit-identical across thread counts — see
+    /// [`crate::runtime::kernel`].
+    pub fn tiled(threads: usize) -> Self {
+        Self { mode: KernelMode::Tiled, threads: threads.max(1) }
     }
-    Ok(vec![
-        Tensor::new(o1.shape.clone(), o),
-        Tensor::new(m1.shape.clone(), m),
-        Tensor::new(l1.shape.clone(), l),
-    ])
-}
 
-/// The paper's `last = True` epilogue: normalize and emit the logsumexp.
-fn finalize(name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
-    ensure!(inputs.len() == 3, "{name}: expected 3 inputs");
-    let o = f32t(name, inputs, 0)?;
-    let m = f32t(name, inputs, 1)?;
-    let l = f32t(name, inputs, 2)?;
-    let (h, c, d) = dims3(name, o)?;
-    ensure!(m.shape == [h, c] && l.shape == [h, c]);
-    let (od, md, ld) = (o.data(), m.data(), l.data());
-    let mut out = vec![0.0f32; h * c * d];
-    let mut lse = vec![0.0f32; h * c];
-    for ri in 0..h * c {
-        ensure!(ld[ri] > 0.0, "{name}: empty softmax row {ri}");
-        let inv = 1.0 / ld[ri];
-        for t in 0..d {
-            out[ri * d + t] = od[ri * d + t] * inv;
-        }
-        lse[ri] = md[ri] + ld[ri].ln();
+    pub fn mode(&self) -> KernelMode {
+        self.mode
     }
-    Ok(vec![Tensor::new(o.shape.clone(), out), Tensor::new(m.shape.clone(), lse)])
-}
 
-/// FA2-style chunk-pair backward from the saved `o`/`lse` — no forward
-/// recompute (the §3.3 rematerialization-aware payoff). Returns
-/// `(dq, dk, dv)`; dk/dv are grouped to the kv heads (GQA grads sum over
-/// each query group).
-#[allow(clippy::too_many_arguments)]
-fn chunk_bwd(
-    name: &str,
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    lse: &Tensor,
-    do_: &Tensor,
-    causal: bool,
-) -> Result<Vec<Tensor>> {
-    let (h, cq, d) = dims3(name, q)?;
-    let (kvh, ck, dk_) = dims3(name, k)?;
-    ensure!(d == dk_ && k.shape == v.shape, "{name}: k/v shape mismatch");
-    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
-    ensure!(o.shape == q.shape && do_.shape == q.shape && lse.shape == [h, cq]);
-    let group = gqa_group(name, h, kvh)?;
-    let scale = 1.0 / (d as f32).sqrt();
-    let (qd, kd, vd) = (q.data(), k.data(), v.data());
-    let (od, ld, dod) = (o.data(), lse.data(), do_.data());
-    let mut dq = vec![0.0f32; h * cq * d];
-    let mut dkv_k = vec![0.0f32; kvh * ck * d];
-    let mut dkv_v = vec![0.0f32; kvh * ck * d];
-    for hh in 0..h {
-        let g = hh / group;
-        for i in 0..cq {
-            let ri = hh * cq + i;
-            let qrow = &qd[ri * d..(ri + 1) * d];
-            let orow = &od[ri * d..(ri + 1) * d];
-            let dorow = &dod[ri * d..(ri + 1) * d];
-            let delta: f32 = dorow.iter().zip(orow).map(|(a, b)| a * b).sum();
-            let jmax = if causal { i + 1 } else { ck };
-            for j in 0..jmax {
-                let cj = g * ck + j;
-                let krow = &kd[cj * d..(cj + 1) * d];
-                let vrow = &vd[cj * d..(cj + 1) * d];
-                let s: f32 =
-                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
-                let p = (s - ld[ri]).exp();
-                let dp: f32 = dorow.iter().zip(vrow).map(|(a, b)| a * b).sum();
-                let ds = p * (dp - delta);
-                let dqrow = &mut dq[ri * d..(ri + 1) * d];
-                for (x, kk) in dqrow.iter_mut().zip(krow) {
-                    *x += ds * scale * kk;
-                }
-                let dkrow = &mut dkv_k[cj * d..(cj + 1) * d];
-                for (x, qq) in dkrow.iter_mut().zip(qrow) {
-                    *x += ds * scale * qq;
-                }
-                let dvrow = &mut dkv_v[cj * d..(cj + 1) * d];
-                for (x, dd) in dvrow.iter_mut().zip(dorow) {
-                    *x += p * dd;
-                }
-            }
-        }
+    pub fn threads(&self) -> usize {
+        self.threads
     }
-    Ok(vec![
-        Tensor::new(q.shape.clone(), dq),
-        Tensor::new(k.shape.clone(), dkv_k),
-        Tensor::new(v.shape.clone(), dkv_v),
-    ])
 }
-
-/// Monolithic causal attention over the whole sequence — the oracle the
-/// distributed executor is checked against. Returns `(o, lse)`.
-fn full_attn_ref(name: &str, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Vec<Tensor>> {
-    let (h, n, _d) = dims3(name, q)?;
-    let o0 = Tensor::zeros(&q.shape);
-    let m0 = Tensor::full(&[h, n], f32::NEG_INFINITY);
-    let l0 = Tensor::zeros(&[h, n]);
-    let oml = chunk_fwd(name, q, k, v, &o0, &m0, &l0, true)?;
-    finalize(
-        name,
-        &[
-            Value::F32(oml[0].clone()),
-            Value::F32(oml[1].clone()),
-            Value::F32(oml[2].clone()),
-        ],
-    )
-}
-
-/// Pure-Rust reference backend (see module docs). Stateless.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct HostKernels;
 
 impl Kernels for HostKernels {
     fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         let t = |i: usize| f32t(name, inputs, i);
+        let tiled_mode = self.mode == KernelMode::Tiled;
         match name {
             "attn_fwd_diag" | "attn_fwd_full" => {
                 ensure!(inputs.len() == 6, "{name}: expected 6 inputs");
-                chunk_fwd(
-                    name,
-                    t(0)?,
-                    t(1)?,
-                    t(2)?,
-                    t(3)?,
-                    t(4)?,
-                    t(5)?,
-                    name == "attn_fwd_diag",
-                )
+                let causal = name == "attn_fwd_diag";
+                if tiled_mode {
+                    tiled::chunk_fwd(
+                        name,
+                        t(0)?,
+                        t(1)?,
+                        t(2)?,
+                        t(3)?,
+                        t(4)?,
+                        t(5)?,
+                        causal,
+                        self.threads,
+                    )
+                } else {
+                    scalar::chunk_fwd(name, t(0)?, t(1)?, t(2)?, t(3)?, t(4)?, t(5)?, causal)
+                }
             }
-            "attn_rescale" => rescale(name, inputs),
-            "attn_finalize" => finalize(name, inputs),
+            "attn_rescale" => {
+                if tiled_mode {
+                    tiled::rescale(name, inputs, self.threads)
+                } else {
+                    scalar::rescale(name, inputs)
+                }
+            }
+            "attn_finalize" => {
+                if tiled_mode {
+                    tiled::finalize(name, inputs, self.threads)
+                } else {
+                    scalar::finalize(name, inputs)
+                }
+            }
             "attn_bwd_diag" | "attn_bwd_full" => {
                 ensure!(inputs.len() == 6, "{name}: expected 6 inputs");
-                chunk_bwd(
-                    name,
-                    t(0)?,
-                    t(1)?,
-                    t(2)?,
-                    t(3)?,
-                    t(4)?,
-                    t(5)?,
-                    name == "attn_bwd_diag",
-                )
+                let causal = name == "attn_bwd_diag";
+                if tiled_mode {
+                    tiled::chunk_bwd(
+                        name,
+                        t(0)?,
+                        t(1)?,
+                        t(2)?,
+                        t(3)?,
+                        t(4)?,
+                        t(5)?,
+                        causal,
+                        self.threads,
+                    )
+                } else {
+                    scalar::chunk_bwd(name, t(0)?, t(1)?, t(2)?, t(3)?, t(4)?, t(5)?, causal)
+                }
             }
             "full_attn_ref" => {
                 ensure!(inputs.len() == 3, "{name}: expected 3 inputs");
-                full_attn_ref(name, t(0)?, t(1)?, t(2)?)
+                if tiled_mode {
+                    tiled::full_attn_ref(name, t(0)?, t(1)?, t(2)?, self.threads)
+                } else {
+                    scalar::full_attn_ref(name, t(0)?, t(1)?, t(2)?)
+                }
             }
             other => bail!("HostKernels: unknown kernel {other:?}"),
         }
@@ -360,7 +203,7 @@ mod tests {
         let q = rand3(&mut rng, [h, n, d]);
         let k = rand3(&mut rng, [kvh, n, d]);
         let v = rand3(&mut rng, [kvh, n, d]);
-        let kk = HostKernels;
+        let kk = HostKernels::default();
         let oracle = kk
             .run("full_attn_ref", &[q.clone().into(), k.clone().into(), v.clone().into()])
             .unwrap();
@@ -440,7 +283,7 @@ mod tests {
         let k = rand3(&mut rng, [kvh, n, d]);
         let v = rand3(&mut rng, [kvh, n, d]);
         let do_ = rand3(&mut rng, [h, n, d]);
-        let kk = HostKernels;
+        let kk = HostKernels::default();
         let fwd = kk
             .run("full_attn_ref", &[q.clone().into(), k.clone().into(), v.clone().into()])
             .unwrap();
@@ -492,6 +335,15 @@ mod tests {
         assert!(Tensor::cat_axis1(&dq).max_abs_diff(&mono[0]) < 1e-5);
         assert!(Tensor::cat_axis1(&dk).max_abs_diff(&mono[1]) < 1e-5);
         assert!(Tensor::cat_axis1(&dv).max_abs_diff(&mono[2]) < 1e-5);
+    }
+
+    #[test]
+    fn host_kernels_ctors_pin_mode_and_thread_floor() {
+        assert_eq!(HostKernels::default().mode(), KernelMode::Tiled);
+        assert_eq!(HostKernels::default().threads(), 1);
+        assert_eq!(HostKernels::scalar().mode(), KernelMode::Scalar);
+        assert_eq!(HostKernels::tiled(0).threads(), 1, "threads clamp to >= 1");
+        assert_eq!(HostKernels::tiled(6).threads(), 6);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Host flash-attention kernel implementations.
+//!
+//! Two interchangeable implementations of the same kernel contracts sit
+//! behind [`crate::runtime::HostKernels`]:
+//!
+//! * [`scalar`] — the original row-at-a-time reference: one full-width
+//!   score pass per q row, naive `zip().map().sum()` dot products. Kept
+//!   verbatim as the correctness oracle (`HostKernels::scalar()`), so the
+//!   fast path is always checked against the code every earlier pin was
+//!   built on.
+//! * [`tiled`] — the throughput path (`HostKernels::tiled(threads)`):
+//!   cache-blocked q×kv tiles with a blocked online softmax, fixed-width
+//!   accumulator arrays the compiler auto-vectorizes on stable Rust, and a
+//!   scoped-thread worker pool over independent (head, q-tile) units.
+//!
+//! The tiled kernels are deterministic *per thread count and across
+//! thread counts*: every floating-point reduction (a q row's online
+//! softmax over kv tiles, a kv column's gradient sum over query heads)
+//! runs in a fixed order that does not depend on how units were
+//! partitioned across workers. `threads=1` therefore reproduces
+//! `threads=8` bit-for-bit, and a pinned thread count reproduces a traced
+//! run exactly.
+
+pub mod scalar;
+pub mod tiled;
+
+use anyhow::{bail, ensure, Result};
+
+use super::tensor::{Tensor, Value};
+
+/// Fixed accumulator width for the vectorized inner loops. Eight f32
+/// lanes map onto one AVX2 register (or two NEON/SSE registers) and, more
+/// importantly, break the serial float-add dependency chain a naive
+/// `sum()` reduction compiles to.
+pub const LANES: usize = 8;
+
+pub(crate) fn f32t<'a>(name: &str, inputs: &'a [Value], i: usize) -> Result<&'a Tensor> {
+    match inputs.get(i) {
+        Some(Value::F32(t)) => Ok(t),
+        Some(Value::I32(_)) => bail!("{name}: input {i} must be f32"),
+        None => bail!("{name}: missing input {i}"),
+    }
+}
+
+pub(crate) fn dims3(name: &str, t: &Tensor) -> Result<(usize, usize, usize)> {
+    ensure!(t.shape.len() == 3, "{name}: expected rank-3, got {:?}", t.shape);
+    Ok((t.shape[0], t.shape[1], t.shape[2]))
+}
+
+/// q-head-group width for GQA: query head `h` reads kv head `h / group`.
+pub(crate) fn gqa_group(name: &str, h: usize, kvh: usize) -> Result<usize> {
+    ensure!(
+        kvh >= 1 && h % kvh == 0,
+        "{name}: {h} query heads not divisible by {kvh} kv heads"
+    );
+    Ok(h / kvh)
+}
+
+/// Dot product with [`LANES`] independent partial accumulators. A plain
+/// `iter().zip().map().sum()` is a single serial chain of float adds the
+/// compiler may not reorder; the fixed-width accumulator array vectorizes
+/// and pipelines on stable Rust with no intrinsics.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let tail: f32 = ca
+        .remainder()
+        .iter()
+        .zip(cb.remainder())
+        .map(|(x, y)| x * y)
+        .sum();
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let head =
+        ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    head + tail
+}
+
+/// `y += a * x`, stride-1 — independent elementwise ops, auto-vectorized.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy += a * xx;
+    }
+}
+
+/// `y += x`, stride-1.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yy, xx) in y.iter_mut().zip(x) {
+        *yy += xx;
+    }
+}
+
+/// `y *= a`, stride-1.
+#[inline]
+pub fn scale_row(y: &mut [f32], a: f32) {
+    for v in y.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Contiguous unit ranges per worker, balanced by per-unit cost. Returns
+/// at most `threads` non-empty ranges covering `0..costs.len()` in order —
+/// contiguity is what lets callers hand each worker one `split_at_mut`
+/// slice of the output instead of sharing it.
+pub(crate) fn partition(costs: &[f64], threads: usize) -> Vec<std::ops::Range<usize>> {
+    let n = costs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, n);
+    let total: f64 = costs.iter().sum();
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0usize;
+    let mut acc = 0.0f64;
+    for (i, c) in costs.iter().enumerate() {
+        acc += c;
+        let groups_left = t - out.len();
+        let units_left = n - i - 1;
+        if groups_left <= 1 || units_left == 0 {
+            continue; // the final group takes everything through n
+        }
+        // close at the running fair share, or when every remaining unit
+        // must open its own group to reach t
+        if acc >= total * (out.len() + 1) as f64 / t as f64 || units_left < groups_left {
+            out.push(start..i + 1);
+            start = i + 1;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+/// Even row ranges for uniform-cost elementwise stages (rescale,
+/// finalize): at most `threads` non-empty contiguous ranges over `0..n`.
+pub(crate) fn even_ranges(n: usize, threads: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let t = threads.clamp(1, n);
+    (0..t).map(|g| g * n / t..(g + 1) * n / t).filter(|r| !r.is_empty()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_on_awkward_lengths() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 33] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 0.5 - (i as f32) * 0.125).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn partition_covers_in_order_and_respects_thread_cap() {
+        for n in [1usize, 2, 5, 17] {
+            for t in [1usize, 2, 3, 8, 64] {
+                let costs: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+                let ranges = partition(&costs, t);
+                assert!(ranges.len() <= t.min(n));
+                assert_eq!(ranges.first().unwrap().start, 0);
+                assert_eq!(ranges.last().unwrap().end, n);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                    assert!(!w[0].is_empty() && !w[1].is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn even_ranges_cover_everything() {
+        for n in [1usize, 3, 10] {
+            for t in [1usize, 2, 4, 16] {
+                let rs = even_ranges(n, t);
+                let covered: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(covered, n);
+                assert!(rs.len() <= t.min(n));
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! The original row-at-a-time host kernels, kept verbatim as the
+//! correctness oracle for the tiled path (`HostKernels::scalar()`).
+//!
+//! One full-width score pass per q row with naive serial reductions — slow
+//! on purpose: this is the code every earlier numeric pin was built on, so
+//! `rust/tests/kernel_equivalence.rs` checks the [`super::tiled`] kernels
+//! against it directly.
+
+use anyhow::{ensure, Result};
+
+use super::{dims3, f32t, gqa_group};
+use crate::runtime::tensor::{Tensor, Value};
+
+/// Streaming-softmax chunk forward: fold the `(q, k, v)` block into the
+/// running `(o, m, l)` accumulators — the paper's `attn(·)` kernel.
+/// `causal` marks the diagonal chunk pair (in-block lower-triangular mask).
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_fwd(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o0: &Tensor,
+    m0: &Tensor,
+    l0: &Tensor,
+    causal: bool,
+) -> Result<Vec<Tensor>> {
+    let (h, cq, d) = dims3(name, q)?;
+    let (kvh, ck, dk) = dims3(name, k)?;
+    ensure!(d == dk && k.shape == v.shape, "{name}: k/v shape mismatch");
+    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
+    ensure!(o0.shape == q.shape && m0.shape == [h, cq] && l0.shape == [h, cq]);
+    let group = gqa_group(name, h, kvh)?;
+    let scale = 1.0 / (d as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let mut o = o0.data().to_vec();
+    let mut m = m0.data().to_vec();
+    let mut l = l0.data().to_vec();
+    let mut s_row = vec![0.0f32; ck];
+    for hh in 0..h {
+        let g = hh / group;
+        for i in 0..cq {
+            let qrow = &qd[(hh * cq + i) * d..(hh * cq + i + 1) * d];
+            let jmax = if causal { i + 1 } else { ck };
+            let mut smax = f32::NEG_INFINITY;
+            for (j, s) in s_row.iter_mut().enumerate().take(jmax) {
+                let krow = &kd[(g * ck + j) * d..(g * ck + j + 1) * d];
+                let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                *s = dot * scale;
+                if *s > smax {
+                    smax = *s;
+                }
+            }
+            let ri = hh * cq + i;
+            let m_new = m[ri].max(smax);
+            // exp(-inf - finite) is 0, but -inf - -inf is NaN: the initial
+            // accumulator carries zero weight either way
+            let alpha = if m[ri] == f32::NEG_INFINITY { 0.0 } else { (m[ri] - m_new).exp() };
+            let orow = &mut o[ri * d..(ri + 1) * d];
+            for x in orow.iter_mut() {
+                *x *= alpha;
+            }
+            let mut lsum = 0.0f32;
+            for (j, s) in s_row.iter().enumerate().take(jmax) {
+                let p = (s - m_new).exp();
+                lsum += p;
+                let vrow = &vd[(g * ck + j) * d..(g * ck + j + 1) * d];
+                for (x, vv) in orow.iter_mut().zip(vrow) {
+                    *x += p * vv;
+                }
+            }
+            l[ri] = l[ri] * alpha + lsum;
+            m[ri] = m_new;
+        }
+    }
+    Ok(vec![
+        Tensor::new(q.shape.clone(), o),
+        Tensor::new(vec![h, cq], m),
+        Tensor::new(vec![h, cq], l),
+    ])
+}
+
+/// The paper's `rescale(·)`: merge two partial `(o, m, l)` triples (the
+/// helper's shipped partial into the owner's accumulator).
+pub fn rescale(name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 6, "{name}: expected 6 inputs");
+    let o1 = f32t(name, inputs, 0)?;
+    let m1 = f32t(name, inputs, 1)?;
+    let l1 = f32t(name, inputs, 2)?;
+    let o2 = f32t(name, inputs, 3)?;
+    let m2 = f32t(name, inputs, 4)?;
+    let l2 = f32t(name, inputs, 5)?;
+    ensure!(o1.shape == o2.shape && m1.shape == m2.shape && l1.shape == l2.shape);
+    let (h, c, d) = dims3(name, o1)?;
+    ensure!(m1.shape == [h, c] && l1.shape == [h, c]);
+    let mut o = vec![0.0f32; h * c * d];
+    let mut m = vec![0.0f32; h * c];
+    let mut l = vec![0.0f32; h * c];
+    let (o1d, m1d, l1d) = (o1.data(), m1.data(), l1.data());
+    let (o2d, m2d, l2d) = (o2.data(), m2.data(), l2.data());
+    for ri in 0..h * c {
+        let mx = m1d[ri].max(m2d[ri]);
+        let a1 = if m1d[ri] == f32::NEG_INFINITY { 0.0 } else { (m1d[ri] - mx).exp() };
+        let a2 = if m2d[ri] == f32::NEG_INFINITY { 0.0 } else { (m2d[ri] - mx).exp() };
+        m[ri] = mx;
+        l[ri] = l1d[ri] * a1 + l2d[ri] * a2;
+        for t in 0..d {
+            o[ri * d + t] = o1d[ri * d + t] * a1 + o2d[ri * d + t] * a2;
+        }
+    }
+    Ok(vec![
+        Tensor::new(o1.shape.clone(), o),
+        Tensor::new(m1.shape.clone(), m),
+        Tensor::new(l1.shape.clone(), l),
+    ])
+}
+
+/// The paper's `last = True` epilogue: normalize and emit the logsumexp.
+pub fn finalize(name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 3, "{name}: expected 3 inputs");
+    let o = f32t(name, inputs, 0)?;
+    let m = f32t(name, inputs, 1)?;
+    let l = f32t(name, inputs, 2)?;
+    let (h, c, d) = dims3(name, o)?;
+    ensure!(m.shape == [h, c] && l.shape == [h, c]);
+    let (od, md, ld) = (o.data(), m.data(), l.data());
+    let mut out = vec![0.0f32; h * c * d];
+    let mut lse = vec![0.0f32; h * c];
+    for ri in 0..h * c {
+        ensure!(ld[ri] > 0.0, "{name}: empty softmax row {ri}");
+        let inv = 1.0 / ld[ri];
+        for t in 0..d {
+            out[ri * d + t] = od[ri * d + t] * inv;
+        }
+        lse[ri] = md[ri] + ld[ri].ln();
+    }
+    Ok(vec![Tensor::new(o.shape.clone(), out), Tensor::new(m.shape.clone(), lse)])
+}
+
+/// FA2-style chunk-pair backward from the saved `o`/`lse` — no forward
+/// recompute (the §3.3 rematerialization-aware payoff). Returns
+/// `(dq, dk, dv)`; dk/dv are grouped to the kv heads (GQA grads sum over
+/// each query group).
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_bwd(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    lse: &Tensor,
+    do_: &Tensor,
+    causal: bool,
+) -> Result<Vec<Tensor>> {
+    let (h, cq, d) = dims3(name, q)?;
+    let (kvh, ck, dk_) = dims3(name, k)?;
+    ensure!(d == dk_ && k.shape == v.shape, "{name}: k/v shape mismatch");
+    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
+    ensure!(o.shape == q.shape && do_.shape == q.shape && lse.shape == [h, cq]);
+    let group = gqa_group(name, h, kvh)?;
+    let scale = 1.0 / (d as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let (od, ld, dod) = (o.data(), lse.data(), do_.data());
+    let mut dq = vec![0.0f32; h * cq * d];
+    let mut dkv_k = vec![0.0f32; kvh * ck * d];
+    let mut dkv_v = vec![0.0f32; kvh * ck * d];
+    for hh in 0..h {
+        let g = hh / group;
+        for i in 0..cq {
+            let ri = hh * cq + i;
+            let qrow = &qd[ri * d..(ri + 1) * d];
+            let orow = &od[ri * d..(ri + 1) * d];
+            let dorow = &dod[ri * d..(ri + 1) * d];
+            let delta: f32 = dorow.iter().zip(orow).map(|(a, b)| a * b).sum();
+            let jmax = if causal { i + 1 } else { ck };
+            for j in 0..jmax {
+                let cj = g * ck + j;
+                let krow = &kd[cj * d..(cj + 1) * d];
+                let vrow = &vd[cj * d..(cj + 1) * d];
+                let s: f32 =
+                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+                let p = (s - ld[ri]).exp();
+                let dp: f32 = dorow.iter().zip(vrow).map(|(a, b)| a * b).sum();
+                let ds = p * (dp - delta);
+                let dqrow = &mut dq[ri * d..(ri + 1) * d];
+                for (x, kk) in dqrow.iter_mut().zip(krow) {
+                    *x += ds * scale * kk;
+                }
+                let dkrow = &mut dkv_k[cj * d..(cj + 1) * d];
+                for (x, qq) in dkrow.iter_mut().zip(qrow) {
+                    *x += ds * scale * qq;
+                }
+                let dvrow = &mut dkv_v[cj * d..(cj + 1) * d];
+                for (x, dd) in dvrow.iter_mut().zip(dorow) {
+                    *x += p * dd;
+                }
+            }
+        }
+    }
+    Ok(vec![
+        Tensor::new(q.shape.clone(), dq),
+        Tensor::new(k.shape.clone(), dkv_k),
+        Tensor::new(v.shape.clone(), dkv_v),
+    ])
+}
+
+/// Monolithic causal attention over the whole sequence — the oracle the
+/// distributed executor is checked against. Returns `(o, lse)`.
+pub fn full_attn_ref(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+) -> Result<Vec<Tensor>> {
+    let (h, n, _d) = dims3(name, q)?;
+    let o0 = Tensor::zeros(&q.shape);
+    let m0 = Tensor::full(&[h, n], f32::NEG_INFINITY);
+    let l0 = Tensor::zeros(&[h, n]);
+    let oml = chunk_fwd(name, q, k, v, &o0, &m0, &l0, true)?;
+    finalize(
+        name,
+        &[
+            Value::F32(oml[0].clone()),
+            Value::F32(oml[1].clone()),
+            Value::F32(oml[2].clone()),
+        ],
+    )
+}

@@ -1,0 +1,503 @@
+//! Cache-blocked, vectorized, optionally multi-threaded host flash
+//! kernels — the default `HostKernels` path.
+//!
+//! Three stacked optimizations over [`super::scalar`]:
+//!
+//! 1. **Tiling** — q rows × kv columns in `TILE_Q` × `TILE_K` blocks with
+//!    a blocked online softmax (running `(o, m, l)` per q row, one
+//!    max/rescale per kv tile instead of per full-width row pass), so a
+//!    kv tile (`TILE_K · d` floats) is reused from cache across a whole q
+//!    tile.
+//! 2. **Vectorization** — every inner reduction runs through
+//!    [`super::dot`]'s fixed-width accumulator array and every update
+//!    through stride-1 [`super::axpy`]/[`super::scale_row`] loops, which
+//!    stable Rust auto-vectorizes (no `std::simd`, no intrinsics).
+//! 3. **Parallelism** — a `std::thread::scope` worker pool partitions
+//!    independent (head, q-tile) units (forward) or heads (backward)
+//!    into contiguous, cost-balanced groups; each worker owns a disjoint
+//!    `split_at_mut` slice of the output, so the partition needs no
+//!    locks and no unsafe.
+//!
+//! Determinism: each q row's kv reduction happens inside one unit in a
+//! fixed tile order, and kv-head gradients are accumulated into
+//! per-query-head partials that are reduced sequentially in head order
+//! after the pool joins — so results are bit-identical for every thread
+//! count. (They differ from [`super::scalar`] in rounding only: the
+//! blocked softmax rescales per tile where the scalar path rescales once
+//! per row.)
+
+use std::mem;
+use std::ops::Range;
+use std::thread;
+
+use anyhow::{ensure, Result};
+
+use super::{add_assign, axpy, dims3, dot, even_ranges, f32t, gqa_group, partition, scale_row};
+use crate::runtime::tensor::{Tensor, Value};
+
+/// q rows per tile: one tile's running state (o rows + m + l) stays
+/// cache-resident while a kv tile streams past it.
+pub(crate) const TILE_Q: usize = 32;
+/// kv columns per tile: `TILE_K · d` floats of k (and v) per tile — 32 KiB
+/// at d=128, sized for L1/L2 reuse across the whole q tile.
+pub(crate) const TILE_K: usize = 64;
+
+/// Run one closure per task — inline when there is a single task, on a
+/// scoped worker pool otherwise. Tasks own disjoint output slices, so the
+/// pool needs no synchronization beyond the scope join.
+fn run_tasks<T: Send, F: Fn(T) + Sync>(tasks: Vec<T>, f: F) {
+    if tasks.len() <= 1 {
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    thread::scope(|s| {
+        for t in tasks {
+            let f = &f;
+            s.spawn(move || f(t));
+        }
+    });
+}
+
+/// Split `(o, m, l)` into per-group contiguous row slices (`rows·d` floats
+/// of `o`, `rows` of `m`/`l` per group).
+fn split3<'a>(
+    mut o: &'a mut [f32],
+    mut m: &'a mut [f32],
+    mut l: &'a mut [f32],
+    row_counts: &[usize],
+    d: usize,
+) -> Vec<(&'a mut [f32], &'a mut [f32], &'a mut [f32])> {
+    let mut out = Vec::with_capacity(row_counts.len());
+    for &rows in row_counts {
+        let (og, rest) = mem::take(&mut o).split_at_mut(rows * d);
+        o = rest;
+        let (mg, rest) = mem::take(&mut m).split_at_mut(rows);
+        m = rest;
+        let (lg, rest) = mem::take(&mut l).split_at_mut(rows);
+        l = rest;
+        out.push((og, mg, lg));
+    }
+    out
+}
+
+/// One (head, q-tile) unit of forward work: rows `i_lo..i_hi` of head
+/// `hh`, a contiguous block of the `(o, m, l)` outputs.
+struct FwdUnit {
+    hh: usize,
+    i_lo: usize,
+    i_hi: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fwd_unit(
+    u: &FwdUnit,
+    qd: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    group: usize,
+    cq: usize,
+    ck: usize,
+    d: usize,
+    causal: bool,
+    scale: f32,
+    o_u: &mut [f32],
+    m_u: &mut [f32],
+    l_u: &mut [f32],
+) {
+    let kbase = (u.hh / group) * ck;
+    let jlim = if causal { u.i_hi } else { ck };
+    let mut s_buf = [0.0f32; TILE_K];
+    let mut j0 = 0usize;
+    while j0 < jlim {
+        let jt = (j0 + TILE_K).min(jlim);
+        for (r, i) in (u.i_lo..u.i_hi).enumerate() {
+            let jmax = if causal { i + 1 } else { ck };
+            if j0 >= jmax {
+                continue;
+            }
+            let jhi = jt.min(jmax);
+            let qrow = &qd[(u.hh * cq + i) * d..][..d];
+            let mut smax = f32::NEG_INFINITY;
+            for j in j0..jhi {
+                let s = dot(qrow, &kd[(kbase + j) * d..][..d]) * scale;
+                s_buf[j - j0] = s;
+                if s > smax {
+                    smax = s;
+                }
+            }
+            let m_old = m_u[r];
+            let m_new = m_old.max(smax);
+            // exp(-inf - finite) is 0, but -inf - -inf is NaN: the initial
+            // accumulator carries zero weight either way
+            let alpha = if m_old == f32::NEG_INFINITY { 0.0 } else { (m_old - m_new).exp() };
+            let orow = &mut o_u[r * d..(r + 1) * d];
+            if alpha != 1.0 {
+                scale_row(orow, alpha);
+            }
+            let mut lsum = 0.0f32;
+            for j in j0..jhi {
+                let p = (s_buf[j - j0] - m_new).exp();
+                lsum += p;
+                axpy(orow, p, &vd[(kbase + j) * d..][..d]);
+            }
+            l_u[r] = l_u[r] * alpha + lsum;
+            m_u[r] = m_new;
+        }
+        j0 = jt;
+    }
+}
+
+/// Tiled streaming-softmax chunk forward — the contract of
+/// [`super::scalar::chunk_fwd`], blocked and parallel over (head, q-tile)
+/// units.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_fwd(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o0: &Tensor,
+    m0: &Tensor,
+    l0: &Tensor,
+    causal: bool,
+    threads: usize,
+) -> Result<Vec<Tensor>> {
+    let (h, cq, d) = dims3(name, q)?;
+    let (kvh, ck, dk) = dims3(name, k)?;
+    ensure!(d == dk && k.shape == v.shape, "{name}: k/v shape mismatch");
+    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
+    ensure!(o0.shape == q.shape && m0.shape == [h, cq] && l0.shape == [h, cq]);
+    let group = gqa_group(name, h, kvh)?;
+    let scale = 1.0 / (d as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let mut o = o0.data().to_vec();
+    let mut m = m0.data().to_vec();
+    let mut l = l0.data().to_vec();
+
+    let mut units = Vec::new();
+    let mut costs = Vec::new();
+    for hh in 0..h {
+        let mut i_lo = 0usize;
+        while i_lo < cq {
+            let i_hi = (i_lo + TILE_Q).min(cq);
+            // score-element count: the causal lower triangle makes late
+            // q tiles heavier, so the partition balances by work, not rows
+            let cost: f64 = if causal {
+                (i_lo..i_hi).map(|i| (i + 1) as f64).sum()
+            } else {
+                ((i_hi - i_lo) * ck) as f64
+            };
+            units.push(FwdUnit { hh, i_lo, i_hi });
+            costs.push(cost);
+            i_lo = i_hi;
+        }
+    }
+    let groups = partition(&costs, threads);
+    let row_counts: Vec<usize> = groups
+        .iter()
+        .map(|g| units[g.clone()].iter().map(|u| u.i_hi - u.i_lo).sum())
+        .collect();
+    let slices = split3(&mut o, &mut m, &mut l, &row_counts, d);
+    let tasks: Vec<(&[FwdUnit], (&mut [f32], &mut [f32], &mut [f32]))> = groups
+        .iter()
+        .zip(slices)
+        .map(|(g, s)| (&units[g.clone()], s))
+        .collect();
+    run_tasks(tasks, |(units, (o_g, m_g, l_g))| {
+        let mut row0 = 0usize;
+        for u in units {
+            let rows = u.i_hi - u.i_lo;
+            fwd_unit(
+                u,
+                qd,
+                kd,
+                vd,
+                group,
+                cq,
+                ck,
+                d,
+                causal,
+                scale,
+                &mut o_g[row0 * d..(row0 + rows) * d],
+                &mut m_g[row0..row0 + rows],
+                &mut l_g[row0..row0 + rows],
+            );
+            row0 += rows;
+        }
+    });
+    Ok(vec![
+        Tensor::new(q.shape.clone(), o),
+        Tensor::new(vec![h, cq], m),
+        Tensor::new(vec![h, cq], l),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bwd_head(
+    hh: usize,
+    qd: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    od: &[f32],
+    ld: &[f32],
+    dod: &[f32],
+    group: usize,
+    cq: usize,
+    ck: usize,
+    d: usize,
+    causal: bool,
+    scale: f32,
+    dq_h: &mut [f32],
+    pk_h: &mut [f32],
+    pv_h: &mut [f32],
+) {
+    let kbase = (hh / group) * ck;
+    let mut delta = [0.0f32; TILE_Q];
+    let mut i0 = 0usize;
+    while i0 < cq {
+        let it = (i0 + TILE_Q).min(cq);
+        for (r, i) in (i0..it).enumerate() {
+            let ri = hh * cq + i;
+            delta[r] = dot(&dod[ri * d..][..d], &od[ri * d..][..d]);
+        }
+        let jlim = if causal { it } else { ck };
+        let mut j0 = 0usize;
+        while j0 < jlim {
+            let jt = (j0 + TILE_K).min(jlim);
+            for (r, i) in (i0..it).enumerate() {
+                let jmax = if causal { i + 1 } else { ck };
+                if j0 >= jmax {
+                    continue;
+                }
+                let jhi = jt.min(jmax);
+                let ri = hh * cq + i;
+                let qrow = &qd[ri * d..][..d];
+                let dorow = &dod[ri * d..][..d];
+                let lse_i = ld[ri];
+                for j in j0..jhi {
+                    let krow = &kd[(kbase + j) * d..][..d];
+                    let vrow = &vd[(kbase + j) * d..][..d];
+                    let s = dot(qrow, krow) * scale;
+                    let p = (s - lse_i).exp();
+                    let dp = dot(dorow, vrow);
+                    let ds = p * (dp - delta[r]);
+                    let c = ds * scale;
+                    axpy(&mut dq_h[i * d..(i + 1) * d], c, krow);
+                    axpy(&mut pk_h[j * d..(j + 1) * d], c, qrow);
+                    axpy(&mut pv_h[j * d..(j + 1) * d], p, dorow);
+                }
+            }
+            j0 = jt;
+        }
+        i0 = it;
+    }
+}
+
+/// Tiled FA2-style chunk-pair backward — the contract of
+/// [`super::scalar::chunk_bwd`], parallel over query heads. Each head
+/// accumulates its kv gradients into a private partial; the partials are
+/// reduced sequentially in head order after the pool joins, so the GQA
+/// group sum has one fixed floating-point order for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_bwd(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    lse: &Tensor,
+    do_: &Tensor,
+    causal: bool,
+    threads: usize,
+) -> Result<Vec<Tensor>> {
+    let (h, cq, d) = dims3(name, q)?;
+    let (kvh, ck, dk_) = dims3(name, k)?;
+    ensure!(d == dk_ && k.shape == v.shape, "{name}: k/v shape mismatch");
+    ensure!(!causal || cq == ck, "{name}: causal needs square chunk pair");
+    ensure!(o.shape == q.shape && do_.shape == q.shape && lse.shape == [h, cq]);
+    let group = gqa_group(name, h, kvh)?;
+    let scale = 1.0 / (d as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let (od, ld, dod) = (o.data(), lse.data(), do_.data());
+    let mut dq = vec![0.0f32; h * cq * d];
+    let mut dkv_k = vec![0.0f32; kvh * ck * d];
+    let mut dkv_v = vec![0.0f32; kvh * ck * d];
+    // per-query-head kv-grad partials (always, even single-threaded, so
+    // the reduction order is one fixed thing rather than two code paths)
+    let mut pk = vec![0.0f32; h * ck * d];
+    let mut pv = vec![0.0f32; h * ck * d];
+
+    let groups = partition(&vec![1.0; h], threads);
+    let tasks: Vec<(Range<usize>, &mut [f32], &mut [f32], &mut [f32])> = {
+        let (mut dq_r, mut pk_r, mut pv_r) = (&mut dq[..], &mut pk[..], &mut pv[..]);
+        let mut out = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let heads = g.len();
+            let (dq_g, rest) = mem::take(&mut dq_r).split_at_mut(heads * cq * d);
+            dq_r = rest;
+            let (pk_g, rest) = mem::take(&mut pk_r).split_at_mut(heads * ck * d);
+            pk_r = rest;
+            let (pv_g, rest) = mem::take(&mut pv_r).split_at_mut(heads * ck * d);
+            pv_r = rest;
+            out.push((g.clone(), dq_g, pk_g, pv_g));
+        }
+        out
+    };
+    run_tasks(tasks, |(heads, dq_g, pk_g, pv_g)| {
+        for (n, hh) in heads.clone().enumerate() {
+            bwd_head(
+                hh,
+                qd,
+                kd,
+                vd,
+                od,
+                ld,
+                dod,
+                group,
+                cq,
+                ck,
+                d,
+                causal,
+                scale,
+                &mut dq_g[n * cq * d..(n + 1) * cq * d],
+                &mut pk_g[n * ck * d..(n + 1) * ck * d],
+                &mut pv_g[n * ck * d..(n + 1) * ck * d],
+            );
+        }
+    });
+    for hh in 0..h {
+        let g = hh / group;
+        add_assign(
+            &mut dkv_k[g * ck * d..(g + 1) * ck * d],
+            &pk[hh * ck * d..(hh + 1) * ck * d],
+        );
+        add_assign(
+            &mut dkv_v[g * ck * d..(g + 1) * ck * d],
+            &pv[hh * ck * d..(hh + 1) * ck * d],
+        );
+    }
+    Ok(vec![
+        Tensor::new(q.shape.clone(), dq),
+        Tensor::new(k.shape.clone(), dkv_k),
+        Tensor::new(v.shape.clone(), dkv_v),
+    ])
+}
+
+/// Vectorized `rescale(·)` merge — the contract of
+/// [`super::scalar::rescale`], parallel over contiguous row ranges.
+pub fn rescale(name: &str, inputs: &[Value], threads: usize) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 6, "{name}: expected 6 inputs");
+    let o1 = f32t(name, inputs, 0)?;
+    let m1 = f32t(name, inputs, 1)?;
+    let l1 = f32t(name, inputs, 2)?;
+    let o2 = f32t(name, inputs, 3)?;
+    let m2 = f32t(name, inputs, 4)?;
+    let l2 = f32t(name, inputs, 5)?;
+    ensure!(o1.shape == o2.shape && m1.shape == m2.shape && l1.shape == l2.shape);
+    let (h, c, d) = dims3(name, o1)?;
+    ensure!(m1.shape == [h, c] && l1.shape == [h, c]);
+    let rows = h * c;
+    let mut o = vec![0.0f32; rows * d];
+    let mut m = vec![0.0f32; rows];
+    let mut l = vec![0.0f32; rows];
+    let (o1d, m1d, l1d) = (o1.data(), m1.data(), l1.data());
+    let (o2d, m2d, l2d) = (o2.data(), m2.data(), l2.data());
+    let ranges = even_ranges(rows, threads);
+    let row_counts: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+    let slices = split3(&mut o, &mut m, &mut l, &row_counts, d);
+    let tasks: Vec<(Range<usize>, (&mut [f32], &mut [f32], &mut [f32]))> =
+        ranges.into_iter().zip(slices).collect();
+    run_tasks(tasks, |(range, (o_g, m_g, l_g))| {
+        let r0 = range.start;
+        for ri in range {
+            let mx = m1d[ri].max(m2d[ri]);
+            let a1 = if m1d[ri] == f32::NEG_INFINITY { 0.0 } else { (m1d[ri] - mx).exp() };
+            let a2 = if m2d[ri] == f32::NEG_INFINITY { 0.0 } else { (m2d[ri] - mx).exp() };
+            m_g[ri - r0] = mx;
+            l_g[ri - r0] = l1d[ri] * a1 + l2d[ri] * a2;
+            let out = &mut o_g[(ri - r0) * d..(ri - r0 + 1) * d];
+            let x1 = &o1d[ri * d..(ri + 1) * d];
+            let x2 = &o2d[ri * d..(ri + 1) * d];
+            for t in 0..d {
+                out[t] = x1[t] * a1 + x2[t] * a2;
+            }
+        }
+    });
+    Ok(vec![
+        Tensor::new(o1.shape.clone(), o),
+        Tensor::new(m1.shape.clone(), m),
+        Tensor::new(l1.shape.clone(), l),
+    ])
+}
+
+/// Vectorized finalize epilogue — the contract of
+/// [`super::scalar::finalize`], parallel over contiguous row ranges. Empty
+/// rows are rejected up front so the workers stay infallible.
+pub fn finalize(name: &str, inputs: &[Value], threads: usize) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 3, "{name}: expected 3 inputs");
+    let o = f32t(name, inputs, 0)?;
+    let m = f32t(name, inputs, 1)?;
+    let l = f32t(name, inputs, 2)?;
+    let (h, c, d) = dims3(name, o)?;
+    ensure!(m.shape == [h, c] && l.shape == [h, c]);
+    let (od, md, ld) = (o.data(), m.data(), l.data());
+    let rows = h * c;
+    for (ri, lv) in ld.iter().enumerate() {
+        ensure!(*lv > 0.0, "{name}: empty softmax row {ri}");
+    }
+    let mut out = vec![0.0f32; rows * d];
+    let mut lse = vec![0.0f32; rows];
+    let ranges = even_ranges(rows, threads);
+    let tasks: Vec<(Range<usize>, &mut [f32], &mut [f32])> = {
+        let (mut o_r, mut s_r) = (&mut out[..], &mut lse[..]);
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            let (og, rest) = mem::take(&mut o_r).split_at_mut(r.len() * d);
+            o_r = rest;
+            let (sg, rest) = mem::take(&mut s_r).split_at_mut(r.len());
+            s_r = rest;
+            tasks.push((r, og, sg));
+        }
+        tasks
+    };
+    run_tasks(tasks, |(range, o_g, s_g)| {
+        let r0 = range.start;
+        for ri in range {
+            let inv = 1.0 / ld[ri];
+            let dst = &mut o_g[(ri - r0) * d..(ri - r0 + 1) * d];
+            let src = &od[ri * d..(ri + 1) * d];
+            for t in 0..d {
+                dst[t] = src[t] * inv;
+            }
+            s_g[ri - r0] = md[ri] + ld[ri].ln();
+        }
+    });
+    Ok(vec![Tensor::new(o.shape.clone(), out), Tensor::new(m.shape.clone(), lse)])
+}
+
+/// Monolithic causal oracle on the tiled path — the contract of
+/// [`super::scalar::full_attn_ref`]. Returns `(o, lse)`.
+pub fn full_attn_ref(
+    name: &str,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    threads: usize,
+) -> Result<Vec<Tensor>> {
+    let (h, n, _d) = dims3(name, q)?;
+    let o0 = Tensor::zeros(&q.shape);
+    let m0 = Tensor::full(&[h, n], f32::NEG_INFINITY);
+    let l0 = Tensor::zeros(&[h, n]);
+    let oml = chunk_fwd(name, q, k, v, &o0, &m0, &l0, true, threads)?;
+    finalize(
+        name,
+        &[
+            Value::F32(oml[0].clone()),
+            Value::F32(oml[1].clone()),
+            Value::F32(oml[2].clone()),
+        ],
+        threads,
+    )
+}

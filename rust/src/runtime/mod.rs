@@ -8,9 +8,10 @@
 pub mod artifacts;
 pub mod client;
 pub mod hostref;
+pub mod kernel;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ModelConfigJson};
 pub use client::{Runtime, RuntimeStats};
-pub use hostref::{HostKernels, Kernels, NullKernels};
+pub use hostref::{HostKernels, KernelMode, Kernels, NullKernels};
 pub use tensor::{ITensor, Tensor, Value};

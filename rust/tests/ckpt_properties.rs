@@ -61,7 +61,7 @@ fn hf_recompute_is_bit_identical_to_remat_and_matches_oracle() {
     assert_eq!(hdv.max_abs_diff(&rdv), 0.0, "dv must be bit-identical");
 
     // and the distributed result matches the monolithic oracle
-    let oracle = HostKernels
+    let oracle = HostKernels::default()
         .run(
             "full_attn_ref",
             &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],

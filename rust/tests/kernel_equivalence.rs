@@ -1,0 +1,295 @@
+//! Tiled-kernel equivalence and determinism properties.
+//!
+//! The tiled/vectorized host kernels (`HostKernels::tiled`) replace the
+//! scalar originals as the executor's default, so two properties carry
+//! every numeric pin in the repo:
+//!
+//! * **agreement with the oracle** — tiled output matches the scalar
+//!   kernels within floating-point reassociation tolerance, across GQA
+//!   group sizes, ragged (cq != ck) chunk pairs, causal and full pairs,
+//!   nonzero initial accumulators, and adversarial sizes straddling the
+//!   tile boundaries (1, 7, 17, 31, 33, 63, 65, ...);
+//! * **bit-identity across thread counts** — the (head, q-tile) work
+//!   decomposition keeps every output row's reduction inside one unit in
+//!   a fixed order, so `tiled(n)` is *exactly* `tiled(1)` for every n,
+//!   which is what lets `RunSpec::threads` trade wall-clock without
+//!   perturbing traces or golden values.
+
+use distflash::coordinator::{RunSpec, ScheduleKind, Session, Workload};
+use distflash::runtime::{HostKernels, Kernels, Tensor, Value};
+use distflash::util::Rng;
+
+fn rand3(rng: &mut Rng, shape: [usize; 3]) -> Tensor {
+    Tensor::new(shape.to_vec(), rng.normal_vec(shape.iter().product()))
+}
+
+fn vals(ts: &[&Tensor]) -> Vec<Value> {
+    ts.iter().map(|t| Value::F32((*t).clone())).collect()
+}
+
+/// Assert `got` matches `want` within reassociation tolerance, scaled by
+/// the oracle's own magnitude.
+fn assert_close(what: &str, got: &Tensor, want: &Tensor, tol: f32) {
+    assert_eq!(got.shape, want.shape, "{what}: shape mismatch");
+    let scale = want.data().iter().fold(0.0f32, |a, x| a.max(x.abs()));
+    let diff = got.max_abs_diff(want);
+    assert!(
+        diff <= tol * (1.0 + scale),
+        "{what}: max |Δ| = {diff:e} exceeds {tol:e} * (1 + {scale:e})"
+    );
+}
+
+/// Assert `got` is bit-identical to `want` (thread-count determinism).
+fn assert_identical(what: &str, got: &Tensor, want: &Tensor) {
+    assert_eq!(got.shape, want.shape, "{what}: shape mismatch");
+    assert_eq!(got.max_abs_diff(want), 0.0, "{what}: not bit-identical");
+}
+
+/// (h, kvh, cq, ck, d) grid: MHA and GQA groupings, ragged pairs, and
+/// sizes placed on and around the TILE_Q=32 / TILE_K=64 / LANES=8 edges.
+const SHAPES: &[(usize, usize, usize, usize, usize)] = &[
+    (1, 1, 1, 1, 1),
+    (2, 1, 7, 5, 3),
+    (4, 2, 17, 17, 8),
+    (3, 3, 33, 31, 5),
+    (8, 2, 33, 33, 64),
+    (6, 3, 65, 65, 33),
+    (4, 1, 64, 128, 16),
+    (2, 2, 63, 63, 128),
+];
+
+/// Fresh (q, k, v, o0, m0, l0) forward inputs for one grid point.
+fn fwd_inputs(
+    rng: &mut Rng,
+    h: usize,
+    kvh: usize,
+    cq: usize,
+    ck: usize,
+    d: usize,
+) -> Vec<Value> {
+    let q = rand3(rng, [h, cq, d]);
+    let k = rand3(rng, [kvh, ck, d]);
+    let v = rand3(rng, [kvh, ck, d]);
+    let o0 = Tensor::zeros(&[h, cq, d]);
+    let m0 = Tensor::full(&[h, cq], f32::NEG_INFINITY);
+    let l0 = Tensor::zeros(&[h, cq]);
+    vals(&[&q, &k, &v, &o0, &m0, &l0])
+}
+
+#[test]
+fn chunk_fwd_matches_scalar_across_shapes() {
+    let mut rng = Rng::new(1);
+    for &(h, kvh, cq, ck, d) in SHAPES {
+        for name in ["attn_fwd_full", "attn_fwd_diag"] {
+            if name == "attn_fwd_diag" && cq != ck {
+                continue;
+            }
+            let inputs = fwd_inputs(&mut rng, h, kvh, cq, ck, d);
+            let want = HostKernels::scalar().run(name, &inputs).unwrap();
+            let got = HostKernels::tiled(1).run(name, &inputs).unwrap();
+            let what = format!("{name} h{h}/kvh{kvh} {cq}x{ck} d{d}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_close(&what, g, w, 1e-4);
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_fwd_matches_scalar_from_nonzero_accumulators() {
+    // chain two kv chunks: the second fold starts from a live (o, m, l)
+    // state, exercising the alpha-rescale path in both implementations
+    let mut rng = Rng::new(2);
+    for &(h, kvh, cq, _, d) in &[(4usize, 2usize, 33usize, 0usize, 24usize), (3, 1, 17, 0, 7)] {
+        let q = rand3(&mut rng, [h, cq, d]);
+        let k1 = rand3(&mut rng, [kvh, 19, d]);
+        let v1 = rand3(&mut rng, [kvh, 19, d]);
+        let k2 = rand3(&mut rng, [kvh, 65, d]);
+        let v2 = rand3(&mut rng, [kvh, 65, d]);
+        let o0 = Tensor::zeros(&[h, cq, d]);
+        let m0 = Tensor::full(&[h, cq], f32::NEG_INFINITY);
+        let l0 = Tensor::zeros(&[h, cq]);
+        let run2 = |kk: &HostKernels| -> Vec<Tensor> {
+            let s1 = kk
+                .run("attn_fwd_full", &vals(&[&q, &k1, &v1, &o0, &m0, &l0]))
+                .unwrap();
+            kk.run("attn_fwd_full", &vals(&[&q, &k2, &v2, &s1[0], &s1[1], &s1[2]]))
+                .unwrap()
+        };
+        let want = run2(&HostKernels::scalar());
+        let got = run2(&HostKernels::tiled(1));
+        for (g, w) in got.iter().zip(&want) {
+            assert_close(&format!("chained fwd h{h} cq{cq} d{d}"), g, w, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn chunk_bwd_matches_scalar_across_shapes() {
+    let mut rng = Rng::new(3);
+    for &(h, kvh, cq, ck, d) in SHAPES {
+        for name in ["attn_bwd_full", "attn_bwd_diag"] {
+            if name == "attn_bwd_diag" && cq != ck {
+                continue;
+            }
+            let q = rand3(&mut rng, [h, cq, d]);
+            let k = rand3(&mut rng, [kvh, ck, d]);
+            let v = rand3(&mut rng, [kvh, ck, d]);
+            let do_ = rand3(&mut rng, [h, cq, d]);
+            // a consistent (o, lse) pair from a real forward over the pair
+            let causal = name == "attn_bwd_diag";
+            let fwd_name = if causal { "attn_fwd_diag" } else { "attn_fwd_full" };
+            let o0 = Tensor::zeros(&[h, cq, d]);
+            let m0 = Tensor::full(&[h, cq], f32::NEG_INFINITY);
+            let l0 = Tensor::zeros(&[h, cq]);
+            let oml = HostKernels::scalar()
+                .run(fwd_name, &vals(&[&q, &k, &v, &o0, &m0, &l0]))
+                .unwrap();
+            let fin = HostKernels::scalar()
+                .run("attn_finalize", &vals(&[&oml[0], &oml[1], &oml[2]]))
+                .unwrap();
+            let inputs = vals(&[&q, &k, &v, &fin[0], &fin[1], &do_]);
+            let want = HostKernels::scalar().run(name, &inputs).unwrap();
+            let got = HostKernels::tiled(1).run(name, &inputs).unwrap();
+            let what = format!("{name} h{h}/kvh{kvh} {cq}x{ck} d{d}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_close(&what, g, w, 2e-4);
+            }
+        }
+    }
+}
+
+#[test]
+fn rescale_and_finalize_match_scalar() {
+    let mut rng = Rng::new(4);
+    for &(h, kvh, c, _, d) in &[(4usize, 2usize, 33usize, 0usize, 40usize), (2, 1, 9, 0, 3)] {
+        let q = rand3(&mut rng, [h, c, d]);
+        let o0 = Tensor::zeros(&[h, c, d]);
+        let m0 = Tensor::full(&[h, c], f32::NEG_INFINITY);
+        let l0 = Tensor::zeros(&[h, c]);
+        // two partial states over different kv chunks, both from the oracle
+        // so the rescale/finalize inputs are identical across arms
+        let part = |rng: &mut Rng, ck: usize| -> Vec<Tensor> {
+            let k = rand3(rng, [kvh, ck, d]);
+            let v = rand3(rng, [kvh, ck, d]);
+            HostKernels::scalar()
+                .run("attn_fwd_full", &vals(&[&q, &k, &v, &o0, &m0, &l0]))
+                .unwrap()
+        };
+        let s1 = part(&mut rng, 21);
+        let s2 = part(&mut rng, 64);
+        let rin = vals(&[&s1[0], &s1[1], &s1[2], &s2[0], &s2[1], &s2[2]]);
+        let want = HostKernels::scalar().run("attn_rescale", &rin).unwrap();
+        let got = HostKernels::tiled(1).run("attn_rescale", &rin).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_close(&format!("rescale h{h} c{c} d{d}"), g, w, 1e-4);
+        }
+        let fin = vals(&[&want[0], &want[1], &want[2]]);
+        let want_f = HostKernels::scalar().run("attn_finalize", &fin).unwrap();
+        let got_f = HostKernels::tiled(1).run("attn_finalize", &fin).unwrap();
+        for (g, w) in got_f.iter().zip(&want_f) {
+            assert_close(&format!("finalize h{h} c{c} d{d}"), g, w, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn finalize_rejects_empty_rows_in_both_modes() {
+    let o = Tensor::zeros(&[1, 2, 4]);
+    let m = Tensor::full(&[1, 2], f32::NEG_INFINITY);
+    let l = Tensor::zeros(&[1, 2]);
+    let inputs = vals(&[&o, &m, &l]);
+    assert!(HostKernels::scalar().run("attn_finalize", &inputs).is_err());
+    assert!(HostKernels::tiled(1).run("attn_finalize", &inputs).is_err());
+    assert!(HostKernels::tiled(4).run("attn_finalize", &inputs).is_err());
+}
+
+#[test]
+fn full_attn_ref_matches_scalar() {
+    let mut rng = Rng::new(5);
+    for &(h, kvh, n, d) in &[(4usize, 2usize, 65usize, 32usize), (2, 1, 33, 128), (1, 1, 1, 1)] {
+        let q = rand3(&mut rng, [h, n, d]);
+        let k = rand3(&mut rng, [kvh, n, d]);
+        let v = rand3(&mut rng, [kvh, n, d]);
+        let inputs = vals(&[&q, &k, &v]);
+        let want = HostKernels::scalar().run("full_attn_ref", &inputs).unwrap();
+        let got = HostKernels::tiled(1).run("full_attn_ref", &inputs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_close(&format!("full_attn_ref h{h} n{n} d{d}"), g, w, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(6);
+    let (h, kvh, cq, ck, d) = (6, 3, 65, 65, 33);
+    let q = rand3(&mut rng, [h, cq, d]);
+    let k = rand3(&mut rng, [kvh, ck, d]);
+    let v = rand3(&mut rng, [kvh, ck, d]);
+    let do_ = rand3(&mut rng, [h, cq, d]);
+    let o0 = Tensor::zeros(&[h, cq, d]);
+    let m0 = Tensor::full(&[h, cq], f32::NEG_INFINITY);
+    let l0 = Tensor::zeros(&[h, cq]);
+    let fwd = vals(&[&q, &k, &v, &o0, &m0, &l0]);
+    let oml = HostKernels::tiled(1).run("attn_fwd_diag", &fwd).unwrap();
+    let fin_in = vals(&[&oml[0], &oml[1], &oml[2]]);
+    let fin = HostKernels::tiled(1).run("attn_finalize", &fin_in).unwrap();
+    let bwd = vals(&[&q, &k, &v, &fin[0], &fin[1], &do_]);
+    let resc = vals(&[&oml[0], &oml[1], &oml[2], &oml[0], &oml[1], &oml[2]]);
+    let full = vals(&[&q, &k, &v]);
+    for (name, inputs) in [
+        ("attn_fwd_full", &fwd),
+        ("attn_fwd_diag", &fwd),
+        ("attn_rescale", &resc),
+        ("attn_finalize", &fin_in),
+        ("attn_bwd_full", &bwd),
+        ("attn_bwd_diag", &bwd),
+        ("full_attn_ref", &full),
+    ] {
+        let base = HostKernels::tiled(1).run(name, inputs).unwrap();
+        for threads in [2usize, 3, 8] {
+            let got = HostKernels::tiled(threads).run(name, inputs).unwrap();
+            assert_eq!(base.len(), got.len(), "{name}: output arity");
+            for (g, w) in got.iter().zip(&base) {
+                assert_identical(&format!("{name} @ {threads} threads"), g, w);
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_rejects_zero_threads() {
+    let mut spec = RunSpec::host(ScheduleKind::Balanced, 2, Workload::new(2, 2, 8, 16));
+    spec.threads = 0;
+    let err = Session::new(spec).err().expect("threads=0 must be rejected");
+    assert!(err.to_string().contains("threads"), "unexpected error: {err}");
+}
+
+#[test]
+fn executed_run_is_bit_identical_across_thread_counts_and_records_them() {
+    let run_with = |threads: usize| {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, 2, Workload::new(4, 2, 16, 24));
+        spec.trace = true;
+        spec.threads = threads;
+        spec.seed = 9;
+        let mut s = Session::new(spec).unwrap();
+        s.execute().unwrap();
+        let recorded = s.trace().unwrap().fwd.threads;
+        let r = s.take_run().unwrap();
+        (r.result, recorded)
+    };
+    let (base, rec1) = run_with(1);
+    assert_eq!(rec1, 1, "threads=1 must be recorded as-is");
+    let (multi, rec3) = run_with(3);
+    assert!(
+        (1..=3).contains(&rec3),
+        "effective threads must be clamped to 1..=requested, got {rec3}"
+    );
+    assert_eq!(base.o.max_abs_diff(&multi.o), 0.0, "o must be bit-identical");
+    assert_eq!(base.lse.max_abs_diff(&multi.lse), 0.0, "lse must be bit-identical");
+    let (gb, gm) = (base.grads.as_ref().unwrap(), multi.grads.as_ref().unwrap());
+    assert_eq!(gb.0.max_abs_diff(&gm.0), 0.0, "dq must be bit-identical");
+    assert_eq!(gb.1.max_abs_diff(&gm.1), 0.0, "dk must be bit-identical");
+    assert_eq!(gb.2.max_abs_diff(&gm.2), 0.0, "dv must be bit-identical");
+}

@@ -93,7 +93,7 @@ fn run_layers(
             if skew {
                 thread::sleep(Duration::from_millis(3 * rank as u64));
             }
-            let kernels = HostKernels;
+            let kernels = HostKernels::default();
             let mut out = Vec::new();
             for layer in 0..layers {
                 let (o, lse) = {
@@ -132,7 +132,7 @@ fn run_layers(
 fn host_executor_matches_oracle_p8_both_schedules() {
     let p = 8;
     let (q, k, v, do_) = inputs(p, 42);
-    let oracle = HostKernels
+    let oracle = HostKernels::default()
         .run(
             "full_attn_ref",
             &[
@@ -144,7 +144,7 @@ fn host_executor_matches_oracle_p8_both_schedules() {
         .unwrap();
     // monolithic causal backward over the whole sequence (one diag kernel
     // spanning N) — the gradient oracle
-    let grads_ref = HostKernels
+    let grads_ref = HostKernels::default()
         .run(
             "attn_bwd_diag",
             &[
@@ -284,7 +284,7 @@ fn executor_rejects_dataflow_plans_at_index_time() {
     let plan = Plan::ring_attention(4);
     let comms = build_network(4);
     let mut comm = comms.into_iter().next().unwrap();
-    let kernels = HostKernels;
+    let kernels = HostKernels::default();
     let ctx = AttnCtx {
         rank: 0,
         runtime: &kernels,
