@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace run
+.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace run chaos
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -15,17 +15,20 @@ bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
 # machine-readable optimizer + varlen-rebalancer + executor-transport +
-# checkpoint-strategy + host-kernel results -> BENCH_optimizer.json +
-# BENCH_varlen.json + BENCH_executor.json + BENCH_ckpt.json +
-# BENCH_kernels.json, tracked across PRs (CI runs this and uploads all
-# five as workflow artifacts). The executor rows run the real threaded
-# executor with null kernels (clone-vs-Arc send path A/B); pass
-# `--skip-exec` to repro bench to omit them. The ckpt rows run the joint
-# checkpoint x prefetch search at 64K tokens plus a HostRef-executed twin
-# per strategy. The kernel rows time scalar vs tiled vs multi-threaded
-# flash kernels; CI gates tiled >= 5x scalar at one thread.
+# checkpoint-strategy + host-kernel + fault-overhead results ->
+# BENCH_optimizer.json + BENCH_varlen.json + BENCH_executor.json +
+# BENCH_ckpt.json + BENCH_kernels.json + BENCH_faults.json, tracked
+# across PRs (CI runs this and uploads all six as workflow artifacts).
+# The executor rows run the real threaded executor with null kernels
+# (clone-vs-Arc send path A/B); pass `--skip-exec` to repro bench to omit
+# them. The ckpt rows run the joint checkpoint x prefetch search at 64K
+# tokens plus a HostRef-executed twin per strategy. The kernel rows time
+# scalar vs tiled vs multi-threaded flash kernels; CI gates tiled >= 5x
+# scalar at one thread. The fault rows A/B the zero-fault instrumented
+# comm path (armed all-zero FaultSpec) against the uninstrumented
+# baseline; CI gates the overhead at <= 5%.
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json --faults-out BENCH_faults.json
 
 # measured-vs-simulated per-op trace table (host-kernel executor)
 trace:
@@ -34,6 +37,11 @@ trace:
 # spec-driven Session pipeline smoke (host kernels, traced)
 run:
 	cargo run --release --bin repro -- run
+
+# seeded fault classes end to end: predicted vs executed makespan
+# degradation, plus the optimizer queried under a pinned straggler
+chaos:
+	cargo run --release --bin repro -- chaos --p 4
 
 tables:
 	cargo run --release --bin repro -- tables

@@ -229,7 +229,7 @@ fn main() {
             .map(|mut c| {
                 std::thread::spawn(move || {
                     let mut t = Tensor::full(&[1 << 20], c.rank as f32);
-                    c.all_reduce_sum(1, &mut t);
+                    c.all_reduce_sum(1, &mut t).unwrap();
                     black_box(t.data()[0]);
                 })
             })

@@ -16,17 +16,37 @@
 //! so a `recv` at compute time is a stash hit. Stash queues are
 //! `VecDeque`s: repeated same-tag messages pop FIFO in O(1).
 //!
+//! **Fault tolerance** (`coordinator::fault`): `recv` is sugar for
+//! [`WorkerComm::recv_deadline`], which returns
+//! `Result<Vec<Tensor>, CommError>` — a watchdog timeout instead of an
+//! unbounded hang. A failing rank calls
+//! [`WorkerComm::broadcast_abort`], and the poison message unwinds every
+//! peer's blocking receive into [`CommError::Aborted`]. When a seeded
+//! [`RankFaults`] is armed, sends pass through an injection pipeline:
+//! delayed messages are held back and released after later traffic (or at
+//! the next blocking receive — held traffic is always flushed before this
+//! rank blocks, so injection cannot deadlock the fabric), and dropped
+//! messages are retransmitted as duplicate-flagged copies that the
+//! receiver dedups by `(sender, seq)` — at-least-once delivery plus dedup
+//! gives exactly-once semantics, so chaos runs stay bit-identical.
+//! Per-(sender, tag) FIFO is preserved: a send on a lane first flushes any
+//! held traffic on that same lane.
+//!
 //! Per-worker byte counters feed the communication-volume reports (paper
-//! §D); the ring all-reduce implements the gradient synchronization the
+//! §D) and count *wire* copies (a retransmitted message pays per copy);
+//! the ring all-reduce implements the gradient synchronization the
 //! trainer needs (the paper trains with FSDP/DDP outside the attention —
 //! here parameters are replicated, so a plain ring all-reduce suffices).
 
 use std::collections::hash_map::Entry;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::fault::{CommError, ExecError, FaultEvent, RankFaults};
+use crate::coordinator::plan::Pass;
 use crate::runtime::Tensor;
 
 /// Message tag: unique per (semantic space, step, counter). Spaces keep
@@ -49,16 +69,48 @@ impl Tag {
     pub const BARRIER: u32 = 7;
     /// Raw plan-IR transfers (baseline plans outside the attention spaces).
     pub const RAW_XFER: u32 = 8;
+    /// Abort poison broadcasts. Matched by message kind, not tag — the
+    /// space exists only so aborts are recognizable in diagnostics.
+    pub const ABORT: u32 = 999;
 
     pub fn new(space: u32, a: u32, b: u32) -> Tag {
         Tag { space, a, b }
     }
 }
 
+/// Wire-level message class. `Data` is the fault-free fast path (no
+/// sequence bookkeeping, no dedup lookup on receive). `Dup` marks
+/// retransmitted copies of one logical message — the receiver delivers
+/// the first `(sender, seq)` it sees and drops the rest. `Abort` is the
+/// failure poison: it carries the origin's typed error and matches any
+/// pending receive.
+enum MsgKind {
+    Data,
+    Dup(u64),
+    Abort(ExecError),
+}
+
 struct Message {
     from: usize,
     tag: Tag,
+    kind: MsgKind,
     tensors: Vec<Tensor>,
+}
+
+/// A delayed logical send: its wire copies, parked until `release_after`
+/// more sends age it out (or a flush point releases it early).
+struct Held {
+    to: usize,
+    tag: Tag,
+    release_after: usize,
+    msgs: Vec<Message>,
+}
+
+/// What [`WorkerComm::accept`] made of one inbound message.
+enum Accepted {
+    Data(usize, Tag, Vec<Tensor>),
+    Duplicate,
+    Abort(ExecError),
 }
 
 /// Build the fully-connected mailbox fabric for `p` workers (identity
@@ -98,6 +150,13 @@ pub fn build_network_placed(p: usize, placement: &[usize]) -> Vec<WorkerComm> {
             stash: HashMap::new(),
             bytes_sent: bytes.clone(),
             deep_copy_sends: false,
+            faults: None,
+            deadline: None,
+            seq: 0,
+            seen_dups: HashSet::new(),
+            held: Vec::new(),
+            pending_abort: None,
+            failure: None,
         })
         .collect()
 }
@@ -114,6 +173,23 @@ pub struct WorkerComm {
     /// Legacy pre-zero-copy send path: materialize a private allocation
     /// for every payload tensor before it enters the channel.
     deep_copy_sends: bool,
+    /// Seeded fault injection for this rank; `None` is the uninstrumented
+    /// fast path (sends go straight to the wire, no rng draws).
+    faults: Option<RankFaults>,
+    /// Default watchdog budget applied by [`WorkerComm::recv`]; `None`
+    /// blocks unboundedly (the pre-fault-tolerance behavior).
+    deadline: Option<Duration>,
+    /// Logical-send counter backing `MsgKind::Dup` ids.
+    seq: u64,
+    /// `(sender, seq)` pairs already delivered — retransmit dedup.
+    seen_dups: HashSet<(usize, u64)>,
+    /// Delay-injected sends parked for reordering, insertion order.
+    held: Vec<Held>,
+    /// First abort poison observed; every later comm call fails with it.
+    pending_abort: Option<ExecError>,
+    /// This rank's own typed failure, recorded on the way out so the
+    /// session can report it (the vendored `anyhow` cannot downcast).
+    failure: Option<ExecError>,
 }
 
 impl WorkerComm {
@@ -123,55 +199,319 @@ impl WorkerComm {
         self.deep_copy_sends = on;
     }
 
+    /// Arm seeded fault injection for this rank.
+    pub fn set_faults(&mut self, faults: RankFaults) {
+        self.faults = Some(faults);
+    }
+
+    /// Install the default watchdog budget [`WorkerComm::recv`] applies.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    /// The default watchdog budget (see [`WorkerComm::set_deadline`]).
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// Record this rank's typed failure (first one wins).
+    pub fn record_failure(&mut self, e: ExecError) {
+        if self.failure.is_none() {
+            self.failure = Some(e);
+        }
+    }
+
+    /// The typed failure recorded on this rank, if any.
+    pub fn failure(&self) -> Option<&ExecError> {
+        self.failure.as_ref()
+    }
+
+    pub fn take_failure(&mut self) -> Option<ExecError> {
+        self.failure.take()
+    }
+
+    /// Drain the injection event log (empty when faults are unarmed).
+    pub fn take_fault_events(&mut self) -> Vec<FaultEvent> {
+        self.faults.as_mut().map(|f| f.take_events()).unwrap_or_default()
+    }
+
+    /// Executor step-boundary check: injected crash due at this (pass,
+    /// step), or a peer's abort already in flight. Two `Option` loads on
+    /// the fault-free path.
+    pub fn fault_check(&mut self, pass: Pass, step: usize) -> Result<(), ExecError> {
+        if self.faults.is_none() && self.pending_abort.is_none() {
+            return Ok(());
+        }
+        if let Some(f) = &mut self.faults {
+            if f.crash_due(pass, step) {
+                return Err(ExecError::InjectedCrash { rank: self.rank, step });
+            }
+        }
+        if self.pending_abort.is_none() {
+            self.drain_pending();
+        }
+        if let Some(origin) = &self.pending_abort {
+            return Err(ExecError::PeerFailed {
+                rank: origin.rank(),
+                step,
+                op: format!("{} step boundary", pass.name()),
+            });
+        }
+        Ok(())
+    }
+
+    /// Tell every peer this rank failed, so their blocking receives
+    /// unwind into [`CommError::Aborted`] instead of hanging. Best-effort
+    /// by design: a peer that already unwound has hung up, and that is
+    /// fine. Held (delay-injected) traffic is flushed first so the poison
+    /// cannot overtake real payloads this rank still owes.
+    pub fn broadcast_abort(&mut self, err: &ExecError) {
+        let _ = self.flush_all_held();
+        for to in 0..self.n_workers {
+            if to != self.rank {
+                let _ = self.senders[to].send(Message {
+                    from: self.rank,
+                    tag: Tag::new(Tag::ABORT, 0, 0),
+                    kind: MsgKind::Abort(err.clone()),
+                    tensors: Vec::new(),
+                });
+            }
+        }
+    }
+
     /// Non-blocking tagged send (the "second stream": returns immediately).
-    /// Zero-copy: the payload enters the channel as refcount bumps.
-    pub fn send(&self, to: usize, tag: Tag, tensors: Vec<Tensor>) {
+    /// Zero-copy: the payload enters the channel as refcount bumps. With
+    /// faults armed the message may be held back (delay/reorder) or
+    /// fanned into duplicate-flagged retransmit copies (drop injection) —
+    /// either way delivery is guaranteed and exactly-once.
+    pub fn send(&mut self, to: usize, tag: Tag, tensors: Vec<Tensor>) -> Result<(), CommError> {
         let tensors = if self.deep_copy_sends {
             tensors.iter().map(Tensor::deep_clone).collect()
         } else {
             tensors
         };
-        let nbytes: usize = tensors.iter().map(|t| t.numel() * 4).sum();
+        let fault = match &mut self.faults {
+            None => {
+                return self.wire(
+                    to,
+                    Message { from: self.rank, tag, kind: MsgKind::Data, tensors },
+                )
+            }
+            Some(f) => f.on_send(to, tag),
+        };
+        // every send ages earlier held traffic by one
+        self.age_held()?;
+        let msgs: Vec<Message> = if fault.copies == 1 {
+            vec![Message { from: self.rank, tag, kind: MsgKind::Data, tensors }]
+        } else {
+            self.seq += 1;
+            let seq = self.seq;
+            (0..fault.copies)
+                .map(|_| Message {
+                    from: self.rank,
+                    tag,
+                    kind: MsgKind::Dup(seq),
+                    tensors: tensors.clone(),
+                })
+                .collect()
+        };
+        if fault.hold_for > 0 {
+            // joins the park after any same-lane entries: FIFO preserved
+            self.held.push(Held { to, tag, release_after: fault.hold_for, msgs });
+            Ok(())
+        } else {
+            // same-lane held traffic must hit the wire first (FIFO)
+            self.flush_held_lane(to, tag)?;
+            for m in msgs {
+                self.wire(to, m)?;
+            }
+            Ok(())
+        }
+    }
+
+    /// Put one message on the wire, paying byte accounting per copy.
+    fn wire(&self, to: usize, msg: Message) -> Result<(), CommError> {
+        let nbytes: usize = msg.tensors.iter().map(|t| t.numel() * 4).sum();
         self.bytes_sent[self.rank].fetch_add(nbytes as u64, Ordering::Relaxed);
-        self.senders[to]
-            .send(Message { from: self.rank, tag, tensors })
-            .expect("peer hung up");
+        self.senders[to].send(msg).map_err(|_| CommError::Closed { peer: to })
+    }
+
+    /// Age held sends by one and release the ones whose hold expired.
+    fn age_held(&mut self) -> Result<(), CommError> {
+        if self.held.is_empty() {
+            return Ok(());
+        }
+        for h in &mut self.held {
+            h.release_after = h.release_after.saturating_sub(1);
+        }
+        let mut i = 0;
+        while i < self.held.len() {
+            if self.held[i].release_after == 0 {
+                let Held { to, msgs, .. } = self.held.remove(i);
+                for m in msgs {
+                    self.wire(to, m)?;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Release held sends on one `(to, tag)` lane, oldest first.
+    fn flush_held_lane(&mut self, to: usize, tag: Tag) -> Result<(), CommError> {
+        let mut i = 0;
+        while i < self.held.len() {
+            if self.held[i].to == to && self.held[i].tag == tag {
+                let Held { to: dest, msgs, .. } = self.held.remove(i);
+                for m in msgs {
+                    self.wire(dest, m)?;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Force every injected-delay message onto the wire now. Blocking
+    /// receives do this implicitly; call it at a pass boundary when this
+    /// rank will not block again but peers still expect its traffic.
+    pub fn flush_sends(&mut self) -> Result<(), CommError> {
+        self.flush_all_held()
+    }
+
+    /// Release everything parked, oldest first. Called before any
+    /// blocking wait (and on drop): a peer may be blocked on exactly this
+    /// traffic, so injection must never hold a message across a wait.
+    fn flush_all_held(&mut self) -> Result<(), CommError> {
+        while !self.held.is_empty() {
+            let Held { to, msgs, .. } = self.held.remove(0);
+            for m in msgs {
+                self.wire(to, m)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Classify one inbound message: abort poison, duplicate to drop, or
+    /// data to deliver.
+    fn accept(&mut self, msg: Message) -> Accepted {
+        match msg.kind {
+            MsgKind::Abort(e) => {
+                self.pending_abort = Some(e.clone());
+                Accepted::Abort(e)
+            }
+            MsgKind::Dup(seq) => {
+                if self.seen_dups.insert((msg.from, seq)) {
+                    Accepted::Data(msg.from, msg.tag, msg.tensors)
+                } else {
+                    Accepted::Duplicate
+                }
+            }
+            MsgKind::Data => Accepted::Data(msg.from, msg.tag, msg.tensors),
+        }
     }
 
     /// Sweep every message already sitting in the mailbox into the stash
     /// without blocking — the prefetch engine "posting receives ahead of
-    /// need". Returns how many messages were staged.
+    /// need". Returns how many payloads were staged (deduped retransmits
+    /// and abort poisons are absorbed, not staged).
     pub fn drain_pending(&mut self) -> usize {
         let mut n = 0;
         while let Ok(msg) = self.rx.try_recv() {
-            self.stash
-                .entry((msg.from, msg.tag))
-                .or_default()
-                .push_back(msg.tensors);
-            n += 1;
+            match self.accept(msg) {
+                Accepted::Data(from, tag, tensors) => {
+                    self.stash.entry((from, tag)).or_default().push_back(tensors);
+                    n += 1;
+                }
+                Accepted::Duplicate | Accepted::Abort(_) => {}
+            }
         }
         n
     }
 
-    /// Blocking tagged receive; a prefetched or out-of-order arrival is a
-    /// single-lookup stash hit.
-    pub fn recv(&mut self, from: usize, tag: Tag) -> Vec<Tensor> {
+    fn stash_pop(&mut self, from: usize, tag: Tag) -> Option<Vec<Tensor>> {
         if let Entry::Occupied(mut e) = self.stash.entry((from, tag)) {
+            // invariant violation if empty: entries are removed when drained
             let t = e.get_mut().pop_front().expect("stash entries are never empty");
             if e.get().is_empty() {
                 e.remove();
             }
-            return t;
+            return Some(t);
         }
+        None
+    }
+
+    /// Blocking tagged receive under this comm's default deadline (none
+    /// unless fault tolerance armed one — then a silent peer surfaces as
+    /// [`CommError::Timeout`] instead of a hang). A prefetched or
+    /// out-of-order arrival is a single-lookup stash hit.
+    pub fn recv(&mut self, from: usize, tag: Tag) -> Result<Vec<Tensor>, CommError> {
+        self.recv_deadline(from, tag, self.deadline)
+    }
+
+    /// Blocking tagged receive with an explicit watchdog budget.
+    /// `deadline: None` waits unboundedly. Fails fast on a peer's abort
+    /// poison ([`CommError::Aborted`]) — including one observed by an
+    /// earlier call — and flushes this rank's own held traffic before
+    /// blocking, so fault injection cannot self-deadlock.
+    pub fn recv_deadline(
+        &mut self,
+        from: usize,
+        tag: Tag,
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Tensor>, CommError> {
+        if let Some(origin) = &self.pending_abort {
+            return Err(CommError::Aborted { origin: Box::new(origin.clone()) });
+        }
+        if let Some(t) = self.stash_pop(from, tag) {
+            return Ok(t);
+        }
+        self.flush_all_held()?;
+        let start = Instant::now();
         loop {
-            let msg = self.rx.recv().expect("network closed while waiting");
-            if msg.from == from && msg.tag == tag {
-                return msg.tensors;
+            let msg = match deadline {
+                None => match self.rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return Err(CommError::Closed { peer: from }),
+                },
+                Some(d) => {
+                    let remaining = d.saturating_sub(start.elapsed());
+                    if remaining.is_zero() {
+                        return Err(CommError::Timeout {
+                            from,
+                            tag,
+                            waited_s: start.elapsed().as_secs_f64(),
+                        });
+                    }
+                    match self.rx.recv_timeout(remaining) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => {
+                            return Err(CommError::Timeout {
+                                from,
+                                tag,
+                                waited_s: start.elapsed().as_secs_f64(),
+                            })
+                        }
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return Err(CommError::Closed { peer: from })
+                        }
+                    }
+                }
+            };
+            match self.accept(msg) {
+                Accepted::Abort(origin) => {
+                    return Err(CommError::Aborted { origin: Box::new(origin) })
+                }
+                Accepted::Duplicate => {}
+                Accepted::Data(f, t, tensors) => {
+                    if f == from && t == tag {
+                        return Ok(tensors);
+                    }
+                    self.stash.entry((f, t)).or_default().push_back(tensors);
+                }
             }
-            self.stash
-                .entry((msg.from, msg.tag))
-                .or_default()
-                .push_back(msg.tensors);
         }
     }
 
@@ -193,10 +533,10 @@ impl WorkerComm {
     /// `flat_view`s: `t` is mutated right after every hop, so a shared
     /// buffer would trigger a whole-tensor copy-on-write per hop — worse
     /// than the n/p segment copy.
-    pub fn all_reduce_sum(&mut self, round: u32, t: &mut Tensor) {
+    pub fn all_reduce_sum(&mut self, round: u32, t: &mut Tensor) -> Result<(), CommError> {
         let p = self.n_workers;
         if p == 1 {
-            return;
+            return Ok(());
         }
         let n = t.numel();
         // segment boundaries (last segment absorbs the remainder)
@@ -218,8 +558,8 @@ impl WorkerComm {
                 vec![seg(send_seg).len()],
                 t.data()[seg(send_seg)].to_vec(),
             );
-            self.send(next, tag, vec![payload]);
-            let got = self.recv(prev, tag);
+            self.send(next, tag, vec![payload])?;
+            let got = self.recv(prev, tag)?;
             let r = seg(recv_seg);
             for (dst, src) in t.data_mut()[r].iter_mut().zip(got[0].data()) {
                 *dst += src;
@@ -234,52 +574,62 @@ impl WorkerComm {
                 vec![seg(send_seg).len()],
                 t.data()[seg(send_seg)].to_vec(),
             );
-            self.send(next, tag, vec![payload]);
-            let got = self.recv(prev, tag);
+            self.send(next, tag, vec![payload])?;
+            let got = self.recv(prev, tag)?;
             let r = seg(recv_seg);
             t.data_mut()[r].copy_from_slice(got[0].data());
         }
+        Ok(())
     }
 
     /// All-gather a per-worker tensor; returns all P tensors in rank order.
-    pub fn all_gather(&mut self, round: u32, t: &Tensor) -> Vec<Tensor> {
+    pub fn all_gather(&mut self, round: u32, t: &Tensor) -> Result<Vec<Tensor>, CommError> {
         let tag = Tag::new(Tag::GATHER, round, 0);
         for to in 0..self.n_workers {
             if to != self.rank {
-                self.send(to, tag, vec![t.clone()]);
+                self.send(to, tag, vec![t.clone()])?;
             }
         }
         (0..self.n_workers)
             .map(|from| {
                 if from == self.rank {
-                    t.clone()
+                    Ok(t.clone())
                 } else {
-                    self.recv(from, tag).remove(0)
+                    Ok(self.recv(from, tag)?.remove(0))
                 }
             })
             .collect()
     }
 
     /// Full barrier (used between training steps in tests).
-    pub fn barrier(&mut self, round: u32) {
+    pub fn barrier(&mut self, round: u32) -> Result<(), CommError> {
         let tag = Tag::new(Tag::BARRIER, round, 0);
         let token = Tensor::scalar(self.rank as f32);
         for to in 0..self.n_workers {
             if to != self.rank {
-                self.send(to, tag, vec![token.clone()]);
+                self.send(to, tag, vec![token.clone()])?;
             }
         }
         for from in 0..self.n_workers {
             if from != self.rank {
-                self.recv(from, tag);
+                self.recv(from, tag)?;
             }
         }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerComm {
+    fn drop(&mut self) {
+        // a held message may be the very thing a peer is blocked on
+        let _ = self.flush_all_held();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::FaultSpec;
     use std::thread;
 
     fn spawn_workers<F, R>(p: usize, f: F) -> Vec<R>
@@ -303,13 +653,13 @@ mod tests {
     fn p2p_out_of_order_delivery() {
         let res = spawn_workers(2, |mut c| {
             if c.rank == 0 {
-                c.send(1, Tag::new(9, 0, 0), vec![Tensor::scalar(1.0)]);
-                c.send(1, Tag::new(9, 0, 1), vec![Tensor::scalar(2.0)]);
+                c.send(1, Tag::new(9, 0, 0), vec![Tensor::scalar(1.0)]).unwrap();
+                c.send(1, Tag::new(9, 0, 1), vec![Tensor::scalar(2.0)]).unwrap();
                 0.0
             } else {
                 // receive in reverse order: stash must kick in
-                let b = c.recv(0, Tag::new(9, 0, 1))[0].as_scalar();
-                let a = c.recv(0, Tag::new(9, 0, 0))[0].as_scalar();
+                let b = c.recv(0, Tag::new(9, 0, 1)).unwrap()[0].as_scalar();
+                let a = c.recv(0, Tag::new(9, 0, 0)).unwrap()[0].as_scalar();
                 a * 10.0 + b
             }
         });
@@ -321,14 +671,14 @@ mod tests {
         // channels work without threads: exercise both ends in-line
         let mut comms = build_network(2);
         let t = Tensor::new(vec![4, 4], (0..16).map(|x| x as f32).collect());
-        comms[0].send(1, Tag::new(9, 1, 0), vec![t.clone()]);
-        let got = comms[1].recv(0, Tag::new(9, 1, 0));
+        comms[0].send(1, Tag::new(9, 1, 0), vec![t.clone()]).unwrap();
+        let got = comms[1].recv(0, Tag::new(9, 1, 0)).unwrap();
         assert!(got[0].shares_buffer(&t), "zero-copy send must share storage");
         assert_eq!(got[0], t);
 
         comms[0].set_deep_copy_sends(true);
-        comms[0].send(1, Tag::new(9, 1, 1), vec![t.clone()]);
-        let got = comms[1].recv(0, Tag::new(9, 1, 1));
+        comms[0].send(1, Tag::new(9, 1, 1), vec![t.clone()]).unwrap();
+        let got = comms[1].recv(0, Tag::new(9, 1, 1)).unwrap();
         assert!(!got[0].shares_buffer(&t), "deep mode must materialize");
         assert_eq!(got[0], t);
         // byte accounting identical in both modes
@@ -342,17 +692,17 @@ mod tests {
         let other = Tag::new(9, 2, 1);
         // repeated same-tag sends must pop FIFO; interleave another tag
         for i in 0..50 {
-            comms[0].send(1, tag, vec![Tensor::scalar(i as f32)]);
-            comms[0].send(1, other, vec![Tensor::scalar(-(i as f32))]);
+            comms[0].send(1, tag, vec![Tensor::scalar(i as f32)]).unwrap();
+            comms[0].send(1, other, vec![Tensor::scalar(-(i as f32))]).unwrap();
         }
         let staged = comms[1].drain_pending();
         assert_eq!(staged, 100);
         assert_eq!(comms[1].drain_pending(), 0, "second drain finds nothing");
         for i in 0..50 {
-            assert_eq!(comms[1].recv(0, tag)[0].as_scalar(), i as f32);
+            assert_eq!(comms[1].recv(0, tag).unwrap()[0].as_scalar(), i as f32);
         }
         for i in 0..50 {
-            assert_eq!(comms[1].recv(0, other)[0].as_scalar(), -(i as f32));
+            assert_eq!(comms[1].recv(0, other).unwrap()[0].as_scalar(), -(i as f32));
         }
     }
 
@@ -363,7 +713,7 @@ mod tests {
                 // tensor of length 10 (not divisible by most p): each worker
                 // contributes rank+1 everywhere
                 let mut t = Tensor::full(&[10], (c.rank + 1) as f32);
-                c.all_reduce_sum(1, &mut t);
+                c.all_reduce_sum(1, &mut t).unwrap();
                 t
             });
             let want = (p * (p + 1) / 2) as f32;
@@ -377,7 +727,7 @@ mod tests {
     fn all_gather_orders_by_rank() {
         let res = spawn_workers(3, |mut c| {
             let t = Tensor::scalar(c.rank as f32 * 5.0);
-            let all = c.all_gather(2, &t);
+            let all = c.all_gather(2, &t).unwrap();
             all.iter().map(|x| x.as_scalar()).collect::<Vec<_>>()
         });
         for r in res {
@@ -389,14 +739,77 @@ mod tests {
     fn byte_accounting() {
         let res = spawn_workers(2, |mut c| {
             if c.rank == 0 {
-                c.send(1, Tag::new(8, 0, 0), vec![Tensor::zeros(&[100])]);
+                c.send(1, Tag::new(8, 0, 0), vec![Tensor::zeros(&[100])]).unwrap();
             } else {
-                c.recv(0, Tag::new(8, 0, 0));
+                c.recv(0, Tag::new(8, 0, 0)).unwrap();
             }
-            c.barrier(99);
+            c.barrier(99).unwrap();
             c.bytes_sent_global()
         });
         // 100 f32 payload + 2 barrier scalars
         assert_eq!(res[0], 400 + 8);
+    }
+
+    #[test]
+    fn held_sends_flush_before_blocking_recv() {
+        // force every send to be delayed: a blocked receiver would hang
+        // forever unless the sender's own blocking recv flushes its park
+        let spec = FaultSpec {
+            seed: 3,
+            delay_prob: 1.0,
+            delay_sends: 100,
+            ..FaultSpec::default()
+        };
+        let res = spawn_workers(2, move |mut c| {
+            c.set_faults(RankFaults::new(c.rank, &spec));
+            let tag = Tag::new(9, 3, 0);
+            let peer = 1 - c.rank;
+            c.send(peer, tag, vec![Tensor::scalar(c.rank as f32)]).unwrap();
+            // both ranks' payloads are parked; recv must flush ours so the
+            // peer can make progress, and symmetrically
+            c.recv(peer, tag).unwrap()[0].as_scalar()
+        });
+        assert_eq!(res, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn same_lane_fifo_survives_delay_injection() {
+        let spec = FaultSpec {
+            seed: 5,
+            delay_prob: 0.5,
+            delay_sends: 2,
+            ..FaultSpec::default()
+        };
+        let mut comms = build_network(2);
+        comms[0].set_faults(RankFaults::new(0, &spec));
+        let tag = Tag::new(9, 4, 0);
+        for i in 0..64 {
+            comms[0].send(1, tag, vec![Tensor::scalar(i as f32)]).unwrap();
+        }
+        // sender will not block again in this test: release its park
+        comms[0].flush_sends().unwrap();
+        // receiver side: repeated same-tag messages must still pop FIFO
+        for i in 0..64 {
+            assert_eq!(comms[1].recv(0, tag).unwrap()[0].as_scalar(), i as f32);
+        }
+    }
+
+    #[test]
+    fn abort_poison_unwinds_blocked_recv() {
+        let res = spawn_workers(2, |mut c| {
+            if c.rank == 0 {
+                c.broadcast_abort(&ExecError::InjectedCrash { rank: 0, step: 7 });
+                Ok(vec![])
+            } else {
+                // rank 0 never sends data: without the poison this hangs
+                c.recv(0, Tag::new(9, 5, 0))
+            }
+        });
+        match &res[1] {
+            Err(CommError::Aborted { origin }) => {
+                assert_eq!(**origin, ExecError::InjectedCrash { rank: 0, step: 7 });
+            }
+            other => panic!("expected abort, got {other:?}"),
+        }
     }
 }

@@ -32,6 +32,17 @@
 //! early-release semantics; the runtime honors the binary choice
 //! (blocking vs posted receives) that is meaningful in-process.
 //!
+//! ## Fault tolerance
+//!
+//! Step boundaries double as fault checkpoints: the walk consults
+//! `WorkerComm::fault_check` (an injected crash due at this step, or a
+//! peer's abort poison already in flight), and every comm call's
+//! `CommError` is lifted into the typed `ExecError` taxonomy — recorded
+//! on the comm for the session's post-mortem report, broadcast to peers
+//! when this rank is the failure's origin, and surfaced as the walk's
+//! error. With fault tolerance unarmed the checks cost two `Option` loads
+//! per step.
+//!
 //! ## Tracing
 //!
 //! When [`AttnCtx::epoch`] is set, every kernel this worker runs and every
@@ -50,6 +61,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::comm::{Tag, WorkerComm};
+use super::fault::{CommError, ExecError};
 use super::plan::{Kernel, Pass, PayloadClass, Plan, PlanNode, PlanOp};
 use crate::runtime::{Kernels, Tensor, Value};
 
@@ -332,13 +344,44 @@ impl<'a> AttnCtx<'a> {
         }
     }
 
-    /// Post receives: at a step boundary (plan depth >= 1), sweep every
-    /// already-arrived message into the stash so compute-time receives hit
-    /// locally — the in-process second stream.
-    fn drain_at_boundary(&mut self, cur_step: &mut usize, step: usize) {
-        if self.plan.prefetch_depth >= 1 && *cur_step != step {
-            *cur_step = step;
+    /// Step-boundary bookkeeping. Post receives (plan depth >= 1): sweep
+    /// every already-arrived message into the stash so compute-time
+    /// receives hit locally — the in-process second stream. Then the
+    /// fault checks: an injected crash due at this step, or a peer's
+    /// abort poison, unwinds the walk here instead of mid-op.
+    fn step_boundary(&mut self, cur_step: &mut usize, step: usize) -> Result<()> {
+        if *cur_step == step {
+            return Ok(());
+        }
+        *cur_step = step;
+        if self.plan.prefetch_depth >= 1 {
             self.comm.drain_pending();
+        }
+        if let Err(e) = self.comm.fault_check(self.plan.pass, step) {
+            if !e.is_collateral() {
+                self.comm.broadcast_abort(&e);
+            }
+            self.comm.record_failure(e.clone());
+            return Err(anyhow!("{e}"));
+        }
+        Ok(())
+    }
+
+    /// Lift a comm-layer failure into the typed executor taxonomy:
+    /// record it on the comm (the session's post-mortem report reads it
+    /// back), tell peers if this rank is the failure's origin, and
+    /// surface a contextual error.
+    fn comm_fail<T>(&mut self, r: Result<T, CommError>, step: usize, op: &str) -> Result<T> {
+        match r {
+            Ok(t) => Ok(t),
+            Err(e) => {
+                let err = ExecError::from_comm(self.comm.rank, e, step, op);
+                if !err.is_collateral() {
+                    self.comm.broadcast_abort(&err);
+                }
+                self.comm.record_failure(err.clone());
+                Err(anyhow!("{err}"))
+            }
         }
     }
 
@@ -386,18 +429,22 @@ impl<'a> AttnCtx<'a> {
         let mut cur_step = usize::MAX;
 
         for iop in ops {
-            self.drain_at_boundary(&mut cur_step, iop.step);
+            self.step_boundary(&mut cur_step, iop.step)?;
             match &iop.action {
                 Action::SendKv { dst, step } => {
                     let t0 = self.stamp();
-                    self.comm
+                    let r = self
+                        .comm
                         .send(*dst, self.tag(Tag::KV, *step), vec![k.clone(), v_t.clone()]);
+                    self.comm_fail(r, iop.step, "send kv")?;
                     self.record(iop.op, t0);
                 }
                 Action::SendQ { dst, step } => {
                     let t0 = self.stamp();
-                    self.comm
+                    let r = self
+                        .comm
                         .send(*dst, self.tag(Tag::Q_BUNDLE, *step), vec![q.clone()]);
+                    self.comm_fail(r, iop.step, "send q bundle")?;
                     self.record(iop.op, t0);
                 }
                 Action::SendHelperResult { dst, step } => {
@@ -405,7 +452,8 @@ impl<'a> AttnCtx<'a> {
                         .take()
                         .ok_or_else(|| anyhow!("no helper partial pending at op {}", iop.op))?;
                     let t0 = self.stamp();
-                    self.comm.send(*dst, self.tag(Tag::HELPER_RESULT, *step), out);
+                    let r = self.comm.send(*dst, self.tag(Tag::HELPER_RESULT, *step), out);
+                    self.comm_fail(r, iop.step, "send helper result")?;
                     self.record(iop.op, t0);
                 }
                 Action::Diag => {
@@ -422,9 +470,10 @@ impl<'a> AttnCtx<'a> {
                 }
                 Action::Own { kv_from, step } => {
                     // owner path: fetch the remote (k, v) chunk
-                    let mut kv = self.comm.recv(*kv_from, self.tag(Tag::KV, *step));
-                    let vr = kv.pop().unwrap();
-                    let kr = kv.pop().unwrap();
+                    let r = self.comm.recv(*kv_from, self.tag(Tag::KV, *step));
+                    let mut kv = self.comm_fail(r, iop.step, "recv kv")?;
+                    let vr = kv.pop().expect("kv payload carries (k, v)");
+                    let kr = kv.pop().expect("kv payload carries (k, v)");
                     let t0 = self.stamp();
                     let out = self.runtime.run(
                         "attn_fwd_full",
@@ -440,10 +489,8 @@ impl<'a> AttnCtx<'a> {
                     // helper path: owner's q against local (k, v), fresh
                     // accumulators shaped by the owner's (possibly ragged)
                     // chunk, partial shipped back
-                    let qo = self
-                        .comm
-                        .recv(*owner, self.tag(Tag::Q_BUNDLE, *step))
-                        .remove(0);
+                    let r = self.comm.recv(*owner, self.tag(Tag::Q_BUNDLE, *step));
+                    let qo = self.comm_fail(r, iop.step, "recv q bundle")?.remove(0);
                     let (ho, co) = (qo.shape[0], qo.shape[1]);
                     let oh = Tensor::zeros(&qo.shape);
                     let mh = Tensor::full(&[ho, co], f32::NEG_INFINITY);
@@ -457,10 +504,11 @@ impl<'a> AttnCtx<'a> {
                     helper_out = Some(out);
                 }
                 Action::Merge { from, step } => {
-                    let mut part = self.comm.recv(*from, self.tag(Tag::HELPER_RESULT, *step));
-                    let l2 = part.pop().unwrap();
-                    let m2 = part.pop().unwrap();
-                    let o2 = part.pop().unwrap();
+                    let r = self.comm.recv(*from, self.tag(Tag::HELPER_RESULT, *step));
+                    let mut part = self.comm_fail(r, iop.step, "recv helper result")?;
+                    let l2 = part.pop().expect("helper result carries (o, m, l)");
+                    let m2 = part.pop().expect("helper result carries (o, m, l)");
+                    let o2 = part.pop().expect("helper result carries (o, m, l)");
                     let t0 = self.stamp();
                     let out = self.runtime.run(
                         "attn_rescale",
@@ -477,6 +525,10 @@ impl<'a> AttnCtx<'a> {
                 }
             }
         }
+        // release any injected-delay traffic: peers may still be waiting
+        // on it, and this rank might not block again in this walk
+        let r = self.comm.flush_sends();
+        self.comm_fail(r, cur_step, "flush sends")?;
         // epilogue: the paper's `last=True` — normalize + logsumexp
         let out = self.runtime.run("attn_finalize", &[v(&o), v(&m), v(&l)])?;
         let mut it = out.into_iter();
@@ -578,22 +630,25 @@ impl<'a> AttnCtx<'a> {
         let mut cur_step = usize::MAX;
 
         for iop in &index.ops[index.n_prefix..] {
-            self.drain_at_boundary(&mut cur_step, iop.step);
+            self.step_boundary(&mut cur_step, iop.step)?;
             match &iop.action {
                 Action::SendKv { dst, step } => {
                     let t0 = self.stamp();
-                    self.comm
+                    let r = self
+                        .comm
                         .send(*dst, self.tag(Tag::KV, *step), vec![k.clone(), v_t.clone()]);
+                    self.comm_fail(r, iop.step, "send kv")?;
                     self.record(iop.op, t0);
                 }
                 Action::SendQ { dst, step } => {
                     // helper needs the full owner bundle for the bwd kernel
                     let t0 = self.stamp();
-                    self.comm.send(
+                    let r = self.comm.send(
                         *dst,
                         self.tag(Tag::Q_BUNDLE, *step),
                         vec![q.clone(), o.clone(), lse.clone(), do_.clone()],
                     );
+                    self.comm_fail(r, iop.step, "send q bundle")?;
                     self.record(iop.op, t0);
                 }
                 Action::SendHelperResult { dst, step } => {
@@ -601,7 +656,8 @@ impl<'a> AttnCtx<'a> {
                         .take()
                         .ok_or_else(|| anyhow!("no dq partial pending at op {}", iop.op))?;
                     let t0 = self.stamp();
-                    self.comm.send(*dst, self.tag(Tag::HELPER_RESULT, *step), out);
+                    let r = self.comm.send(*dst, self.tag(Tag::HELPER_RESULT, *step), out);
+                    self.comm_fail(r, iop.step, "send dq partial")?;
                     self.record(iop.op, t0);
                 }
                 Action::SendKvGrad { dst, step } => {
@@ -609,7 +665,8 @@ impl<'a> AttnCtx<'a> {
                         .take()
                         .ok_or_else(|| anyhow!("no (dk, dv) partial pending at op {}", iop.op))?;
                     let t0 = self.stamp();
-                    self.comm.send(*dst, self.tag(Tag::KV_GRAD, *step), out);
+                    let r = self.comm.send(*dst, self.tag(Tag::KV_GRAD, *step), out);
+                    self.comm_fail(r, iop.step, "send kv grad")?;
                     self.record(iop.op, t0);
                 }
                 Action::Diag => {
@@ -625,9 +682,10 @@ impl<'a> AttnCtx<'a> {
                     dv.add_assign(&it.next().unwrap());
                 }
                 Action::Own { kv_from, step } => {
-                    let mut kv = self.comm.recv(*kv_from, self.tag(Tag::KV, *step));
-                    let vr = kv.pop().unwrap();
-                    let kr = kv.pop().unwrap();
+                    let r = self.comm.recv(*kv_from, self.tag(Tag::KV, *step));
+                    let mut kv = self.comm_fail(r, iop.step, "recv kv")?;
+                    let vr = kv.pop().expect("kv payload carries (k, v)");
+                    let kr = kv.pop().expect("kv payload carries (k, v)");
                     let t0 = self.stamp();
                     let out = self.runtime.run(
                         "attn_bwd_full",
@@ -641,11 +699,12 @@ impl<'a> AttnCtx<'a> {
                     grad_out = Some(vec![dkr, dvr]);
                 }
                 Action::Help { owner, step } => {
-                    let mut bundle = self.comm.recv(*owner, self.tag(Tag::Q_BUNDLE, *step));
-                    let do_o = bundle.pop().unwrap();
-                    let lse_o = bundle.pop().unwrap();
-                    let o_o = bundle.pop().unwrap();
-                    let q_o = bundle.pop().unwrap();
+                    let r = self.comm.recv(*owner, self.tag(Tag::Q_BUNDLE, *step));
+                    let mut bundle = self.comm_fail(r, iop.step, "recv q bundle")?;
+                    let do_o = bundle.pop().expect("bwd bundle carries (q, o, lse, do)");
+                    let lse_o = bundle.pop().expect("bwd bundle carries (q, o, lse, do)");
+                    let o_o = bundle.pop().expect("bwd bundle carries (q, o, lse, do)");
+                    let q_o = bundle.pop().expect("bwd bundle carries (q, o, lse, do)");
                     let t0 = self.stamp();
                     let out = self.runtime.run(
                         "attn_bwd_full",
@@ -659,7 +718,8 @@ impl<'a> AttnCtx<'a> {
                     helper_out = Some(vec![dq_o]);
                 }
                 Action::Merge { from, step } => {
-                    let part = self.comm.recv(*from, self.tag(Tag::HELPER_RESULT, *step));
+                    let r = self.comm.recv(*from, self.tag(Tag::HELPER_RESULT, *step));
+                    let part = self.comm_fail(r, iop.step, "recv dq partial")?;
                     let t0 = self.stamp();
                     dq.add_assign(&part[0]);
                     self.record(iop.op, t0);
@@ -668,15 +728,20 @@ impl<'a> AttnCtx<'a> {
                     // drain the (dk, dv) returns from every owner this
                     // worker lent kv to
                     for &(src, step) in sources {
-                        let mut g = self.comm.recv(src, self.tag(Tag::KV_GRAD, step));
-                        let dvr = g.pop().unwrap();
-                        let dkr = g.pop().unwrap();
+                        let r = self.comm.recv(src, self.tag(Tag::KV_GRAD, step));
+                        let mut g = self.comm_fail(r, iop.step, "recv kv grad")?;
+                        let dvr = g.pop().expect("kv-grad payload carries (dk, dv)");
+                        let dkr = g.pop().expect("kv-grad payload carries (dk, dv)");
                         dk.add_assign(&dkr);
                         dv.add_assign(&dvr);
                     }
                 }
             }
         }
+        // release any injected-delay traffic before handing back: lenders
+        // may still be blocked in their own Accum drain
+        let r = self.comm.flush_sends();
+        self.comm_fail(r, cur_step, "flush sends")?;
         Ok((dq, dk, dv))
     }
 }

@@ -1,0 +1,618 @@
+//! Fault-tolerance layer: seeded fault injection and the structured error
+//! taxonomy the runtime unwinds into.
+//!
+//! A [`FaultSpec`] rides `RunSpec::faults` (JSON like everything else) and
+//! describes per-rank fault events: message delay/reorder, message drop
+//! with bounded retransmit, worker stall (straggler slowdown), and worker
+//! crash at a given step. Every injection decision is drawn from a
+//! per-rank deterministic stream (`Rng::new(seed ^ rank)`) keyed only to
+//! that rank's own send/step sequence, so a fault scenario reproduces
+//! bit-for-bit from its seed — and delay/drop faults must leave the
+//! executed *outputs* bit-identical too (tags are unique per message, so
+//! at-least-once delivery plus stash dedup gives exactly-once semantics).
+//!
+//! Detection is layered:
+//! * `WorkerComm::recv_deadline` returns [`CommError::Timeout`] instead of
+//!   blocking forever (the watchdog budget is derived from the event
+//!   engine's predicted makespan — see `Session`);
+//! * a failing rank broadcasts an abort poison message, so every peer
+//!   unwinds into [`ExecError::PeerFailed`] at its own (step, op) instead
+//!   of hanging;
+//! * worker panics are captured and named (`ExecError::Panicked`) even
+//!   outside chaos mode.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::comm::Tag;
+use crate::coordinator::plan::Pass;
+use crate::runtime::{Kernels, Tensor, Value};
+use crate::util::{Json, Rng};
+
+/// Crash injection point: `rank` dies at the start of op-step `step` of
+/// `pass` (before any kernel or transfer of that step runs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashSpec {
+    pub rank: usize,
+    pub step: usize,
+    pub pass: Pass,
+}
+
+/// Deterministic, seeded fault scenario. All probabilities are per
+/// message; `stalls` and `crash` are pinned to explicit ranks. A spec with
+/// every probability at zero and no stalls/crash still *arms* the
+/// instrumented comm path (sequence numbers, watchdog, abort checks) —
+/// that is the configuration the zero-fault overhead gate measures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Root seed; rank r draws its injection stream from `seed ^ r`.
+    pub seed: u64,
+    /// Probability a message is held back and reordered past later
+    /// traffic (released after `delay_sends` subsequent sends, or at the
+    /// next flush point — never across a blocking receive).
+    pub delay_prob: f64,
+    /// Hold-back window for delayed messages, in subsequent sends.
+    pub delay_sends: usize,
+    /// Probability a message's first transmission is "lost": the sender
+    /// retransmits duplicate-flagged copies until one lands, and the
+    /// receiver dedups — exactly-once delivery, bit-identical outputs.
+    pub drop_prob: f64,
+    /// Upper bound on wire copies per dropped message (at least one copy
+    /// is always delivered; delivery is guaranteed, duplicates are not).
+    pub max_retransmits: usize,
+    /// `(rank, factor)` straggler slowdowns: kernels on that rank take
+    /// `factor`× their measured time (injected by [`StallKernels`]).
+    pub stalls: Vec<(usize, f64)>,
+    /// Optional crash injection point.
+    pub crash: Option<CrashSpec>,
+    /// Explicit recv watchdog budget in seconds. `None` derives one from
+    /// the event engine's predicted makespan (generous multiplier).
+    pub watchdog_s: Option<f64>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            delay_prob: 0.0,
+            delay_sends: 2,
+            drop_prob: 0.0,
+            max_retransmits: 2,
+            stalls: Vec::new(),
+            crash: None,
+            watchdog_s: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// A delay/reorder + drop/retransmit scenario: message-level chaos
+    /// that must leave outputs bit-identical to the fault-free run.
+    pub fn chaos(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            delay_prob: 0.3,
+            delay_sends: 3,
+            drop_prob: 0.25,
+            max_retransmits: 3,
+            ..FaultSpec::default()
+        }
+    }
+
+    /// Straggler slowdown for `rank` (1.0 when not pinned).
+    pub fn stall_factor(&self, rank: usize) -> f64 {
+        self.stalls
+            .iter()
+            .find(|&&(r, _)| r == rank)
+            .map(|&(_, f)| f)
+            .unwrap_or(1.0)
+    }
+
+    /// Largest pinned slowdown factor (>= 1.0) — scales the watchdog's
+    /// sim-derived budget so a deliberate straggler is not misread as a
+    /// hang.
+    pub fn max_stall_factor(&self) -> f64 {
+        self.stalls.iter().map(|&(_, f)| f).fold(1.0, f64::max)
+    }
+
+    /// Spec-level sanity, mirrored by `RunSpec::validate`.
+    pub fn validate(&self, n_workers: usize) -> Result<()> {
+        for p in [self.delay_prob, self.drop_prob] {
+            if !(0.0..=1.0).contains(&p) {
+                anyhow::bail!("fault probabilities must be in [0, 1], got {p}");
+            }
+        }
+        if self.delay_prob > 0.0 && self.delay_sends == 0 {
+            anyhow::bail!("delay_sends must be >= 1 when delay_prob > 0");
+        }
+        if self.drop_prob > 0.0 && self.max_retransmits == 0 {
+            anyhow::bail!("max_retransmits must be >= 1 when drop_prob > 0");
+        }
+        for &(r, f) in &self.stalls {
+            if r >= n_workers {
+                anyhow::bail!("stall rank {r} out of range for {n_workers} workers");
+            }
+            if f < 1.0 || f.is_nan() {
+                anyhow::bail!("stall factor must be >= 1.0, got {f}");
+            }
+        }
+        if let Some(c) = &self.crash {
+            if c.rank >= n_workers {
+                anyhow::bail!("crash rank {} out of range for {n_workers} workers", c.rank);
+            }
+        }
+        if let Some(w) = self.watchdog_s {
+            if w <= 0.0 || w.is_nan() {
+                anyhow::bail!("watchdog_s must be positive, got {w}");
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line JSON object (the `RunSpec::to_json` embedding).
+    pub fn to_json(&self) -> String {
+        let crash = match &self.crash {
+            None => "null".to_string(),
+            Some(c) => format!(
+                "{{\"rank\": {}, \"step\": {}, \"pass\": \"{}\"}}",
+                c.rank,
+                c.step,
+                c.pass.name()
+            ),
+        };
+        let stalls: Vec<String> =
+            self.stalls.iter().map(|&(r, f)| format!("[{r}, {f:?}]")).collect();
+        let watchdog = match self.watchdog_s {
+            None => "null".to_string(),
+            Some(w) => format!("{w:?}"),
+        };
+        format!(
+            "{{\"seed\": {}, \"delay_prob\": {:?}, \"delay_sends\": {}, \"drop_prob\": {:?}, \
+             \"max_retransmits\": {}, \"stalls\": [{}], \"crash\": {}, \"watchdog_s\": {}}}",
+            self.seed,
+            self.delay_prob,
+            self.delay_sends,
+            self.drop_prob,
+            self.max_retransmits,
+            stalls.join(", "),
+            crash,
+            watchdog
+        )
+    }
+
+    /// Parse the `to_json` form. Missing keys take defaults; present keys
+    /// with the wrong type are errors, never silent defaults.
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        if j.as_obj().is_none() {
+            anyhow::bail!("faults must be an object");
+        }
+        let d = FaultSpec::default();
+        let seed = match j.get("seed") {
+            None | Some(Json::Null) => 0,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as u64,
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("faults.seed: bad u64 string {s:?}"))?,
+            Some(v) => anyhow::bail!("faults.seed must be a non-negative integer, got {v:?}"),
+        };
+        let watchdog_s = match j.get("watchdog_s") {
+            None | Some(Json::Null) => None,
+            Some(Json::Num(n)) => Some(*n),
+            Some(v) => anyhow::bail!("faults.watchdog_s must be a number or null, got {v:?}"),
+        };
+        let stalls = match j.get("stalls") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("faults.stalls must be an array"))?;
+                arr.iter()
+                    .map(|e| {
+                        let pair = e.as_arr().filter(|a| a.len() == 2);
+                        let (r, f) = match pair {
+                            Some(a) => (a[0].as_usize(), a[1].as_f64()),
+                            None => (None, None),
+                        };
+                        match (r, f) {
+                            (Some(r), Some(f)) => Ok((r, f)),
+                            _ => anyhow::bail!("faults.stalls entries must be [rank, factor]"),
+                        }
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        let crash = match j.get("crash") {
+            None | Some(Json::Null) => None,
+            Some(c) => {
+                let rank = c
+                    .at("rank")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("faults.crash.rank must be an integer"))?;
+                let step = c
+                    .at("step")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("faults.crash.step must be an integer"))?;
+                let pass = match c.at("pass").as_str() {
+                    Some("fwd") | None => Pass::Forward,
+                    Some("bwd") => Pass::Backward,
+                    Some(other) => {
+                        anyhow::bail!("faults.crash.pass must be \"fwd\" or \"bwd\", got {other:?}")
+                    }
+                };
+                Some(CrashSpec { rank, step, pass })
+            }
+        };
+        Ok(FaultSpec {
+            seed,
+            delay_prob: opt_f64(j, "delay_prob", d.delay_prob)?,
+            delay_sends: opt_usize(j, "delay_sends", d.delay_sends)?,
+            drop_prob: opt_f64(j, "drop_prob", d.drop_prob)?,
+            max_retransmits: opt_usize(j, "max_retransmits", d.max_retransmits)?,
+            stalls,
+            crash,
+            watchdog_s,
+        })
+    }
+}
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Num(n)) => Ok(*n),
+        Some(v) => anyhow::bail!("faults.{key} must be a number, got {v:?}"),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("faults.{key} must be a non-negative integer")),
+    }
+}
+
+/// Structured comm-layer failure. `WorkerComm::recv_deadline` and the
+/// collectives return these instead of panicking.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommError {
+    /// The deadline expired with no matching message — the watchdog's
+    /// verdict that a peer stalled or died silently.
+    Timeout { from: usize, tag: Tag, waited_s: f64 },
+    /// The peer's mailbox hung up (its thread unwound and dropped its
+    /// channel endpoints).
+    Closed { peer: usize },
+    /// A peer broadcast an abort: it failed first, with `origin`.
+    Aborted { origin: Box<ExecError> },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { from, tag, waited_s } => write!(
+                f,
+                "recv deadline expired after {waited_s:.3}s waiting on rank {from} tag {tag:?}"
+            ),
+            CommError::Closed { peer } => write!(f, "channel to rank {peer} closed"),
+            CommError::Aborted { origin } => write!(f, "peer aborted: {origin}"),
+        }
+    }
+}
+
+/// Structured executor-level failure, stamped with the failing rank. The
+/// vendored `anyhow` carries only display text, so the typed values flow
+/// through `Session::failure_report()`, not error downcasting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecError {
+    /// A peer failed; this rank unwound at its own (step, op).
+    PeerFailed { rank: usize, step: usize, op: String },
+    /// The `FaultSpec` crashed this rank at `step`.
+    InjectedCrash { rank: usize, step: usize },
+    /// recv deadline expired on this rank waiting for `from`.
+    Timeout { rank: usize, from: usize, step: usize, op: String },
+    /// Kernel or runtime failure on this rank.
+    Failed { rank: usize, msg: String },
+    /// This rank's worker thread panicked; the payload text is attached.
+    Panicked { rank: usize, msg: String },
+}
+
+impl ExecError {
+    /// The rank this failure is attributed to: the *origin* rank for
+    /// `PeerFailed`, the failing rank otherwise.
+    pub fn rank(&self) -> usize {
+        match self {
+            ExecError::PeerFailed { rank, .. }
+            | ExecError::InjectedCrash { rank, .. }
+            | ExecError::Timeout { rank, .. }
+            | ExecError::Failed { rank, .. }
+            | ExecError::Panicked { rank, .. } => *rank,
+        }
+    }
+
+    /// True for the secondary failures a root cause fans out into.
+    pub fn is_collateral(&self) -> bool {
+        matches!(self, ExecError::PeerFailed { .. })
+    }
+
+    /// Lift a comm failure observed by `rank` at (step, op) into the
+    /// executor taxonomy.
+    pub fn from_comm(rank: usize, e: CommError, step: usize, op: &str) -> ExecError {
+        match e {
+            CommError::Timeout { from, .. } => {
+                ExecError::Timeout { rank, from, step, op: op.to_string() }
+            }
+            CommError::Closed { peer } => {
+                ExecError::PeerFailed { rank: peer, step, op: op.to_string() }
+            }
+            CommError::Aborted { origin } => {
+                ExecError::PeerFailed { rank: origin.rank(), step, op: op.to_string() }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::PeerFailed { rank, step, op } => {
+                write!(f, "peer rank {rank} failed (observed at step {step}, {op})")
+            }
+            ExecError::InjectedCrash { rank, step } => {
+                write!(f, "rank {rank}: injected crash at step {step}")
+            }
+            ExecError::Timeout { rank, from, step, op } => write!(
+                f,
+                "rank {rank}: watchdog timeout waiting on rank {from} at step {step}, {op}"
+            ),
+            ExecError::Failed { rank, msg } => write!(f, "rank {rank} failed: {msg}"),
+            ExecError::Panicked { rank, msg } => write!(f, "rank {rank} panicked: {msg}"),
+        }
+    }
+}
+
+/// One injected fault occurrence. Only rank-deterministic events are
+/// logged (sender-side delay/retransmit decisions, rank-local stalls and
+/// crashes), so the aggregated per-rank log reproduces exactly from the
+/// `FaultSpec` seed; receiver-side dedup discards depend on arrival
+/// timing and are deliberately not events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// `rank` held a message to `to` back for `held_for` subsequent sends.
+    Delayed { rank: usize, to: usize, tag: Tag, held_for: usize },
+    /// `rank`'s first transmission to `to` was dropped; `copies`
+    /// dup-flagged retransmits went on the wire instead.
+    Retransmitted { rank: usize, to: usize, tag: Tag, copies: usize },
+    /// `rank` runs its kernels `factor`× slower for the whole run.
+    Stalled { rank: usize, factor: f64 },
+    /// `rank` crashed at `step`.
+    Crashed { rank: usize, step: usize },
+}
+
+/// Sender-side injection verdict for one outbound message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SendFault {
+    /// Hold the message back for this many subsequent sends (0 = send now).
+    pub hold_for: usize,
+    /// Wire copies to deliver (1 = normal; >1 = dup-flagged retransmits).
+    pub copies: usize,
+}
+
+/// Per-rank fault-injection state, owned by that rank's `WorkerComm`.
+/// Decisions are drawn from `Rng::new(spec.seed ^ rank)` in send/step
+/// order, which is deterministic per rank — so the event log is too.
+#[derive(Clone, Debug)]
+pub struct RankFaults {
+    pub rank: usize,
+    spec: FaultSpec,
+    rng: Rng,
+    crash_fired: bool,
+    events: Vec<FaultEvent>,
+}
+
+impl RankFaults {
+    pub fn new(rank: usize, spec: &FaultSpec) -> RankFaults {
+        RankFaults {
+            rank,
+            spec: spec.clone(),
+            rng: Rng::new(spec.seed ^ rank as u64),
+            crash_fired: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// Draw the injection decision for one outbound message. Exactly two
+    /// uniform draws per send regardless of outcome, so the stream stays
+    /// aligned across scenarios that share a seed.
+    pub fn on_send(&mut self, to: usize, tag: Tag) -> SendFault {
+        let (drop_roll, delay_roll) = (self.rng.f32() as f64, self.rng.f32() as f64);
+        let mut fault = SendFault { hold_for: 0, copies: 1 };
+        if self.spec.drop_prob > 0.0 && drop_roll < self.spec.drop_prob {
+            fault.copies = 1 + self.rng.below(self.spec.max_retransmits.max(1));
+            self.events.push(FaultEvent::Retransmitted {
+                rank: self.rank,
+                to,
+                tag,
+                copies: fault.copies,
+            });
+        }
+        if self.spec.delay_prob > 0.0 && delay_roll < self.spec.delay_prob {
+            fault.hold_for = self.spec.delay_sends.max(1);
+            self.events.push(FaultEvent::Delayed {
+                rank: self.rank,
+                to,
+                tag,
+                held_for: fault.hold_for,
+            });
+        }
+        fault
+    }
+
+    /// Crash check at the start of an op-step; fires at most once.
+    pub fn crash_due(&mut self, pass: Pass, step: usize) -> bool {
+        let hit = matches!(
+            self.spec.crash,
+            Some(c) if c.rank == self.rank && c.pass == pass && c.step == step
+        );
+        let due = !self.crash_fired && hit;
+        if due {
+            self.crash_fired = true;
+            self.events.push(FaultEvent::Crashed { rank: self.rank, step });
+        }
+        due
+    }
+
+    /// Record this rank's pinned stall (called once by the session when
+    /// wrapping the backend in [`StallKernels`]).
+    pub fn note_stall(&mut self, factor: f64) {
+        self.events.push(FaultEvent::Stalled { rank: self.rank, factor });
+    }
+
+    pub fn stall_factor(&self) -> f64 {
+        self.spec.stall_factor(self.rank)
+    }
+
+    pub fn take_events(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Straggler injection: a `Kernels` wrapper that sleeps
+/// `(factor - 1) × elapsed` after each inner kernel, making the wrapped
+/// backend behave `factor`× slower without touching kernel numerics.
+pub struct StallKernels {
+    pub inner: Box<dyn Kernels>,
+    pub factor: f64,
+}
+
+impl Kernels for StallKernels {
+    fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let start = Instant::now();
+        let out = self.inner.run(name, inputs)?;
+        if self.factor > 1.0 {
+            std::thread::sleep(Duration::from_secs_f64(
+                start.elapsed().as_secs_f64() * (self.factor - 1.0),
+            ));
+        }
+        Ok(out)
+    }
+}
+
+/// Per-rank failure set from one execution, stored on the `Session` for
+/// post-mortem (the vendored `anyhow` cannot downcast, so the typed
+/// errors travel here). `partial_fwd`/`partial_bwd` hold whatever traced
+/// spans the surviving ranks flushed before unwinding.
+#[derive(Clone, Debug, Default)]
+pub struct FailureReport {
+    /// One entry per failed rank, in rank order.
+    pub failures: Vec<ExecError>,
+    /// Merged forward-pass spans from ranks that produced any (only
+    /// populated when the spec traced).
+    pub partial_fwd: Option<crate::coordinator::executor::MergedTrace>,
+    /// Merged backward-pass spans from ranks that produced any.
+    pub partial_bwd: Option<crate::coordinator::executor::MergedTrace>,
+}
+
+impl FailureReport {
+    /// The failure everything else cascaded from: the first
+    /// non-collateral entry (injected crash, timeout, kernel failure,
+    /// panic), falling back to the first entry.
+    pub fn root_cause(&self) -> Option<&ExecError> {
+        self.failures
+            .iter()
+            .find(|e| !e.is_collateral())
+            .or_else(|| self.failures.first())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_json_roundtrips() {
+        let spec = FaultSpec {
+            stalls: vec![(0, 1.5), (3, 2.25)],
+            crash: Some(CrashSpec { rank: 2, step: 5, pass: Pass::Backward }),
+            watchdog_s: Some(12.5),
+            ..FaultSpec::chaos(42)
+        };
+        let j = Json::parse(&spec.to_json()).expect("emitted JSON parses");
+        assert_eq!(FaultSpec::from_json(&j).unwrap(), spec);
+        // defaults: an empty object is the all-zero spec
+        let empty = Json::parse("{}").unwrap();
+        assert_eq!(FaultSpec::from_json(&empty).unwrap(), FaultSpec::default());
+        // wrong-typed fields are errors, never silent defaults
+        let bad = Json::parse(r#"{"delay_prob": "high"}"#).unwrap();
+        assert!(FaultSpec::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rank_faults_are_deterministic_per_seed() {
+        let spec = FaultSpec::chaos(7);
+        let mut a = RankFaults::new(3, &spec);
+        let mut b = RankFaults::new(3, &spec);
+        let tag = Tag::new(1, 0, 0);
+        for i in 0..50 {
+            assert_eq!(a.on_send(i % 4, tag), b.on_send(i % 4, tag));
+        }
+        assert_eq!(a.take_events(), b.take_events());
+        // a different rank draws a different stream from the same spec
+        let mut c = RankFaults::new(4, &spec);
+        let c_events: Vec<_> = (0..50).map(|i| c.on_send(i % 4, tag)).collect();
+        let a_again: Vec<_> = {
+            let mut a2 = RankFaults::new(3, &spec);
+            (0..50).map(|i| a2.on_send(i % 4, tag)).collect()
+        };
+        assert_ne!(c_events, a_again, "per-rank streams must differ");
+    }
+
+    #[test]
+    fn crash_fires_exactly_once_at_its_step() {
+        let spec = FaultSpec {
+            crash: Some(CrashSpec { rank: 1, step: 2, pass: Pass::Forward }),
+            ..FaultSpec::default()
+        };
+        let mut f = RankFaults::new(1, &spec);
+        assert!(!f.crash_due(Pass::Forward, 0));
+        assert!(!f.crash_due(Pass::Backward, 2), "pass must match");
+        assert!(f.crash_due(Pass::Forward, 2));
+        assert!(!f.crash_due(Pass::Forward, 2), "fires at most once");
+        // the wrong rank never fires
+        let mut other = RankFaults::new(0, &spec);
+        assert!(!other.crash_due(Pass::Forward, 2));
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let ok = FaultSpec::chaos(1);
+        assert!(ok.validate(4).is_ok());
+        let bad = FaultSpec { delay_prob: 1.5, ..FaultSpec::default() };
+        assert!(bad.validate(4).is_err());
+        let bad = FaultSpec { stalls: vec![(9, 1.5)], ..FaultSpec::default() };
+        assert!(bad.validate(4).is_err());
+        let bad = FaultSpec { stalls: vec![(0, 0.5)], ..FaultSpec::default() };
+        assert!(bad.validate(4).is_err(), "slowdown < 1 is a speedup, reject");
+        let bad = FaultSpec {
+            crash: Some(CrashSpec { rank: 4, step: 0, pass: Pass::Forward }),
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate(4).is_err());
+    }
+
+    #[test]
+    fn root_cause_skips_collateral_failures() {
+        let report = FailureReport {
+            failures: vec![
+                ExecError::PeerFailed { rank: 2, step: 1, op: "recv kv".into() },
+                ExecError::InjectedCrash { rank: 2, step: 0 },
+                ExecError::PeerFailed { rank: 2, step: 3, op: "send q".into() },
+            ],
+            ..FailureReport::default()
+        };
+        assert_eq!(
+            report.root_cause(),
+            Some(&ExecError::InjectedCrash { rank: 2, step: 0 })
+        );
+    }
+}

@@ -20,6 +20,7 @@
 //! | `run_dist_attention_planned` | `Session::with_plans` (Pjrt) → `execute_with`  |
 //! | `run_dist_attention_host`    | `Session::with_plans` (HostRef) → `execute_with` |
 //! | `run_dist_attention_exec`    | `Session::with_plans` + trace/deep-copy fields |
+//! | `WorkerComm::recv(from, tag)` (pre-0.3, infallible) | `recv_deadline(from, tag, deadline)` → `Result<_, CommError>` (`recv` remains as the alias armed with the session watchdog) |
 
 use std::path::Path;
 use std::sync::Arc;
@@ -124,9 +125,7 @@ pub fn run_dist_attention_planned(
 ) -> Result<DistAttnResult> {
     let opts = ExecOpts {
         backend: BackendSpec::Pjrt(artifact_dir.to_path_buf()),
-        trace: false,
-        deep_copy_sends: false,
-        threads: 1,
+        ..ExecOpts::host()
     };
     #[allow(deprecated)]
     Ok(run_dist_attention_exec(fwd_plan, bwd_plan, q, k, v, do_, &opts)?.result)
@@ -169,6 +168,7 @@ pub fn run_dist_attention_exec(
     let mut spec = RunSpec::for_plans(&fwd_plan, opts.backend.clone(), q, k);
     spec.trace = opts.trace;
     spec.deep_copy_sends = opts.deep_copy_sends;
+    spec.faults = opts.faults.clone();
     let mut session = Session::with_plans(spec, fwd_plan, bwd_plan)?;
     session.execute_with(q, k, v, do_)?;
     Ok(session.take_run().expect("execute_with stored a run"))

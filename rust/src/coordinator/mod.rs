@@ -6,6 +6,9 @@
 //! * `comm` — P2P mailboxes, ring all-reduce (the NCCL substitute)
 //! * `executor` — runs a lowered plan with real tensors against PJRT
 //!   artifacts
+//! * `fault` — seeded fault injection ([`FaultSpec`]) and the structured
+//!   failure taxonomy ([`CommError`], [`ExecError`]) the runtime unwinds
+//!   into instead of hanging or panicking
 //! * `session` — the public front door: a declarative [`RunSpec`] lowered
 //!   once and driven through plan → optimize → execute → trace →
 //!   calibrate ([`Session`])
@@ -19,6 +22,7 @@
 pub mod checkpoint;
 pub mod comm;
 pub mod executor;
+pub mod fault;
 pub mod harness;
 pub mod optimize;
 pub mod plan;
@@ -27,6 +31,10 @@ pub mod session;
 
 pub use checkpoint::CkptStrategy;
 pub use executor::{AttnCtx, MergedTrace, PlanIndex, RunTrace, ATTN_ARTIFACTS};
+pub use fault::{
+    CommError, CrashSpec, ExecError, FailureReport, FaultEvent, FaultSpec, RankFaults,
+    StallKernels,
+};
 #[allow(deprecated)]
 pub use harness::{
     build_plans, build_plans_optimized, build_plans_varlen, run_dist_attention,

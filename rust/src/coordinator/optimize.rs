@@ -100,6 +100,13 @@ pub struct OptimizeOpts {
     /// op stream is preserved (caller-plan tuning and acceptance scoring),
     /// and class means remain the honest model for re-lowered candidates.
     pub per_op_costs: bool,
+    /// Pinned per-worker compute slowdowns `(rank, factor)` — degraded
+    /// hardware the search must plan *around* rather than assume away
+    /// (factor `1.5` = every kernel on that rank runs 50% longer). Every
+    /// scoring sim applies them ([`PlanSim::set_worker_slowdown`]), so
+    /// placement, flips, and depth all answer "best plan given this
+    /// straggler". Empty (all healthy) by default.
+    pub slowdowns: Vec<(usize, f64)>,
 }
 
 impl Default for OptimizeOpts {
@@ -116,7 +123,17 @@ impl Default for OptimizeOpts {
             align_doc_cuts: true,
             move_boundaries: true,
             per_op_costs: false,
+            slowdowns: Vec::new(),
         }
+    }
+}
+
+/// Apply the opts' pinned straggler factors to a scoring sim — every
+/// `PlanSim` the optimizer consults goes through here so search and
+/// acceptance price the same degraded cluster.
+fn apply_slowdowns(sim: &mut PlanSim, opts: &OptimizeOpts) {
+    for &(w, f) in &opts.slowdowns {
+        sim.set_worker_slowdown(w, f);
     }
 }
 
@@ -222,6 +239,7 @@ pub fn autotune_depth(
     opts: &OptimizeOpts,
 ) -> (usize, f64) {
     let mut sim = PlanSim::new(plan, cost);
+    apply_slowdowns(&mut sim, opts);
     let (d, s, _) = autotune_depth_sim(&mut sim, cluster, &plan.placement, opts);
     (d, s)
 }
@@ -357,6 +375,7 @@ pub fn optimize_plan_with_op_costs(
     op_costs: &[(usize, f64)],
 ) -> Optimized {
     let mut sim = PlanSim::new(plan, cost);
+    apply_slowdowns(&mut sim, opts);
     for &(op, s) in op_costs {
         sim.set_op_cost(op, s);
     }
@@ -424,6 +443,7 @@ pub fn optimize_schedule_ckpt(
         &LowerOpts { ckpt, ..Default::default() },
     );
     let mut sim = PlanSim::new(&base, cost);
+    apply_slowdowns(&mut sim, opts);
     let default_s = sim.total_s(cluster, &identity, 1);
     let mut sim_calls = 1usize;
     let mut best_plan = base;
@@ -445,6 +465,7 @@ pub fn optimize_schedule_ckpt(
                     &LowerOpts { flip_steps: flips.clone(), ckpt, ..Default::default() },
                 );
             let mut cand_sim = PlanSim::new(&cand, cost);
+            apply_slowdowns(&mut cand_sim, opts);
             let s = cand_sim.total_s(cluster, &identity, 1);
             sim_calls += 1;
             if improves(s, best) {
@@ -549,6 +570,7 @@ pub fn optimize_ckpt(
         let lopts = LowerOpts { ckpt: Some(strategy), ..Default::default() };
         let mut plan = Plan::from_schedule_opts(schedule, Pass::Backward, &lopts);
         let mut sim = PlanSim::new(&plan, cost);
+        apply_slowdowns(&mut sim, opts);
         let mut place = plan.placement.clone();
         if opts.placement {
             let (pl, _s, calls) =
@@ -967,13 +989,17 @@ pub fn optimize_varlen(
         overlap: cost.overlap,
     };
     let pad_plan = Plan::from_schedule(schedule, pass);
-    let pad_s = PlanSim::new(&pad_plan, &pad_cost).total_s(cluster, &identity, 1);
+    let mut pad_sim = PlanSim::new(&pad_plan, &pad_cost);
+    apply_slowdowns(&mut pad_sim, opts);
+    let pad_s = pad_sim.total_s(cluster, &identity, 1);
     sim_calls += 1;
 
     // equal-token varlen default (the honest sparse lowering)
     let equal_opts = LowerOpts { varlen: Some(Arc::new(spec0.clone())), ..Default::default() };
     let equal_plan = Plan::from_schedule_opts(schedule, pass, &equal_opts);
-    let equal_s = PlanSim::new(&equal_plan, cost).total_s(cluster, &identity, 1);
+    let mut equal_sim = PlanSim::new(&equal_plan, cost);
+    apply_slowdowns(&mut equal_sim, opts);
+    let equal_s = equal_sim.total_s(cluster, &identity, 1);
     sim_calls += 1;
 
     // dense dual plan: fixed DAG over which every boundary move and flip
@@ -985,6 +1011,7 @@ pub fn optimize_varlen(
     };
     let dense_plan = Plan::from_schedule_opts(schedule, pass, &dense_opts);
     let mut reb = Rebalancer::new(&dense_plan, spec0.clone(), cost);
+    apply_slowdowns(&mut reb.sim, opts);
     let mut best = reb.sim.rescore(cluster, &identity, 1);
     sim_calls += 1;
 
@@ -1101,6 +1128,7 @@ pub fn optimize_varlen(
     };
     let mut final_plan = Plan::from_schedule_opts(schedule, pass, &final_opts);
     let mut fsim = PlanSim::new(&final_plan, cost);
+    apply_slowdowns(&mut fsim, opts);
     let mut place = identity.clone();
     if opts.placement {
         let (pl, _s, calls) =

@@ -42,16 +42,18 @@
 //! (`rust/tests/session_golden.rs`) pins each one bit-identical to its
 //! `RunSpec` translation.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::checkpoint::CkptStrategy;
 use super::comm::build_network_placed;
 use super::executor::{AttnCtx, MergedTrace, RunTrace, ATTN_ARTIFACTS};
+use super::fault::{ExecError, FailureReport, FaultEvent, FaultSpec, RankFaults, StallKernels};
 use super::optimize::{
     optimize_plan_with_op_costs, optimize_schedule_ckpt, optimize_varlen, OptimizeOpts,
 };
@@ -185,6 +187,13 @@ pub struct RunSpec {
     /// [`CkptStrategy::HfStyle`] prepends the attention forward's op
     /// stream as a recompute prefix to the backward plan.
     pub ckpt: CkptStrategy,
+    /// Seeded fault scenario injected into the run (delay/reorder, drop
+    /// with retransmit, stalls, a crash — see [`FaultSpec`]). Arming any
+    /// spec, even an all-zero one, instruments the comm path and turns on
+    /// the sim-derived recv watchdog; a failed run then surfaces through
+    /// [`Session::failure_report`]. `None` (the default) is the
+    /// uninstrumented fast path.
+    pub faults: Option<FaultSpec>,
     /// Seed for synthesized inputs (`execute()` without tensors).
     pub seed: u64,
 }
@@ -211,6 +220,7 @@ impl RunSpec {
             deep_copy_sends: false,
             threads: 1,
             ckpt: CkptStrategy::RematAware,
+            faults: None,
             seed: 0,
         }
     }
@@ -306,6 +316,25 @@ impl RunSpec {
                  pipeline (or OptimizePolicy::Schedule for HfStyle runs)"
             );
         }
+        if let Some(f) = &self.faults {
+            // manifest-resolved runs (n_workers == 0) re-validate rank
+            // targets in `Session::new` once the worker count is known
+            let n = if self.n_workers > 0 { self.n_workers } else { usize::MAX };
+            f.validate(n)?;
+        }
+        if let OptimizePolicy::Schedule(o) | OptimizePolicy::Varlen(o) = &self.optimize {
+            for &(w, factor) in &o.slowdowns {
+                if self.n_workers > 0 && w >= self.n_workers {
+                    bail!(
+                        "optimize.slowdowns pins rank {w} but the run declares {} workers",
+                        self.n_workers
+                    );
+                }
+                if factor < 1.0 || factor.is_nan() {
+                    bail!("optimize.slowdowns factor for rank {w} must be >= 1.0 (got {factor})");
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -340,6 +369,14 @@ pub struct ExecOpts {
     /// Host-kernel worker threads per rank (clamped to 1..=available
     /// parallelism at execution; see [`RunSpec::threads`]).
     pub threads: usize,
+    /// Seeded fault scenario to inject (see [`FaultSpec`]). `None` leaves
+    /// the comm path uninstrumented.
+    pub faults: Option<FaultSpec>,
+    /// Per-`recv` watchdog budget in seconds, armed together with
+    /// `faults`. `Session::execute_with` derives it from the event
+    /// engine's predicted makespan (stall-adjusted) when the spec does
+    /// not pin one.
+    pub watchdog_s: Option<f64>,
 }
 
 impl ExecOpts {
@@ -349,6 +386,8 @@ impl ExecOpts {
             trace: false,
             deep_copy_sends: false,
             threads: 1,
+            faults: None,
+            watchdog_s: None,
         }
     }
 }
@@ -472,10 +511,19 @@ pub struct Session {
     audits: Vec<StageAudit>,
     /// Per-op traced durations from the last `calibrate()` (when the
     /// policy opts into `per_op_costs`), keyed by the exact plan they were
-    /// measured against — the overlay only applies while a plan's op
-    /// stream still matches op-for-op.
-    fwd_op_costs: Option<(Arc<Plan>, Vec<(usize, f64)>)>,
-    bwd_op_costs: Option<(Arc<Plan>, Vec<(usize, f64)>)>,
+    /// measured against *and* the worker thread count they were measured
+    /// at — the overlay only applies while a plan's op stream still
+    /// matches op-for-op and the run would execute with the same
+    /// effective thread count (kernel durations scale with threads, so a
+    /// mismatched overlay would mis-price every compute op).
+    fwd_op_costs: Option<(Arc<Plan>, usize, Vec<(usize, f64)>)>,
+    bwd_op_costs: Option<(Arc<Plan>, usize, Vec<(usize, f64)>)>,
+    /// Structured post-mortem of the last failed `execute*()` (typed
+    /// per-rank failures + partial traces); `None` after a clean run.
+    last_failure: Option<FailureReport>,
+    /// Sender-side fault events the last `execute*()` injected, in rank
+    /// order — deterministic for a given [`FaultSpec`] seed.
+    fault_events: Vec<FaultEvent>,
 }
 
 impl Session {
@@ -520,6 +568,11 @@ impl Session {
             workload.head_dim,
         );
         let bwd_cost = bwd_cost_from_fwd(&fwd_cost, workload.head_dim);
+        if let Some(f) = &spec.faults {
+            // re-check rank targets against the resolved worker count
+            // (validate() skipped them for manifest-resolved specs)
+            f.validate(n_workers)?;
+        }
         Ok(Session {
             spec,
             workload,
@@ -535,6 +588,8 @@ impl Session {
             audits: Vec::new(),
             fwd_op_costs: None,
             bwd_op_costs: None,
+            last_failure: None,
+            fault_events: Vec::new(),
         })
     }
 
@@ -678,11 +733,31 @@ impl Session {
         }
     }
 
+    /// Pinned per-worker slowdown factors from the optimize policy
+    /// ([`OptimizeOpts::slowdowns`]) — applied to every acceptance score
+    /// so "best plan under a stuck straggler" queries are consistent with
+    /// the optimizer's own search.
+    fn policy_slowdowns(&self) -> &[(usize, f64)] {
+        match &self.spec.optimize {
+            OptimizePolicy::Schedule(o) | OptimizePolicy::Varlen(o) => &o.slowdowns,
+            OptimizePolicy::Off => &[],
+        }
+    }
+
+    /// The thread count host kernels would actually run with — the spec's
+    /// request clamped to the machine, mirroring `execute_plans`.
+    fn effective_threads(&self) -> usize {
+        let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(1);
+        self.spec.threads.clamp(1, avail)
+    }
+
     /// The calibrated per-op overlay for `pass` — only when the policy
-    /// opts in ([`OptimizeOpts::per_op_costs`]) and `plan` still matches
+    /// opts in ([`OptimizeOpts::per_op_costs`]), `plan` still matches
     /// the traced plan's op stream op-for-op (the overlay indexes ops
     /// positionally, so a re-lowered candidate must fall back to the
-    /// fitted class means).
+    /// fitted class means), and the run would still execute with the
+    /// thread count the overlay was measured at (durations measured at
+    /// `threads = t` mis-price every compute op at a different count).
     fn op_overlay_for(&self, pass: Pass, plan: &Plan) -> &[(usize, f64)] {
         if !self.per_op_enabled() {
             return &[];
@@ -692,20 +767,29 @@ impl Session {
             Pass::Backward => &self.bwd_op_costs,
         };
         match stored {
-            Some((traced, ocs)) if traced.ops == plan.ops => ocs,
+            Some((traced, threads, ocs))
+                if traced.ops == plan.ops && *threads == self.effective_threads() =>
+            {
+                ocs
+            }
             _ => &[],
         }
     }
 
-    /// [`score_plan`] with the per-op overlay applied where valid.
+    /// [`score_plan`] with the per-op overlay and any pinned straggler
+    /// slowdowns applied where valid.
     fn score_plan_overlayed(&self, pass: Pass, plan: &Plan, cost: &AttnCost) -> f64 {
         let overlay = self.op_overlay_for(pass, plan);
-        if overlay.is_empty() {
+        let slowdowns = self.policy_slowdowns();
+        if overlay.is_empty() && slowdowns.is_empty() {
             return score_plan(plan, &self.spec.cluster, cost);
         }
         let mut sim = PlanSim::new(plan, cost);
         for &(op, s) in overlay {
             sim.set_op_cost(op, s);
+        }
+        for &(w, f) in slowdowns {
+            sim.set_worker_slowdown(w, f);
         }
         sim.total_s(&self.spec.cluster, &plan.placement, plan.prefetch_depth)
     }
@@ -967,15 +1051,59 @@ impl Session {
     ) -> Result<&mut Session> {
         self.ensure_ready()?;
         let (fwd, bwd) = self.plans.as_ref().expect("ensure_ready built plans").clone();
+        let watchdog_s = match &self.spec.faults {
+            Some(f) => Some(match f.watchdog_s {
+                Some(w) => w,
+                None => self.watchdog_budget_s(&fwd, &bwd, f),
+            }),
+            None => None,
+        };
         let opts = ExecOpts {
             backend: self.spec.backend.clone(),
             trace: self.spec.trace,
             deep_copy_sends: self.spec.deep_copy_sends,
             threads: self.spec.threads,
+            faults: self.spec.faults.clone(),
+            watchdog_s,
         };
-        let run = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers)?;
-        self.last_run = Some(run);
-        Ok(self)
+        let attempt = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers);
+        self.fault_events = attempt.fault_events;
+        self.last_failure = attempt.report;
+        match attempt.run {
+            Ok(run) => {
+                self.last_run = Some(run);
+                Ok(self)
+            }
+            Err(e) => {
+                // a stale trace from a previous clean run must not pass
+                // for this run's post-mortem
+                self.last_run = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Per-`recv` watchdog budget: the event engine's predicted makespan
+    /// for the plan pair — with the fault spec's stall factors applied to
+    /// the simulated workers — scaled by a deliberately generous
+    /// host-vs-model multiplier and clamped to a sane band. A hung peer
+    /// trips it within seconds; a merely slow host run does not.
+    fn watchdog_budget_s(&self, fwd: &Plan, bwd: &Plan, faults: &FaultSpec) -> f64 {
+        let mut sim_total = 0.0;
+        let mut passes: Vec<(&Plan, &AttnCost)> = vec![(fwd, &self.fwd_cost)];
+        if self.spec.backward {
+            passes.push((bwd, &self.bwd_cost));
+        }
+        for &(plan, cost) in &passes {
+            let mut sim = PlanSim::new(plan, cost);
+            for &(w, f) in &faults.stalls {
+                sim.set_worker_slowdown(w, f);
+            }
+            sim_total += sim.total_s(&self.spec.cluster, &plan.placement, plan.prefetch_depth);
+        }
+        // modeled seconds are GPU-class; host-kernel execution runs orders
+        // of magnitude slower, hence the 2e4 scale
+        (sim_total * self.spec.layers as f64 * 2e4).clamp(5.0, 120.0)
     }
 
     /// The last executed run.
@@ -983,6 +1111,20 @@ impl Session {
         self.last_run
             .as_ref()
             .ok_or_else(|| anyhow!("no run yet — call execute() first"))
+    }
+
+    /// Structured post-mortem of the last failed `execute*()`: typed
+    /// per-rank failures in rank order plus whatever partial traces the
+    /// surviving ranks flushed. `None` after a clean run.
+    pub fn failure_report(&self) -> Option<&FailureReport> {
+        self.last_failure.as_ref()
+    }
+
+    /// Sender-side fault events the last `execute*()` injected, in rank
+    /// order. Reproducible: the same [`FaultSpec`] seed yields the same
+    /// sequence.
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        &self.fault_events
     }
 
     /// The last executed run's gathered results.
@@ -1035,14 +1177,21 @@ impl Session {
         let (fwd_plan, bwd_plan) = self.plans.as_ref().expect("a run implies plans").clone();
         self.fwd_cost = trace_report::calibrate_cost_with_bytes(&fwd_plan, &ft, &self.fwd_cost);
         if self.per_op_enabled() {
+            // stamp the overlay with the thread count it was measured at
+            // (the trace records the executor's effective count) — a later
+            // optimize() under a different RunSpec::threads must fall back
+            // to the fitted class means rather than mis-priced op times
             self.fwd_op_costs =
-                Some((fwd_plan.clone(), trace_report::per_op_costs(&fwd_plan, &ft)));
+                Some((fwd_plan.clone(), ft.threads, trace_report::per_op_costs(&fwd_plan, &ft)));
         }
         if let Some(bt) = bt {
             self.bwd_cost = trace_report::calibrate_cost_with_bytes(&bwd_plan, &bt, &self.bwd_cost);
             if self.per_op_enabled() {
-                self.bwd_op_costs =
-                    Some((bwd_plan.clone(), trace_report::per_op_costs(&bwd_plan, &bt)));
+                self.bwd_op_costs = Some((
+                    bwd_plan.clone(),
+                    bt.threads,
+                    trace_report::per_op_costs(&bwd_plan, &bt),
+                ));
             }
         }
         self.calibrated = true;
@@ -1117,9 +1266,31 @@ impl Session {
 // The executor engine (moved from `harness::run_dist_attention_exec`)
 // ---------------------------------------------------------------------------
 
+/// What one `execute_plans` call produced: the run (or the error that
+/// stopped it), the typed per-rank post-mortem when anything failed, and
+/// the injected fault events — separated from `run` because the vendored
+/// `anyhow` cannot carry (or downcast to) structured payloads.
+pub(crate) struct ExecAttempt {
+    pub(crate) run: Result<ExecRun>,
+    pub(crate) report: Option<FailureReport>,
+    pub(crate) fault_events: Vec<FaultEvent>,
+}
+
+impl ExecAttempt {
+    /// An attempt that failed before any worker launched.
+    fn fail(e: anyhow::Error) -> ExecAttempt {
+        ExecAttempt { run: Err(e), report: None, fault_events: Vec::new() }
+    }
+}
+
 /// Launch the placed worker network and run `layers` stacked attention
 /// calls (fwd + optional bwd each) over the given plans — the engine
 /// behind [`Session::execute_with`] and the deprecated harness shims.
+///
+/// Worker threads run inside a panic guard: a panicking or failing rank
+/// broadcasts a typed abort to its peers (so their blocking recvs unwind
+/// instead of hanging) and surfaces in the attempt's [`FailureReport`]
+/// with its rank attached — `join()` never propagates a bare panic.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn execute_plans(
     fwd_plan: Arc<Plan>,
@@ -1130,13 +1301,13 @@ pub(crate) fn execute_plans(
     do_: Option<&Tensor>,
     opts: &ExecOpts,
     layers: usize,
-) -> Result<ExecRun> {
+) -> ExecAttempt {
     let n_workers = fwd_plan.n_workers;
     if layers == 0 {
-        return Err(anyhow!("layers must be >= 1"));
+        return ExecAttempt::fail(anyhow!("layers must be >= 1"));
     }
     if bwd_plan.n_workers != n_workers {
-        return Err(anyhow!(
+        return ExecAttempt::fail(anyhow!(
             "fwd plan has {n_workers} workers, bwd plan {}",
             bwd_plan.n_workers
         ));
@@ -1145,7 +1316,7 @@ pub(crate) fn execute_plans(
     // against different boundaries would expect different shapes and
     // pair structure than the tensors sharded below
     if fwd_plan.varlen.as_deref() != bwd_plan.varlen.as_deref() {
-        return Err(anyhow!(
+        return ExecAttempt::fail(anyhow!(
             "fwd and bwd plans carry different varlen chunk specs"
         ));
     }
@@ -1154,7 +1325,7 @@ pub(crate) fn execute_plans(
     let (qs, ks, vs, dos) = match fwd_plan.varlen.as_deref() {
         Some(spec) => {
             if spec.total_tokens() != q.shape[1] {
-                return Err(anyhow!(
+                return ExecAttempt::fail(anyhow!(
                     "varlen spec covers {} tokens but q has {}",
                     spec.total_tokens(),
                     q.shape[1]
@@ -1168,7 +1339,7 @@ pub(crate) fn execute_plans(
             let c0 = spec.chunk_tokens(0);
             let uniform = (1..n_workers).all(|w| spec.chunk_tokens(w) == c0);
             if !uniform && matches!(opts.backend, BackendSpec::Pjrt(_)) {
-                return Err(anyhow!(
+                return ExecAttempt::fail(anyhow!(
                     "ragged varlen boundaries need per-chunk AOT artifacts; the fixed-shape \
                      manifest executes uniform chunks only (run the host backend, simulate \
                      ragged plans with the event engine, or rebalance with uniform boundaries)"
@@ -1202,9 +1373,19 @@ pub(crate) fn execute_plans(
         lse: Tensor,
         grads: Option<(Tensor, Tensor, Tensor)>,
         bytes: u64,
-        /// Per-layer (fwd, bwd) traces (empty bwd trace when no backward).
-        layer_traces: Vec<(RunTrace, RunTrace)>,
     }
+
+    /// What each worker thread hands back: its result (or rank-attributed
+    /// error), the typed failure it recorded, the fault events its sender
+    /// injected, and the per-layer `(fwd, bwd)` traces it flushed —
+    /// traces ride outside `WorkerOut` so a failing rank still surfaces
+    /// the spans it completed before unwinding.
+    type WorkerRet = (
+        Result<WorkerOut>,
+        Option<ExecError>,
+        Vec<FaultEvent>,
+        Vec<(RunTrace, RunTrace)>,
+    );
 
     // Host-kernel worker threads, clamped to the machine (threads=1 pins
     // the single-threaded deterministic baseline; the tiled kernels are
@@ -1214,34 +1395,54 @@ pub(crate) fn execute_plans(
         .threads
         .clamp(1, thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(1));
 
+    let deadline = opts.watchdog_s.map(Duration::from_secs_f64);
     let epoch = Instant::now();
     let mut handles = Vec::new();
     for (rank, mut comm) in comms.into_iter().enumerate() {
         let backend = opts.backend.clone();
         let trace = opts.trace;
         let deep = opts.deep_copy_sends;
+        let faults = opts.faults.clone();
         let fwd_plan = fwd_plan.clone();
         let bwd_plan = bwd_plan.clone();
         let q = qs[rank].clone();
         let k = ks[rank].clone();
         let v = vs[rank].clone();
         let do_chunk = dos.as_ref().map(|d| d[rank].clone());
-        handles.push(thread::spawn(move || -> Result<WorkerOut> {
+        handles.push(thread::spawn(move || -> WorkerRet {
             comm.set_deep_copy_sends(deep);
-            let kernels: Box<dyn Kernels> = match &backend {
-                BackendSpec::Pjrt(dir) => {
-                    let rt = Runtime::load(dir)?;
-                    rt.precompile(ATTN_ARTIFACTS)?;
-                    Box::new(rt)
+            let mut stall = 1.0_f64;
+            if let Some(fs) = &faults {
+                stall = fs.stall_factor(rank);
+                let mut rf = RankFaults::new(rank, fs);
+                if stall > 1.0 {
+                    rf.note_stall(stall);
                 }
-                BackendSpec::HostRef => Box::new(HostKernels::tiled(eff_threads)),
-                BackendSpec::Null => Box::new(NullKernels),
-            };
-            let epoch = trace.then_some(epoch);
-            let mut layer_traces = Vec::with_capacity(if trace { layers } else { 0 });
-            let mut last: Option<(Tensor, Tensor, Option<(Tensor, Tensor, Tensor)>)> = None;
-            for layer in 0..layers {
-                let (o, lse, fwd_trace) = {
+                comm.set_faults(rf);
+                comm.set_deadline(deadline);
+            }
+            let mut layer_traces: Vec<(RunTrace, RunTrace)> =
+                Vec::with_capacity(if trace { layers } else { 0 });
+            // the guard keeps a panicking rank from tearing down the join
+            // loop unannounced; comm and the trace buffer live outside it
+            // so the post-mortem (typed failure, events, partial spans)
+            // survives the unwind
+            let body = catch_unwind(AssertUnwindSafe(|| -> Result<WorkerOut> {
+                let mut kernels: Box<dyn Kernels> = match &backend {
+                    BackendSpec::Pjrt(dir) => {
+                        let rt = Runtime::load(dir)?;
+                        rt.precompile(ATTN_ARTIFACTS)?;
+                        Box::new(rt)
+                    }
+                    BackendSpec::HostRef => Box::new(HostKernels::tiled(eff_threads)),
+                    BackendSpec::Null => Box::new(NullKernels),
+                };
+                if stall > 1.0 {
+                    kernels = Box::new(StallKernels { inner: kernels, factor: stall });
+                }
+                let epoch = trace.then_some(epoch);
+                let mut last: Option<(Tensor, Tensor, Option<(Tensor, Tensor, Tensor)>)> = None;
+                for layer in 0..layers {
                     let mut ctx = AttnCtx {
                         rank,
                         runtime: &*kernels,
@@ -1251,55 +1452,163 @@ pub(crate) fn execute_plans(
                         epoch,
                         trace: RunTrace::default(),
                     };
-                    let (o, lse) = ctx.forward(&q, &k, &v)?;
-                    (o, lse, ctx.trace)
-                };
-                let (grads, bwd_trace) = match do_chunk.as_ref() {
-                    Some(d) => {
-                        let mut ctx = AttnCtx {
-                            rank,
-                            runtime: &*kernels,
-                            comm: &mut comm,
-                            plan: &bwd_plan,
-                            call_id: (2 * layer + 1) as u32,
-                            epoch,
-                            trace: RunTrace::default(),
-                        };
-                        let g = ctx.backward(&q, &k, &v, &o, &lse, d)?;
-                        (Some(g), ctx.trace)
+                    let fwd_res = ctx.forward(&q, &k, &v);
+                    let fwd_trace = ctx.trace;
+                    let (o, lse) = match fwd_res {
+                        Ok(x) => x,
+                        Err(e) => {
+                            if trace {
+                                layer_traces.push((fwd_trace, RunTrace::default()));
+                            }
+                            return Err(e);
+                        }
+                    };
+                    let (grads, bwd_trace) = match do_chunk.as_ref() {
+                        Some(d) => {
+                            let mut ctx = AttnCtx {
+                                rank,
+                                runtime: &*kernels,
+                                comm: &mut comm,
+                                plan: &bwd_plan,
+                                call_id: (2 * layer + 1) as u32,
+                                epoch,
+                                trace: RunTrace::default(),
+                            };
+                            let bwd_res = ctx.backward(&q, &k, &v, &o, &lse, d);
+                            let bwd_trace = ctx.trace;
+                            match bwd_res {
+                                Ok(g) => (Some(g), bwd_trace),
+                                Err(e) => {
+                                    if trace {
+                                        layer_traces.push((fwd_trace, bwd_trace));
+                                    }
+                                    return Err(e);
+                                }
+                            }
+                        }
+                        None => (None, RunTrace::default()),
+                    };
+                    if trace {
+                        layer_traces.push((fwd_trace, bwd_trace));
                     }
-                    None => (None, RunTrace::default()),
-                };
-                if trace {
-                    layer_traces.push((fwd_trace, bwd_trace));
+                    last = Some((o, lse, grads));
                 }
-                last = Some((o, lse, grads));
-            }
-            let (o, lse, grads) = last.expect("layers >= 1");
-            let bytes = comm.bytes_sent();
-            Ok(WorkerOut { rank, o, lse, grads, bytes, layer_traces })
+                let (o, lse, grads) = last.expect("layers >= 1");
+                let bytes = comm.bytes_sent();
+                Ok(WorkerOut { rank, o, lse, grads, bytes })
+            }));
+            let result: Result<WorkerOut> = match body {
+                Ok(Ok(w)) => Ok(w),
+                Ok(Err(e)) => {
+                    // the executor records + broadcasts typed causes it
+                    // surfaces itself; anything else (kernel setup, shape
+                    // checks) is this rank's own failure — poison peers so
+                    // their blocking recvs unwind instead of hanging
+                    if comm.failure().is_none() {
+                        let err = ExecError::Failed { rank, msg: format!("{e}") };
+                        comm.broadcast_abort(&err);
+                        comm.record_failure(err);
+                    }
+                    Err(e.context(format!("rank {rank} failed")))
+                }
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    let err = ExecError::Panicked { rank, msg: msg.clone() };
+                    comm.broadcast_abort(&err);
+                    comm.record_failure(err);
+                    Err(anyhow!("rank {rank} panicked: {msg}"))
+                }
+            };
+            (result, comm.take_failure(), comm.take_fault_events(), layer_traces)
         }));
     }
 
     let mut outs: Vec<Option<WorkerOut>> = (0..n_workers).map(|_| None).collect();
     let mut comm_bytes = 0;
-    for h in handles {
-        let w = h
-            .join()
-            .map_err(|_| anyhow!("worker thread panicked"))?
-            .context("worker failed")?;
-        comm_bytes += w.bytes;
-        let rank = w.rank;
-        outs[rank] = Some(w);
+    let mut failures: Vec<ExecError> = Vec::new();
+    let mut fault_events: Vec<FaultEvent> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut trace_by_rank: Vec<Vec<(RunTrace, RunTrace)>> = Vec::with_capacity(n_workers);
+    for (rank, h) in handles.into_iter().enumerate() {
+        // the in-thread guard converts panics; a join error here means the
+        // thread died outside it (unwind during the guard's own teardown)
+        let (result, failure, events, traces) = match h.join() {
+            Ok(ret) => ret,
+            Err(_) => (
+                Err(anyhow!("rank {rank} worker thread died outside its panic guard")),
+                Some(ExecError::Panicked {
+                    rank,
+                    msg: "worker thread died outside its panic guard".to_string(),
+                }),
+                Vec::new(),
+                Vec::new(),
+            ),
+        };
+        fault_events.extend(events);
+        trace_by_rank.push(traces);
+        if let Some(f) = failure {
+            failures.push(f);
+        }
+        match result {
+            Ok(w) => {
+                comm_bytes += w.bytes;
+                let r = w.rank;
+                outs[r] = Some(w);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
     let wall_s = epoch.elapsed().as_secs_f64();
-    let outs: Vec<WorkerOut> = outs.into_iter().map(|o| o.unwrap()).collect();
+
+    if first_err.is_some() || !failures.is_empty() {
+        // post-mortem: merge whatever final-layer spans each rank flushed
+        // before unwinding (possibly mid-layer, possibly from different
+        // layers — these answer "where was everyone when it died")
+        let (partial_fwd, partial_bwd) = if opts.trace {
+            let merge_last = |pick: &dyn Fn(&(RunTrace, RunTrace)) -> RunTrace, n_ops: usize| {
+                let rts: Vec<RunTrace> =
+                    trace_by_rank.iter().filter_map(|t| t.last().map(pick)).collect();
+                if rts.is_empty() {
+                    return None;
+                }
+                let mut m = MergedTrace::merge(n_ops, &rts);
+                m.threads = eff_threads;
+                Some(m)
+            };
+            (
+                merge_last(&|p| p.0.clone(), fwd_plan.n_ops()),
+                merge_last(&|p| p.1.clone(), bwd_plan.n_ops()),
+            )
+        } else {
+            (None, None)
+        };
+        let report = FailureReport { failures, partial_fwd, partial_bwd };
+        let run = Err(match report.root_cause() {
+            Some(root) => anyhow!(
+                "{} of {n_workers} rank(s) failed; root cause: {root}",
+                report.failures.len()
+            ),
+            None => first_err.unwrap_or_else(|| anyhow!("execution failed")),
+        });
+        return ExecAttempt { run, report: Some(report), fault_events };
+    }
+
+    let outs: Vec<WorkerOut> =
+        outs.into_iter().map(|o| o.expect("every rank joined clean")).collect();
 
     let (fwd_trace, bwd_trace, layer_traces) = if opts.trace {
         let mut lt: Vec<(Option<MergedTrace>, Option<MergedTrace>)> = Vec::with_capacity(layers);
         for l in 0..layers {
-            let ft: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].0.clone()).collect();
-            let bt: Vec<RunTrace> = outs.iter().map(|w| w.layer_traces[l].1.clone()).collect();
+            let ft: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].0.clone()).collect();
+            let bt: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].1.clone()).collect();
             let mut mf = MergedTrace::merge(fwd_plan.n_ops(), &ft);
             mf.threads = eff_threads;
             let mb = do_.is_some().then(|| {
@@ -1345,13 +1654,17 @@ pub(crate) fn execute_plans(
     } else {
         None
     };
-    Ok(ExecRun {
-        result: DistAttnResult { o, lse, grads, comm_bytes },
-        fwd_trace,
-        bwd_trace,
-        layer_traces,
-        wall_s,
-    })
+    ExecAttempt {
+        run: Ok(ExecRun {
+            result: DistAttnResult { o, lse, grads, comm_bytes },
+            fwd_trace,
+            bwd_trace,
+            layer_traces,
+            wall_s,
+        }),
+        report: None,
+        fault_events,
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1434,10 +1747,16 @@ fn opt_bool(j: &Json, k: &str, what: &str, dv: bool) -> Result<bool> {
 }
 
 fn opts_to_json(o: &OptimizeOpts) -> String {
+    let slowdowns = {
+        let parts: Vec<String> =
+            o.slowdowns.iter().map(|&(w, f)| format!("[{w}, {f}]")).collect();
+        format!("[{}]", parts.join(", "))
+    };
     format!(
         "{{\"seed\": {}, \"swap_rounds\": {}, \"depths\": {}, \"knee_rel_tol\": {}, \
          \"stage_mem_frac\": {}, \"flip\": {}, \"placement\": {}, \"rebalance_rounds\": {}, \
-         \"align_doc_cuts\": {}, \"move_boundaries\": {}, \"per_op_costs\": {}}}",
+         \"align_doc_cuts\": {}, \"move_boundaries\": {}, \"per_op_costs\": {}, \
+         \"slowdowns\": {slowdowns}}}",
         u64_to_json(o.seed),
         o.swap_rounds,
         usize_list(&o.depths),
@@ -1461,6 +1780,24 @@ fn opts_from_json(j: &Json) -> Result<OptimizeOpts> {
             .as_usize_vec()
             .ok_or_else(|| anyhow!("optimize.depths must be an array of integers"))?,
     };
+    let slowdowns = match j.get("slowdowns") {
+        None | Some(Json::Null) => d.slowdowns.clone(),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("optimize.slowdowns must be an array of [rank, factor]"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for e in arr {
+                let pair = e.as_arr().filter(|a| a.len() == 2);
+                let parsed = pair.and_then(|a| Some((a[0].as_usize()?, a[1].as_f64()?)));
+                match parsed {
+                    Some(p) => out.push(p),
+                    None => bail!("optimize.slowdowns entries must be [rank, factor] pairs"),
+                }
+            }
+            out
+        }
+    };
     Ok(OptimizeOpts {
         seed: u64_from_json(j.at("seed"), "optimize.seed")?.unwrap_or(d.seed),
         swap_rounds: opt_usize(j, "swap_rounds", w, d.swap_rounds)?,
@@ -1473,6 +1810,7 @@ fn opts_from_json(j: &Json) -> Result<OptimizeOpts> {
         align_doc_cuts: opt_bool(j, "align_doc_cuts", w, d.align_doc_cuts)?,
         move_boundaries: opt_bool(j, "move_boundaries", w, d.move_boundaries)?,
         per_op_costs: opt_bool(j, "per_op_costs", w, d.per_op_costs)?,
+        slowdowns,
     })
 }
 
@@ -1534,12 +1872,16 @@ impl RunSpec {
         };
         let seed = u64_to_json(self.seed);
         let ckpt = self.ckpt.name();
+        let faults = match &self.faults {
+            None => "null".to_string(),
+            Some(f) => f.to_json(),
+        };
         format!(
             "{{\n  \"workload\": {workload},\n  \"n_workers\": {},\n  \"schedule\": \"{schedule}\",\n  \
              \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
              \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
              \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \
-             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"seed\": {seed}\n}}\n",
+             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"faults\": {faults},\n  \"seed\": {seed}\n}}\n",
             self.n_workers,
             self.layers,
             self.backward,
@@ -1690,6 +2032,10 @@ impl RunSpec {
             deep_copy_sends: opt_bool(&j, "deep_copy_sends", "", false)?,
             threads: opt_usize(&j, "threads", "", 1)?,
             ckpt,
+            faults: match j.get("faults") {
+                None | Some(Json::Null) => None,
+                Some(f) => Some(FaultSpec::from_json(f)?),
+            },
             seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(0),
         })
     }
@@ -1698,6 +2044,7 @@ impl RunSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::CrashSpec;
 
     #[test]
     fn plan_stage_matches_direct_lowering() {
@@ -1734,6 +2081,17 @@ mod tests {
         // GQA grouping must divide
         let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
         spec.workload = Some(Workload::new(4, 3, 8, 16));
+        assert!(spec.validate().is_err());
+        // fault targets must name real ranks
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.faults = Some(FaultSpec {
+            crash: Some(CrashSpec { rank: 4, step: 0, pass: Pass::Forward }),
+            ..FaultSpec::default()
+        });
+        assert!(spec.validate().is_err());
+        // fault probabilities must be probabilities
+        let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+        spec.faults = Some(FaultSpec { drop_prob: 1.5, ..FaultSpec::default() });
         assert!(spec.validate().is_err());
     }
 

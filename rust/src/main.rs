@@ -21,15 +21,26 @@
 //!            [--varlen [--docs N] [--zipf A] [--pack-seed N]]
 //!            token-level rebalancing of a Zipf-packed document batch
 //!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
-//!            [--ckpt-out FILE] [--kernels-out FILE] [--skip-exec]
-//!                                           optimizer + varlen grids (driven
+//!            [--ckpt-out FILE] [--kernels-out FILE] [--faults-out FILE]
+//!            [--skip-exec]                  optimizer + varlen grids (driven
 //!                                           through Session), the executor
 //!                                           transport micro-bench, the
-//!                                           checkpoint-strategy trade-off, and
-//!                                           the host-kernel micro-bench;
+//!                                           checkpoint-strategy trade-off, the
+//!                                           host-kernel micro-bench, and the
+//!                                           zero-fault overhead gate;
 //!                                           --json writes BENCH_optimizer.json,
 //!                                           BENCH_varlen.json, BENCH_executor.json,
-//!                                           BENCH_ckpt.json, BENCH_kernels.json
+//!                                           BENCH_ckpt.json, BENCH_kernels.json,
+//!                                           BENCH_faults.json
+//!   chaos    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
+//!            [--schedule S] [--seed N] [--stall F] [--layers L]
+//!                                           seeded fault injection on the real
+//!                                           host executor: per fault class
+//!                                           (delay / drop / chaos / stall /
+//!                                           crash), executed makespan
+//!                                           degradation vs the event engine's
+//!                                           prediction, plus the optimizer's
+//!                                           best plan under a pinned straggler
 //!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
 //!            [--schedule S] [--depth N] [--seed N] [--layers L] [--threads T]
 //!                                           run the real executor (host kernels)
@@ -55,12 +66,12 @@ use distflash::baselines::ulysses::Ulysses;
 use distflash::baselines::SystemModel;
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    CkptStrategy, OptimizeOpts, OptimizePolicy, Pass, Plan, RunSpec, Schedule, ScheduleKind,
-    Session, VarlenSpec, Workload,
+    CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, Plan, RunSpec,
+    Schedule, ScheduleKind, Session, VarlenSpec, Workload,
 };
 use distflash::report::{paper, trace};
 use distflash::runtime::{HostKernels, Kernels, Runtime, Tensor, Value};
-use distflash::simulator::{simulate_plan, EventOpts};
+use distflash::simulator::{simulate_plan, AttnCost, EventOpts, PlanSim};
 use distflash::train::{train, AdamConfig, TrainConfig};
 use distflash::util::Rng;
 
@@ -613,6 +624,195 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro chaos`: seeded fault injection on the real threaded executor
+/// (host kernels, bare checkout). One run per fault class — message delay,
+/// message drop, both ("chaos"), a pinned straggler, and a mid-plan rank
+/// crash — each compared against the event engine's predicted makespan.
+/// Message-level classes are *predicted* free (at-least-once delivery plus
+/// dedup is exactly-once, and retransmits hide under compute), so their
+/// rows pin the outputs bit-identical instead; the stall class degrades
+/// the sim via [`PlanSim::set_worker_slowdown`] and must degrade the
+/// executed wall-clock in the same direction; the crash class must be
+/// *detected* (structured error within the watchdog budget), not hung.
+/// Ends with the degradation-aware planning query: the optimizer's best
+/// plan when one rank is pinned `--stall` slow.
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    let p = args.usize("p", 4).max(2);
+    let chunk = args.usize("chunk", 128);
+    let h = args.usize("heads", 4);
+    let kvh = args.usize("kv-heads", 2);
+    let d = args.usize("dim", 16);
+    let layers = args.usize("layers", 2);
+    let seed = args.usize("seed", 7) as u64;
+    let stall = (args.f32("stall", 1.5) as f64).max(1.0);
+    let kind = schedule_kind(&args.get("schedule", "balanced"));
+    let n = p * chunk;
+    let straggler = p - 1;
+    println!(
+        "chaos: {kind:?} P={p} N={n} heads={h}/{kvh} d={d} layers={layers} seed={seed} \
+         (host kernels; stall factor {stall:.2}x on rank {straggler})"
+    );
+
+    // event-engine predictions: a host-flavored cost model over the same
+    // plans the runs execute (absolute scale is irrelevant — the table
+    // reports degradation ratios)
+    let (fwd, bwd) = Session::new(RunSpec::plans_only(kind, p))?.plans()?;
+    let flops = (2 * h * chunk * chunk * d) as f64;
+    let cost = AttnCost {
+        pair_full_s: flops / 1e12,
+        pair_diag_s: 0.6 * flops / 1e12,
+        rescale_s: (h * chunk * d) as f64 / 1e12,
+        kv_bytes: (2 * kvh * chunk * d * 4) as f64,
+        q_bytes: (h * chunk * d * 4) as f64,
+        result_bytes: ((h * chunk * d + 2 * h * chunk) * 4) as f64,
+        overlap: true,
+    };
+    let cluster = ClusterSpec::dgx_1x8();
+    let identity: Vec<usize> = (0..p).collect();
+    let predict = |slow: &[(usize, f64)]| -> f64 {
+        [&fwd, &bwd]
+            .into_iter()
+            .map(|plan| {
+                let mut sim = PlanSim::new(plan, &cost);
+                for &(w, f) in slow {
+                    sim.set_worker_slowdown(w, f);
+                }
+                sim.total_s(&cluster, &identity, 1)
+            })
+            .sum()
+    };
+
+    let classes: Vec<(&str, Option<FaultSpec>)> = vec![
+        ("none", None),
+        (
+            "delay",
+            Some(FaultSpec { seed, delay_prob: 0.3, delay_sends: 3, ..FaultSpec::default() }),
+        ),
+        (
+            "drop",
+            Some(FaultSpec { seed, drop_prob: 0.25, max_retransmits: 3, ..FaultSpec::default() }),
+        ),
+        ("chaos", Some(FaultSpec::chaos(seed))),
+        (
+            "stall",
+            Some(FaultSpec { seed, stalls: vec![(straggler, stall)], ..FaultSpec::default() }),
+        ),
+        (
+            "crash",
+            Some(FaultSpec {
+                seed,
+                crash: Some(CrashSpec {
+                    rank: p / 2,
+                    step: 2.min(p - 1),
+                    pass: Pass::Forward,
+                }),
+                ..FaultSpec::default()
+            }),
+        ),
+    ];
+
+    let mut rng = Rng::new(seed);
+    let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let make_spec = |faults: Option<FaultSpec>| {
+        let mut spec = RunSpec::host(kind, p, Workload::new(h, kvh, d, chunk));
+        spec.layers = layers;
+        spec.faults = faults;
+        spec
+    };
+    // warm run (thread spawn + allocator) so the fault-free row is not
+    // charged the process's first-touch costs
+    Session::new(make_spec(None))?.execute_with(&q, &k, &v, Some(&do_))?;
+
+    let sim_base = predict(&[]);
+    let mut wall_base = 0.0f64;
+    let mut o_base: Option<Tensor> = None;
+    println!(
+        "{:<7} {:>10} {:>7} {:>10} {:>7}  {}",
+        "class", "sim (ms)", "sim x", "exec (ms)", "exec x", "outcome"
+    );
+    for (name, faults) in classes {
+        let sim_s = match &faults {
+            Some(f) if !f.stalls.is_empty() => predict(&f.stalls),
+            _ => sim_base,
+        };
+        let mut session = Session::new(make_spec(faults.clone()))?;
+        let t0 = std::time::Instant::now();
+        let run = session.execute_with(&q, &k, &v, Some(&do_)).map(|_| ());
+        let wall = t0.elapsed().as_secs_f64();
+        let events = session.fault_events().len();
+        let outcome = match run {
+            Ok(()) => {
+                let res = session.result()?;
+                let bitwise = match &o_base {
+                    None => {
+                        wall_base = wall;
+                        o_base = Some(res.o.clone());
+                        "baseline".to_string()
+                    }
+                    Some(base) if res.o == *base => "outputs bit-identical".to_string(),
+                    Some(base) => {
+                        format!("OUTPUTS DIVERGED (max|d|={:.2e})", res.o.max_abs_diff(base))
+                    }
+                };
+                format!("{bitwise}, {events} injected events")
+            }
+            Err(e) => {
+                let root = session
+                    .failure_report()
+                    .and_then(|r| r.root_cause())
+                    .map(|c| format!("{c}"))
+                    .unwrap_or_else(|| format!("{e}"));
+                format!("detected: {root} ({events} injected events)")
+            }
+        };
+        let base = if wall_base > 0.0 { wall_base } else { wall };
+        println!(
+            "{:<7} {:>10.2} {:>6.2}x {:>10.2} {:>6.2}x  {}",
+            name,
+            sim_s * layers as f64 * 1e3,
+            sim_s / sim_base,
+            wall * 1e3,
+            wall / base,
+            outcome
+        );
+    }
+    println!(
+        "(sim = event-engine makespan x layers; message classes predict 1.00x by design — \
+         exactly-once delivery hides under compute — and must keep outputs bit-identical; \
+         the crash row must *fail fast* with a named root cause, never hang)"
+    );
+
+    // degradation-aware planning: the optimizer queried for the best plan
+    // under the pinned straggler
+    let mut ospec = RunSpec::plans_only(kind, p);
+    ospec.workload = Some(Workload::new(h, kvh, d, chunk));
+    ospec.optimize = OptimizePolicy::Schedule(OptimizeOpts {
+        seed,
+        slowdowns: vec![(straggler, stall)],
+        ..Default::default()
+    });
+    let mut osession = Session::new(ospec)?;
+    osession.optimize()?;
+    println!("degradation-aware planning (rank {straggler} pinned {stall:.2}x slow):");
+    for a in osession.audits() {
+        println!(
+            "  {:<4} default {:.2} ms -> optimized {:.2} ms ({:.2}x) depth {} flips {} moves {}{}",
+            a.pass.name(),
+            a.default_s * 1e3,
+            a.optimized_s * 1e3,
+            if a.optimized_s > 0.0 { a.default_s / a.optimized_s } else { 1.0 },
+            a.prefetch_depth,
+            a.flipped_steps.len(),
+            a.moved_ranks,
+            if a.accepted { "" } else { "  (candidate rejected — prior plan kept)" }
+        );
+    }
+    Ok(())
+}
+
 use distflash::util::json::escape as json_escape;
 
 /// Write one bench JSON document (`{"bench": ..., "schedule": "balanced",
@@ -717,6 +917,30 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 .collect();
             write_bench_json(&args.get("exec-out", "BENCH_executor.json"), "executor", &jrows)?;
             println!("{}", paper::executor_bench_table(&erows));
+
+            // zero-fault overhead gate -> BENCH_faults.json
+            let frows = paper::fault_bench_rows();
+            let jrows: Vec<String> = frows
+                .iter()
+                .map(|r| {
+                    format!(
+                        "{{\"preset\": \"{}\", \"p\": {}, \"heads\": {}, \"kv_heads\": {}, \
+                         \"chunk\": {}, \"head_dim\": {}, \"baseline_s\": {:.9}, \
+                         \"instrumented_s\": {:.9}, \"overhead\": {:.4}}}",
+                        json_escape(r.preset),
+                        r.p,
+                        r.heads,
+                        r.kv_heads,
+                        r.chunk,
+                        r.head_dim,
+                        r.baseline_s,
+                        r.instrumented_s,
+                        r.overhead(),
+                    )
+                })
+                .collect();
+            write_bench_json(&args.get("faults-out", "BENCH_faults.json"), "faults", &jrows)?;
+            println!("{}", paper::fault_bench_table(&frows));
         }
 
         // checkpoint strategy micro-bench -> BENCH_ckpt.json
@@ -770,6 +994,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         println!("{}", paper::varlen_schedules());
         if args.get("skip-exec", "false") != "true" {
             println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
+            println!("{}", paper::fault_bench_table(&paper::fault_bench_rows()));
         }
         println!("{}", paper::ckpt_tradeoff());
         println!("{}", paper::kernel_bench_table(&paper::kernel_bench_rows()));
@@ -808,11 +1033,13 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|run|verify|train|simulate|plans|optimize|trace|bench|inspect> [--flag value]...\n\
-         `tables`, `run`, `simulate`, `plans`, `optimize`, `trace`, and `bench` run on a bare checkout\n\
-         (`run`/`trace` and the executor micro-bench use the pure-host kernel backends);\n\
+         usage: repro <tables|figures|run|verify|train|simulate|plans|optimize|trace|bench|chaos|inspect> [--flag value]...\n\
+         `tables`, `run`, `simulate`, `plans`, `optimize`, `trace`, `bench`, and `chaos` run on a bare checkout\n\
+         (`run`/`trace`/`chaos` and the executor micro-bench use the pure-host kernel backends);\n\
          `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate.\n\
-         `run --spec FILE.json` drives the whole Session pipeline from a serialized RunSpec."
+         `run --spec FILE.json` drives the whole Session pipeline from a serialized RunSpec.\n\
+         `chaos` injects seeded faults (delay/drop/stall/crash) into the real executor and\n\
+         compares executed vs event-engine-predicted makespan degradation per fault class."
     );
 }
 
@@ -834,6 +1061,7 @@ fn main() -> ExitCode {
         "optimize" => cmd_optimize(&args),
         "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
+        "chaos" => cmd_chaos(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             help();

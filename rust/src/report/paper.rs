@@ -16,8 +16,8 @@ use crate::baselines::{attn_cost_bwd, attn_cost_fwd, fsdp_param_bytes, SystemMod
 use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
 use crate::coordinator::optimize::{autotune_depth, optimize_ckpt, OptimizeOpts};
 use crate::coordinator::{
-    BackendSpec, CkptStrategy, OptimizePolicy, Pass, Plan, RunSpec, Schedule, ScheduleKind,
-    Session, VarlenSpec, Workload,
+    BackendSpec, CkptStrategy, FaultSpec, OptimizePolicy, Pass, Plan, RunSpec, Schedule,
+    ScheduleKind, Session, VarlenSpec, Workload,
 };
 use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
 use crate::report::Table;
@@ -954,6 +954,124 @@ pub fn executor_bench_table(rows: &[ExecBenchRow]) -> String {
             format!("{:.2}", r.baseline_s * 1e3),
             format!("{:.2}", r.zero_copy_s * 1e3),
             format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t.render()
+}
+
+/// One row of the fault-tolerance overhead bench — shared by the
+/// `fault_overhead` table and `repro bench --json` (`BENCH_faults.json`).
+/// Both arms run the real threaded executor (fwd + bwd, null kernels) so
+/// the measured delta is purely the instrumented comm path: per-send
+/// injection draws, dedup sequence numbers, deadline-armed receives, and
+/// step-boundary abort checks — with every fault probability at zero, so
+/// nothing actually fails. CI gates `instrumented_s / baseline_s <= 1.05`
+/// on the 2x8 dev preset.
+#[derive(Clone, Debug)]
+pub struct FaultBenchRow {
+    pub preset: &'static str,
+    pub p: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    /// Tokens per chunk (per worker).
+    pub chunk: usize,
+    pub head_dim: usize,
+    /// Median wall-clock, faults unarmed (the pre-PR fast path).
+    pub baseline_s: f64,
+    /// Median wall-clock, zero-probability `FaultSpec` armed.
+    pub instrumented_s: f64,
+}
+
+impl FaultBenchRow {
+    /// Instrumentation overhead ratio (1.0 = free).
+    pub fn overhead(&self) -> f64 {
+        if self.baseline_s > 0.0 {
+            self.instrumented_s / self.baseline_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Median executor wall-clock (fwd + bwd) over `iters` runs of one
+/// fault-bench arm.
+fn fault_bench_arm(
+    fwd: &Arc<Plan>,
+    bwd: &Arc<Plan>,
+    q: &Tensor,
+    kv: &Tensor,
+    do_: &Tensor,
+    faults: &Option<FaultSpec>,
+    iters: usize,
+) -> f64 {
+    let s = crate::util::bench::bench("fault_overhead", 1, iters, || {
+        let mut spec = RunSpec::for_plans(fwd, BackendSpec::Null, q, kv);
+        spec.faults = faults.clone();
+        Session::with_plans(spec, fwd.clone(), bwd.clone())
+            .and_then(|mut s| {
+                s.execute_with(q, kv, kv, Some(do_))?;
+                Ok(())
+            })
+            .expect("fault bench run failed");
+    });
+    s.p50_ns / 1e9
+}
+
+/// Run the zero-fault overhead bench on the 2x8 dev preset (the CI gate's
+/// row), mirroring the executor micro-bench geometry.
+pub fn fault_bench_rows() -> Vec<FaultBenchRow> {
+    let grid: &[(&'static str, usize, usize, usize, usize, usize)] =
+        &[("2x8-dev", 16, 8, 8, 1024, 64)];
+    let iters = 5;
+    let mut out = Vec::new();
+    for &(preset, p, h, kvh, chunk, d) in grid {
+        let (fwd, bwd) = Session::new(RunSpec::plans_only(ScheduleKind::Balanced, p))
+            .and_then(|mut s| s.plans())
+            .expect("plans");
+        let n = p * chunk;
+        let q = Tensor::zeros(&[h, n, d]);
+        let kv = Tensor::zeros(&[kvh, n, d]);
+        let do_ = Tensor::zeros(&[h, n, d]);
+        let baseline_s = fault_bench_arm(&fwd, &bwd, &q, &kv, &do_, &None, iters);
+        // zero-probability spec: arms rng draws, seq numbers, deadlines,
+        // and abort checks without injecting a single fault
+        let armed = Some(FaultSpec::default());
+        let instrumented_s = fault_bench_arm(&fwd, &bwd, &q, &kv, &do_, &armed, iters);
+        out.push(FaultBenchRow {
+            preset,
+            p,
+            heads: h,
+            kv_heads: kvh,
+            chunk,
+            head_dim: d,
+            baseline_s,
+            instrumented_s,
+        });
+    }
+    out
+}
+
+/// Fault-tolerance overhead bench as a table (the human-readable side of
+/// `BENCH_faults.json`).
+pub fn fault_bench_table(rows: &[FaultBenchRow]) -> String {
+    let mut t = Table::new(
+        "Fault-tolerance zero-fault overhead — uninstrumented vs armed comm path (fwd+bwd, null kernels)",
+    );
+    t.header(
+        ["preset", "P", "H/KVH", "chunk", "d", "baseline (ms)", "instrumented (ms)", "overhead"]
+            .map(String::from)
+            .to_vec(),
+    );
+    for r in rows {
+        t.row(vec![
+            r.preset.into(),
+            format!("{}", r.p),
+            format!("{}/{}", r.heads, r.kv_heads),
+            k(r.chunk),
+            format!("{}", r.head_dim),
+            format!("{:.2}", r.baseline_s * 1e3),
+            format!("{:.2}", r.instrumented_s * 1e3),
+            format!("{:.3}x", r.overhead()),
         ]);
     }
     t.render()

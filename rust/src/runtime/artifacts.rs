@@ -76,24 +76,21 @@ fn req_str(j: &Json, key: &str) -> Result<String> {
 }
 
 fn tensor_meta(j: &Json) -> Result<TensorMeta> {
-    Ok(TensorMeta {
-        name: req_str(j, "name")?,
-        shape: j
-            .at("shape")
-            .as_usize_vec()
-            .ok_or_else(|| anyhow!("manifest: bad shape"))?,
-        dtype: req_str(j, "dtype")?,
-    })
+    let name = req_str(j, "name")?;
+    let shape = j.at("shape").as_usize_vec().ok_or_else(|| {
+        anyhow!("manifest: tensor {name:?} has a bad shape (want an array of non-negative ints)")
+    })?;
+    let dtype = req_str(j, "dtype")?;
+    Ok(TensorMeta { name, shape, dtype })
 }
 
 fn param_meta(j: &Json) -> Result<ParamMeta> {
-    Ok(ParamMeta {
-        name: req_str(j, "name")?,
-        shape: j
-            .at("shape")
-            .as_usize_vec()
-            .ok_or_else(|| anyhow!("manifest: bad param shape"))?,
-    })
+    let name = req_str(j, "name")?;
+    let shape = j
+        .at("shape")
+        .as_usize_vec()
+        .ok_or_else(|| anyhow!("manifest: param {name:?} has a bad shape"))?;
+    Ok(ParamMeta { name, shape })
 }
 
 impl Manifest {
@@ -123,20 +120,24 @@ impl Manifest {
         };
 
         let mut layer_params = Vec::new();
-        for p in j
+        for (i, p) in j
             .at("layer_params")
             .as_arr()
             .ok_or_else(|| anyhow!("manifest: layer_params not an array"))?
+            .iter()
+            .enumerate()
         {
-            layer_params.push(param_meta(p)?);
+            layer_params.push(param_meta(p).with_context(|| format!("layer_params[{i}]"))?);
         }
         let mut global_params = Vec::new();
-        for p in j
+        for (i, p) in j
             .at("global_params")
             .as_arr()
             .ok_or_else(|| anyhow!("manifest: global_params not an array"))?
+            .iter()
+            .enumerate()
         {
-            global_params.push(param_meta(p)?);
+            global_params.push(param_meta(p).with_context(|| format!("global_params[{i}]"))?);
         }
 
         let mut artifacts = BTreeMap::new();
@@ -147,11 +148,12 @@ impl Manifest {
         for (name, a) in arts {
             let mut inputs = Vec::new();
             for t in a.at("inputs").as_arr().unwrap_or(&[]) {
-                inputs.push(tensor_meta(t)?);
+                inputs.push(tensor_meta(t).with_context(|| format!("artifact {name:?} inputs"))?);
             }
             let mut outputs = Vec::new();
             for t in a.at("outputs").as_arr().unwrap_or(&[]) {
-                outputs.push(tensor_meta(t)?);
+                outputs
+                    .push(tensor_meta(t).with_context(|| format!("artifact {name:?} outputs"))?);
             }
             if inputs.is_empty() || outputs.is_empty() {
                 bail!("manifest: artifact {name:?} missing inputs/outputs");
@@ -159,9 +161,10 @@ impl Manifest {
             artifacts.insert(
                 name.clone(),
                 ArtifactMeta {
-                    file: req_str(a, "file")?,
+                    file: req_str(a, "file").with_context(|| format!("artifact {name:?}"))?,
                     inputs,
                     outputs,
+                    // advisory: absent in hand-written fixtures
                     sha256: a.at("sha256").as_str().unwrap_or("").to_string(),
                 },
             );

@@ -19,6 +19,14 @@
 //! axis-1 chunkers when the head axis is 1 all return non-materializing
 //! slices. Axis-1 chunks of a multi-head tensor interleave head-major rows
 //! and are necessarily copies.
+//!
+//! ## Panics
+//!
+//! Shape/rank preconditions on these methods are *caller bugs* and panic
+//! with the offending shapes in the message. Runtime failures (peer loss,
+//! recv timeouts, kernel errors) are `Result`s at the comm/executor layer
+//! (`coordinator::fault`), never tensor panics. View window arithmetic is
+//! an internal invariant held by construction and only `debug_assert`ed.
 
 use std::sync::Arc;
 
@@ -50,9 +58,14 @@ impl Tensor {
         Tensor { shape, buf: Arc::new(data), off: 0 }
     }
 
-    /// Window of `buf` starting at `off`, sized by `shape`.
+    /// Window of `buf` starting at `off`, sized by `shape`. In-bounds by
+    /// construction at every call site (internal invariant).
     fn view_of(buf: Arc<Vec<f32>>, shape: Vec<usize>, off: usize) -> Self {
-        debug_assert!(off + shape.iter().product::<usize>() <= buf.len());
+        debug_assert!(
+            off + shape.iter().product::<usize>() <= buf.len(),
+            "view window {off}..+{shape:?} out of bounds for buffer of {} (internal invariant)",
+            buf.len()
+        );
         Tensor { shape, buf, off }
     }
 
@@ -163,7 +176,11 @@ impl Tensor {
     /// Split axis-0 into `n` equal chunks (sequence sharding) — zero-copy
     /// views into the parent buffer.
     pub fn chunk0(&self, n: usize) -> Vec<Tensor> {
-        assert!(!self.shape.is_empty() && self.shape[0] % n == 0);
+        assert!(
+            !self.shape.is_empty() && n > 0 && self.shape[0] % n == 0,
+            "chunk0: cannot split axis 0 of shape {:?} into {n} equal chunks",
+            self.shape
+        );
         let rows = self.shape[0] / n;
         let stride: usize = self.shape[1..].iter().product::<usize>().max(1) * rows;
         let mut shape = self.shape.clone();
@@ -175,12 +192,19 @@ impl Tensor {
 
     /// Concatenate along axis 0 (inverse of `chunk0`).
     pub fn cat0(parts: &[Tensor]) -> Tensor {
-        assert!(!parts.is_empty());
+        assert!(!parts.is_empty(), "cat0 of zero tensors");
+        assert!(!parts[0].shape.is_empty(), "cat0 needs rank >= 1 parts, got a scalar");
         let mut shape = parts[0].shape.clone();
         shape[0] = parts.iter().map(|t| t.shape[0]).sum();
         let mut data = Vec::with_capacity(shape.iter().product());
         for p in parts {
-            assert_eq!(p.shape[1..], parts[0].shape[1..], "cat0 trailing dims differ");
+            assert_eq!(
+                p.shape[1..],
+                parts[0].shape[1..],
+                "cat0: trailing dims of {:?} differ from {:?}",
+                p.shape,
+                parts[0].shape
+            );
             data.extend_from_slice(p.data());
         }
         Tensor::new(shape, data)
@@ -190,9 +214,18 @@ impl Tensor {
     /// axis — the layout used to shard per-head q/k/v across workers.
     /// Zero-copy when H == 1 (the chunks are contiguous windows).
     pub fn chunk_axis1(&self, n: usize) -> Vec<Tensor> {
-        assert_eq!(self.shape.len(), 3);
+        assert_eq!(
+            self.shape.len(),
+            3,
+            "chunk_axis1 needs a rank-3 (H, N, D) tensor, got shape {:?}",
+            self.shape
+        );
         let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
-        assert_eq!(c % n, 0);
+        assert!(
+            n > 0 && c % n == 0,
+            "chunk_axis1: axis 1 of shape {:?} does not split into {n} equal chunks",
+            self.shape
+        );
         let rows = c / n;
         if h == 1 {
             return (0..n)
@@ -224,11 +257,22 @@ impl Tensor {
     /// `bounds[i]..bounds[i+1]`. `cat_axis1` is the inverse. Zero-copy
     /// when H == 1.
     pub fn chunk_axis1_at(&self, bounds: &[usize]) -> Vec<Tensor> {
-        assert_eq!(self.shape.len(), 3);
+        assert_eq!(
+            self.shape.len(),
+            3,
+            "chunk_axis1_at needs a rank-3 (H, N, D) tensor, got shape {:?}",
+            self.shape
+        );
         let (h, c, d) = (self.shape[0], self.shape[1], self.shape[2]);
-        assert!(bounds.len() >= 2);
-        assert_eq!(bounds[0], 0);
-        assert_eq!(*bounds.last().unwrap(), c);
+        assert!(
+            bounds.len() >= 2 && bounds[0] == 0 && bounds[bounds.len() - 1] == c,
+            "chunk_axis1_at: bounds {bounds:?} must run 0..={c} over axis 1 of shape {:?}",
+            self.shape
+        );
+        assert!(
+            bounds.windows(2).all(|w| w[0] <= w[1]),
+            "chunk_axis1_at: bounds {bounds:?} must be monotone non-decreasing"
+        );
         let n = bounds.len() - 1;
         if h == 1 {
             return bounds
@@ -262,9 +306,23 @@ impl Tensor {
 
     /// Concatenate rank-3 tensors along axis 1 (inverse of `chunk_axis1`).
     pub fn cat_axis1(parts: &[Tensor]) -> Tensor {
-        assert!(!parts.is_empty());
+        assert!(!parts.is_empty(), "cat_axis1 of zero tensors");
+        assert_eq!(
+            parts[0].shape.len(),
+            3,
+            "cat_axis1 needs rank-3 (H, N, D) parts, got shape {:?}",
+            parts[0].shape
+        );
         let h = parts[0].shape[0];
         let d = parts[0].shape[2];
+        for p in parts {
+            assert!(
+                p.shape.len() == 3 && p.shape[0] == h && p.shape[2] == d,
+                "cat_axis1: part shape {:?} disagrees with {:?} on (H, _, D)",
+                p.shape,
+                parts[0].shape
+            );
+        }
         let c: usize = parts.iter().map(|t| t.shape[1]).sum();
         let mut data = Vec::with_capacity(h * c * d);
         for hh in 0..h {
@@ -302,12 +360,21 @@ pub struct ITensor {
 
 impl ITensor {
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "ITensor shape {shape:?} does not match data len {}",
+            data.len()
+        );
         ITensor { shape, data }
     }
 
     pub fn chunk0(&self, n: usize) -> Vec<ITensor> {
-        assert!(self.shape.len() == 1 && self.shape[0] % n == 0);
+        assert!(
+            self.shape.len() == 1 && n > 0 && self.shape[0] % n == 0,
+            "ITensor::chunk0: cannot split shape {:?} into {n} equal chunks",
+            self.shape
+        );
         let rows = self.shape[0] / n;
         (0..n)
             .map(|i| ITensor::new(vec![rows], self.data[i * rows..(i + 1) * rows].to_vec()))

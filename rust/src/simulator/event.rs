@@ -198,6 +198,12 @@ pub struct PlanSim {
     ck_cluster: [f64; 5],
     have_ck: bool,
     last_total: f64,
+    /// Per-worker compute slowdown factors (degradation-aware planning:
+    /// a pinned straggler runs every kernel `factor`× longer). All 1.0
+    /// by default; transfers and the `busy_s` aggregate stay unscaled —
+    /// `busy_s` reports the healthy-hardware kernel budget, the makespan
+    /// reports the degraded schedule.
+    slowdown: Vec<f64>,
     // reusable scratch
     compute_tail: Vec<f64>,
     comm_tail: Vec<f64>,
@@ -238,6 +244,7 @@ impl PlanSim {
             ck_cluster: [0.0; 5],
             have_ck: false,
             last_total: 0.0,
+            slowdown: vec![1.0; p],
             compute_tail: vec![0.0; p],
             comm_tail: vec![0.0; p],
             barrier: vec![0.0; plan.n_steps.max(1)],
@@ -327,6 +334,24 @@ impl PlanSim {
     /// scratch fully reflects the current costs (nothing to replay).
     pub fn dirty_from(&self) -> usize {
         self.valid_segs
+    }
+
+    /// Pin a compute slowdown factor on one worker (`1.0` = healthy;
+    /// `1.5` = every kernel on `w` runs 50% longer). Drops the
+    /// checkpointed prefix — the next score is a full pass — since a
+    /// factor change invalidates every segment's timing.
+    pub fn set_worker_slowdown(&mut self, w: usize, factor: f64) {
+        assert!(
+            w < self.n_workers,
+            "slowdown target rank {w} out of range (plan has {} workers)",
+            self.n_workers
+        );
+        assert!(factor >= 1.0, "slowdown factor must be >= 1.0 (got {factor})");
+        if self.slowdown[w] != factor {
+            self.slowdown[w] = factor;
+            self.valid_segs = 0;
+            self.have_ck = false;
+        }
     }
 
     /// Patch one op's resolved cost in place (the incremental rescorer's
@@ -439,7 +464,7 @@ impl PlanSim {
                     };
                     (s, &mut self.comm_tail[w])
                 } else {
-                    (self.val[i], &mut self.compute_tail[w])
+                    (self.val[i] * self.slowdown[w], &mut self.compute_tail[w])
                 };
                 let start = ready.max(*tail);
                 let finish = start + dur;
@@ -691,6 +716,45 @@ mod tests {
         assert!(tl.peak_bytes.iter().all(|&b| b >= 1e9));
         assert!(tl.max_peak() >= 1e9 + c.kv_bytes);
         assert!(tl.staged_peak(7) >= 0.0);
+    }
+
+    #[test]
+    fn worker_slowdown_degrades_makespan_monotonically() {
+        let cluster = ClusterSpec::dgx_1x8();
+        let s = Schedule::balanced(8);
+        let plan = Plan::from_schedule(&s, Pass::Forward);
+        // compute-bound regime so the straggler's kernels dominate
+        let c = AttnCost { kv_bytes: 1e3, ..cost(true) };
+        let mut sim = PlanSim::new(&plan, &c);
+        let healthy = sim.total_s(&cluster, &plan.placement, 1);
+        sim.set_worker_slowdown(3, 1.5);
+        let degraded = sim.total_s(&cluster, &plan.placement, 1);
+        sim.set_worker_slowdown(3, 3.0);
+        let worse = sim.total_s(&cluster, &plan.placement, 1);
+        assert!(degraded > healthy, "{degraded} vs {healthy}");
+        assert!(worse > degraded, "{worse} vs {degraded}");
+        // busy_s reports the healthy kernel budget regardless
+        assert!(rel_close(sim.busy_s(), PlanSim::new(&plan, &c).busy_s()));
+        // resetting to 1.0 restores the healthy makespan exactly
+        sim.set_worker_slowdown(3, 1.0);
+        assert!(rel_close(sim.total_s(&cluster, &plan.placement, 1), healthy));
+    }
+
+    #[test]
+    fn worker_slowdown_invalidates_checkpoints() {
+        let cluster = ClusterSpec::dgx_1x8();
+        let s = Schedule::balanced(8);
+        let plan = Plan::from_schedule(&s, Pass::Forward);
+        let c = cost(true);
+        let mut sim = PlanSim::new(&plan, &c);
+        sim.total_s(&cluster, &plan.placement, 1);
+        sim.set_worker_slowdown(0, 2.0);
+        // rescore must replay from scratch, matching a fresh sim
+        let rescored = sim.rescore(&cluster, &plan.placement, 1);
+        let mut fresh = PlanSim::new(&plan, &c);
+        fresh.set_worker_slowdown(0, 2.0);
+        let expect = fresh.total_s(&cluster, &plan.placement, 1);
+        assert!(rel_close(rescored, expect), "{rescored} vs {expect}");
     }
 
     #[test]

@@ -637,9 +637,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 // global loss + gradient all-reduce
                 let mut loss_t = Tensor::scalar(loss_local);
                 let round_base = (step as u32) << 16;
-                w.comm.all_reduce_sum(round_base, &mut loss_t);
+                w.comm
+                    .all_reduce_sum(round_base, &mut loss_t)
+                    .map_err(|e| anyhow::anyhow!("rank {rank}: loss all-reduce failed: {e}"))?;
                 for (i, g) in grads.iter_mut().enumerate() {
-                    w.comm.all_reduce_sum(round_base + 1 + i as u32, g);
+                    w.comm.all_reduce_sum(round_base + 1 + i as u32, g).map_err(|e| {
+                        anyhow::anyhow!("rank {rank}: grad all-reduce {i} failed: {e}")
+                    })?;
                 }
                 let gnorm = Adam::grad_norm(&grads);
                 adam.step(&mut w.params, &grads);

@@ -9,11 +9,12 @@
 use std::collections::HashSet;
 use std::sync::Arc;
 use std::thread;
+use std::time::{Duration, Instant};
 
 use distflash::coordinator::comm::{build_network, build_network_placed, Tag, WorkerComm};
 use distflash::coordinator::{
-    BackendSpec, Kernel, Pass, Payload, PayloadClass, Plan, PlanOp, RunSpec, Schedule,
-    ScheduleKind, Session,
+    BackendSpec, CommError, FaultEvent, FaultSpec, Kernel, Pass, Payload, PayloadClass, Plan,
+    PlanOp, RankFaults, RunSpec, Schedule, ScheduleKind, Session,
 };
 use distflash::runtime::Tensor;
 use distflash::simulator::AttnCost;
@@ -83,18 +84,19 @@ fn dry_run(plan: &Plan, rank: usize, comm: &mut WorkerComm, call_id: u32) {
                     *dst,
                     tag(payload.tag_space(), node.step),
                     payload_tensors(payload, plan.pass),
-                );
+                )
+                .unwrap();
             }
             PlanOp::Compute { kernel, pair } if node.worker == rank => match kernel {
                 Kernel::AttnFull => {
                     let (owner, kv_chunk) = pair.unwrap();
                     if owner == rank {
-                        let got = comm.recv(kv_chunk, tag(Tag::KV, node.step));
+                        let got = comm.recv(kv_chunk, tag(Tag::KV, node.step)).unwrap();
                         assert_eq!(got.len(), 2);
                         assert_eq!(got[0].shape, vec![KVH, C, D]);
                     } else {
                         let want = if plan.pass == Pass::Forward { 1 } else { 4 };
-                        let got = comm.recv(owner, tag(Tag::Q_BUNDLE, node.step));
+                        let got = comm.recv(owner, tag(Tag::Q_BUNDLE, node.step)).unwrap();
                         assert_eq!(got.len(), want, "bundle size for {:?}", plan.pass);
                     }
                 }
@@ -107,13 +109,14 @@ fn dry_run(plan: &Plan, rank: usize, comm: &mut WorkerComm, call_id: u32) {
                             _ => None,
                         })
                         .expect("rescale has a helper-result dep");
-                    comm.recv(from, tag(Tag::HELPER_RESULT, node.step));
+                    comm.recv(from, tag(Tag::HELPER_RESULT, node.step)).unwrap();
                 }
                 Kernel::Accum => {
                     for &d in &node.deps {
                         if let PlanOp::Xfer { src, payload: Payload::KvGrad, .. } = &plan.ops[d].op
                         {
-                            let got = comm.recv(*src, tag(Tag::KV_GRAD, plan.ops[d].step));
+                            let got =
+                                comm.recv(*src, tag(Tag::KV_GRAD, plan.ops[d].step)).unwrap();
                             assert_eq!(got[0].shape, vec![KVH, C, D]);
                         }
                     }
@@ -145,14 +148,14 @@ fn executor_bytes_match_plan_prediction_with_collectives_interleaved() {
                     // two attention calls: results must be exact (no
                     // cross-talk with schedule messages)
                     let mut t = Tensor::full(&[12], (rank + 1) as f32);
-                    comm.all_reduce_sum(1000, &mut t);
+                    comm.all_reduce_sum(1000, &mut t).unwrap();
                     assert!(t.data().iter().all(|&x| x == 10.0), "all-reduce corrupted");
-                    let all = comm.all_gather(2000, &Tensor::scalar(rank as f32));
+                    let all = comm.all_gather(2000, &Tensor::scalar(rank as f32)).unwrap();
                     for (i, g) in all.iter().enumerate() {
                         assert_eq!(g.as_scalar(), i as f32, "all-gather corrupted");
                     }
                     dry_run(&bwd, rank, &mut comm, 1);
-                    comm.barrier(3000);
+                    comm.barrier(3000).unwrap();
                     comm.bytes_sent_global()
                 })
             })
@@ -202,7 +205,7 @@ fn placed_network_bytes_match_plan_prediction() {
             thread::spawn(move || {
                 dry_run(&fwd, rank, &mut comm, 0);
                 dry_run(&bwd, rank, &mut comm, 1);
-                comm.barrier(3000);
+                comm.barrier(3000).unwrap();
                 comm.bytes_sent_global()
             })
         })
@@ -258,6 +261,69 @@ fn real_executor_traced_bytes_match_plan_prediction() {
             }
         }
     }
+}
+
+#[test]
+fn recv_deadline_times_out_instead_of_hanging() {
+    // rank 0 never sends: the armed receive must come back with a
+    // structured timeout, not block the thread forever
+    let mut comms = build_network(2);
+    let mut rx = comms.pop().unwrap(); // rank 1
+    let _quiet = comms.pop().unwrap(); // rank 0, alive but silent
+    let start = Instant::now();
+    let err = rx
+        .recv_deadline(0, Tag::new(Tag::KV, 0, 0), Some(Duration::from_millis(200)))
+        .unwrap_err();
+    assert!(
+        matches!(err, CommError::Timeout { from: 0, .. }),
+        "want Timeout from rank 0, got: {err}"
+    );
+    if let CommError::Timeout { waited_s, .. } = err {
+        assert!(waited_s >= 0.2, "timed out early after {waited_s}s");
+    }
+    assert!(start.elapsed() < Duration::from_secs(30), "watchdog must fire promptly");
+}
+
+#[test]
+fn retransmitted_duplicates_deliver_exactly_once() {
+    // pick a seed whose very first injection verdict fans the send into
+    // >= 2 dup-flagged wire copies (the draw stream is deterministic, so
+    // the armed comm below replays the identical decision)
+    let spec_for = |seed: u64| FaultSpec {
+        seed,
+        drop_prob: 1.0,
+        max_retransmits: 4,
+        ..FaultSpec::default()
+    };
+    let seed = (0..256)
+        .find(|&s| RankFaults::new(0, &spec_for(s)).on_send(1, Tag::new(Tag::KV, 0, 0)).copies >= 2)
+        .expect("some seed in 0..256 retransmits on the first send");
+    let mut comms = build_network(2);
+    let mut rx = comms.pop().unwrap(); // rank 1
+    let mut tx = comms.pop().unwrap(); // rank 0
+    tx.set_faults(RankFaults::new(0, &spec_for(seed)));
+    let t1 = Tag::new(Tag::KV, 0, 0);
+    let t2 = Tag::new(Tag::KV, 0, 1);
+    tx.send(1, t1, vec![Tensor::full(&[4], 1.0)]).unwrap();
+    tx.send(1, t2, vec![Tensor::full(&[4], 2.0)]).unwrap();
+    tx.flush_sends().unwrap();
+    // the first copy delivers the payload once...
+    let got = rx.recv_deadline(0, t1, Some(Duration::from_secs(5))).unwrap();
+    assert!(got[0].data().iter().all(|&x| x == 1.0), "t1 payload corrupted");
+    // ...the next receive absorbs t1's trailing duplicates silently...
+    let got = rx.recv_deadline(0, t2, Some(Duration::from_secs(5))).unwrap();
+    assert!(got[0].data().iter().all(|&x| x == 2.0), "t2 payload corrupted");
+    // ...and t1 is never re-delivered: its duplicates were deduped on
+    // arrival, not stashed for a later receive
+    let err = rx.recv_deadline(0, t1, Some(Duration::from_millis(100))).unwrap_err();
+    assert!(matches!(err, CommError::Timeout { .. }), "dup re-delivered: {err}");
+    // and the sender's event log proves a retransmit actually happened
+    let evs = tx.take_fault_events();
+    assert!(
+        evs.iter()
+            .any(|e| matches!(e, FaultEvent::Retransmitted { copies, .. } if *copies >= 2)),
+        "no retransmit event logged: {evs:?}"
+    );
 }
 
 #[test]

@@ -1,0 +1,232 @@
+//! Fault-tolerant runtime acceptance suite (ISSUE: robustness PR).
+//!
+//! * seeded delay/reorder and drop/retransmit faults leave the distributed
+//!   outputs **bit-identical** to the fault-free run (at-least-once
+//!   delivery + receiver dedup = exactly-once);
+//! * a rank-crash fault surfaces as structured [`ExecError`]s on every
+//!   rank — the crashed rank reports [`ExecError::InjectedCrash`], every
+//!   survivor unwinds into [`ExecError::PeerFailed`] (or a watchdog
+//!   [`ExecError::Timeout`]) well inside the deadline, never a hang;
+//! * the same [`FaultSpec`] seed reproduces the same fault event sequence
+//!   across runs;
+//! * a pinned straggler slows both the event-engine prediction
+//!   ([`PlanSim::set_worker_slowdown`]) and the measured run, without
+//!   changing any output value.
+
+use std::time::{Duration, Instant};
+
+use distflash::config::ClusterSpec;
+use distflash::coordinator::{
+    CrashSpec, DistAttnResult, ExecError, FaultEvent, FaultSpec, OptimizeOpts, OptimizePolicy,
+    Pass, Plan, RunSpec, Schedule, ScheduleKind, Session, Workload,
+};
+use distflash::simulator::{AttnCost, PlanSim};
+
+/// HostRef spec on the 2x8 (16-worker) layout with a small GQA workload —
+/// big enough that every rank exchanges KV, Q-bundle, and helper-result
+/// traffic on both passes, small enough to run in milliseconds.
+fn host_spec_2x8() -> RunSpec {
+    RunSpec::host(ScheduleKind::Balanced, 16, Workload::new(2, 1, 8, 16))
+}
+
+/// Execute with synthesized inputs and return (results, injected events).
+fn run_2x8(faults: Option<FaultSpec>) -> (DistAttnResult, Vec<FaultEvent>) {
+    let mut spec = host_spec_2x8();
+    spec.faults = faults;
+    let mut session = Session::new(spec).unwrap();
+    session.execute().unwrap();
+    let events = session.fault_events().to_vec();
+    (session.take_run().unwrap().result, events)
+}
+
+fn assert_results_identical(got: &DistAttnResult, base: &DistAttnResult, what: &str) {
+    assert!(got.o == base.o, "{what}: output o diverged from the fault-free run");
+    assert!(got.lse == base.lse, "{what}: lse diverged from the fault-free run");
+    let (dq, dk, dv) = got.grads.as_ref().expect("backward ran");
+    let (bq, bk, bv) = base.grads.as_ref().expect("backward ran");
+    assert!(dq == bq, "{what}: dq diverged from the fault-free run");
+    assert!(dk == bk, "{what}: dk diverged from the fault-free run");
+    assert!(dv == bv, "{what}: dv diverged from the fault-free run");
+}
+
+#[test]
+fn seeded_message_faults_leave_outputs_bit_identical() {
+    let (base, base_events) = run_2x8(None);
+    assert!(base_events.is_empty(), "fault-free run must inject nothing");
+
+    // probability-1 single-class specs make the event assertions
+    // deterministic; chaos() is the mixed scenario from the CLI.
+    let delay = FaultSpec { seed: 7, delay_prob: 1.0, delay_sends: 3, ..FaultSpec::default() };
+    let drop = FaultSpec { seed: 11, drop_prob: 1.0, max_retransmits: 3, ..FaultSpec::default() };
+    let classes: [(&str, FaultSpec, fn(&FaultEvent) -> bool); 3] = [
+        ("delay/reorder", delay, |e| matches!(e, FaultEvent::Delayed { .. })),
+        ("drop/retransmit", drop, |e| matches!(e, FaultEvent::Retransmitted { .. })),
+        ("chaos", FaultSpec::chaos(42), |e| {
+            matches!(e, FaultEvent::Delayed { .. } | FaultEvent::Retransmitted { .. })
+        }),
+    ];
+    for (what, faults, expected) in classes {
+        let (got, events) = run_2x8(Some(faults));
+        assert!(events.iter().any(expected), "{what}: expected fault class never fired");
+        assert_results_identical(&got, &base, what);
+    }
+}
+
+#[test]
+fn rank_crash_yields_structured_errors_on_every_rank() {
+    const P: usize = 8;
+    const CRASH_RANK: usize = 3;
+    const CRASH_STEP: usize = 2;
+    const WATCHDOG_S: f64 = 30.0;
+
+    // hard no-hang guard: the run executes on a helper thread and must
+    // report back well inside the watchdog, or this test fails on the
+    // channel timeout instead of hanging the suite.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t0 = Instant::now();
+    std::thread::spawn(move || {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, P, Workload::new(2, 1, 8, 16));
+        spec.faults = Some(FaultSpec {
+            crash: Some(CrashSpec { rank: CRASH_RANK, step: CRASH_STEP, pass: Pass::Forward }),
+            watchdog_s: Some(WATCHDOG_S),
+            ..FaultSpec::default()
+        });
+        let mut session = Session::new(spec).unwrap();
+        let err = match session.execute() {
+            Ok(_) => panic!("a crash fault must fail the run"),
+            Err(e) => e,
+        };
+        let report = session.failure_report().expect("failed run leaves a report").clone();
+        tx.send((format!("{err:#}"), report)).unwrap();
+    });
+    let (err, report) = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("crash run hung past the hard timeout");
+    assert!(
+        t0.elapsed() < Duration::from_secs_f64(WATCHDOG_S),
+        "recovery took {:?}, longer than the {WATCHDOG_S}s watchdog",
+        t0.elapsed()
+    );
+    assert!(!err.is_empty());
+
+    assert_eq!(report.failures.len(), P, "every rank must fail: {:?}", report.failures);
+    let crashes: Vec<&ExecError> = report
+        .failures
+        .iter()
+        .filter(|e| matches!(e, ExecError::InjectedCrash { .. }))
+        .collect();
+    assert_eq!(crashes.len(), 1, "exactly one injected crash: {:?}", report.failures);
+    assert!(
+        matches!(crashes[0], ExecError::InjectedCrash { rank: CRASH_RANK, step: CRASH_STEP }),
+        "crash attribution wrong: {:?}",
+        crashes[0]
+    );
+    for e in &report.failures {
+        assert!(
+            matches!(
+                e,
+                ExecError::InjectedCrash { rank: CRASH_RANK, .. }
+                    | ExecError::PeerFailed { rank: CRASH_RANK, .. }
+                    | ExecError::Timeout { from: CRASH_RANK, .. }
+            ),
+            "survivor failure not attributed to the crashed rank: {e:?}"
+        );
+    }
+    assert!(
+        matches!(
+            report.root_cause(),
+            Some(ExecError::InjectedCrash { rank: CRASH_RANK, step: CRASH_STEP })
+        ),
+        "root cause must be the injected crash: {:?}",
+        report.root_cause()
+    );
+}
+
+#[test]
+fn same_seed_reproduces_the_same_fault_event_sequence() {
+    let (_, first) = run_2x8(Some(FaultSpec::chaos(1234)));
+    let (_, second) = run_2x8(Some(FaultSpec::chaos(1234)));
+    assert!(!first.is_empty(), "chaos spec must inject events");
+    assert_eq!(first, second, "same seed must reproduce the same event sequence");
+}
+
+#[test]
+fn plan_sim_slowdown_raises_predicted_makespan() {
+    let sched = Schedule::balanced(8);
+    let plan = Plan::from_schedule(&sched, Pass::Forward);
+    let cluster = ClusterSpec::dgx_2x8();
+    let cost = AttnCost {
+        pair_full_s: 1e-3,
+        pair_diag_s: 5e-4,
+        rescale_s: 1e-5,
+        kv_bytes: 1e6,
+        q_bytes: 5e5,
+        result_bytes: 6e5,
+        overlap: true,
+    };
+    let placement: Vec<usize> = (0..8).collect();
+    let mut sim = PlanSim::new(&plan, &cost);
+    let base = sim.total_s(&cluster, &placement, 1);
+    sim.set_worker_slowdown(5, 1.5);
+    let stalled = sim.total_s(&cluster, &placement, 1);
+    assert!(
+        stalled > base,
+        "a 1.5x straggler must raise the predicted makespan: {base:.6}s -> {stalled:.6}s"
+    );
+    assert!(stalled.is_finite());
+}
+
+#[test]
+fn optimizer_honors_pinned_straggler_slowdowns() {
+    let mut spec = RunSpec::plans_only(ScheduleKind::Balanced, 8);
+    spec.optimize = OptimizePolicy::Schedule(OptimizeOpts {
+        seed: 3,
+        slowdowns: vec![(3, 2.0)],
+        ..OptimizeOpts::default()
+    });
+    let mut session = Session::new(spec).unwrap();
+    session.optimize().unwrap();
+    assert!(session.sim_calls() > 0, "the degradation-aware search must score candidates");
+    assert!(!session.audits().is_empty());
+
+    // a slowdown pinned to an out-of-range rank is a spec error, caught
+    // before any worker launches
+    let mut bad = RunSpec::plans_only(ScheduleKind::Balanced, 4);
+    bad.optimize = OptimizePolicy::Schedule(OptimizeOpts {
+        slowdowns: vec![(4, 2.0)],
+        ..OptimizeOpts::default()
+    });
+    assert!(Session::new(bad).is_err(), "slowdown rank 4 of 4 workers must be rejected");
+}
+
+#[test]
+fn stalled_rank_slows_execution_and_preserves_outputs() {
+    // median-of-3 wall clocks on each arm keep scheduler noise out of the
+    // direction check; the 8x factor makes the gap unmistakable.
+    let run = |faults: Option<FaultSpec>| {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, 4, Workload::new(4, 2, 32, 192));
+        spec.faults = faults;
+        let mut session = Session::new(spec).unwrap();
+        let mut secs = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            session.execute().unwrap();
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        secs.sort_by(|a, b| a.total_cmp(b));
+        let events = session.fault_events().to_vec();
+        (session.take_run().unwrap().result, secs[1], events)
+    };
+    let (base, base_s, _) = run(None);
+    let stall = FaultSpec { stalls: vec![(1, 8.0)], ..FaultSpec::default() };
+    let (got, stall_s, events) = run(Some(stall));
+    assert!(
+        events.iter().any(|e| matches!(e, FaultEvent::Stalled { rank: 1, .. })),
+        "stall event never recorded: {events:?}"
+    );
+    assert_results_identical(&got, &base, "8x straggler");
+    assert!(
+        stall_s > base_s,
+        "an 8x straggler must slow the measured run: {base_s:.4}s -> {stall_s:.4}s"
+    );
+}

@@ -253,7 +253,7 @@ fn stash_fifo_under_shuffled_arrival_p8() {
                     }
                     // seq carried in the payload; tag identifies the lane
                     let val = (rank * 1000 + t as usize * 10 + s as usize) as f32;
-                    comm.send(peer, Tag::new(9, t, 0), vec![Tensor::scalar(val)]);
+                    comm.send(peer, Tag::new(9, t, 0), vec![Tensor::scalar(val)]).unwrap();
                     lanes[li].2 += 1;
                     remaining -= 1;
                 }
@@ -264,13 +264,13 @@ fn stash_fifo_under_shuffled_arrival_p8() {
                     }
                     for t in 0..4u32 {
                         for s in 0..3 {
-                            let got = comm.recv(peer, Tag::new(9, t, 0))[0].as_scalar();
+                            let got = comm.recv(peer, Tag::new(9, t, 0)).unwrap()[0].as_scalar();
                             let want = (peer * 1000 + t as usize * 10 + s) as f32;
                             assert_eq!(got, want, "rank {rank} lane ({peer},{t}) seq {s}");
                         }
                     }
                 }
-                comm.barrier(77);
+                comm.barrier(77).unwrap();
             })
         })
         .collect();

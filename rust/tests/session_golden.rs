@@ -181,8 +181,12 @@ fn run_dist_attention_exec_matches_session_all_modes() {
     let (fwd, bwd) = build_plans(ScheduleKind::Balanced, p).unwrap();
     for backend in [BackendSpec::HostRef, BackendSpec::Null] {
         for (trace, deep) in [(false, false), (true, false), (false, true), (true, true)] {
-            let opts =
-                ExecOpts { backend: backend.clone(), trace, deep_copy_sends: deep, threads: 1 };
+            let opts = ExecOpts {
+                backend: backend.clone(),
+                trace,
+                deep_copy_sends: deep,
+                ..ExecOpts::host()
+            };
             let legacy =
                 run_dist_attention_exec(fwd.clone(), bwd.clone(), &q, &k, &v, Some(&do_), &opts)
                     .unwrap();

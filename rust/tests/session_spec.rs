@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::{
-    BackendSpec, CkptStrategy, OptimizeOpts, OptimizePolicy, RunSpec, ScheduleKind, Session,
-    VarlenSpec, Workload,
+    BackendSpec, CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, RunSpec,
+    ScheduleKind, Session, VarlenSpec, Workload,
 };
 
 fn roundtrip(spec: &RunSpec) -> RunSpec {
@@ -44,6 +44,8 @@ fn every_field_shape_roundtrips_exactly() {
         rebalance_rounds: 2,
         align_doc_cuts: false,
         move_boundaries: true,
+        per_op_costs: true,
+        slowdowns: vec![(0, 1.5), (3, 2.0)],
     });
     spec.prefetch_depth = Some(3);
     spec.layers = 4;
@@ -57,7 +59,18 @@ fn every_field_shape_roundtrips_exactly() {
     spec.varlen = None;
     spec.optimize = OptimizePolicy::Schedule(OptimizeOpts::default());
     spec.ckpt = CkptStrategy::HfStyle;
-    assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy + hf ckpt");
+    spec.faults = Some(FaultSpec {
+        seed: 41,
+        delay_prob: 0.25,
+        delay_sends: 3,
+        drop_prob: 0.0625,
+        max_retransmits: 4,
+        stalls: vec![(1, 1.5)],
+        crash: Some(CrashSpec { rank: 2, step: 5, pass: Pass::Backward }),
+        watchdog_s: Some(12.5),
+    });
+    assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy + hf ckpt + faults");
+    spec.faults = None;
 
     // seeds above 2^53 cannot ride a JSON f64 — they serialize as decimal
     // strings and still round-trip exactly
