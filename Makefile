@@ -15,20 +15,23 @@ bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
 # machine-readable optimizer + varlen-rebalancer + executor-transport +
-# checkpoint-strategy + host-kernel + fault-overhead results ->
+# checkpoint-strategy + host-kernel + fault-overhead + recovery results ->
 # BENCH_optimizer.json + BENCH_varlen.json + BENCH_executor.json +
-# BENCH_ckpt.json + BENCH_kernels.json + BENCH_faults.json, tracked
-# across PRs (CI runs this and uploads all six as workflow artifacts).
-# The executor rows run the real threaded executor with null kernels
-# (clone-vs-Arc send path A/B); pass `--skip-exec` to repro bench to omit
-# them. The ckpt rows run the joint checkpoint x prefetch search at 64K
-# tokens plus a HostRef-executed twin per strategy. The kernel rows time
-# scalar vs tiled vs multi-threaded flash kernels; CI gates tiled >= 5x
-# scalar at one thread. The fault rows A/B the zero-fault instrumented
-# comm path (armed all-zero FaultSpec) against the uninstrumented
-# baseline; CI gates the overhead at <= 5%.
+# BENCH_ckpt.json + BENCH_kernels.json + BENCH_faults.json +
+# BENCH_recovery.json, tracked across PRs (CI runs this and uploads all
+# seven as workflow artifacts). The executor rows run the real threaded
+# executor with null kernels (clone-vs-Arc send path A/B); pass
+# `--skip-exec` to repro bench to omit them. The ckpt rows run the joint
+# checkpoint x prefetch search at 64K tokens plus a HostRef-executed twin
+# per strategy. The kernel rows time scalar vs tiled vs multi-threaded
+# flash kernels; CI gates tiled >= 5x scalar at one thread. The fault
+# rows A/B the zero-fault instrumented comm path (armed all-zero
+# FaultSpec) against the uninstrumented baseline; CI gates the overhead
+# at <= 5%. The recovery rows crash one rank mid-run under each policy
+# and time the supervised restart against the fault-free baseline; CI
+# gates recovered <= 2.5x fault-free and bit-identical outputs.
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json --faults-out BENCH_faults.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json --faults-out BENCH_faults.json --recovery-out BENCH_recovery.json
 
 # measured-vs-simulated per-op trace table (host-kernel executor)
 trace:

@@ -129,12 +129,18 @@ impl FaultSpec {
         if self.drop_prob > 0.0 && self.max_retransmits == 0 {
             anyhow::bail!("max_retransmits must be >= 1 when drop_prob > 0");
         }
+        let mut stalled = std::collections::HashSet::new();
         for &(r, f) in &self.stalls {
             if r >= n_workers {
                 anyhow::bail!("stall rank {r} out of range for {n_workers} workers");
             }
             if f < 1.0 || f.is_nan() {
                 anyhow::bail!("stall factor must be >= 1.0, got {f}");
+            }
+            // two entries for one rank would silently apply only the first
+            // (`stall_factor` scans front to back) — reject the ambiguity
+            if !stalled.insert(r) {
+                anyhow::bail!("duplicate stall rank {r} (one slowdown factor per rank)");
             }
         }
         if let Some(c) = &self.crash {
@@ -598,6 +604,16 @@ mod tests {
             ..FaultSpec::default()
         };
         assert!(bad.validate(4).is_err());
+        // two stall entries for one rank: only the first would apply
+        let bad = FaultSpec { stalls: vec![(1, 2.0), (1, 3.0)], ..FaultSpec::default() };
+        let err = bad.validate(4).unwrap_err();
+        assert!(
+            format!("{err}").contains("duplicate stall rank 1"),
+            "pin the rejection message: {err}"
+        );
+        // distinct ranks with equal factors stay legal
+        let ok = FaultSpec { stalls: vec![(1, 2.0), (2, 2.0)], ..FaultSpec::default() };
+        assert!(ok.validate(4).is_ok());
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! | `run_dist_attention_host`    | `Session::with_plans` (HostRef) → `execute_with` |
 //! | `run_dist_attention_exec`    | `Session::with_plans` + trace/deep-copy fields |
 //! | `WorkerComm::recv(from, tag)` (pre-0.3, infallible) | `recv_deadline(from, tag, deadline)` → `Result<_, CommError>` (`recv` remains as the alias armed with the session watchdog) |
+//! | fail-fast `execute()` + hand-rolled retry loops (pre-0.4) | `recovery: RecoveryPolicy::{Respawn, Elastic}` → `execute_supervised()` + `recovery_report()` (the default `FailFast` keeps `execute()` semantics bit-for-bit) |
 
 use std::path::Path;
 use std::sync::Arc;

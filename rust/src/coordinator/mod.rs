@@ -18,6 +18,9 @@
 //! * `optimize` — cost-model-driven plan optimizer (placement, GQA role
 //!   flipping, prefetch autotuning, token-level varlen rebalancing) over
 //!   the lowered IR
+//! * `recovery` — supervised recovery: checkpoint-replay, elastic
+//!   re-lowering over P−1 survivors, and the [`RecoveryPolicy`] retry
+//!   loop that turns a [`FailureReport`] into an executable restart plan
 
 pub mod checkpoint;
 pub mod comm;
@@ -26,6 +29,7 @@ pub mod fault;
 pub mod harness;
 pub mod optimize;
 pub mod plan;
+pub mod recovery;
 pub mod schedule;
 pub mod session;
 
@@ -46,6 +50,10 @@ pub use optimize::{
     VarlenOptimized,
 };
 pub use plan::{Kernel, LowerOpts, Pass, Payload, PayloadClass, Plan, PlanNode, PlanOp};
+pub use recovery::{
+    relower_elastic, CkptStore, ElasticPlan, RecoveryAttempt, RecoveryPolicy, RecoveryReport,
+    RestartAction, RestartPlan,
+};
 pub use schedule::{ChunkSpec, ComputeOp, Schedule, ScheduleKind, StepPlan, VarlenSpec};
 pub use session::{
     BackendSpec, DistAttnResult, ExecOpts, ExecRun, OptimizePolicy, RunSpec, Session,

@@ -1,0 +1,934 @@
+//! Supervised recovery: turn a [`FailureReport`] into an executable
+//! restart plan and drive it to bit-identical completion.
+//!
+//! PR 8 built *detection* — seeded fault injection, recv deadlines, abort
+//! poison, a typed per-rank [`FailureReport`] — but a failure still ended
+//! the run. This module closes the loop with three pillars:
+//!
+//! 1. **Checkpoint-replay** — while a recovery policy is armed, every
+//!    worker records its per-layer `(o, lse)` pair (the exact artifacts
+//!    the `RematAware` ckpt IR names as survivable, §3.3) into a shared
+//!    [`CkptStore`]. After a failure, the longest layer prefix completed
+//!    by *every* rank is skipped on replay — the step restarts from the
+//!    last completed boundary, not from scratch — and the replayed
+//!    outputs are verified against the checkpointed artifacts.
+//! 2. **Elastic re-lowering** — when a rank's device slot is permanently
+//!    lost, [`relower_elastic`] re-lowers the schedule over the P−1
+//!    survivors, redistributing the dead rank's token chunk through the
+//!    varlen boundary rebalancer (`optimize_varlen`) and scoring the
+//!    degraded cluster with `PlanSim::set_worker_slowdown`. The executed
+//!    replay keeps the original P-chunk plans (different cut points would
+//!    change the online-softmax merge grouping and break bit-identity);
+//!    the re-lowered pair is the steady-state plan for *subsequent* steps.
+//! 3. **Policy + supervision** — [`RecoveryPolicy`] rides `RunSpec`
+//!    (`fail_fast` | `respawn` | `elastic`), applied by the retry/backoff
+//!    loop in [`Session::execute_supervised`]. Every recovery attempt is
+//!    audited in a [`RecoveryReport`]: attempts, replayed vs skipped ops,
+//!    time-to-recover, artifact verification.
+//!
+//! The recovery state machine:
+//!
+//! ```text
+//! detect ──▶ report ──▶ restart plan ──▶ replay ──▶ verify
+//!   │           │            │              │          │
+//!  watchdog  FailureReport  RestartPlan   skip ckpt'd  replayed chunks
+//!  + abort   (root cause,   (action +     layer prefix == stored (o,lse)
+//!  poison    partial traces) predicted s)
+//! ```
+//!
+//! Injected crashes are modeled as *transient, one-shot* faults: the
+//! crash already fired (and is recorded in the fault events), so a
+//! respawned rank replays with the crash cleared from its `FaultSpec`
+//! while every other armed fault class (delay, drop, stalls) stays live.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::checkpoint::CkptStrategy;
+use super::fault::{FailureReport, FaultSpec};
+use super::optimize::{optimize_varlen, OptimizeOpts};
+use super::plan::{LowerOpts, Pass, Plan};
+use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
+use super::session::Session;
+use crate::config::ClusterSpec;
+use crate::runtime::Tensor;
+use crate::simulator::{AttnCost, PlanSim};
+use crate::util::Json;
+
+// ---------------------------------------------------------------------------
+// Policy
+// ---------------------------------------------------------------------------
+
+/// What the supervisor does when an `execute*()` fails. Rides
+/// `RunSpec::recovery`; the default (`FailFast`) preserves the PR 8
+/// fail-fast contract exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryPolicy {
+    /// Surface the failure unchanged (PR 8 behavior).
+    FailFast,
+    /// Respawn the failed rank on its own device and replay from the last
+    /// completed layer boundary, up to `max_retries` times with
+    /// exponential backoff starting at `backoff_s`.
+    Respawn { max_retries: usize, backoff_s: f64 },
+    /// The failed rank's device slot is permanently lost: remap its
+    /// logical rank onto a surviving buddy for the replay, and re-lower
+    /// the plan over the P−1 survivors for subsequent steps. Refuses to
+    /// recover below `min_workers`.
+    Elastic { min_workers: usize },
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy::FailFast
+    }
+}
+
+impl RecoveryPolicy {
+    /// A sane respawn default: 3 retries, 50 ms initial backoff.
+    pub fn respawn() -> RecoveryPolicy {
+        RecoveryPolicy::Respawn { max_retries: 3, backoff_s: 0.05 }
+    }
+
+    pub fn is_fail_fast(&self) -> bool {
+        matches!(self, RecoveryPolicy::FailFast)
+    }
+
+    /// Policy-level sanity, mirrored by `RunSpec::validate` (which passes
+    /// `usize::MAX` for manifest-resolved specs whose worker count is not
+    /// yet known).
+    pub fn validate(&self, n_workers: usize) -> Result<()> {
+        match self {
+            RecoveryPolicy::FailFast => Ok(()),
+            RecoveryPolicy::Respawn { max_retries, backoff_s } => {
+                if *max_retries == 0 {
+                    bail!("recovery.respawn.max_retries must be >= 1");
+                }
+                if !backoff_s.is_finite() || *backoff_s < 0.0 {
+                    bail!("recovery.respawn.backoff_s must be finite and >= 0, got {backoff_s}");
+                }
+                Ok(())
+            }
+            RecoveryPolicy::Elastic { min_workers } => {
+                if *min_workers < 2 {
+                    bail!(
+                        "recovery.elastic.min_workers must be >= 2 (a distributed plan needs \
+                         at least two workers)"
+                    );
+                }
+                if n_workers != usize::MAX && *min_workers >= n_workers {
+                    bail!(
+                        "recovery.elastic.min_workers ({min_workers}) must be below the worker \
+                         count ({n_workers}) — losing a rank must leave enough survivors"
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// One-line JSON value (the `RunSpec::to_json` embedding): exact
+    /// round trip through [`RecoveryPolicy::from_json`].
+    pub fn to_json(&self) -> String {
+        match self {
+            RecoveryPolicy::FailFast => "\"fail_fast\"".to_string(),
+            RecoveryPolicy::Respawn { max_retries, backoff_s } => format!(
+                "{{\"respawn\": {{\"max_retries\": {max_retries}, \"backoff_s\": {backoff_s:?}}}}}"
+            ),
+            RecoveryPolicy::Elastic { min_workers } => {
+                format!("{{\"elastic\": {{\"min_workers\": {min_workers}}}}}")
+            }
+        }
+    }
+
+    /// Parse the `to_json` form. Missing inner knobs take the
+    /// [`RecoveryPolicy::respawn`] defaults; wrong-typed fields are
+    /// errors, never silent defaults.
+    pub fn from_json(j: &Json) -> Result<RecoveryPolicy> {
+        match j {
+            Json::Str(s) if s == "fail_fast" => Ok(RecoveryPolicy::FailFast),
+            Json::Str(other) => bail!(
+                "unknown recovery policy {other:?} (fail_fast | {{\"respawn\": ...}} | \
+                 {{\"elastic\": ...}})"
+            ),
+            _ => {
+                if let Some(r) = j.get("respawn") {
+                    let max_retries = match r.get("max_retries") {
+                        None | Some(Json::Null) => 3,
+                        Some(v) => v.as_usize().ok_or_else(|| {
+                            anyhow!("recovery.respawn.max_retries must be a non-negative integer")
+                        })?,
+                    };
+                    let backoff_s = match r.get("backoff_s") {
+                        None | Some(Json::Null) => 0.05,
+                        Some(Json::Num(n)) => *n,
+                        Some(_) => bail!("recovery.respawn.backoff_s must be a number"),
+                    };
+                    Ok(RecoveryPolicy::Respawn { max_retries, backoff_s })
+                } else if let Some(e) = j.get("elastic") {
+                    let min_workers = match e.get("min_workers") {
+                        None | Some(Json::Null) => 2,
+                        Some(v) => v.as_usize().ok_or_else(|| {
+                            anyhow!("recovery.elastic.min_workers must be a non-negative integer")
+                        })?,
+                    };
+                    Ok(RecoveryPolicy::Elastic { min_workers })
+                } else {
+                    bail!(
+                        "recovery must be \"fail_fast\" | {{\"respawn\": {{...}}}} | \
+                         {{\"elastic\": {{...}}}}"
+                    )
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint store (the survivable per-layer state)
+// ---------------------------------------------------------------------------
+
+/// In-memory survivable-state store shared by every worker of a supervised
+/// run: per-(rank, layer) `RematAware` `(o, lse)` artifacts plus per-pass
+/// completion marks. After a failure, [`CkptStore::resume_layer`] names
+/// the first layer the replay must re-execute — the skip decision is
+/// all-or-nothing per layer across ranks, so the replayed comm schedule
+/// stays symmetric.
+#[derive(Default)]
+pub struct CkptStore {
+    inner: Mutex<CkptState>,
+}
+
+#[derive(Default)]
+struct CkptState {
+    /// (rank, layer) → checkpointed (o, lse) after that rank's forward.
+    fwd: HashMap<(usize, usize), (Tensor, Tensor)>,
+    /// (rank, layer) pairs whose backward completed.
+    bwd: HashSet<(usize, usize)>,
+}
+
+impl CkptStore {
+    pub fn new() -> CkptStore {
+        CkptStore::default()
+    }
+
+    /// Record rank's completed forward for `layer` (saves the `(o, lse)`
+    /// pair the ckpt IR names as survivable).
+    pub fn record_fwd(&self, rank: usize, layer: usize, o: &Tensor, lse: &Tensor) {
+        let mut s = self.inner.lock().expect("ckpt store poisoned");
+        s.fwd.insert((rank, layer), (o.clone(), lse.clone()));
+    }
+
+    /// Record rank's completed backward for `layer`.
+    pub fn record_bwd(&self, rank: usize, layer: usize) {
+        let mut s = self.inner.lock().expect("ckpt store poisoned");
+        s.bwd.insert((rank, layer));
+    }
+
+    /// Number of `(rank, layer)` forward artifacts currently stored.
+    pub fn n_artifacts(&self) -> usize {
+        self.inner.lock().expect("ckpt store poisoned").fwd.len()
+    }
+
+    /// The checkpointed forward artifact for `rank` with the highest
+    /// layer index, if any — the verify stage compares replayed outputs
+    /// against it.
+    pub fn artifact_for(&self, rank: usize) -> Option<(usize, (Tensor, Tensor))> {
+        let s = self.inner.lock().expect("ckpt store poisoned");
+        s.fwd
+            .iter()
+            .filter(|((r, _), _)| *r == rank)
+            .max_by_key(|((_, l), _)| *l)
+            .map(|((_, l), t)| (*l, t.clone()))
+    }
+
+    /// Longest layer prefix completed by *every* rank (forward and — when
+    /// the run has a backward — backward): the replay starts here. The
+    /// caller caps this at `layers - 1` so a replay always re-executes at
+    /// least one layer (the gathered results come from the last layer).
+    pub fn resume_layer(&self, n_workers: usize, layers: usize, backward: bool) -> usize {
+        let s = self.inner.lock().expect("ckpt store poisoned");
+        let mut resume = 0;
+        'layers: for layer in 0..layers {
+            for rank in 0..n_workers {
+                if !s.fwd.contains_key(&(rank, layer)) {
+                    break 'layers;
+                }
+                if backward && !s.bwd.contains(&(rank, layer)) {
+                    break 'layers;
+                }
+            }
+            resume = layer + 1;
+        }
+        resume
+    }
+}
+
+/// Replay context threaded into `execute_plans`: the shared store plus
+/// the first layer to (re-)execute. Layers below `start_layer` were
+/// completed by every rank and are skipped.
+#[derive(Clone)]
+pub struct RecoverCtx {
+    pub(crate) store: Arc<CkptStore>,
+    pub(crate) start_layer: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Restart plan
+// ---------------------------------------------------------------------------
+
+/// What the supervisor decided to do about one failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RestartAction {
+    /// Respawn the failed rank on its own device slot and replay.
+    Respawn { rank: usize },
+    /// The device slot is gone: co-schedule the logical rank on `buddy`
+    /// for the replay and move to a re-lowered plan over `survivors`
+    /// workers for subsequent steps.
+    Remap { lost_rank: usize, buddy: usize, survivors: usize },
+    /// Do not restart (fail-fast policy, or survivors below the floor).
+    Halt,
+}
+
+/// The executable restart plan derived from one [`FailureReport`] —
+/// what failed, what already completed, what the restart does, and what
+/// the event engine predicts it costs.
+#[derive(Clone, Debug)]
+pub struct RestartPlan {
+    /// Rendered root cause (`FailureReport::root_cause`).
+    pub root_cause: String,
+    /// Rank the root cause is attributed to.
+    pub failed_rank: Option<usize>,
+    pub action: RestartAction,
+    /// Forward-plan ops with recorded spans in the partial merged trace
+    /// (0 when the run was not traced) — replay-skip evidence.
+    pub completed_fwd_ops: usize,
+    pub completed_bwd_ops: usize,
+    /// First layer the replay re-executes (earlier layers are
+    /// checkpointed on every rank).
+    pub resume_layer: usize,
+    /// Layers the replay must re-execute.
+    pub replay_layers: usize,
+    /// Event-engine prediction for the replay (degraded cluster under
+    /// `Remap`: the buddy runs both its own and the lost rank's work).
+    pub predicted_restart_s: f64,
+}
+
+impl RestartPlan {
+    /// Build the restart plan for `report` under `policy`. Pure: no
+    /// execution, only trace accounting and event-engine scoring.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_failure(
+        report: &FailureReport,
+        fwd: &Plan,
+        bwd: &Plan,
+        policy: &RecoveryPolicy,
+        cluster: &ClusterSpec,
+        fwd_cost: &AttnCost,
+        bwd_cost: &AttnCost,
+        resume_layer: usize,
+        layers: usize,
+        backward: bool,
+    ) -> RestartPlan {
+        let root = report.root_cause();
+        let failed_rank = root.map(|c| c.rank());
+        let action = match (policy, failed_rank) {
+            (RecoveryPolicy::FailFast, _) | (_, None) => RestartAction::Halt,
+            (RecoveryPolicy::Respawn { .. }, Some(r)) => RestartAction::Respawn { rank: r },
+            (RecoveryPolicy::Elastic { min_workers }, Some(r)) => {
+                let survivors = fwd.n_workers.saturating_sub(1);
+                if survivors < *min_workers {
+                    RestartAction::Halt
+                } else {
+                    RestartAction::Remap {
+                        lost_rank: r,
+                        buddy: (r + 1) % fwd.n_workers,
+                        survivors,
+                    }
+                }
+            }
+        };
+        let slowdowns: Vec<(usize, f64)> = match &action {
+            // the buddy executes two ranks' kernels: price it 2x slow
+            RestartAction::Remap { buddy, .. } => vec![(*buddy, 2.0)],
+            _ => Vec::new(),
+        };
+        let mut per_layer_s = score_plan_slow(fwd, cluster, fwd_cost, &slowdowns);
+        if backward {
+            per_layer_s += score_plan_slow(bwd, cluster, bwd_cost, &slowdowns);
+        }
+        let replay_layers = layers.saturating_sub(resume_layer);
+        RestartPlan {
+            root_cause: root.map(|c| format!("{c}")).unwrap_or_else(|| "unknown".to_string()),
+            failed_rank,
+            action,
+            completed_fwd_ops: report
+                .partial_fwd
+                .as_ref()
+                .map(|t| t.covered.iter().filter(|&&c| c).count())
+                .unwrap_or(0),
+            completed_bwd_ops: report
+                .partial_bwd
+                .as_ref()
+                .map(|t| t.covered.iter().filter(|&&c| c).count())
+                .unwrap_or(0),
+            resume_layer,
+            replay_layers,
+            predicted_restart_s: per_layer_s * replay_layers as f64,
+        }
+    }
+}
+
+fn score_plan_slow(
+    plan: &Plan,
+    cluster: &ClusterSpec,
+    cost: &AttnCost,
+    slowdowns: &[(usize, f64)],
+) -> f64 {
+    let mut sim = PlanSim::new(plan, cost);
+    for &(w, f) in slowdowns {
+        sim.set_worker_slowdown(w, f);
+    }
+    sim.total_s(cluster, &plan.placement, plan.prefetch_depth)
+}
+
+// ---------------------------------------------------------------------------
+// Elastic re-lowering
+// ---------------------------------------------------------------------------
+
+/// The steady-state plan pair re-lowered over the P−1 survivors after a
+/// permanent rank loss: the lost rank's tokens are redistributed through
+/// the varlen boundary rebalancer. This pair is *not* executed by the
+/// bit-pinned replay (different chunk cuts change the online-softmax
+/// merge grouping); it is the plan subsequent steps run on.
+#[derive(Clone, Debug)]
+pub struct ElasticPlan {
+    /// Surviving worker count (original P − 1).
+    pub n_workers: usize,
+    /// Rebalanced token cuts over the survivors (len `n_workers + 1`).
+    pub boundaries: Vec<usize>,
+    pub fwd: Arc<Plan>,
+    pub bwd: Arc<Plan>,
+    /// Event-engine makespan of the re-lowered pair on the survivors.
+    pub predicted_s: f64,
+    /// Cuts the rebalancer moved off the naive equal split.
+    pub moved_boundaries: usize,
+}
+
+/// Re-lower the schedule over `survivors` workers, redistributing the
+/// full token budget (`doc_lens` keeps the document masking of the
+/// original layout; a uniform run is one causal document).
+pub fn relower_elastic(
+    kind: ScheduleKind,
+    varlen: Option<&VarlenSpec>,
+    total_tokens: usize,
+    survivors: usize,
+    ckpt: CkptStrategy,
+    cluster: &ClusterSpec,
+    fwd_cost: &AttnCost,
+    bwd_cost: &AttnCost,
+) -> Result<ElasticPlan> {
+    if survivors < 2 {
+        bail!("elastic re-lowering needs at least 2 surviving workers, got {survivors}");
+    }
+    let doc_lens = match varlen {
+        Some(v) => v.doc_lens.clone(),
+        None => vec![total_tokens],
+    };
+    let spec0 = VarlenSpec::equal_split(doc_lens, survivors);
+    spec0
+        .validate()
+        .map_err(|e| anyhow!("elastic varlen layout invalid: {e}"))?;
+    let schedule = Schedule::build(kind, survivors);
+    let (fwd, bwd, moved, spec) = if ckpt == CkptStrategy::HfStyle {
+        // the rebalancer re-lowers prefix-free candidates and would drop
+        // the HfStyle recompute lowering: keep the equal split
+        let lopts = LowerOpts {
+            varlen: Some(Arc::new(spec0.clone())),
+            ckpt: Some(ckpt),
+            ..Default::default()
+        };
+        let fwd = Plan::from_schedule_opts(&schedule, Pass::Forward, &lopts);
+        let bwd = Plan::from_schedule_opts(&schedule, Pass::Backward, &lopts);
+        (fwd, bwd, 0, spec0)
+    } else {
+        let opts = OptimizeOpts::default();
+        let of = optimize_varlen(&schedule, &spec0, Pass::Forward, cluster, fwd_cost, &opts);
+        let bwd_opts = OptimizeOpts { move_boundaries: false, ..opts };
+        let ob = optimize_varlen(&schedule, &of.spec, Pass::Backward, cluster, bwd_cost, &bwd_opts);
+        let moved = of.moved_boundaries;
+        (of.plan, ob.plan, moved, of.spec)
+    };
+    fwd.validate_lowered()
+        .map_err(|e| anyhow!("elastic fwd plan invalid: {e}"))?;
+    bwd.validate_lowered()
+        .map_err(|e| anyhow!("elastic bwd plan invalid: {e}"))?;
+    let predicted_s = score_plan_slow(&fwd, cluster, fwd_cost, &[])
+        + score_plan_slow(&bwd, cluster, bwd_cost, &[]);
+    Ok(ElasticPlan {
+        n_workers: survivors,
+        boundaries: spec.boundaries.clone(),
+        fwd: Arc::new(fwd),
+        bwd: Arc::new(bwd),
+        predicted_s,
+        moved_boundaries: moved,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Recovery audit
+// ---------------------------------------------------------------------------
+
+/// One supervised restart attempt.
+#[derive(Clone, Debug)]
+pub struct RecoveryAttempt {
+    /// 1-based attempt index (attempt 0 is the original run).
+    pub attempt: usize,
+    /// `"respawn"` or `"remap"`.
+    pub action: &'static str,
+    /// Root cause of the failure this attempt recovers from.
+    pub root_cause: String,
+    pub failed_rank: Option<usize>,
+    /// Layer the replay resumed from.
+    pub resume_layer: usize,
+    /// Backoff slept before this attempt.
+    pub backoff_s: f64,
+    /// Wall-clock of the attempt itself.
+    pub wall_s: f64,
+    pub succeeded: bool,
+}
+
+/// Audit record of one supervised execution: what failed, what was
+/// replayed vs skipped, how long recovery took, and whether the replayed
+/// outputs matched the checkpointed artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// The run completed (possibly without ever failing).
+    pub recovered: bool,
+    /// Restart attempts, in order; empty when attempt 0 succeeded.
+    pub attempts: Vec<RecoveryAttempt>,
+    /// Layer the successful replay resumed from.
+    pub resume_layer: usize,
+    /// Plan ops the successful replay re-executed.
+    pub replayed_ops: usize,
+    /// Plan ops skipped thanks to the checkpointed layer prefix.
+    pub skipped_ops: usize,
+    /// First failure detected → failure surfaced (attempt 0 wall).
+    pub detect_s: f64,
+    /// First failure detected → recovered run completed. 0 when attempt 0
+    /// succeeded.
+    pub time_to_recover_s: f64,
+    /// Replayed per-rank output chunks compared equal against stored
+    /// `(o, lse)` artifacts.
+    pub verified_chunks: usize,
+    /// Every compared chunk matched (and at least one was compared).
+    pub verified: bool,
+    /// The restart plan derived from the first failure.
+    pub restart: Option<RestartPlan>,
+    /// The re-lowered survivor plan (elastic policy only).
+    pub elastic: Option<ElasticPlan>,
+}
+
+impl RecoveryReport {
+    /// One-line human summary for CLI output.
+    pub fn summary(&self) -> String {
+        if self.attempts.is_empty() {
+            return "clean run (no recovery needed)".to_string();
+        }
+        format!(
+            "{} after {} attempt(s): resumed at layer {}, replayed {} ops (skipped {}), \
+             detect {:.0} ms, recover {:.0} ms{}{}",
+            if self.recovered { "recovered" } else { "NOT recovered" },
+            self.attempts.len(),
+            self.resume_layer,
+            self.replayed_ops,
+            self.skipped_ops,
+            self.detect_s * 1e3,
+            self.time_to_recover_s * 1e3,
+            if self.verified {
+                format!(", {} chunk(s) verified against checkpoints", self.verified_chunks)
+            } else {
+                String::new()
+            },
+            match &self.elastic {
+                Some(e) => format!(
+                    ", re-lowered over {} survivors ({} cuts moved)",
+                    e.n_workers, e.moved_boundaries
+                ),
+                None => String::new(),
+            },
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The supervision loop
+// ---------------------------------------------------------------------------
+
+impl Session {
+    /// [`Session::execute`] wrapped in the recovery supervision loop:
+    /// inputs synthesized from the spec's shapes and seed, failures
+    /// restarted per `RunSpec::recovery`.
+    pub fn execute_supervised(&mut self) -> Result<&mut Session> {
+        let (q, k, v, do_) = self.synth_inputs()?;
+        self.execute_supervised_with(&q, &k, &v, do_.as_ref())
+    }
+
+    /// Execute with caller-supplied tensors under the spec's
+    /// [`RecoveryPolicy`]. `FailFast` is byte-for-byte the plain
+    /// [`Session::execute_with`] path. Under `Respawn`/`Elastic` the
+    /// run's per-layer `(o, lse)` artifacts are checkpointed as it goes;
+    /// on failure the supervisor derives a [`RestartPlan`] from the
+    /// [`FailureReport`], replays from the last layer boundary completed
+    /// by every rank (crash cleared — it already fired; delay/drop/stall
+    /// faults stay armed), verifies the replayed chunks against the
+    /// checkpoints, and leaves the full audit in
+    /// [`Session::recovery_report`]. The recovered outputs are
+    /// bit-identical to a fault-free run (pinned by
+    /// `rust/tests/recovery_properties.rs`).
+    pub fn execute_supervised_with(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        do_: Option<&Tensor>,
+    ) -> Result<&mut Session> {
+        let policy = self.spec().recovery.clone();
+        if policy.is_fail_fast() {
+            self.recovery_report = None;
+            return self.execute_with(q, k, v, do_);
+        }
+        let (fwd, bwd) = self.plans()?;
+        let p = self.n_workers();
+        let layers = self.spec().layers;
+        let backward = do_.is_some();
+        let ops_per_layer = fwd.n_ops() + if backward { bwd.n_ops() } else { 0 };
+        let store = Arc::new(CkptStore::new());
+        let armed_faults = self.spec().faults.clone();
+
+        let t0 = Instant::now();
+        let first = self.attempt_with(
+            q,
+            k,
+            v,
+            do_,
+            armed_faults.clone(),
+            Some(RecoverCtx { store: store.clone(), start_layer: 0 }),
+        );
+        let mut last_err = match first {
+            Ok(()) => {
+                self.recovery_report =
+                    Some(RecoveryReport { recovered: true, ..RecoveryReport::default() });
+                return Ok(self);
+            }
+            Err(e) => e,
+        };
+        let detect_s = t0.elapsed().as_secs_f64();
+        let failure = self.failure_report().cloned().unwrap_or_default();
+        let mut root_cause = failure
+            .root_cause()
+            .map(|c| format!("{c}"))
+            .unwrap_or_else(|| format!("{last_err}"));
+        let failed_rank = failure.root_cause().map(|c| c.rank());
+
+        // crashes are transient one-shot faults: the respawned rank
+        // replays with the crash cleared, every other class stays armed
+        let retry_faults = armed_faults.map(|f| FaultSpec { crash: None, ..f });
+
+        let resume0 = store.resume_layer(p, layers, backward).min(layers - 1);
+        let (cluster, fwd_cost, bwd_cost) = {
+            let (fc, bc) = self.costs();
+            (self.spec().cluster.clone(), *fc, *bc)
+        };
+        let mut report = RecoveryReport {
+            detect_s,
+            restart: Some(RestartPlan::from_failure(
+                &failure, &fwd, &bwd, &policy, &cluster, &fwd_cost, &bwd_cost, resume0, layers,
+                backward,
+            )),
+            ..RecoveryReport::default()
+        };
+
+        let (max_retries, backoff_s, action): (usize, f64, &'static str) = match &policy {
+            RecoveryPolicy::Respawn { max_retries, backoff_s } => {
+                (*max_retries, *backoff_s, "respawn")
+            }
+            RecoveryPolicy::Elastic { min_workers } => {
+                let survivors = p - 1;
+                if survivors < *min_workers {
+                    self.recovery_report = Some(report);
+                    return Err(anyhow!(
+                        "elastic recovery needs >= {min_workers} surviving workers but only \
+                         {survivors} of {p} survive losing rank {failed_rank:?} \
+                         (root cause: {root_cause})"
+                    ));
+                }
+                report.elastic = Some(relower_elastic(
+                    self.spec().schedule,
+                    fwd.varlen.as_deref(),
+                    q.shape[1],
+                    survivors,
+                    self.spec().ckpt,
+                    &cluster,
+                    &fwd_cost,
+                    &bwd_cost,
+                )?);
+                // the lost device is gone for good: one remapped replay
+                (1, 0.0, "remap")
+            }
+            RecoveryPolicy::FailFast => unreachable!("handled above"),
+        };
+
+        for attempt in 1..=max_retries {
+            let backoff = backoff_s * (1u64 << (attempt - 1).min(16)) as f64;
+            if backoff > 0.0 {
+                thread::sleep(Duration::from_secs_f64(backoff.min(5.0)));
+            }
+            let resume = store.resume_layer(p, layers, backward).min(layers - 1);
+            let ta = Instant::now();
+            let res = self.attempt_with(
+                q,
+                k,
+                v,
+                do_,
+                retry_faults.clone(),
+                Some(RecoverCtx { store: store.clone(), start_layer: resume }),
+            );
+            let wall = ta.elapsed().as_secs_f64();
+            let ok = res.is_ok();
+            report.attempts.push(RecoveryAttempt {
+                attempt,
+                action,
+                root_cause: root_cause.clone(),
+                failed_rank,
+                resume_layer: resume,
+                backoff_s: backoff,
+                wall_s: wall,
+                succeeded: ok,
+            });
+            match res {
+                Ok(()) => {
+                    report.recovered = true;
+                    report.resume_layer = resume;
+                    report.skipped_ops = resume * ops_per_layer;
+                    report.replayed_ops = (layers - resume) * ops_per_layer;
+                    report.time_to_recover_s = t0.elapsed().as_secs_f64();
+                    // verify: the replayed per-rank output chunks must
+                    // equal the checkpointed (o, lse) artifacts bit for bit
+                    let chunks = {
+                        let o = &self.result()?.o;
+                        match fwd.varlen.as_deref() {
+                            Some(vs) => o.chunk_axis1_at(&vs.boundaries),
+                            None => o.chunk_axis1(p),
+                        }
+                    };
+                    let mut verified = 0;
+                    let mut all_ok = true;
+                    for (rank, chunk) in chunks.iter().enumerate() {
+                        if let Some((_, (so, _))) = store.artifact_for(rank) {
+                            if so == *chunk {
+                                verified += 1;
+                            } else {
+                                all_ok = false;
+                            }
+                        }
+                    }
+                    report.verified_chunks = verified;
+                    report.verified = all_ok && verified > 0;
+                    self.recovery_report = Some(report);
+                    return Ok(self);
+                }
+                Err(e) => {
+                    if let Some(r) = self.failure_report() {
+                        if let Some(c) = r.root_cause() {
+                            root_cause = format!("{c}");
+                        }
+                    }
+                    last_err = e;
+                }
+            }
+        }
+        report.recovered = false;
+        report.time_to_recover_s = t0.elapsed().as_secs_f64();
+        self.recovery_report = Some(report);
+        Err(anyhow!(
+            "recovery exhausted after {max_retries} restart attempt(s): {last_err:#}"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fault::ExecError;
+    use crate::coordinator::schedule::ScheduleKind;
+    use crate::coordinator::session::RunSpec;
+    use crate::baselines::attn_cost_from_dims;
+
+    #[test]
+    fn policy_json_roundtrips() {
+        for p in [
+            RecoveryPolicy::FailFast,
+            RecoveryPolicy::Respawn { max_retries: 5, backoff_s: 0.25 },
+            RecoveryPolicy::Elastic { min_workers: 3 },
+        ] {
+            let j = Json::parse(&p.to_json()).expect("emitted JSON parses");
+            assert_eq!(RecoveryPolicy::from_json(&j).unwrap(), p);
+        }
+        // missing knobs take respawn defaults
+        let j = Json::parse(r#"{"respawn": {}}"#).unwrap();
+        assert_eq!(
+            RecoveryPolicy::from_json(&j).unwrap(),
+            RecoveryPolicy::Respawn { max_retries: 3, backoff_s: 0.05 }
+        );
+        // unknown strings and malformed objects are errors
+        assert!(RecoveryPolicy::from_json(&Json::parse("\"retry\"").unwrap()).is_err());
+        assert!(RecoveryPolicy::from_json(&Json::parse("{\"other\": 1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn policy_validation_pins_messages() {
+        let err = RecoveryPolicy::Respawn { max_retries: 0, backoff_s: 0.0 }
+            .validate(4)
+            .unwrap_err();
+        assert!(format!("{err}").contains("max_retries must be >= 1"), "{err}");
+        let err = RecoveryPolicy::Respawn { max_retries: 1, backoff_s: f64::NAN }
+            .validate(4)
+            .unwrap_err();
+        assert!(format!("{err}").contains("backoff_s"), "{err}");
+        let err = RecoveryPolicy::Elastic { min_workers: 1 }.validate(4).unwrap_err();
+        assert!(format!("{err}").contains("min_workers must be >= 2"), "{err}");
+        let err = RecoveryPolicy::Elastic { min_workers: 4 }.validate(4).unwrap_err();
+        assert!(format!("{err}").contains("must be below the worker count"), "{err}");
+        assert!(RecoveryPolicy::Elastic { min_workers: 3 }.validate(4).is_ok());
+        // manifest-resolved specs defer the worker-count check
+        assert!(RecoveryPolicy::Elastic { min_workers: 64 }.validate(usize::MAX).is_ok());
+    }
+
+    #[test]
+    fn ckpt_store_resume_is_all_or_nothing_per_layer() {
+        let store = CkptStore::new();
+        let o = Tensor::zeros(&[1, 2, 1]);
+        let lse = Tensor::zeros(&[1, 2]);
+        assert_eq!(store.resume_layer(2, 3, true), 0);
+        // layer 0 complete on both ranks
+        for rank in 0..2 {
+            store.record_fwd(rank, 0, &o, &lse);
+            store.record_bwd(rank, 0);
+        }
+        assert_eq!(store.resume_layer(2, 3, true), 1);
+        // layer 1 forward complete, but rank 1's backward is missing:
+        // the prefix must not extend
+        store.record_fwd(0, 1, &o, &lse);
+        store.record_fwd(1, 1, &o, &lse);
+        store.record_bwd(0, 1);
+        assert_eq!(store.resume_layer(2, 3, true), 1);
+        // forward-only runs ignore the backward marks
+        assert_eq!(store.resume_layer(2, 3, false), 2);
+        store.record_bwd(1, 1);
+        assert_eq!(store.resume_layer(2, 3, true), 2);
+        assert_eq!(store.n_artifacts(), 4);
+        assert_eq!(store.artifact_for(0).unwrap().0, 1, "highest layer wins");
+    }
+
+    #[test]
+    fn restart_plan_names_action_and_replay_window() {
+        let p = 4;
+        let (fwd, bwd) = Session::new(RunSpec::plans_only(ScheduleKind::Balanced, p))
+            .unwrap()
+            .plans()
+            .unwrap();
+        let report = FailureReport {
+            failures: vec![ExecError::InjectedCrash { rank: 2, step: 1 }],
+            ..FailureReport::default()
+        };
+        let cluster = ClusterSpec::dgx_1x8();
+        let cost = attn_cost_from_dims(&cluster, 64.0, 2, 1, 8);
+        let plan = RestartPlan::from_failure(
+            &report,
+            &fwd,
+            &bwd,
+            &RecoveryPolicy::respawn(),
+            &cluster,
+            &cost,
+            &cost,
+            1,
+            3,
+            true,
+        );
+        assert_eq!(plan.action, RestartAction::Respawn { rank: 2 });
+        assert_eq!(plan.failed_rank, Some(2));
+        assert_eq!(plan.resume_layer, 1);
+        assert_eq!(plan.replay_layers, 2);
+        assert!(plan.predicted_restart_s > 0.0);
+        assert!(plan.root_cause.contains("injected crash"), "{}", plan.root_cause);
+
+        let plan = RestartPlan::from_failure(
+            &report,
+            &fwd,
+            &bwd,
+            &RecoveryPolicy::Elastic { min_workers: 2 },
+            &cluster,
+            &cost,
+            &cost,
+            0,
+            3,
+            true,
+        );
+        assert_eq!(
+            plan.action,
+            RestartAction::Remap { lost_rank: 2, buddy: 3, survivors: 3 }
+        );
+        // survivors below the floor: the plan says halt
+        let plan = RestartPlan::from_failure(
+            &report,
+            &fwd,
+            &bwd,
+            &RecoveryPolicy::Elastic { min_workers: 4 },
+            &cluster,
+            &cost,
+            &cost,
+            0,
+            3,
+            true,
+        );
+        assert_eq!(plan.action, RestartAction::Halt);
+    }
+
+    #[test]
+    fn elastic_relower_redistributes_the_lost_chunk() {
+        let cluster = ClusterSpec::dgx_1x8();
+        let cost = attn_cost_from_dims(&cluster, 64.0, 2, 1, 8);
+        let ep = relower_elastic(
+            ScheduleKind::Balanced,
+            None,
+            256,
+            3,
+            CkptStrategy::RematAware,
+            &cluster,
+            &cost,
+            &cost,
+        )
+        .unwrap();
+        assert_eq!(ep.n_workers, 3);
+        assert_eq!(ep.fwd.n_workers, 3);
+        assert_eq!(ep.boundaries.len(), 4);
+        assert_eq!(*ep.boundaries.last().unwrap(), 256, "every token is covered");
+        assert!(ep.predicted_s > 0.0);
+        // below two survivors there is nothing distributed to lower
+        assert!(relower_elastic(
+            ScheduleKind::Balanced,
+            None,
+            256,
+            1,
+            CkptStrategy::RematAware,
+            &cluster,
+            &cost,
+            &cost,
+        )
+        .is_err());
+    }
+}

@@ -58,6 +58,7 @@ use super::optimize::{
     optimize_plan_with_op_costs, optimize_schedule_ckpt, optimize_varlen, OptimizeOpts,
 };
 use super::plan::{LowerOpts, Pass, Plan};
+use super::recovery::{RecoverCtx, RecoveryPolicy, RecoveryReport};
 use super::schedule::{Schedule, ScheduleKind, VarlenSpec};
 use crate::baselines::{attn_cost_from_dims, bwd_cost_from_fwd};
 use crate::config::ClusterSpec;
@@ -194,6 +195,12 @@ pub struct RunSpec {
     /// [`Session::failure_report`]. `None` (the default) is the
     /// uninstrumented fast path.
     pub faults: Option<FaultSpec>,
+    /// What [`Session::execute_supervised`] does about a failed run:
+    /// surface it unchanged ([`RecoveryPolicy::FailFast`], the default —
+    /// the PR 8 contract), respawn the failed rank and replay from the
+    /// last checkpointed layer boundary, or re-lower over the P−1
+    /// survivors. Plain `execute*()` calls ignore this field.
+    pub recovery: RecoveryPolicy,
     /// Seed for synthesized inputs (`execute()` without tensors).
     pub seed: u64,
 }
@@ -221,6 +228,7 @@ impl RunSpec {
             threads: 1,
             ckpt: CkptStrategy::RematAware,
             faults: None,
+            recovery: RecoveryPolicy::FailFast,
             seed: 0,
         }
     }
@@ -321,7 +329,39 @@ impl RunSpec {
             // targets in `Session::new` once the worker count is known
             let n = if self.n_workers > 0 { self.n_workers } else { usize::MAX };
             f.validate(n)?;
+            // a crash step past the plan's last step would never fire:
+            // reject it here instead of letting it silently no-op mid-run
+            if let Some(c) = &f.crash {
+                if self.n_workers > 0 {
+                    let t = Schedule::build(self.schedule, self.n_workers).n_steps();
+                    let last = match c.pass {
+                        Pass::Forward => t - 1,
+                        // HfStyle prepends a T-step recompute replay; the
+                        // trailing dkv Accum sits one step past the body
+                        Pass::Backward => {
+                            if self.ckpt == CkptStrategy::HfStyle {
+                                2 * t
+                            } else {
+                                t
+                            }
+                        }
+                    };
+                    if c.step > last {
+                        bail!(
+                            "crash step {} is past the {:?}-pass plan's last step {} \
+                             ({:?} schedule, {} workers)",
+                            c.step,
+                            c.pass,
+                            last,
+                            self.schedule,
+                            self.n_workers
+                        );
+                    }
+                }
+            }
         }
+        let n = if self.n_workers > 0 { self.n_workers } else { usize::MAX };
+        self.recovery.validate(n)?;
         if let OptimizePolicy::Schedule(o) | OptimizePolicy::Varlen(o) = &self.optimize {
             for &(w, factor) in &o.slowdowns {
                 if self.n_workers > 0 && w >= self.n_workers {
@@ -524,6 +564,9 @@ pub struct Session {
     /// Sender-side fault events the last `execute*()` injected, in rank
     /// order — deterministic for a given [`FaultSpec`] seed.
     fault_events: Vec<FaultEvent>,
+    /// Audit of the last `execute_supervised*()` (attempts, replayed ops,
+    /// time-to-recover); `None` for plain executions and `FailFast` runs.
+    pub(crate) recovery_report: Option<RecoveryReport>,
 }
 
 impl Session {
@@ -590,6 +633,7 @@ impl Session {
             bwd_op_costs: None,
             last_failure: None,
             fault_events: Vec::new(),
+            recovery_report: None,
         })
     }
 
@@ -1020,6 +1064,14 @@ impl Session {
     /// Execute with inputs synthesized from the spec's shapes and seed
     /// (q, k, v, and — when `spec.backward` — do, drawn in that order).
     pub fn execute(&mut self) -> Result<&mut Session> {
+        let (q, k, v, do_) = self.synth_inputs()?;
+        self.execute_with(&q, &k, &v, do_.as_ref())
+    }
+
+    /// The `execute()` input contract, shared with the supervised path:
+    /// q, k, v, and — when `spec.backward` — do, drawn from the spec's
+    /// seed in that order.
+    pub(crate) fn synth_inputs(&mut self) -> Result<(Tensor, Tensor, Tensor, Option<Tensor>)> {
         self.ensure_ready()?;
         let w = &self.workload;
         let n = match &self.spec.varlen {
@@ -1035,7 +1087,7 @@ impl Session {
             .spec
             .backward
             .then(|| Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d)));
-        self.execute_with(&q, &k, &v, do_.as_ref())
+        Ok((q, k, v, do_))
     }
 
     /// Execute with caller-supplied full-sequence tensors: q `(H, N, D)`,
@@ -1050,8 +1102,29 @@ impl Session {
         do_: Option<&Tensor>,
     ) -> Result<&mut Session> {
         self.ensure_ready()?;
+        let faults = self.spec.faults.clone();
+        self.attempt_with(q, k, v, do_, faults, None)?;
+        Ok(self)
+    }
+
+    /// One execution attempt: run the plan pair with `faults` armed —
+    /// which may differ from the spec's (a respawned replay clears the
+    /// already-fired crash) — and, when `recover` is set, skip the
+    /// checkpointed layer prefix and record per-layer `(o, lse)`
+    /// artifacts into its store as the run progresses.
+    pub(crate) fn attempt_with(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        do_: Option<&Tensor>,
+        faults: Option<FaultSpec>,
+        recover: Option<RecoverCtx>,
+    ) -> Result<()> {
+        self.ensure_ready()?;
+        self.recovery_report = None;
         let (fwd, bwd) = self.plans.as_ref().expect("ensure_ready built plans").clone();
-        let watchdog_s = match &self.spec.faults {
+        let watchdog_s = match &faults {
             Some(f) => Some(match f.watchdog_s {
                 Some(w) => w,
                 None => self.watchdog_budget_s(&fwd, &bwd, f),
@@ -1063,16 +1136,16 @@ impl Session {
             trace: self.spec.trace,
             deep_copy_sends: self.spec.deep_copy_sends,
             threads: self.spec.threads,
-            faults: self.spec.faults.clone(),
+            faults,
             watchdog_s,
         };
-        let attempt = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers);
+        let attempt = execute_plans(fwd, bwd, q, k, v, do_, &opts, self.spec.layers, recover);
         self.fault_events = attempt.fault_events;
         self.last_failure = attempt.report;
         match attempt.run {
             Ok(run) => {
                 self.last_run = Some(run);
-                Ok(self)
+                Ok(())
             }
             Err(e) => {
                 // a stale trace from a previous clean run must not pass
@@ -1118,6 +1191,13 @@ impl Session {
     /// surviving ranks flushed. `None` after a clean run.
     pub fn failure_report(&self) -> Option<&FailureReport> {
         self.last_failure.as_ref()
+    }
+
+    /// Audit of the last `execute_supervised*()`: restart attempts,
+    /// replayed vs skipped ops, time-to-recover, artifact verification.
+    /// `None` for plain executions and `FailFast` supervised runs.
+    pub fn recovery_report(&self) -> Option<&RecoveryReport> {
+        self.recovery_report.as_ref()
     }
 
     /// Sender-side fault events the last `execute*()` injected, in rank
@@ -1301,10 +1381,20 @@ pub(crate) fn execute_plans(
     do_: Option<&Tensor>,
     opts: &ExecOpts,
     layers: usize,
+    recover: Option<RecoverCtx>,
 ) -> ExecAttempt {
     let n_workers = fwd_plan.n_workers;
     if layers == 0 {
         return ExecAttempt::fail(anyhow!("layers must be >= 1"));
+    }
+    // supervised replay: layers below start_layer completed on every rank
+    // (their (o, lse) artifacts sit in the store) and are skipped — the
+    // skip is global, so the replayed comm schedule stays symmetric
+    let start_layer = recover.as_ref().map(|r| r.start_layer).unwrap_or(0);
+    if start_layer >= layers {
+        return ExecAttempt::fail(anyhow!(
+            "replay start layer {start_layer} out of range for {layers} layer(s)"
+        ));
     }
     if bwd_plan.n_workers != n_workers {
         return ExecAttempt::fail(anyhow!(
@@ -1409,6 +1499,7 @@ pub(crate) fn execute_plans(
         let k = ks[rank].clone();
         let v = vs[rank].clone();
         let do_chunk = dos.as_ref().map(|d| d[rank].clone());
+        let ckpt_store = recover.as_ref().map(|r| r.store.clone());
         handles.push(thread::spawn(move || -> WorkerRet {
             comm.set_deep_copy_sends(deep);
             let mut stall = 1.0_f64;
@@ -1442,7 +1533,7 @@ pub(crate) fn execute_plans(
                 }
                 let epoch = trace.then_some(epoch);
                 let mut last: Option<(Tensor, Tensor, Option<(Tensor, Tensor, Tensor)>)> = None;
-                for layer in 0..layers {
+                for layer in start_layer..layers {
                     let mut ctx = AttnCtx {
                         rank,
                         runtime: &*kernels,
@@ -1463,6 +1554,9 @@ pub(crate) fn execute_plans(
                             return Err(e);
                         }
                     };
+                    if let Some(s) = &ckpt_store {
+                        s.record_fwd(rank, layer, &o, &lse);
+                    }
                     let (grads, bwd_trace) = match do_chunk.as_ref() {
                         Some(d) => {
                             let mut ctx = AttnCtx {
@@ -1490,6 +1584,11 @@ pub(crate) fn execute_plans(
                     };
                     if trace {
                         layer_traces.push((fwd_trace, bwd_trace));
+                    }
+                    if grads.is_some() {
+                        if let Some(s) = &ckpt_store {
+                            s.record_bwd(rank, layer);
+                        }
                     }
                     last = Some((o, lse, grads));
                 }
@@ -1604,9 +1703,12 @@ pub(crate) fn execute_plans(
     let outs: Vec<WorkerOut> =
         outs.into_iter().map(|o| o.expect("every rank joined clean")).collect();
 
+    // a replay records traces only for the layers it re-executed
+    let recorded_layers = layers - start_layer;
     let (fwd_trace, bwd_trace, layer_traces) = if opts.trace {
-        let mut lt: Vec<(Option<MergedTrace>, Option<MergedTrace>)> = Vec::with_capacity(layers);
-        for l in 0..layers {
+        let mut lt: Vec<(Option<MergedTrace>, Option<MergedTrace>)> =
+            Vec::with_capacity(recorded_layers);
+        for l in 0..recorded_layers {
             let ft: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].0.clone()).collect();
             let bt: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].1.clone()).collect();
             let mut mf = MergedTrace::merge(fwd_plan.n_ops(), &ft);
@@ -1876,12 +1978,14 @@ impl RunSpec {
             None => "null".to_string(),
             Some(f) => f.to_json(),
         };
+        let recovery = self.recovery.to_json();
         format!(
             "{{\n  \"workload\": {workload},\n  \"n_workers\": {},\n  \"schedule\": \"{schedule}\",\n  \
              \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
              \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
              \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \
-             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"faults\": {faults},\n  \"seed\": {seed}\n}}\n",
+             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"faults\": {faults},\n  \
+             \"recovery\": {recovery},\n  \"seed\": {seed}\n}}\n",
             self.n_workers,
             self.layers,
             self.backward,
@@ -2035,6 +2139,10 @@ impl RunSpec {
             faults: match j.get("faults") {
                 None | Some(Json::Null) => None,
                 Some(f) => Some(FaultSpec::from_json(f)?),
+            },
+            recovery: match j.get("recovery") {
+                None | Some(Json::Null) => RecoveryPolicy::FailFast,
+                Some(r) => RecoveryPolicy::from_json(r)?,
             },
             seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(0),
         })

@@ -12,6 +12,9 @@
 //!            [--lr F] [--seed N]            run the distributed trainer
 //!            [--optimize [--cluster C]]     (with optimizer-derived plans)
 //!            [--trace]                      (per-layer attention timelines)
+//!            [--state-dir DIR]              persist survivable per-step state
+//!                                           and resume from the last completed
+//!                                           step found there
 //!   simulate --model M --cluster C --seq N  one-off iteration estimate
 //!   plans    [--p N] [--cluster C] [--seq N] executed schedule-IR timings
 //!            [--model M]                    (event engine, prefetch sweep)
@@ -22,25 +25,33 @@
 //!            token-level rebalancing of a Zipf-packed document batch
 //!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
 //!            [--ckpt-out FILE] [--kernels-out FILE] [--faults-out FILE]
+//!            [--recovery-out FILE]
 //!            [--skip-exec]                  optimizer + varlen grids (driven
 //!                                           through Session), the executor
 //!                                           transport micro-bench, the
 //!                                           checkpoint-strategy trade-off, the
-//!                                           host-kernel micro-bench, and the
-//!                                           zero-fault overhead gate;
+//!                                           host-kernel micro-bench, the
+//!                                           zero-fault overhead gate, and the
+//!                                           crash-recovery gate;
 //!                                           --json writes BENCH_optimizer.json,
 //!                                           BENCH_varlen.json, BENCH_executor.json,
 //!                                           BENCH_ckpt.json, BENCH_kernels.json,
-//!                                           BENCH_faults.json
+//!                                           BENCH_faults.json, BENCH_recovery.json
 //!   chaos    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
-//!            [--schedule S] [--seed N] [--stall F] [--layers L]
+//!            [--schedule S] [--seed N] [--stall F] [--layers L] [--seeds N]
 //!                                           seeded fault injection on the real
 //!                                           host executor: per fault class
 //!                                           (delay / drop / chaos / stall /
 //!                                           crash), executed makespan
 //!                                           degradation vs the event engine's
-//!                                           prediction, plus the optimizer's
-//!                                           best plan under a pinned straggler
+//!                                           prediction; the same crash driven
+//!                                           to bit-identical completion by the
+//!                                           recovery supervisor (respawn +
+//!                                           elastic); --seeds N sweeps per-class
+//!                                           worst-case detection latency and
+//!                                           recovery overhead; plus the
+//!                                           optimizer's best plan under a
+//!                                           pinned straggler
 //!   trace    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
 //!            [--schedule S] [--depth N] [--seed N] [--layers L] [--threads T]
 //!                                           run the real executor (host kernels)
@@ -66,8 +77,8 @@ use distflash::baselines::ulysses::Ulysses;
 use distflash::baselines::SystemModel;
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, Plan, RunSpec,
-    Schedule, ScheduleKind, Session, VarlenSpec, Workload,
+    CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, Plan, RecoveryPolicy,
+    RunSpec, Schedule, ScheduleKind, Session, VarlenSpec, Workload,
 };
 use distflash::report::{paper, trace};
 use distflash::runtime::{HostKernels, Kernels, Runtime, Tensor, Value};
@@ -313,6 +324,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         adam: AdamConfig { lr: args.f32("lr", 3e-3), ..Default::default() },
         seed,
         log_every: args.usize("log-every", 1),
+        state_dir: args.flags.get("state-dir").map(PathBuf::from),
     };
     println!(
         "train: config={cfg_name} schedule={:?} ckpt={} steps={}",
@@ -785,6 +797,125 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
          the crash row must *fail fast* with a named root cause, never hang)"
     );
 
+    // crash -> recover end to end: the same seeded crash, now driven to
+    // completion by the recovery supervisor under both policies
+    let crash_spec = FaultSpec {
+        seed,
+        crash: Some(CrashSpec { rank: p / 2, step: 2.min(p - 1), pass: Pass::Forward }),
+        ..FaultSpec::default()
+    };
+    println!("supervised recovery (same crash, driven to completion):");
+    for (pname, policy) in [
+        ("respawn", RecoveryPolicy::respawn()),
+        ("elastic", RecoveryPolicy::Elastic { min_workers: 2 }),
+    ] {
+        let mut spec = make_spec(Some(crash_spec.clone()));
+        spec.recovery = policy;
+        let mut session = Session::new(spec)?;
+        let t0 = std::time::Instant::now();
+        let run = session.execute_supervised_with(&q, &k, &v, Some(&do_)).map(|_| ());
+        let wall = t0.elapsed().as_secs_f64();
+        match run {
+            Ok(()) => {
+                let bitwise = match (&o_base, session.result()) {
+                    (Some(base), Ok(res)) if res.o == *base => {
+                        "outputs bit-identical to fault-free"
+                    }
+                    (Some(_), Ok(_)) => "OUTPUTS DIVERGED",
+                    _ => "no fault-free baseline",
+                };
+                let summary = session
+                    .recovery_report()
+                    .map(|r| r.summary())
+                    .unwrap_or_else(|| "no recovery report".to_string());
+                println!(
+                    "  {pname:<8} {:.2} ms ({:.2}x fault-free)  {bitwise}",
+                    wall * 1e3,
+                    wall / wall_base.max(1e-12)
+                );
+                println!("           {summary}");
+            }
+            Err(e) => println!("  {pname:<8} FAILED to recover: {e:#}"),
+        }
+    }
+
+    // --seeds N: sweep every fault class across N seeds under the respawn
+    // supervisor and report the per-class worst case
+    let seeds = args.usize("seeds", 1).max(1);
+    if seeds > 1 {
+        let class_spec = |class: &str, s: u64| -> FaultSpec {
+            match class {
+                "delay" => {
+                    FaultSpec { seed: s, delay_prob: 0.3, delay_sends: 3, ..FaultSpec::default() }
+                }
+                "drop" => FaultSpec {
+                    seed: s,
+                    drop_prob: 0.25,
+                    max_retransmits: 3,
+                    ..FaultSpec::default()
+                },
+                "chaos" => FaultSpec::chaos(s),
+                "stall" => {
+                    FaultSpec { seed: s, stalls: vec![(straggler, stall)], ..FaultSpec::default() }
+                }
+                _ => FaultSpec {
+                    seed: s,
+                    crash: Some(CrashSpec {
+                        rank: p / 2,
+                        step: 2.min(p - 1),
+                        pass: Pass::Forward,
+                    }),
+                    ..FaultSpec::default()
+                },
+            }
+        };
+        println!("seed sweep x{seeds} (supervised, respawn policy; worst case per class):");
+        println!(
+            "{:<7} {:>11} {:>14} {:>9}  {}",
+            "class", "worst (ms)", "detect (ms)", "overhead", "outcome"
+        );
+        for class in ["delay", "drop", "chaos", "stall", "crash"] {
+            let mut worst_wall = 0.0f64;
+            let mut worst_detect = 0.0f64;
+            let mut recovered_all = true;
+            let mut identical_all = true;
+            for i in 0..seeds {
+                let mut spec = make_spec(Some(class_spec(class, seed + i as u64)));
+                spec.recovery = RecoveryPolicy::respawn();
+                let mut session = Session::new(spec)?;
+                let t0 = std::time::Instant::now();
+                let run =
+                    session.execute_supervised_with(&q, &k, &v, Some(&do_)).map(|_| ());
+                worst_wall = worst_wall.max(t0.elapsed().as_secs_f64());
+                if let Some(r) = session.recovery_report() {
+                    worst_detect = worst_detect.max(r.detect_s);
+                }
+                match run {
+                    Ok(()) => {
+                        if let (Some(base), Ok(res)) = (&o_base, session.result()) {
+                            if res.o != *base {
+                                identical_all = false;
+                            }
+                        }
+                    }
+                    Err(_) => recovered_all = false,
+                }
+            }
+            println!(
+                "{:<7} {:>11.2} {:>14.2} {:>8.2}x  {}",
+                class,
+                worst_wall * 1e3,
+                worst_detect * 1e3,
+                worst_wall / wall_base.max(1e-12),
+                match (recovered_all, identical_all) {
+                    (true, true) => "all recovered, outputs bit-identical",
+                    (true, false) => "all recovered, OUTPUTS DIVERGED",
+                    _ => "RECOVERY FAILED for at least one seed",
+                }
+            );
+        }
+    }
+
     // degradation-aware planning: the optimizer queried for the best plan
     // under the pinned straggler
     let mut ospec = RunSpec::plans_only(kind, p);
@@ -941,6 +1072,45 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 .collect();
             write_bench_json(&args.get("faults-out", "BENCH_faults.json"), "faults", &jrows)?;
             println!("{}", paper::fault_bench_table(&frows));
+
+            // crash-recovery gate -> BENCH_recovery.json
+            let rrows = paper::recovery_bench_rows();
+            let jrows: Vec<String> = rrows
+                .iter()
+                .map(|r| {
+                    format!(
+                        "{{\"preset\": \"{}\", \"p\": {}, \"heads\": {}, \"kv_heads\": {}, \
+                         \"chunk\": {}, \"head_dim\": {}, \"layers\": {}, \"policy\": \"{}\", \
+                         \"fault_free_s\": {:.9}, \"recovered_total_s\": {:.9}, \
+                         \"time_to_recover_s\": {:.9}, \"detect_s\": {:.9}, \
+                         \"replayed_ops\": {}, \"skipped_ops\": {}, \"resume_layer\": {}, \
+                         \"overhead\": {:.4}, \"bit_identical\": {}}}",
+                        json_escape(r.preset),
+                        r.p,
+                        r.heads,
+                        r.kv_heads,
+                        r.chunk,
+                        r.head_dim,
+                        r.layers,
+                        json_escape(r.policy),
+                        r.fault_free_s,
+                        r.recovered_total_s,
+                        r.time_to_recover_s,
+                        r.detect_s,
+                        r.replayed_ops,
+                        r.skipped_ops,
+                        r.resume_layer,
+                        r.overhead(),
+                        r.bit_identical,
+                    )
+                })
+                .collect();
+            write_bench_json(
+                &args.get("recovery-out", "BENCH_recovery.json"),
+                "recovery",
+                &jrows,
+            )?;
+            println!("{}", paper::recovery_bench_table(&rrows));
         }
 
         // checkpoint strategy micro-bench -> BENCH_ckpt.json
@@ -995,6 +1165,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         if args.get("skip-exec", "false") != "true" {
             println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
             println!("{}", paper::fault_bench_table(&paper::fault_bench_rows()));
+            println!("{}", paper::recovery_bench_table(&paper::recovery_bench_rows()));
         }
         println!("{}", paper::ckpt_tradeoff());
         println!("{}", paper::kernel_bench_table(&paper::kernel_bench_rows()));
@@ -1038,8 +1209,10 @@ fn help() {
          (`run`/`trace`/`chaos` and the executor micro-bench use the pure-host kernel backends);\n\
          `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate.\n\
          `run --spec FILE.json` drives the whole Session pipeline from a serialized RunSpec.\n\
-         `chaos` injects seeded faults (delay/drop/stall/crash) into the real executor and\n\
-         compares executed vs event-engine-predicted makespan degradation per fault class."
+         `chaos` injects seeded faults (delay/drop/stall/crash) into the real executor,\n\
+         compares executed vs event-engine-predicted makespan degradation per fault class,\n\
+         and drives the crash to bit-identical completion via the recovery supervisor\n\
+         (`--seeds N` sweeps worst-case detection latency and recovery overhead)."
     );
 }
 

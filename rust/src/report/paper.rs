@@ -16,8 +16,8 @@ use crate::baselines::{attn_cost_bwd, attn_cost_fwd, fsdp_param_bytes, SystemMod
 use crate::config::{ClusterSpec, PaperModel, ELEM_BYTES};
 use crate::coordinator::optimize::{autotune_depth, optimize_ckpt, OptimizeOpts};
 use crate::coordinator::{
-    BackendSpec, CkptStrategy, FaultSpec, OptimizePolicy, Pass, Plan, RunSpec, Schedule,
-    ScheduleKind, Session, VarlenSpec, Workload,
+    BackendSpec, CkptStrategy, CrashSpec, FaultSpec, OptimizePolicy, Pass, Plan, RecoveryPolicy,
+    RunSpec, Schedule, ScheduleKind, Session, VarlenSpec, Workload,
 };
 use crate::memory::{fmt_bytes, fmt_seq, max_total_seq_pow2};
 use crate::report::Table;
@@ -1072,6 +1072,161 @@ pub fn fault_bench_table(rows: &[FaultBenchRow]) -> String {
             format!("{:.2}", r.baseline_s * 1e3),
             format!("{:.2}", r.instrumented_s * 1e3),
             format!("{:.3}x", r.overhead()),
+        ]);
+    }
+    t.render()
+}
+
+/// One row of the crash-recovery bench — shared by the `recovery` table
+/// and `repro bench --json` (`BENCH_recovery.json`). A mid-run rank crash
+/// is injected on the 2x8 dev HostRef preset and driven to completion by
+/// the supervised recovery loop under each policy; CI gates
+/// `recovered_total_s / fault_free_s <= 2.5` and `bit_identical` on the
+/// respawn row.
+#[derive(Clone, Debug)]
+pub struct RecoveryBenchRow {
+    pub preset: &'static str,
+    pub p: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    /// Tokens per chunk (per worker).
+    pub chunk: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    /// `"respawn"` or `"elastic"`.
+    pub policy: &'static str,
+    /// Median fault-free wall-clock (the gate's denominator).
+    pub fault_free_s: f64,
+    /// Total wall-clock of the crashed run: detection, restart planning,
+    /// and checkpoint-replay included.
+    pub recovered_total_s: f64,
+    /// First (failed) attempt start -> recovered attempt success.
+    pub time_to_recover_s: f64,
+    /// Injection -> structured failure surfaced by the watchdog.
+    pub detect_s: f64,
+    pub replayed_ops: usize,
+    pub skipped_ops: usize,
+    /// Layer boundary the replay resumed from.
+    pub resume_layer: usize,
+    /// Recovered output bit-identical to the fault-free run.
+    pub bit_identical: bool,
+}
+
+impl RecoveryBenchRow {
+    /// Recovered-run slowdown vs fault-free (1.0 = the crash was free).
+    pub fn overhead(&self) -> f64 {
+        if self.fault_free_s > 0.0 {
+            self.recovered_total_s / self.fault_free_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Run the crash-recovery bench on the 2x8 dev HostRef preset: a seeded
+/// mid-run crash under `Respawn` and `Elastic`, each compared against the
+/// fault-free run for wall-clock and bit-identity. Geometry stays small —
+/// the measured quantity is the *relative* recovery overhead, which
+/// survives any geometry.
+pub fn recovery_bench_rows() -> Vec<RecoveryBenchRow> {
+    let (preset, p, h, kvh, chunk, d, layers) = ("2x8-dev", 16usize, 4usize, 2usize, 32usize, 16usize, 2usize);
+    let n = p * chunk;
+    let mut rng = crate::util::Rng::new(11);
+    let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let kt = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let vt = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+    let do_ = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+    let make_spec = |faults: Option<FaultSpec>, recovery: RecoveryPolicy| {
+        let mut spec = RunSpec::host(ScheduleKind::Balanced, p, Workload::new(h, kvh, d, chunk));
+        spec.layers = layers;
+        spec.faults = faults;
+        spec.recovery = recovery;
+        spec
+    };
+
+    // fault-free baseline: one run for the reference output (after a warm
+    // run so thread-spawn costs are not charged), then the median wall
+    let mut base = Session::new(make_spec(None, RecoveryPolicy::FailFast)).expect("spec");
+    base.execute_with(&q, &kt, &vt, Some(&do_)).expect("fault-free run");
+    let o_base = base.result().expect("fault-free result").o.clone();
+    let s = crate::util::bench::bench("recovery-baseline", 1, 3, || {
+        Session::new(make_spec(None, RecoveryPolicy::FailFast))
+            .and_then(|mut s| {
+                s.execute_with(&q, &kt, &vt, Some(&do_))?;
+                Ok(())
+            })
+            .expect("fault-free run");
+    });
+    let fault_free_s = s.p50_ns / 1e9;
+
+    let crash = FaultSpec {
+        seed: 11,
+        crash: Some(CrashSpec { rank: p / 2, step: 2, pass: Pass::Forward }),
+        ..FaultSpec::default()
+    };
+    let mut out = Vec::new();
+    for (policy_name, policy) in [
+        ("respawn", RecoveryPolicy::respawn()),
+        ("elastic", RecoveryPolicy::Elastic { min_workers: 2 }),
+    ] {
+        let mut session =
+            Session::new(make_spec(Some(crash.clone()), policy)).expect("spec");
+        let t0 = std::time::Instant::now();
+        session
+            .execute_supervised_with(&q, &kt, &vt, Some(&do_))
+            .expect("supervised run recovered");
+        let recovered_total_s = t0.elapsed().as_secs_f64();
+        let report = session.recovery_report().cloned().unwrap_or_default();
+        let bit_identical = session.result().map(|r| r.o == o_base).unwrap_or(false);
+        out.push(RecoveryBenchRow {
+            preset,
+            p,
+            heads: h,
+            kv_heads: kvh,
+            chunk,
+            head_dim: d,
+            layers,
+            policy: policy_name,
+            fault_free_s,
+            recovered_total_s,
+            time_to_recover_s: report.time_to_recover_s,
+            detect_s: report.detect_s,
+            replayed_ops: report.replayed_ops,
+            skipped_ops: report.skipped_ops,
+            resume_layer: report.resume_layer,
+            bit_identical,
+        });
+    }
+    out
+}
+
+/// Crash-recovery bench as a table (the human-readable side of
+/// `BENCH_recovery.json`).
+pub fn recovery_bench_table(rows: &[RecoveryBenchRow]) -> String {
+    let mut t = Table::new(
+        "Crash recovery — mid-run rank crash driven to bit-identical completion (HostRef, fwd+bwd)",
+    );
+    t.header(
+        [
+            "preset", "P", "policy", "fault-free (ms)", "recovered (ms)", "overhead",
+            "detect (ms)", "resume", "replayed", "skipped", "bit-identical",
+        ]
+        .map(String::from)
+        .to_vec(),
+    );
+    for r in rows {
+        t.row(vec![
+            r.preset.into(),
+            format!("{}", r.p),
+            r.policy.into(),
+            format!("{:.2}", r.fault_free_s * 1e3),
+            format!("{:.2}", r.recovered_total_s * 1e3),
+            format!("{:.2}x", r.overhead()),
+            format!("{:.2}", r.detect_s * 1e3),
+            format!("L{}", r.resume_layer),
+            format!("{}", r.replayed_ops),
+            format!("{}", r.skipped_ops),
+            format!("{}", r.bit_identical),
         ]);
     }
     t.render()

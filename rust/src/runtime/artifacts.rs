@@ -206,6 +206,135 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Step-state persistence (the trainer's survivable checkpoint)
+// ---------------------------------------------------------------------------
+
+use crate::runtime::Tensor;
+
+/// Magic header of the little-endian f32 tensor container written by
+/// [`save_tensor_bin`].
+const TENSOR_MAGIC: &[u8; 4] = b"DFT0";
+
+/// Write one tensor: `"DFT0"`, u32 rank, u64 dims, then the f32 payload,
+/// all little-endian. The format is deliberately dumb — a crashed run's
+/// state must be readable by a fresh process with no context.
+pub fn save_tensor_bin(path: &Path, t: &Tensor) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + 4 + 8 * t.shape.len() + 4 * t.numel());
+    buf.extend_from_slice(TENSOR_MAGIC);
+    buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+    for &d in &t.shape {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for &x in t.data() {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, buf).with_context(|| format!("writing tensor to {path:?}"))
+}
+
+/// Read a [`save_tensor_bin`] container back, bit-exact.
+pub fn load_tensor_bin(path: &Path) -> Result<Tensor> {
+    let buf = std::fs::read(path).with_context(|| format!("reading tensor from {path:?}"))?;
+    let fail = |what: &str| anyhow!("{path:?}: {what}");
+    if buf.len() < 8 || &buf[..4] != TENSOR_MAGIC {
+        bail!(fail("not a DFT0 tensor file"));
+    }
+    let rank = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let mut off = 8;
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let end = off + 8;
+        if buf.len() < end {
+            bail!(fail("truncated shape header"));
+        }
+        shape.push(u64::from_le_bytes(buf[off..end].try_into().unwrap()) as usize);
+        off = end;
+    }
+    let numel: usize = shape.iter().product();
+    if buf.len() != off + 4 * numel {
+        bail!(fail("payload length does not match the declared shape"));
+    }
+    let mut data = Vec::with_capacity(numel);
+    for i in 0..numel {
+        let b = off + 4 * i;
+        data.push(f32::from_le_bytes(buf[b..b + 4].try_into().unwrap()));
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+/// One training step's survivable state: the step index plus named
+/// tensors — parameters, optimizer moments, and the `RematAware`
+/// `(o, lse)` attention artifacts the ckpt IR marks as what a restarted
+/// rank needs. Written as a `state.json` index plus one `.bin` container
+/// per tensor, so a respawned process resumes from `step + 1` with
+/// bit-identical state.
+#[derive(Debug, Clone, Default)]
+pub struct StepState {
+    /// Last fully completed optimizer step.
+    pub step: usize,
+    /// `(name, tensor)` in save order; names follow the ckpt IR
+    /// (`param.{i}`, `adam.m.{i}`, `adam.v.{i}`, `adam.t`,
+    /// `ckpt.L{layer}.o`, `ckpt.L{layer}.lse`).
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl StepState {
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Persist into `dir` (created if missing). The JSON index is written
+    /// last, to a temp file renamed into place, so a crash mid-save never
+    /// leaves a loadable-but-torn state behind.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating state dir {dir:?}"))?;
+        let mut entries = Vec::with_capacity(self.tensors.len());
+        for (i, (name, t)) in self.tensors.iter().enumerate() {
+            let file = format!("t{i}.bin");
+            save_tensor_bin(&dir.join(&file), t)?;
+            entries.push(format!(
+                "{{\"name\": \"{}\", \"file\": \"{file}\"}}",
+                crate::util::json::escape(name)
+            ));
+        }
+        let index = format!(
+            "{{\n  \"step\": {},\n  \"tensors\": [{}]\n}}\n",
+            self.step,
+            entries.join(", ")
+        );
+        let tmp = dir.join("state.json.tmp");
+        std::fs::write(&tmp, index).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, dir.join("state.json"))
+            .with_context(|| format!("publishing {:?}", dir.join("state.json")))
+    }
+
+    /// Load the state saved in `dir`; `Ok(None)` when no state was ever
+    /// published there (a fresh run, not an error).
+    pub fn load(dir: &Path) -> Result<Option<StepState>> {
+        let index = dir.join("state.json");
+        if !index.exists() {
+            return Ok(None);
+        }
+        let text =
+            std::fs::read_to_string(&index).with_context(|| format!("reading {index:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {index:?}"))?;
+        let step = req_usize(&j, "step").context("state.json")?;
+        let mut tensors = Vec::new();
+        for (i, e) in j
+            .at("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow!("state.json: tensors not an array"))?
+            .iter()
+            .enumerate()
+        {
+            let name = req_str(e, "name").with_context(|| format!("state.json tensors[{i}]"))?;
+            let file = req_str(e, "file").with_context(|| format!("state.json tensors[{i}]"))?;
+            tensors.push((name, load_tensor_bin(&dir.join(&file))?));
+        }
+        Ok(Some(StepState { step, tensors }))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,5 +376,49 @@ mod tests {
         assert_eq!(table[0].name, "L0.ln1_g");
         assert_eq!(table[1].name, "L1.ln1_g");
         assert_eq!(table[2].name, "w_emb");
+    }
+
+    #[test]
+    fn step_state_roundtrips_bit_exact() {
+        let dir = std::env::temp_dir().join("distflash-step-state-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(StepState::load(&dir).unwrap().is_none(), "no state yet");
+        let state = StepState {
+            step: 7,
+            tensors: vec![
+                ("param.0".to_string(), Tensor::new(vec![2, 3], vec![0.5, -1.25, 3.0, 0.0, 1e-8, -7.5])),
+                ("adam.t".to_string(), Tensor::new(vec![1], vec![7.0])),
+                ("ckpt.L0.o".to_string(), Tensor::new(vec![1, 2, 2], vec![1.0, 2.0, 3.0, 4.0])),
+            ],
+        };
+        state.save(&dir).unwrap();
+        let back = StepState::load(&dir).unwrap().expect("published state loads");
+        assert_eq!(back.step, 7);
+        assert_eq!(back.tensors.len(), 3);
+        for (name, t) in &state.tensors {
+            let b = back.tensor(name).expect("name survives");
+            assert_eq!(b.shape, t.shape);
+            // bit-exact, not approximately equal: resume must replay the
+            // run the crashed process was on
+            let eq = b.data().iter().zip(t.data()).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(eq, "{name} payload must round trip bit-exact");
+        }
+        assert!(back.tensor("missing").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_tensor_bin_rejects_torn_files() {
+        let dir = std::env::temp_dir().join("distflash-torn-tensor-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load_tensor_bin(&p).is_err());
+        // right magic, truncated payload
+        save_tensor_bin(&p, &Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0])).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 2]).unwrap();
+        assert!(load_tensor_bin(&p).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -11,7 +11,7 @@ pub mod hostref;
 pub mod kernel;
 pub mod tensor;
 
-pub use artifacts::{Manifest, ModelConfigJson};
+pub use artifacts::{load_tensor_bin, save_tensor_bin, Manifest, ModelConfigJson, StepState};
 pub use client::{Runtime, RuntimeStats};
 pub use hostref::{HostKernels, KernelMode, Kernels, NullKernels};
 pub use tensor::{ITensor, Tensor, Value};

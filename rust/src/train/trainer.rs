@@ -30,7 +30,7 @@
 //!   attention forward, no forward communication. Numerically identical
 //!   (asserted in tests).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
@@ -42,7 +42,7 @@ use crate::coordinator::executor::{AttnCtx, MergedTrace, PlanIndex, RunTrace, AT
 use crate::coordinator::plan::Plan;
 use crate::coordinator::session::{BackendSpec, RunSpec, Session, Workload};
 use crate::coordinator::CkptStrategy;
-use crate::runtime::{ITensor, Runtime, Tensor, Value};
+use crate::runtime::{ITensor, Runtime, StepState, Tensor, Value};
 use crate::train::data::MarkovCorpus;
 use crate::train::optimizer::{Adam, AdamConfig};
 use crate::util::Rng;
@@ -58,6 +58,14 @@ pub struct TrainConfig {
     pub adam: AdamConfig,
     pub seed: u64,
     pub log_every: usize,
+    /// When set, rank 0 persists survivable per-step state into this
+    /// directory after every optimizer step — parameters, Adam moments,
+    /// and the RematAware `(o, lse)` attention artifacts, named by the
+    /// ckpt IR (`param.{i}`, `adam.m.{i}`, `adam.v.{i}`, `adam.t`,
+    /// `ckpt.L{layer}.o`, `ckpt.L{layer}.lse`) — and [`train`] resumes
+    /// from the last completed step found there. A resumed trajectory is
+    /// bit-identical to an uninterrupted run.
+    pub state_dir: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -69,6 +77,7 @@ impl TrainConfig {
             adam: AdamConfig::default(),
             seed: 0,
             log_every: 1,
+            state_dir: None,
         }
     }
 
@@ -565,6 +574,19 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let sink: TraceSink = Arc::new(Mutex::new(Vec::new()));
     let record_step = cfg.steps.saturating_sub(1);
 
+    // survivable-state resume: if a previous (crashed) run persisted a
+    // completed step, every rank restores the same replicated state, so
+    // the resumed trajectory is bit-identical to an uninterrupted run
+    let resume: Arc<Option<StepState>> = Arc::new(match &cfg.state_dir {
+        Some(d) => StepState::load(d)
+            .with_context(|| format!("loading persisted trainer state from {d:?}"))?,
+        None => None,
+    });
+    let start_step = match resume.as_ref() {
+        Some(st) => st.step + 1,
+        None => 0,
+    };
+
     let mut handles = Vec::new();
     for (rank, comm) in comms.into_iter().enumerate() {
         let cfg = cfg.clone();
@@ -572,6 +594,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         let bwd_plan = bwd_plan.clone();
         let boundaries = boundaries.clone();
         let trace_sink = cfg.run.trace.then(|| sink.clone());
+        let resume = resume.clone();
         handles.push(thread::spawn(move || -> Result<Option<TrainReport>> {
             let runtime = Runtime::load(cfg.artifact_dir()?)?;
             runtime.precompile(ATTN_ARTIFACTS)?;
@@ -611,16 +634,25 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 trace_sink,
                 record_step,
             };
-            let mut adam = Adam::new(cfg.adam, &w.params);
+            let mut adam = match resume.as_ref() {
+                Some(st) => restore_worker_state(st, &mut w.params, cfg.adam)?,
+                None => Adam::new(cfg.adam, &w.params),
+            };
             let mut corpus = MarkovCorpus::new(
                 w.runtime.manifest().config.vocab,
                 cfg.seed,
             );
+            // a resumed run must see the batch sequence an uninterrupted
+            // run would: fast-forward past the consumed samples
+            for _ in 0..start_step {
+                corpus.sample(n);
+            }
             let inv_total = 1.0 / n as f32;
             let mut logs = Vec::new();
             let t_start = std::time::Instant::now();
+            let persist = rank == 0 && cfg.state_dir.is_some();
 
-            for step in 0..cfg.steps {
+            for step in start_step..cfg.steps {
                 let t0 = std::time::Instant::now();
                 // every worker generates the identical sequence, takes its
                 // token slice (equal chunks, or the varlen boundaries)
@@ -631,6 +663,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
                 let (loss_local, ckpts, x_final) =
                     w.forward(step, &ids, &tgts, inv_total)?;
+                // harvest the RematAware (o, lse) artifacts before
+                // backward consumes the checkpoint table (clones are
+                // Arc-backed, not copies)
+                let saved_attn: Vec<(usize, (Tensor, Tensor))> = if persist {
+                    ckpts
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(l, c)| c.attn.clone().map(|a| (l, a)))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
                 let mut grads =
                     w.backward(step, &ids, &tgts, inv_total, ckpts, x_final)?;
 
@@ -647,6 +691,29 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 }
                 let gnorm = Adam::grad_norm(&grads);
                 adam.step(&mut w.params, &grads);
+
+                if persist {
+                    let dir = cfg.state_dir.as_ref().expect("persist implies state_dir");
+                    let mut tensors = Vec::new();
+                    for (i, p) in w.params.iter().enumerate() {
+                        tensors.push((format!("param.{i}"), p.clone()));
+                    }
+                    let (t_adam, ms, vs) = adam.state();
+                    for (i, mt) in ms.iter().enumerate() {
+                        tensors.push((format!("adam.m.{i}"), mt.clone()));
+                    }
+                    for (i, vt) in vs.iter().enumerate() {
+                        tensors.push((format!("adam.v.{i}"), vt.clone()));
+                    }
+                    tensors.push(("adam.t".to_string(), Tensor::scalar(t_adam as f32)));
+                    for (l, (o, lse)) in &saved_attn {
+                        tensors.push((format!("ckpt.L{l}.o"), o.clone()));
+                        tensors.push((format!("ckpt.L{l}.lse"), lse.clone()));
+                    }
+                    StepState { step, tensors }
+                        .save(dir)
+                        .with_context(|| format!("persisting step {step} state to {dir:?}"))?;
+                }
 
                 if rank == 0 {
                     logs.push(StepLog {
@@ -676,10 +743,29 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     let mut report = None;
     for h in handles {
-        let r = h
+        let joined = h
             .join()
-            .map_err(|_| anyhow!("trainer worker panicked"))?
-            .context("trainer worker failed")?;
+            .map_err(|_| anyhow!("trainer worker panicked"))
+            .and_then(|r| r.context("trainer worker failed"));
+        let r = match joined {
+            Ok(r) => r,
+            Err(e) => {
+                // a failed run is restartable when survivable state
+                // exists: name the resume step so the operator (or the
+                // recovery supervisor) can rerun with the same state dir
+                if let Some(dir) = &cfg.state_dir {
+                    if let Ok(Some(st)) = StepState::load(dir) {
+                        return Err(e.context(format!(
+                            "restartable: step {} state is persisted at {dir:?} — rerun \
+                             with the same state_dir to resume from step {}",
+                            st.step,
+                            st.step + 1
+                        )));
+                    }
+                }
+                return Err(e);
+            }
+        };
         if let Some(r) = r {
             report = Some(r);
         }
@@ -718,6 +804,41 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     Ok(report)
 }
 
+/// Restore replicated worker state — parameters plus Adam moments — from
+/// a persisted [`StepState`]; every tensor must exist under its ckpt-IR
+/// name and match the live parameter table's shape.
+fn restore_worker_state(
+    st: &StepState,
+    params: &mut [Tensor],
+    acfg: AdamConfig,
+) -> Result<Adam> {
+    let fetch = |name: String, shape: &[usize]| -> Result<Tensor> {
+        let t = st
+            .tensor(&name)
+            .ok_or_else(|| anyhow!("persisted state lacks tensor {name:?}"))?;
+        if t.shape != shape {
+            bail!(
+                "persisted {name:?} has shape {:?} but the live model expects {shape:?}",
+                t.shape
+            );
+        }
+        Ok(t.clone())
+    };
+    let mut m = Vec::with_capacity(params.len());
+    let mut v = Vec::with_capacity(params.len());
+    for (i, p) in params.iter_mut().enumerate() {
+        let shape = p.shape.clone();
+        *p = fetch(format!("param.{i}"), &shape)?;
+        m.push(fetch(format!("adam.m.{i}"), &shape)?);
+        v.push(fetch(format!("adam.v.{i}"), &shape)?);
+    }
+    let t = st
+        .tensor("adam.t")
+        .ok_or_else(|| anyhow!("persisted state lacks tensor \"adam.t\""))?
+        .as_scalar() as i32;
+    Ok(Adam::restore(acfg, t, m, v))
+}
+
 /// Evaluate the monolithic `full_model_grads` oracle with the same
 /// deterministic init + first corpus sample; returns (loss, grads).
 /// Only available for configs exported with `export_ref_grads`.
@@ -745,6 +866,49 @@ pub fn oracle_first_step(cfg: &TrainConfig) -> Result<(f32, Vec<Tensor>)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn restore_round_trips_params_and_adam() {
+        // snapshot exactly the way the trainer persists it, restore into
+        // a fresh table, and the two trajectories must stay in lockstep
+        let p0 = vec![
+            Tensor::new(vec![2], vec![1.0, 2.0]),
+            Tensor::new(vec![3], vec![3.0, 4.0, 5.0]),
+        ];
+        let g: Vec<Tensor> = p0.iter().map(|p| Tensor::full(&p.shape, 0.1)).collect();
+        let mut params = p0.clone();
+        let mut adam = Adam::new(AdamConfig::default(), &params);
+        adam.step(&mut params, &g);
+        let mut tensors = Vec::new();
+        for (i, p) in params.iter().enumerate() {
+            tensors.push((format!("param.{i}"), p.clone()));
+        }
+        let (t, m, v) = adam.state();
+        for (i, mt) in m.iter().enumerate() {
+            tensors.push((format!("adam.m.{i}"), mt.clone()));
+        }
+        for (i, vt) in v.iter().enumerate() {
+            tensors.push((format!("adam.v.{i}"), vt.clone()));
+        }
+        tensors.push(("adam.t".to_string(), Tensor::scalar(t as f32)));
+        let st = StepState { step: 0, tensors };
+
+        let mut fresh = p0.clone();
+        let mut restored =
+            restore_worker_state(&st, &mut fresh, AdamConfig::default()).unwrap();
+        assert_eq!(fresh[0], params[0]);
+        assert_eq!(fresh[1], params[1]);
+        adam.step(&mut params, &g);
+        restored.step(&mut fresh, &g);
+        assert_eq!(fresh[0], params[0]);
+        assert_eq!(fresh[1], params[1]);
+
+        // shape drift is rejected, missing tensors are rejected
+        let mut wrong = vec![Tensor::zeros(&[5]), Tensor::zeros(&[3])];
+        assert!(restore_worker_state(&st, &mut wrong, AdamConfig::default()).is_err());
+        let mut extra = vec![Tensor::zeros(&[2]); 3];
+        assert!(restore_worker_state(&st, &mut extra, AdamConfig::default()).is_err());
+    }
 
     #[test]
     fn call_ids_unique() {

@@ -17,8 +17,8 @@ use std::time::{Duration, Instant};
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::{
-    CrashSpec, DistAttnResult, ExecError, FaultEvent, FaultSpec, OptimizeOpts, OptimizePolicy,
-    Pass, Plan, RunSpec, Schedule, ScheduleKind, Session, Workload,
+    CrashSpec, DistAttnResult, ExecError, FailureReport, FaultEvent, FaultSpec, OptimizeOpts,
+    OptimizePolicy, Pass, Plan, RunSpec, Schedule, ScheduleKind, Session, Workload,
 };
 use distflash::simulator::{AttnCost, PlanSim};
 
@@ -197,6 +197,78 @@ fn optimizer_honors_pinned_straggler_slowdowns() {
         ..OptimizeOpts::default()
     });
     assert!(Session::new(bad).is_err(), "slowdown rank 4 of 4 workers must be rejected");
+}
+
+/// Watchdog boundary, pinned from both sides: a straggler whose per-recv
+/// waits stay under the deadline (derived stall-scaled budget, then an
+/// explicit budget comfortably above the measured stalled wall) completes
+/// with bit-identical outputs; the same straggler pushed far past a tight
+/// explicit deadline trips [`ExecError::Timeout`] attributed to the
+/// stalled rank. Every arm runs on a helper thread under a hard timeout,
+/// so a watchdog regression is a named failure, never a hung suite.
+#[test]
+fn watchdog_boundary_straggler_under_and_over() {
+    const P: usize = 4;
+    const STRAGGLER: usize = 1;
+
+    type RunOut = (Result<DistAttnResult, String>, f64, Option<FailureReport>);
+    let run = |faults: Option<FaultSpec>| -> RunOut {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let mut spec = RunSpec::host(ScheduleKind::Balanced, P, Workload::new(4, 2, 32, 192));
+            spec.faults = faults;
+            let mut session = Session::new(spec).unwrap();
+            let t0 = Instant::now();
+            let res = session.execute().map(|_| ());
+            let wall = t0.elapsed().as_secs_f64();
+            let report = session.failure_report().cloned();
+            let out = match res {
+                Ok(()) => Ok(session.take_run().unwrap().result),
+                Err(e) => Err(format!("{e:#}")),
+            };
+            tx.send((out, wall, report)).unwrap();
+        });
+        rx.recv_timeout(Duration::from_secs(120)).expect("watchdog run hung past the hard timeout")
+    };
+
+    let (base, _, _) = run(None);
+    let base = base.expect("fault-free run succeeds");
+
+    // derived budget: the watchdog scales with the pinned stall factor, so
+    // a deliberate 3x straggler is not misread as a hang
+    let stalled = FaultSpec { stalls: vec![(STRAGGLER, 3.0)], ..FaultSpec::default() };
+    let (got, stalled_wall, _) = run(Some(stalled.clone()));
+    let got = got.expect("straggler under the derived stall-scaled deadline must complete");
+    assert_results_identical(&got, &base, "3x straggler, derived watchdog");
+
+    // under side: explicit budget comfortably above the measured stalled
+    // wall — every per-recv wait sits inside the deadline
+    let under =
+        FaultSpec { watchdog_s: Some((3.0 * stalled_wall).max(2.0)), ..stalled.clone() };
+    let (got, _, report) = run(Some(under));
+    let got = got.expect("straggler just under the recv deadline must complete");
+    assert_results_identical(&got, &base, "straggler under explicit watchdog");
+    assert!(report.is_none(), "a completed run must not leave a failure report");
+
+    // over side: the straggler's per-op delay dwarfs a tight explicit
+    // deadline — the peers' recv watchdog must trip, attributed to the
+    // stalled rank, never a hang
+    let over = FaultSpec {
+        stalls: vec![(STRAGGLER, 500.0)],
+        watchdog_s: Some(0.02),
+        ..FaultSpec::default()
+    };
+    let (res, _, report) = run(Some(over));
+    assert!(res.is_err(), "a straggler past the recv deadline must fail the run");
+    let report = report.expect("failed run leaves a failure report");
+    assert!(
+        report
+            .failures
+            .iter()
+            .any(|e| matches!(e, ExecError::Timeout { from: STRAGGLER, .. })),
+        "no watchdog timeout attributed to the stalled rank: {:?}",
+        report.failures
+    );
 }
 
 #[test]

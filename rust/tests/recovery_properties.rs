@@ -1,0 +1,220 @@
+//! Supervised recovery acceptance suite (recovery-beyond-fail-fast PR).
+//!
+//! * a seeded [`CrashSpec`] at any `(rank, step, pass)` on the 2x8
+//!   (16-worker) HostRef layout recovers under both
+//!   [`RecoveryPolicy::Respawn`] and [`RecoveryPolicy::Elastic`], and the
+//!   recovered outputs are **bit-identical** to the fault-free run —
+//!   replay re-executes the original P-chunk plans, so the online-softmax
+//!   merge order never changes;
+//! * `FailFast` preserves the PR 8 contract exactly: the run fails with a
+//!   structured report and leaves no recovery report;
+//! * `RunSpec::recovery` round-trips through JSON, and out-of-bounds
+//!   crash steps are rejected at validation time with a pinned message.
+//!
+//! Every executing arm runs on a helper thread under a hard timeout, so a
+//! recovery regression surfaces as a named failure, never a hung suite.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use distflash::coordinator::{
+    CrashSpec, DistAttnResult, FaultSpec, Pass, RecoveryPolicy, RecoveryReport, RunSpec, Schedule,
+    ScheduleKind, Session, Workload,
+};
+
+const P: usize = 16;
+const LAYERS: usize = 2;
+const HARD_TIMEOUT: Duration = Duration::from_secs(240);
+
+fn host_spec() -> RunSpec {
+    let mut spec = RunSpec::host(ScheduleKind::Balanced, P, Workload::new(2, 1, 8, 16));
+    spec.layers = LAYERS;
+    spec
+}
+
+/// One supervised run on a helper thread under the hard no-hang timeout;
+/// returns the result tensors (or the rendered error) and the recovery
+/// audit.
+fn run_supervised(
+    faults: Option<FaultSpec>,
+    recovery: RecoveryPolicy,
+) -> (Result<DistAttnResult, String>, Option<RecoveryReport>) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let mut spec = host_spec();
+        spec.faults = faults;
+        spec.recovery = recovery;
+        let mut session = Session::new(spec).unwrap();
+        // map(|_| ()) drops the &mut borrow the supervisor hands back
+        let run = session.execute_supervised().map(|_| ());
+        let res = match run {
+            Ok(()) => Ok(session.take_run().unwrap().result),
+            Err(e) => Err(format!("{e:#}")),
+        };
+        let report = session.recovery_report().cloned();
+        tx.send((res, report)).unwrap();
+    });
+    rx.recv_timeout(HARD_TIMEOUT).expect("supervised run hung past the hard timeout")
+}
+
+fn assert_identical(got: &DistAttnResult, base: &DistAttnResult, what: &str) {
+    assert!(got.o == base.o, "{what}: output o diverged from the fault-free run");
+    assert!(got.lse == base.lse, "{what}: lse diverged from the fault-free run");
+    let (dq, dk, dv) = got.grads.as_ref().expect("backward ran");
+    let (bq, bk, bv) = base.grads.as_ref().expect("backward ran");
+    assert!(dq == bq && dk == bk && dv == bv, "{what}: grads diverged from the fault-free run");
+}
+
+/// The acceptance property: crash anywhere, recover everywhere,
+/// bit-identical under both policies.
+#[test]
+fn crash_anywhere_recovers_bit_identical_under_both_policies() {
+    let (base, base_report) = run_supervised(None, RecoveryPolicy::FailFast);
+    let base = base.expect("fault-free run succeeds");
+    assert!(base_report.is_none(), "FailFast must not leave a recovery report");
+
+    let t = Schedule::build(ScheduleKind::Balanced, P).n_steps();
+    // RunSpec::host defaults to RematAware, whose backward plan carries no
+    // recompute prefix: last in-bounds step is T (trailing accumulate)
+    let last = |pass: Pass| match pass {
+        Pass::Forward => t - 1,
+        Pass::Backward => t,
+    };
+    let mut restarted = 0usize;
+    for pass in [Pass::Forward, Pass::Backward] {
+        for rank in [0, P / 2 - 1, P - 1] {
+            for step in [0, t / 2, last(pass)] {
+                for (pname, policy) in [
+                    ("respawn", RecoveryPolicy::respawn()),
+                    ("elastic", RecoveryPolicy::Elastic { min_workers: 2 }),
+                ] {
+                    let what = format!("{pname}: crash rank {rank} step {step} {pass:?}");
+                    let faults = FaultSpec {
+                        seed: 5,
+                        crash: Some(CrashSpec { rank, step, pass }),
+                        ..FaultSpec::default()
+                    };
+                    let (res, report) = run_supervised(Some(faults), policy);
+                    let got = match res {
+                        Ok(r) => r,
+                        Err(e) => panic!("{what}: did not recover: {e}"),
+                    };
+                    assert_identical(&got, &base, &what);
+                    let report =
+                        report.unwrap_or_else(|| panic!("{what}: no recovery report"));
+                    assert!(report.recovered, "{what}: report must say recovered");
+                    if !report.attempts.is_empty() {
+                        restarted += 1;
+                        assert!(
+                            report.attempts.iter().any(|a| a.succeeded),
+                            "{what}: a recovered run needs a succeeded attempt: {:?}",
+                            report.attempts
+                        );
+                        assert!(
+                            report.replayed_ops > 0,
+                            "{what}: a restart must replay ops"
+                        );
+                        assert!(
+                            report.verified,
+                            "{what}: replayed chunks must verify against the checkpointed \
+                             artifacts"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        restarted > 0,
+        "at least one (rank, step, pass) combo must exercise a real restart"
+    );
+}
+
+/// `FailFast` is byte-for-byte the PR 8 contract: the crash fails the
+/// run, the failure report names the injected crash, and no recovery
+/// report appears.
+#[test]
+fn fail_fast_preserves_the_fail_fast_contract() {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let mut spec = host_spec();
+        spec.faults = Some(FaultSpec {
+            seed: 5,
+            crash: Some(CrashSpec { rank: 3, step: 1, pass: Pass::Forward }),
+            ..FaultSpec::default()
+        });
+        // FailFast is the default policy — leave it untouched
+        let mut session = Session::new(spec).unwrap();
+        let run = session.execute_supervised().map(|_| ());
+        let err = match run {
+            Ok(()) => panic!("a crash under FailFast must fail the run"),
+            Err(e) => format!("{e:#}"),
+        };
+        let failure = session.failure_report().cloned();
+        let recovery = session.recovery_report().cloned();
+        tx.send((err, failure, recovery)).unwrap();
+    });
+    let (err, failure, recovery) = rx
+        .recv_timeout(HARD_TIMEOUT)
+        .expect("fail-fast run hung past the hard timeout");
+    assert!(err.contains("injected crash"), "error must name the crash: {err}");
+    let failure = failure.expect("failed run leaves a failure report");
+    assert_eq!(failure.failures.len(), P, "every rank must fail: {:?}", failure.failures);
+    assert!(recovery.is_none(), "FailFast must not produce a recovery report");
+}
+
+/// Respawn with the crash still armed on every retry can never succeed —
+/// the supervisor must exhaust its budget and say so, not loop forever.
+/// (The real loop clears one-shot crashes; this pins the exhaustion path
+/// via a crash that is *not* the recoverable kind: zero retries allowed.)
+#[test]
+fn recovery_policy_validation_rejects_degenerate_budgets() {
+    let mut spec = host_spec();
+    spec.recovery = RecoveryPolicy::Respawn { max_retries: 0, backoff_s: 0.0 };
+    let err = Session::new(spec).expect_err("zero retries must be rejected");
+    assert!(
+        format!("{err:#}").contains("max_retries must be >= 1"),
+        "unexpected message: {err:#}"
+    );
+
+    let mut spec = host_spec();
+    spec.recovery = RecoveryPolicy::Elastic { min_workers: P };
+    let err = Session::new(spec).expect_err("min_workers == P must be rejected");
+    assert!(
+        format!("{err:#}").contains("must be below the worker count"),
+        "unexpected message: {err:#}"
+    );
+}
+
+/// The spec round-trips: every policy survives `to_json` -> `from_json`,
+/// and an out-of-bounds crash step is rejected at validation time with
+/// the pinned message.
+#[test]
+fn recovery_spec_roundtrips_and_crash_steps_are_bounded() {
+    for policy in [
+        RecoveryPolicy::FailFast,
+        RecoveryPolicy::Respawn { max_retries: 4, backoff_s: 0.125 },
+        RecoveryPolicy::Elastic { min_workers: 3 },
+    ] {
+        let mut spec = host_spec();
+        spec.recovery = policy.clone();
+        let parsed = RunSpec::from_json(&spec.to_json()).expect("serialized spec parses");
+        assert_eq!(parsed.recovery, policy, "recovery policy must round-trip");
+        assert_eq!(parsed, spec, "the whole spec must round-trip");
+    }
+
+    // a crash step past the plan's last step would silently never fire:
+    // the spec is rejected up front, with the bound in the message
+    let t = Schedule::build(ScheduleKind::Balanced, P).n_steps();
+    let mut spec = host_spec();
+    spec.faults = Some(FaultSpec {
+        crash: Some(CrashSpec { rank: 0, step: t + 7, pass: Pass::Forward }),
+        ..FaultSpec::default()
+    });
+    let err = Session::new(spec).expect_err("out-of-bounds crash step must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains(&format!("crash step {} is past", t + 7)) && msg.contains("last step"),
+        "unexpected message: {msg}"
+    );
+}

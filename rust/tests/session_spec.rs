@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use distflash::config::ClusterSpec;
 use distflash::coordinator::{
-    BackendSpec, CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, RunSpec,
-    ScheduleKind, Session, VarlenSpec, Workload,
+    BackendSpec, CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass,
+    RecoveryPolicy, RunSpec, ScheduleKind, Session, VarlenSpec, Workload,
 };
 
 fn roundtrip(spec: &RunSpec) -> RunSpec {
@@ -71,6 +71,18 @@ fn every_field_shape_roundtrips_exactly() {
     });
     assert_eq!(roundtrip(&spec), spec, "null backend + schedule policy + hf ckpt + faults");
     spec.faults = None;
+
+    // every recovery policy survives the trip, including a fractional
+    // backoff that must serialize in shortest-round-trip float form
+    for recovery in [
+        RecoveryPolicy::FailFast,
+        RecoveryPolicy::Respawn { max_retries: 5, backoff_s: 0.125 },
+        RecoveryPolicy::Elastic { min_workers: 3 },
+    ] {
+        spec.recovery = recovery;
+        assert_eq!(roundtrip(&spec), spec, "recovery policy {:?}", spec.recovery);
+    }
+    spec.recovery = RecoveryPolicy::FailFast;
 
     // seeds above 2^53 cannot ride a JSON f64 — they serialize as decimal
     // strings and still round-trip exactly
@@ -176,6 +188,27 @@ fn malformed_specs_are_rejected_with_context() {
         .unwrap();
         assert_eq!(spec.ckpt, want, "{text}");
     }
+
+    // unknown recovery policy strings are rejected with the spellings
+    let err = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "recovery": "retry-forever"}"#,
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("fail_fast"), "must list spellings: {err}");
+    // recovery knobs are type-checked, never silently defaulted
+    assert!(RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4, "recovery": {"respawn": {"max_retries": "three"}}}"#,
+    )
+    .is_err());
+    // omission keeps the PR 8 default: fail fast
+    let spec = RunSpec::from_json(
+        r#"{"workload": {"n_heads": 2, "n_kv_heads": 1, "head_dim": 8, "chunk_tokens": 16},
+            "n_workers": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(spec.recovery, RecoveryPolicy::FailFast);
 
     // a parseable spec can still fail validation (varlen/worker mismatch)
     let spec = RunSpec::from_json(
