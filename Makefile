@@ -3,7 +3,7 @@
 # `make artifacts` has produced the AOT bundles (requires jax) and the
 # `xla` path dependency points at real PJRT bindings (see Cargo.toml).
 
-.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace run chaos
+.PHONY: artifacts test bench bench-json tables optimize optimize-varlen trace run chaos serve
 
 artifacts:
 	cd python && python -m compile.aot --all --out ../artifacts
@@ -15,23 +15,26 @@ bench:
 	cargo bench --bench hot_paths && cargo bench --bench paper_tables
 
 # machine-readable optimizer + varlen-rebalancer + executor-transport +
-# checkpoint-strategy + host-kernel + fault-overhead + recovery results ->
-# BENCH_optimizer.json + BENCH_varlen.json + BENCH_executor.json +
+# checkpoint-strategy + host-kernel + fault-overhead + recovery + serving
+# results -> BENCH_optimizer.json + BENCH_varlen.json + BENCH_executor.json +
 # BENCH_ckpt.json + BENCH_kernels.json + BENCH_faults.json +
-# BENCH_recovery.json, tracked across PRs (CI runs this and uploads all
-# seven as workflow artifacts). The executor rows run the real threaded
-# executor with null kernels (clone-vs-Arc send path A/B); pass
-# `--skip-exec` to repro bench to omit them. The ckpt rows run the joint
-# checkpoint x prefetch search at 64K tokens plus a HostRef-executed twin
-# per strategy. The kernel rows time scalar vs tiled vs multi-threaded
-# flash kernels; CI gates tiled >= 5x scalar at one thread. The fault
-# rows A/B the zero-fault instrumented comm path (armed all-zero
-# FaultSpec) against the uninstrumented baseline; CI gates the overhead
-# at <= 5%. The recovery rows crash one rank mid-run under each policy
-# and time the supervised restart against the fault-free baseline; CI
-# gates recovered <= 2.5x fault-free and bit-identical outputs.
+# BENCH_recovery.json + BENCH_serve.json, tracked across PRs (CI runs
+# this and uploads all eight as workflow artifacts). The executor rows
+# run the real threaded executor with null kernels (clone-vs-Arc send
+# path A/B); pass `--skip-exec` to repro bench to omit them. The ckpt
+# rows run the joint checkpoint x prefetch search at 64K tokens plus a
+# HostRef-executed twin per strategy. The kernel rows time scalar vs
+# tiled vs multi-threaded flash kernels; CI gates tiled >= 5x scalar at
+# one thread. The fault rows A/B the zero-fault instrumented comm path
+# (armed all-zero FaultSpec) against the uninstrumented baseline; CI
+# gates the overhead at <= 5%. The recovery rows crash one rank mid-run
+# under each policy and time the supervised restart against the
+# fault-free baseline; CI gates recovered <= 2.5x fault-free and
+# bit-identical outputs. The serve rows run continuous-batching vs
+# serial decode on the 2x8-dev preset; CI gates continuous >= 2x serial
+# tokens/sec, simulated and executed.
 bench-json:
-	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json --faults-out BENCH_faults.json --recovery-out BENCH_recovery.json
+	cargo run --release --bin repro -- bench --json --out BENCH_optimizer.json --varlen-out BENCH_varlen.json --exec-out BENCH_executor.json --ckpt-out BENCH_ckpt.json --kernels-out BENCH_kernels.json --faults-out BENCH_faults.json --recovery-out BENCH_recovery.json --serve-out BENCH_serve.json
 
 # measured-vs-simulated per-op trace table (host-kernel executor)
 trace:
@@ -45,6 +48,11 @@ run:
 # degradation, plus the optimizer queried under a pinned straggler
 chaos:
 	cargo run --release --bin repro -- chaos --p 4
+
+# continuous-batching decode serving on the schedule IR (Poisson
+# arrivals, paged KV-caches, bit-exact full-prefill oracle check)
+serve:
+	cargo run --release --bin repro -- serve
 
 tables:
 	cargo run --release --bin repro -- tables

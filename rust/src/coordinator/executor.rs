@@ -89,6 +89,11 @@ fn exec_kernel(kernel: &Kernel, pair: Option<(usize, usize)>) -> Option<ExecKern
         },
         Kernel::Rescale | Kernel::RescaleTok { .. } => Some(ExecKernel::Rescale),
         Kernel::Accum => Some(ExecKernel::Accum),
+        // decode-pass ops run in the serving executor, not this one
+        Kernel::DecodeAttn { .. }
+        | Kernel::KvAppend { .. }
+        | Kernel::KvLookup { .. }
+        | Kernel::KvEvict => None,
         Kernel::Raw(_) => None,
     }
 }
@@ -259,20 +264,50 @@ pub struct MergedTrace {
     pub start_s: Vec<f64>,
     pub end_s: Vec<f64>,
     pub covered: Vec<bool>,
+    /// Plan op count per step group, taken from the traced plan itself.
+    /// Training lowerings emit a fixed op count per step, but decode
+    /// plans shrink as requests finish — so the per-step counts are
+    /// carried explicitly instead of assumed uniform (`ops_per_step[s]`
+    /// is the number of plan ops with `step == s`).
+    pub ops_per_step: Vec<usize>,
     /// Effective host-kernel thread count the traced run executed with
     /// (after the availability clamp) — so a calibration knows what
     /// machine configuration its durations describe. 1 for backends
     /// without a thread knob.
     pub threads: usize,
+    /// Effective `(tile_q, tile_k)` the host kernels ran with, when the
+    /// backend has tiles at all (`None` for scalar/null backends) — the
+    /// autotune satellite's record of which sweep candidate actually ran.
+    pub tiles: Option<(usize, usize)>,
 }
 
 impl MergedTrace {
-    pub fn merge(n_ops: usize, traces: &[RunTrace]) -> MergedTrace {
+    /// Per-step op counts of `plan` — the explicit replacement for the
+    /// old fixed-ops-per-pass assumption.
+    pub fn step_counts(plan: &Plan) -> Vec<usize> {
+        let len = plan
+            .ops
+            .iter()
+            .map(|n| n.step + 1)
+            .max()
+            .unwrap_or(0)
+            .max(plan.n_steps);
+        let mut counts = vec![0usize; len];
+        for n in &plan.ops {
+            counts[n.step] += 1;
+        }
+        counts
+    }
+
+    pub fn merge(plan: &Plan, traces: &[RunTrace]) -> MergedTrace {
+        let n_ops = plan.n_ops();
         let mut m = MergedTrace {
             start_s: vec![0.0; n_ops],
             end_s: vec![0.0; n_ops],
             covered: vec![false; n_ops],
+            ops_per_step: Self::step_counts(plan),
             threads: 1,
+            tiles: None,
         };
         for t in traces {
             for &(op, s, e) in &t.spans {

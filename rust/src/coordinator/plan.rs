@@ -56,6 +56,9 @@ pub type OpId = usize;
 pub enum Pass {
     Forward,
     Backward,
+    /// Inference decode: one query token per running request per step
+    /// against its resident paged KV-cache (see `crate::serving`).
+    Decode,
 }
 
 impl Pass {
@@ -63,6 +66,7 @@ impl Pass {
         match self {
             Pass::Forward => "fwd",
             Pass::Backward => "bwd",
+            Pass::Decode => "decode",
         }
     }
 }
@@ -87,6 +91,21 @@ pub enum Kernel {
     /// Zero-cost sink that consumes kv-grad returns at the end of a
     /// backward plan (the executor's gradient drain).
     Accum,
+    /// Decode-pass attention: one query row per running request against
+    /// its resident paged KV. `scale` is the causal token-pair count of
+    /// the batch (Σ context lengths) relative to the reference pair, so
+    /// it prices off `pair_full_s` like [`Kernel::AttnTok`].
+    DecodeAttn { scale: f64 },
+    /// Append new (k, v) rows into paged KV-cache slots. Bandwidth-bound
+    /// bookkeeping: priced off the rescale class at `scale` multiples
+    /// (tokens appended relative to the reference chunk).
+    KvAppend { scale: f64 },
+    /// Gather a request batch's page tables into slot lists for the
+    /// decode kernel — same bandwidth class as [`Kernel::KvAppend`].
+    KvLookup { scale: f64 },
+    /// Return a finished request's pages to the free list. Free-list
+    /// surgery only; priced at zero like [`Kernel::Accum`].
+    KvEvict,
     /// Literal seconds — for baseline plans whose kernels fall outside the
     /// AttnCost classes (e.g. Ulysses' head-parallel full-sequence attn).
     Raw(f64),
@@ -125,6 +144,9 @@ impl Kernel {
             Kernel::Rescale => cost.rescale_s,
             Kernel::RescaleTok { scale } => scale * cost.rescale_s,
             Kernel::Accum => 0.0,
+            Kernel::DecodeAttn { scale } => scale * cost.pair_full_s,
+            Kernel::KvAppend { scale } | Kernel::KvLookup { scale } => scale * cost.rescale_s,
+            Kernel::KvEvict => 0.0,
             Kernel::Raw(s) => *s,
         }
     }
@@ -395,7 +417,14 @@ pub struct Plan {
 }
 
 impl Plan {
-    fn new(name: &str, n_workers: usize, n_steps: usize, lockstep: bool, causal: bool, pass: Pass) -> Plan {
+    pub(crate) fn new(
+        name: &str,
+        n_workers: usize,
+        n_steps: usize,
+        lockstep: bool,
+        causal: bool,
+        pass: Pass,
+    ) -> Plan {
         Plan {
             name: name.to_string(),
             n_workers,
@@ -411,7 +440,7 @@ impl Plan {
         }
     }
 
-    fn push(&mut self, worker: usize, step: usize, op: PlanOp, deps: Vec<OpId>) -> OpId {
+    pub(crate) fn push(&mut self, worker: usize, step: usize, op: PlanOp, deps: Vec<OpId>) -> OpId {
         let id = self.ops.len();
         self.ops.push(PlanNode { id, worker, step, op, deps });
         id
@@ -453,6 +482,9 @@ impl Plan {
             Pass::Forward => t_steps,
             // +1: the trailing kv-grad accumulation step
             Pass::Backward => off + t_steps + 1,
+            // decode plans are lowered by `crate::serving`, never from a
+            // training schedule
+            Pass::Decode => unreachable!("decode plans are not schedule lowerings"),
         };
         let suffix = match (vl.is_some(), dense) {
             (true, true) => "-varlen-dense",

@@ -182,6 +182,12 @@ pub struct RunSpec {
     /// wall-clock only — 1 (the default) pins single-threaded execution
     /// for reproducible traces. 0 is rejected by [`RunSpec::validate`].
     pub threads: usize,
+    /// Pick the host-kernel tile geometry with the cached startup sweep
+    /// (`kernel::tiled::autotune`) instead of the compile-time default.
+    /// Different tile shapes reorder the blocked softmax and are *not*
+    /// bit-identical to each other, so the sweep is opt-in; the
+    /// effective pick is recorded in the run's [`MergedTrace::tiles`].
+    pub autotune_tiles: bool,
     /// Gradient-checkpointing strategy lowered into the backward plan.
     /// [`CkptStrategy::RematAware`] (the default) keeps the lowering
     /// unchanged and instead saves the per-layer `(o, lse)` pair;
@@ -226,6 +232,7 @@ impl RunSpec {
             trace: false,
             deep_copy_sends: false,
             threads: 1,
+            autotune_tiles: false,
             ckpt: CkptStrategy::RematAware,
             faults: None,
             recovery: RecoveryPolicy::FailFast,
@@ -345,6 +352,9 @@ impl RunSpec {
                                 t
                             }
                         }
+                        Pass::Decode => {
+                            bail!("crash injection targets training passes, not decode")
+                        }
                     };
                     if c.step > last {
                         bail!(
@@ -409,6 +419,9 @@ pub struct ExecOpts {
     /// Host-kernel worker threads per rank (clamped to 1..=available
     /// parallelism at execution; see [`RunSpec::threads`]).
     pub threads: usize,
+    /// Autotune host-kernel tiles at first use (see
+    /// [`RunSpec::autotune_tiles`]).
+    pub autotune_tiles: bool,
     /// Seeded fault scenario to inject (see [`FaultSpec`]). `None` leaves
     /// the comm path uninstrumented.
     pub faults: Option<FaultSpec>,
@@ -426,6 +439,7 @@ impl ExecOpts {
             trace: false,
             deep_copy_sends: false,
             threads: 1,
+            autotune_tiles: false,
             faults: None,
             watchdog_s: None,
         }
@@ -654,6 +668,17 @@ impl Session {
         Ok(s)
     }
 
+    /// Run a serving workload through the same plan → simulate →
+    /// execute → trace spine ([`crate::serving::serve`]): the
+    /// continuous-batching scheduler lowers to a `Pass::Decode` plan,
+    /// the event engine scores it, and the hostref backend replays it
+    /// against per-rank paged KV-caches with a full-prefill oracle
+    /// check. Associated (not `&self`): serving owns its whole pipeline
+    /// through [`crate::serving::ServeSpec`].
+    pub fn serve(spec: &crate::serving::ServeSpec) -> Result<crate::serving::ServeOutcome> {
+        crate::serving::serve(spec)
+    }
+
     pub fn spec(&self) -> &RunSpec {
         &self.spec
     }
@@ -765,7 +790,7 @@ impl Session {
 
     fn cost_for(&self, pass: Pass) -> AttnCost {
         match pass {
-            Pass::Forward => self.fwd_cost,
+            Pass::Forward | Pass::Decode => self.fwd_cost,
             Pass::Backward => self.bwd_cost,
         }
     }
@@ -809,6 +834,7 @@ impl Session {
         let stored = match pass {
             Pass::Forward => &self.fwd_op_costs,
             Pass::Backward => &self.bwd_op_costs,
+            Pass::Decode => return &[],
         };
         match stored {
             Some((traced, threads, ocs))
@@ -857,6 +883,7 @@ impl Session {
         let current = match pass {
             Pass::Forward => cur_fwd.clone(),
             Pass::Backward => cur_bwd.clone(),
+            Pass::Decode => unreachable!("decode plans are not optimizer stages"),
         };
         let cur_s = self.score_plan_overlayed(pass, &current, cost);
         let cand_s = self.score_plan_overlayed(pass, &cand, cost);
@@ -872,6 +899,7 @@ impl Session {
         self.plans = Some(match pass {
             Pass::Forward => (chosen, cur_bwd),
             Pass::Backward => (cur_fwd, chosen),
+            Pass::Decode => unreachable!("decode plans are not optimizer stages"),
         });
         (accepted, if accepted { cand_s } else { cur_s }, kept_depth)
     }
@@ -920,6 +948,7 @@ impl Session {
             match pass {
                 Pass::Forward => cur_fwd.clone(),
                 Pass::Backward => cur_bwd.clone(),
+                Pass::Decode => unreachable!("decode plans are not optimizer stages"),
             }
         };
         let o = optimize_plan_with_op_costs(
@@ -1136,6 +1165,7 @@ impl Session {
             trace: self.spec.trace,
             deep_copy_sends: self.spec.deep_copy_sends,
             threads: self.spec.threads,
+            autotune_tiles: self.spec.autotune_tiles,
             faults,
             watchdog_s,
         };
@@ -1485,6 +1515,18 @@ pub(crate) fn execute_plans(
         .threads
         .clamp(1, thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(1));
 
+    // Host-kernel tile geometry: the compile-time default, or the cached
+    // startup sweep when the spec opted in. Resolved once here (not per
+    // rank) so every worker runs the same shape, and recorded in every
+    // merged trace the same way `threads` is.
+    let eff_tiles = if opts.autotune_tiles {
+        crate::runtime::kernel::tiled::autotune()
+    } else {
+        crate::runtime::Tiles::default()
+    };
+    let host_tiles =
+        matches!(opts.backend, BackendSpec::HostRef).then_some((eff_tiles.q, eff_tiles.k));
+
     let deadline = opts.watchdog_s.map(Duration::from_secs_f64);
     let epoch = Instant::now();
     let mut handles = Vec::new();
@@ -1525,7 +1567,9 @@ pub(crate) fn execute_plans(
                         rt.precompile(ATTN_ARTIFACTS)?;
                         Box::new(rt)
                     }
-                    BackendSpec::HostRef => Box::new(HostKernels::tiled(eff_threads)),
+                    BackendSpec::HostRef => {
+                        Box::new(HostKernels::with_tiles(eff_threads, eff_tiles))
+                    }
                     BackendSpec::Null => Box::new(NullKernels),
                 };
                 if stall > 1.0 {
@@ -1672,19 +1716,20 @@ pub(crate) fn execute_plans(
         // before unwinding (possibly mid-layer, possibly from different
         // layers — these answer "where was everyone when it died")
         let (partial_fwd, partial_bwd) = if opts.trace {
-            let merge_last = |pick: &dyn Fn(&(RunTrace, RunTrace)) -> RunTrace, n_ops: usize| {
+            let merge_last = |pick: &dyn Fn(&(RunTrace, RunTrace)) -> RunTrace, plan: &Plan| {
                 let rts: Vec<RunTrace> =
                     trace_by_rank.iter().filter_map(|t| t.last().map(pick)).collect();
                 if rts.is_empty() {
                     return None;
                 }
-                let mut m = MergedTrace::merge(n_ops, &rts);
+                let mut m = MergedTrace::merge(plan, &rts);
                 m.threads = eff_threads;
+                m.tiles = host_tiles;
                 Some(m)
             };
             (
-                merge_last(&|p| p.0.clone(), fwd_plan.n_ops()),
-                merge_last(&|p| p.1.clone(), bwd_plan.n_ops()),
+                merge_last(&|p| p.0.clone(), &fwd_plan),
+                merge_last(&|p| p.1.clone(), &bwd_plan),
             )
         } else {
             (None, None)
@@ -1711,11 +1756,13 @@ pub(crate) fn execute_plans(
         for l in 0..recorded_layers {
             let ft: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].0.clone()).collect();
             let bt: Vec<RunTrace> = trace_by_rank.iter().map(|t| t[l].1.clone()).collect();
-            let mut mf = MergedTrace::merge(fwd_plan.n_ops(), &ft);
+            let mut mf = MergedTrace::merge(&fwd_plan, &ft);
             mf.threads = eff_threads;
+            mf.tiles = host_tiles;
             let mb = do_.is_some().then(|| {
-                let mut m = MergedTrace::merge(bwd_plan.n_ops(), &bt);
+                let mut m = MergedTrace::merge(&bwd_plan, &bt);
                 m.threads = eff_threads;
+                m.tiles = host_tiles;
                 m
             });
             lt.push((Some(mf), mb));
@@ -1775,7 +1822,7 @@ pub(crate) fn execute_plans(
 
 use crate::util::json::escape as json_escape;
 
-fn usize_list(xs: &[usize]) -> String {
+pub(crate) fn usize_list(xs: &[usize]) -> String {
     let parts: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
     format!("[{}]", parts.join(", "))
 }
@@ -1787,7 +1834,7 @@ const JSON_SAFE_INT: u64 = 1 << 53;
 /// Seeds serialize as plain numbers when exactly representable and as
 /// decimal strings from 2^53 up — so the round trip is exact for every
 /// u64 (the parse side refuses numbers in the inexact range).
-fn u64_to_json(x: u64) -> String {
+pub(crate) fn u64_to_json(x: u64) -> String {
     if x >= JSON_SAFE_INT {
         format!("\"{x}\"")
     } else {
@@ -1796,7 +1843,7 @@ fn u64_to_json(x: u64) -> String {
 }
 
 /// Accept both forms; `None` for a missing/null field.
-fn u64_from_json(j: &Json, what: &str) -> Result<Option<u64>> {
+pub(crate) fn u64_from_json(j: &Json, what: &str) -> Result<Option<u64>> {
     match j {
         Json::Null => Ok(None),
         Json::Str(s) => s
@@ -1825,7 +1872,7 @@ fn u64_from_json(j: &Json, what: &str) -> Result<Option<u64>> {
 // Optional-field getters: missing/null falls back to the default, but a
 // present field of the wrong type is an ERROR — a spec must never silently
 // run with a knob other than the one it declares.
-fn opt_usize(j: &Json, k: &str, what: &str, dv: usize) -> Result<usize> {
+pub(crate) fn opt_usize(j: &Json, k: &str, what: &str, dv: usize) -> Result<usize> {
     match j.get(k) {
         None | Some(Json::Null) => Ok(dv),
         Some(v) => v
@@ -1834,17 +1881,78 @@ fn opt_usize(j: &Json, k: &str, what: &str, dv: usize) -> Result<usize> {
     }
 }
 
-fn opt_f64(j: &Json, k: &str, what: &str, dv: f64) -> Result<f64> {
+pub(crate) fn opt_f64(j: &Json, k: &str, what: &str, dv: f64) -> Result<f64> {
     match j.get(k) {
         None | Some(Json::Null) => Ok(dv),
         Some(v) => v.as_f64().ok_or_else(|| anyhow!("{what}{k} must be a number")),
     }
 }
 
-fn opt_bool(j: &Json, k: &str, what: &str, dv: bool) -> Result<bool> {
+pub(crate) fn opt_bool(j: &Json, k: &str, what: &str, dv: bool) -> Result<bool> {
     match j.get(k) {
         None | Some(Json::Null) => Ok(dv),
         Some(v) => v.as_bool().ok_or_else(|| anyhow!("{what}{k} must be a boolean")),
+    }
+}
+
+/// Serialize a cluster to the spec-JSON object form — shared between
+/// [`RunSpec::to_json`] and [`crate::serving::ServeSpec::to_json`].
+pub(crate) fn cluster_to_json(c: &ClusterSpec) -> String {
+    format!(
+        "{{\"n_nodes\": {}, \"gpus_per_node\": {}, \"gpu\": {{\"peak_flops\": {}, \
+         \"mfu_attn\": {}, \"mfu_gemm\": {}, \"mem_bytes\": {}}}, \"intra_bw\": {}, \
+         \"intra_lat\": {}, \"inter_bw\": {}, \"inter_lat\": {}}}",
+        c.n_nodes,
+        c.gpus_per_node,
+        c.gpu.peak_flops,
+        c.gpu.mfu_attn,
+        c.gpu.mfu_gemm,
+        c.gpu.mem_bytes,
+        c.intra_bw,
+        c.intra_lat,
+        c.inter_bw,
+        c.inter_lat,
+    )
+}
+
+/// Parse a spec-JSON cluster field: missing/null falls back to `default`,
+/// a string is a preset name (`"1x8"`, `"2x8"`, `"dev"`), an object is
+/// the full [`cluster_to_json`] form.
+pub(crate) fn cluster_from_json(v: Option<&Json>, default: ClusterSpec) -> Result<ClusterSpec> {
+    match v {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Str(name)) => ClusterSpec::by_name(name)
+            .ok_or_else(|| anyhow!("unknown cluster preset {name:?}")),
+        Some(c) => {
+            let gpu = c.at("gpu");
+            let base = crate::config::GpuSpec::a100_80g();
+            Ok(ClusterSpec {
+                n_nodes: c
+                    .at("n_nodes")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("cluster.n_nodes must be an integer"))?,
+                gpus_per_node: c
+                    .at("gpus_per_node")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("cluster.gpus_per_node must be an integer"))?,
+                gpu: crate::config::GpuSpec {
+                    peak_flops: opt_f64(gpu, "peak_flops", "cluster.gpu.", base.peak_flops)?,
+                    mfu_attn: opt_f64(gpu, "mfu_attn", "cluster.gpu.", base.mfu_attn)?,
+                    mfu_gemm: opt_f64(gpu, "mfu_gemm", "cluster.gpu.", base.mfu_gemm)?,
+                    mem_bytes: opt_f64(gpu, "mem_bytes", "cluster.gpu.", base.mem_bytes)?,
+                },
+                intra_bw: c
+                    .at("intra_bw")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("cluster.intra_bw must be a number"))?,
+                intra_lat: opt_f64(c, "intra_lat", "cluster.", 0.0)?,
+                inter_bw: c
+                    .at("inter_bw")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("cluster.inter_bw must be a number"))?,
+                inter_lat: opt_f64(c, "inter_lat", "cluster.", 0.0)?,
+            })
+        }
     }
 }
 
@@ -1936,22 +2044,7 @@ impl RunSpec {
                 usize_list(&v.boundaries)
             ),
         };
-        let c = &self.cluster;
-        let cluster = format!(
-            "{{\"n_nodes\": {}, \"gpus_per_node\": {}, \"gpu\": {{\"peak_flops\": {}, \
-             \"mfu_attn\": {}, \"mfu_gemm\": {}, \"mem_bytes\": {}}}, \"intra_bw\": {}, \
-             \"intra_lat\": {}, \"inter_bw\": {}, \"inter_lat\": {}}}",
-            c.n_nodes,
-            c.gpus_per_node,
-            c.gpu.peak_flops,
-            c.gpu.mfu_attn,
-            c.gpu.mfu_gemm,
-            c.gpu.mem_bytes,
-            c.intra_bw,
-            c.intra_lat,
-            c.inter_bw,
-            c.inter_lat,
-        );
+        let cluster = cluster_to_json(&self.cluster);
         let backend = match &self.backend {
             BackendSpec::Pjrt(p) => {
                 format!("{{\"pjrt\": \"{}\"}}", json_escape(&p.display().to_string()))
@@ -1984,14 +2077,15 @@ impl RunSpec {
              \"varlen\": {varlen},\n  \"cluster\": {cluster},\n  \"backend\": {backend},\n  \
              \"optimize\": {optimize},\n  \"prefetch_depth\": {depth},\n  \"layers\": {},\n  \
              \"backward\": {},\n  \"trace\": {},\n  \"deep_copy_sends\": {},\n  \
-             \"threads\": {},\n  \"ckpt\": \"{ckpt}\",\n  \"faults\": {faults},\n  \
-             \"recovery\": {recovery},\n  \"seed\": {seed}\n}}\n",
+             \"threads\": {},\n  \"autotune_tiles\": {},\n  \"ckpt\": \"{ckpt}\",\n  \
+             \"faults\": {faults},\n  \"recovery\": {recovery},\n  \"seed\": {seed}\n}}\n",
             self.n_workers,
             self.layers,
             self.backward,
             self.trace,
             self.deep_copy_sends,
             self.threads,
+            self.autotune_tiles,
         )
     }
 
@@ -2034,41 +2128,7 @@ impl RunSpec {
                     .ok_or_else(|| anyhow!("varlen.boundaries must be an integer array"))?,
             }),
         };
-        let cluster = match j.get("cluster") {
-            None | Some(Json::Null) => ClusterSpec::dgx_1x8(),
-            Some(Json::Str(name)) => ClusterSpec::by_name(name)
-                .ok_or_else(|| anyhow!("unknown cluster preset {name:?}"))?,
-            Some(c) => {
-                let gpu = c.at("gpu");
-                let base = crate::config::GpuSpec::a100_80g();
-                ClusterSpec {
-                    n_nodes: c
-                        .at("n_nodes")
-                        .as_usize()
-                        .ok_or_else(|| anyhow!("cluster.n_nodes must be an integer"))?,
-                    gpus_per_node: c
-                        .at("gpus_per_node")
-                        .as_usize()
-                        .ok_or_else(|| anyhow!("cluster.gpus_per_node must be an integer"))?,
-                    gpu: crate::config::GpuSpec {
-                        peak_flops: opt_f64(gpu, "peak_flops", "cluster.gpu.", base.peak_flops)?,
-                        mfu_attn: opt_f64(gpu, "mfu_attn", "cluster.gpu.", base.mfu_attn)?,
-                        mfu_gemm: opt_f64(gpu, "mfu_gemm", "cluster.gpu.", base.mfu_gemm)?,
-                        mem_bytes: opt_f64(gpu, "mem_bytes", "cluster.gpu.", base.mem_bytes)?,
-                    },
-                    intra_bw: c
-                        .at("intra_bw")
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("cluster.intra_bw must be a number"))?,
-                    intra_lat: opt_f64(c, "intra_lat", "cluster.", 0.0)?,
-                    inter_bw: c
-                        .at("inter_bw")
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("cluster.inter_bw must be a number"))?,
-                    inter_lat: opt_f64(c, "inter_lat", "cluster.", 0.0)?,
-                }
-            }
-        };
+        let cluster = cluster_from_json(j.get("cluster"), ClusterSpec::dgx_1x8())?;
         let backend = match j.get("backend") {
             None | Some(Json::Null) => BackendSpec::HostRef,
             Some(Json::Str(s)) => match s.as_str() {
@@ -2135,6 +2195,7 @@ impl RunSpec {
             trace: opt_bool(&j, "trace", "", false)?,
             deep_copy_sends: opt_bool(&j, "deep_copy_sends", "", false)?,
             threads: opt_usize(&j, "threads", "", 1)?,
+            autotune_tiles: opt_bool(&j, "autotune_tiles", "", false)?,
             ckpt,
             faults: match j.get("faults") {
                 None | Some(Json::Null) => None,

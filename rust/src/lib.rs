@@ -30,6 +30,10 @@
 //!   paper's evaluation, plus executed (event-engine) Ring Attention and
 //!   Ulysses plans in the same IR.
 //! * [`memory`] — activation/weight accounting and max-sequence solver.
+//! * [`serving`] — continuous-batching decode on the same schedule IR:
+//!   [`serving::ServeSpec`] → TGI-shaped scheduler over paged per-rank
+//!   KV-caches → lockstep `Pass::Decode` plans scored by the event engine
+//!   and replayed bit-exactly against a full-prefill oracle.
 
 pub mod baselines;
 pub mod config;
@@ -37,6 +41,7 @@ pub mod coordinator;
 pub mod memory;
 pub mod report;
 pub mod runtime;
+pub mod serving;
 pub mod simulator;
 pub mod train;
 pub mod util;

@@ -25,18 +25,20 @@
 //!            token-level rebalancing of a Zipf-packed document batch
 //!   bench    [--json] [--out FILE] [--varlen-out FILE] [--exec-out FILE]
 //!            [--ckpt-out FILE] [--kernels-out FILE] [--faults-out FILE]
-//!            [--recovery-out FILE]
+//!            [--recovery-out FILE] [--serve-out FILE]
 //!            [--skip-exec]                  optimizer + varlen grids (driven
 //!                                           through Session), the executor
 //!                                           transport micro-bench, the
 //!                                           checkpoint-strategy trade-off, the
 //!                                           host-kernel micro-bench, the
-//!                                           zero-fault overhead gate, and the
-//!                                           crash-recovery gate;
+//!                                           zero-fault overhead gate, the
+//!                                           crash-recovery gate, and the
+//!                                           continuous-batching serving gate;
 //!                                           --json writes BENCH_optimizer.json,
 //!                                           BENCH_varlen.json, BENCH_executor.json,
 //!                                           BENCH_ckpt.json, BENCH_kernels.json,
-//!                                           BENCH_faults.json, BENCH_recovery.json
+//!                                           BENCH_faults.json, BENCH_recovery.json,
+//!                                           BENCH_serve.json
 //!   chaos    [--p N] [--chunk N] [--heads N] [--kv-heads N] [--dim N]
 //!            [--schedule S] [--seed N] [--stall F] [--layers L] [--seeds N]
 //!                                           seeded fault injection on the real
@@ -59,6 +61,18 @@
 //!                                           measured timeline against the event
 //!                                           engine; --layers L stacks L calls and
 //!                                           prints a per-layer timeline
+//!   serve    [--spec FILE.json] [--serial] [--requests N] [--threads N]
+//!            [--autotune-tiles] [--no-exec] [--seed N]
+//!                                           continuous-batching decode serving on
+//!                                           the schedule IR: Poisson / trace-replay
+//!                                           arrivals through the TGI-shaped
+//!                                           scheduler over per-rank paged KV-caches,
+//!                                           lowered to a lockstep decode plan,
+//!                                           event-engine scored (tokens/sec,
+//!                                           p50/p99 latency) and hostref-executed
+//!                                           with a bit-exact full-prefill oracle
+//!                                           check (--serial = one request in
+//!                                           flight; --no-exec = simulate only)
 //!   inspect  [--config tiny]                print an artifact manifest
 //!
 //! Arg parsing is hand-rolled (offline environment, no clap). Every
@@ -77,11 +91,12 @@ use distflash::baselines::ulysses::Ulysses;
 use distflash::baselines::SystemModel;
 use distflash::config::{ClusterSpec, PaperModel};
 use distflash::coordinator::{
-    CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, Plan, RecoveryPolicy,
-    RunSpec, Schedule, ScheduleKind, Session, VarlenSpec, Workload,
+    BackendSpec, CkptStrategy, CrashSpec, FaultSpec, OptimizeOpts, OptimizePolicy, Pass, Plan,
+    RecoveryPolicy, RunSpec, Schedule, ScheduleKind, Session, VarlenSpec, Workload,
 };
 use distflash::report::{paper, trace};
 use distflash::runtime::{HostKernels, Kernels, Runtime, Tensor, Value};
+use distflash::serving::ServeSpec;
 use distflash::simulator::{simulate_plan, AttnCost, EventOpts, PlanSim};
 use distflash::train::{train, AdamConfig, TrainConfig};
 use distflash::util::Rng;
@@ -944,6 +959,92 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut spec = match args.flags.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading serve spec {path}: {e}"))?;
+            ServeSpec::from_json(&text)?
+        }
+        None => ServeSpec::dev(),
+    };
+    if args.get("serial", "false") == "true" {
+        spec.batching = false;
+    }
+    if args.get("autotune-tiles", "false") == "true" {
+        spec.autotune_tiles = true;
+    }
+    if args.get("no-exec", "false") == "true" {
+        spec.backend = BackendSpec::Null;
+    }
+    spec.n_requests = args.usize("requests", spec.n_requests);
+    spec.threads = args.usize("threads", spec.threads);
+    if let Some(seed) = args.flags.get("seed").and_then(|v| v.parse::<u64>().ok()) {
+        spec.seed = seed;
+    }
+    if let distflash::serving::Arrivals::Replay { times_s } = &spec.arrivals {
+        if times_s.len() != spec.n_requests {
+            anyhow::bail!(
+                "--requests {} conflicts with the spec's {} replay arrival times",
+                spec.n_requests,
+                times_s.len()
+            );
+        }
+    }
+
+    let out = distflash::serving::serve(&spec)?;
+    let tokens: usize = out.requests.iter().map(|r| r.decode).sum();
+    println!(
+        "serve: {} requests ({} decode tokens) on {} ranks, {} {} steps, plan {}",
+        out.requests.len(),
+        tokens,
+        spec.n_workers,
+        out.log.steps.len(),
+        if spec.batching { "continuous-batching" } else { "serial" },
+        out.lowered.plan.name,
+    );
+    println!(
+        "  queue: peak {} waiting (cap {}), {} arrival(s) deferred at the cap",
+        out.log.peak_queue, spec.queue_cap, out.log.max_deferred
+    );
+    println!(
+        "  sim : {:>9.1} tok/s   total {:>9.3} ms   p50 {:>8.3} ms   p99 {:>8.3} ms",
+        out.sim.tokens_per_s,
+        out.sim.total_s * 1e3,
+        out.sim.p50_latency_s * 1e3,
+        out.sim.p99_latency_s * 1e3,
+    );
+    match &out.exec {
+        Some(ex) => {
+            println!(
+                "  exec: {:>9.1} tok/s   total {:>9.3} ms   p50 {:>8.3} ms   p99 {:>8.3} ms   \
+                 ({} thread(s)/rank{})",
+                ex.score.tokens_per_s,
+                ex.score.total_s * 1e3,
+                ex.score.p50_latency_s * 1e3,
+                ex.score.p99_latency_s * 1e3,
+                ex.trace.threads,
+                match ex.trace.tiles {
+                    Some((q, k)) => format!(", tiles {q}x{k}"),
+                    None => String::new(),
+                },
+            );
+            println!(
+                "  oracle: {} decode values bit-identical to the one-shot full-prefill reference",
+                ex.checked_values
+            );
+            println!(
+                "  calibration: measured {:.3} ms vs re-simulated {:.3} ms ({:.1}% rel err)",
+                ex.score.total_s * 1e3,
+                ex.calibrated_total_s * 1e3,
+                ex.calibration_rel_err * 100.0,
+            );
+        }
+        None => println!("  exec: skipped (null backend)"),
+    }
+    Ok(())
+}
+
 use distflash::util::json::escape as json_escape;
 
 /// Write one bench JSON document (`{"bench": ..., "schedule": "balanced",
@@ -1111,6 +1212,32 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 &jrows,
             )?;
             println!("{}", paper::recovery_bench_table(&rrows));
+
+            // continuous-batching serving gate -> BENCH_serve.json
+            let srows = paper::serve_bench_rows();
+            let jrows: Vec<String> = srows
+                .iter()
+                .map(|r| {
+                    format!(
+                        "{{\"mode\": \"{}\", \"p\": {}, \"requests\": {}, \"steps\": {}, \
+                         \"sim_tokens_per_s\": {:.4}, \"sim_p99_s\": {:.9}, \
+                         \"exec_tokens_per_s\": {:.4}, \"exec_total_s\": {:.9}, \
+                         \"checked_values\": {}, \"calib_rel_err\": {:.6}}}",
+                        json_escape(r.mode),
+                        r.p,
+                        r.requests,
+                        r.steps,
+                        r.sim_tokens_per_s,
+                        r.sim_p99_s,
+                        r.exec_tokens_per_s,
+                        r.exec_total_s,
+                        r.checked_values,
+                        r.calib_rel_err,
+                    )
+                })
+                .collect();
+            write_bench_json(&args.get("serve-out", "BENCH_serve.json"), "serve", &jrows)?;
+            println!("{}", paper::serve_bench_table(&srows));
         }
 
         // checkpoint strategy micro-bench -> BENCH_ckpt.json
@@ -1166,6 +1293,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             println!("{}", paper::executor_bench_table(&paper::executor_bench_rows()));
             println!("{}", paper::fault_bench_table(&paper::fault_bench_rows()));
             println!("{}", paper::recovery_bench_table(&paper::recovery_bench_rows()));
+            println!("{}", paper::serve_bench_table(&paper::serve_bench_rows()));
         }
         println!("{}", paper::ckpt_tradeoff());
         println!("{}", paper::kernel_bench_table(&paper::kernel_bench_rows()));
@@ -1204,15 +1332,18 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 fn help() {
     println!(
         "repro — DISTFLASHATTN reproduction\n\
-         usage: repro <tables|figures|run|verify|train|simulate|plans|optimize|trace|bench|chaos|inspect> [--flag value]...\n\
-         `tables`, `run`, `simulate`, `plans`, `optimize`, `trace`, `bench`, and `chaos` run on a bare checkout\n\
-         (`run`/`trace`/`chaos` and the executor micro-bench use the pure-host kernel backends);\n\
+         usage: repro <tables|figures|run|verify|train|simulate|plans|optimize|trace|bench|chaos|serve|inspect> [--flag value]...\n\
+         `tables`, `run`, `simulate`, `plans`, `optimize`, `trace`, `bench`, `chaos`, and `serve` run on a bare checkout\n\
+         (`run`/`trace`/`chaos`/`serve` and the executor micro-bench use the pure-host kernel backends);\n\
          `verify`/`train` need AOT artifacts (`make artifacts`) and a real PJRT `xla` crate.\n\
          `run --spec FILE.json` drives the whole Session pipeline from a serialized RunSpec.\n\
          `chaos` injects seeded faults (delay/drop/stall/crash) into the real executor,\n\
          compares executed vs event-engine-predicted makespan degradation per fault class,\n\
          and drives the crash to bit-identical completion via the recovery supervisor\n\
-         (`--seeds N` sweeps worst-case detection latency and recovery overhead)."
+         (`--seeds N` sweeps worst-case detection latency and recovery overhead).\n\
+         `serve [--spec FILE.json]` runs continuous-batching decode serving on the schedule IR\n\
+         (Poisson/replay arrivals, paged KV-caches, bit-exact full-prefill oracle check;\n\
+         `--serial` for the one-request baseline, `--no-exec` to stop after simulation)."
     );
 }
 
@@ -1235,6 +1366,7 @@ fn main() -> ExitCode {
         "trace" => cmd_trace(&args),
         "bench" => cmd_bench(&args),
         "chaos" => cmd_chaos(&args),
+        "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             help();

@@ -41,7 +41,11 @@ fn class_of(plan: &Plan, op: usize) -> Option<Class> {
                 _ => Some(Class::Full),
             },
             Kernel::Rescale | Kernel::RescaleTok { .. } => Some(Class::Rescale),
-            Kernel::Accum | Kernel::Raw(_) => None,
+            // decode attention prices off the full-pair class; kv-cache
+            // bookkeeping off the rescale class (see `Kernel::seconds`)
+            Kernel::DecodeAttn { .. } => Some(Class::Full),
+            Kernel::KvAppend { .. } | Kernel::KvLookup { .. } => Some(Class::Rescale),
+            Kernel::Accum | Kernel::KvEvict | Kernel::Raw(_) => None,
         },
         PlanOp::Xfer { .. } => None,
     }
@@ -105,7 +109,11 @@ fn pricing_class(kernel: &Kernel) -> Option<(Class, f64)> {
         Kernel::AttnTok { scale } => Some((Class::Full, *scale)),
         Kernel::Rescale => Some((Class::Rescale, 1.0)),
         Kernel::RescaleTok { scale } => Some((Class::Rescale, *scale)),
-        Kernel::Accum | Kernel::Raw(_) => None,
+        Kernel::DecodeAttn { scale } => Some((Class::Full, *scale)),
+        Kernel::KvAppend { scale } | Kernel::KvLookup { scale } => {
+            Some((Class::Rescale, *scale))
+        }
+        Kernel::Accum | Kernel::KvEvict | Kernel::Raw(_) => None,
     }
 }
 
@@ -383,7 +391,9 @@ mod tests {
             start_s: sim.op_start.clone(),
             end_s: sim.op_finish.clone(),
             covered: vec![false; plan.n_ops()],
+            ops_per_step: MergedTrace::step_counts(&plan),
             threads: 1,
+            tiles: None,
         };
         for (op, node) in plan.ops.iter().enumerate() {
             if matches!(node.op, PlanOp::Compute { .. }) {

@@ -28,7 +28,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::client::Runtime;
-use super::kernel::{f32t, scalar, tiled};
+use super::kernel::{decode, f32t, scalar, tiled, Tiles};
 use super::tensor::{Tensor, Value};
 
 /// Anything that can execute a named attention kernel. The threaded
@@ -60,6 +60,7 @@ pub enum KernelMode {
 pub struct HostKernels {
     mode: KernelMode,
     threads: usize,
+    tiles: Tiles,
 }
 
 impl Default for HostKernels {
@@ -72,14 +73,28 @@ impl HostKernels {
     /// The scalar oracle — the exact code every earlier numeric pin was
     /// built on. Single-threaded by construction.
     pub fn scalar() -> Self {
-        Self { mode: KernelMode::Scalar, threads: 1 }
+        Self { mode: KernelMode::Scalar, threads: 1, tiles: Tiles::default() }
     }
 
-    /// The tiled/vectorized path on `threads` workers (clamped to ≥ 1).
-    /// Results are bit-identical across thread counts — see
-    /// [`crate::runtime::kernel`].
+    /// The tiled/vectorized path on `threads` workers (clamped to ≥ 1) at
+    /// the default tile geometry. Results are bit-identical across thread
+    /// counts — see [`crate::runtime::kernel`].
     pub fn tiled(threads: usize) -> Self {
-        Self { mode: KernelMode::Tiled, threads: threads.max(1) }
+        Self::with_tiles(threads, Tiles::default())
+    }
+
+    /// The tiled path at an explicit tile geometry (clamped into the
+    /// kernels' stack-buffer capacity). Any fixed geometry is still
+    /// bit-identical across thread counts; different geometries are not
+    /// bit-identical to each other.
+    pub fn with_tiles(threads: usize, tiles: Tiles) -> Self {
+        Self { mode: KernelMode::Tiled, threads: threads.max(1), tiles: tiles.clamped() }
+    }
+
+    /// The tiled path at the startup-sweep pick ([`tiled::autotune`],
+    /// cached per process) — `RunSpec::autotune_tiles`' backend.
+    pub fn autotuned(threads: usize) -> Self {
+        Self::with_tiles(threads, tiled::autotune())
     }
 
     pub fn mode(&self) -> KernelMode {
@@ -88,6 +103,11 @@ impl HostKernels {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Effective tile geometry (what a trace records).
+    pub fn tiles(&self) -> Tiles {
+        self.tiles
     }
 }
 
@@ -110,6 +130,7 @@ impl Kernels for HostKernels {
                         t(5)?,
                         causal,
                         self.threads,
+                        self.tiles,
                     )
                 } else {
                     scalar::chunk_fwd(name, t(0)?, t(1)?, t(2)?, t(3)?, t(4)?, t(5)?, causal)
@@ -143,6 +164,7 @@ impl Kernels for HostKernels {
                         t(5)?,
                         causal,
                         self.threads,
+                        self.tiles,
                     )
                 } else {
                     scalar::chunk_bwd(name, t(0)?, t(1)?, t(2)?, t(3)?, t(4)?, t(5)?, causal)
@@ -151,10 +173,13 @@ impl Kernels for HostKernels {
             "full_attn_ref" => {
                 ensure!(inputs.len() == 3, "{name}: expected 3 inputs");
                 if tiled_mode {
-                    tiled::full_attn_ref(name, t(0)?, t(1)?, t(2)?, self.threads)
+                    tiled::full_attn_ref(name, t(0)?, t(1)?, t(2)?, self.threads, self.tiles)
                 } else {
                     scalar::full_attn_ref(name, t(0)?, t(1)?, t(2)?)
                 }
+            }
+            "decode_attn" => {
+                decode::decode_attn(name, inputs, tiled_mode, self.threads, self.tiles)
             }
             other => bail!("HostKernels: unknown kernel {other:?}"),
         }

@@ -1,0 +1,242 @@
+//! Decode-pass attention over a paged KV-cache — the serving twin of the
+//! training chunk kernels.
+//!
+//! A decode step computes **one query row per running request** against
+//! that request's resident KV, addressed through a slot list gathered
+//! from its page table (`crate::serving::kvcache`). The workload class is
+//! therefore the transpose of prefill: tiny q (one row), long kv, and an
+//! indirection on every kv row.
+//!
+//! Two paths mirror the training kernels exactly:
+//!
+//! * **scalar** — one full-width score pass per row with naive serial
+//!   reductions, the same rounding order as [`super::scalar::chunk_fwd`]
+//!   followed by [`super::scalar::finalize`]. The correctness oracle.
+//! * **tiled** — blocked online softmax over `Tiles::k`-wide slot tiles
+//!   with the vectorized [`super::dot`]/[`super::axpy`] loops, the same
+//!   rounding order as [`super::tiled::fwd_unit`] + finalize.
+//!
+//! Because causal row `t` of the monolithic `full_attn_ref` depends only
+//! on positions `0..=t` and its kv-tile boundaries are multiples of the
+//! kv tile width from zero, a decode row at position `t` (context length
+//! `t + 1`, slots gathered in position order) reproduces oracle row `t`
+//! **bit-for-bit** on the matching path — the serving pipeline's
+//! one-shot-prefill oracle check relies on this.
+//!
+//! Threading partitions independent `(head, request)` rows into
+//! contiguous cost-balanced groups (cost = context length); each row's
+//! reduction runs wholly inside one worker in fixed slot order, so
+//! results are bit-identical at every thread count, like the training
+//! kernels.
+
+use anyhow::{ensure, Result};
+
+use super::tiled::{Tiles, MAX_TILE_K};
+use super::{axpy, dot, f32t, gqa_group, partition, scale_row};
+use crate::runtime::tensor::{Tensor, Value};
+
+/// Decode one batch: `inputs = [q, k_slab, v_slab, slots, lens]`.
+///
+/// * `q`: `[h, b, d]` — one query row per request per head.
+/// * `k_slab`/`v_slab`: `[n_slots, kvh, d]` — the paged cache storage;
+///   slot `s`, kv head `g` lives at `(s * kvh + g) * d`.
+/// * `slots`: `[b, max_ctx]` — per-request slot ids in position order
+///   (f32-encoded integers; exact below 2^24), row `r` valid for
+///   `lens[r]` entries.
+/// * `lens`: `[b]` — per-request context lengths (≥ 1).
+///
+/// Returns `(o, lse)` with `o: [h, b, d]`, `lse: [h, b]` — finalized,
+/// exactly like `full_attn_ref`.
+pub fn decode_attn(
+    name: &str,
+    inputs: &[Value],
+    tiled_mode: bool,
+    threads: usize,
+    tiles: Tiles,
+) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 5, "{name}: expected 5 inputs");
+    let q = f32t(name, inputs, 0)?;
+    let k_slab = f32t(name, inputs, 1)?;
+    let v_slab = f32t(name, inputs, 2)?;
+    let slots = f32t(name, inputs, 3)?;
+    let lens = f32t(name, inputs, 4)?;
+    let tiles = tiles.clamped();
+
+    ensure!(q.shape.len() == 3, "{name}: q must be [h, b, d], got {:?}", q.shape);
+    let (h, b, d) = (q.shape[0], q.shape[1], q.shape[2]);
+    ensure!(
+        k_slab.shape.len() == 3 && k_slab.shape == v_slab.shape,
+        "{name}: k/v slabs must be rank-3 and identical, got {:?} vs {:?}",
+        k_slab.shape,
+        v_slab.shape
+    );
+    let (n_slots, kvh, dk) = (k_slab.shape[0], k_slab.shape[1], k_slab.shape[2]);
+    ensure!(d == dk, "{name}: head dim mismatch (q {d}, kv {dk})");
+    let group = gqa_group(name, h, kvh)?;
+    ensure!(
+        slots.shape.len() == 2 && slots.shape[0] == b,
+        "{name}: slots must be [b, max_ctx], got {:?}",
+        slots.shape
+    );
+    let max_ctx = slots.shape[1];
+    ensure!(lens.shape == [b], "{name}: lens must be [b], got {:?}", lens.shape);
+
+    let lens_d = lens.data();
+    let slots_d = slots.data();
+    let mut ctx = Vec::with_capacity(b);
+    for (r, &lf) in lens_d.iter().enumerate() {
+        let len = lf as usize;
+        ensure!(
+            lf >= 1.0 && lf.fract() == 0.0 && len <= max_ctx,
+            "{name}: request {r} context length {lf} out of [1, {max_ctx}]"
+        );
+        for &sf in &slots_d[r * max_ctx..r * max_ctx + len] {
+            let slot = sf as usize;
+            ensure!(
+                sf >= 0.0 && sf.fract() == 0.0 && slot < n_slots,
+                "{name}: request {r} slot {sf} out of [0, {n_slots})"
+            );
+        }
+        ctx.push(len);
+    }
+
+    let scale = 1.0 / (d as f32).sqrt();
+    let (qd, kd, vd) = (q.data(), k_slab.data(), v_slab.data());
+    let mut o = vec![0.0f32; h * b * d];
+    let mut lse = vec![0.0f32; h * b];
+
+    // independent (head, request) rows, cost = context length
+    let rows = h * b;
+    let costs: Vec<f64> = (0..rows).map(|ri| ctx[ri % b] as f64).collect();
+    let groups = partition(&costs, if tiled_mode { threads } else { 1 });
+    let tasks: Vec<(std::ops::Range<usize>, &mut [f32], &mut [f32])> = {
+        let (mut o_r, mut s_r) = (&mut o[..], &mut lse[..]);
+        let mut tasks = Vec::with_capacity(groups.len());
+        for g in groups {
+            let (og, rest) = std::mem::take(&mut o_r).split_at_mut(g.len() * d);
+            o_r = rest;
+            let (sg, rest) = std::mem::take(&mut s_r).split_at_mut(g.len());
+            s_r = rest;
+            tasks.push((g, og, sg));
+        }
+        tasks
+    };
+    super::tiled::run_tasks(tasks, |(range, o_g, s_g)| {
+        let r0 = range.start;
+        for ri in range {
+            let (hh, r) = (ri / b, ri % b);
+            let g = hh / group;
+            let qrow = &qd[ri * d..(ri + 1) * d];
+            let slot_row = &slots_d[r * max_ctx..r * max_ctx + ctx[r]];
+            let orow = &mut o_g[(ri - r0) * d..(ri - r0 + 1) * d];
+            let (m, l) = if tiled_mode {
+                decode_row_tiled(qrow, kd, vd, slot_row, g, kvh, d, scale, tiles.k, orow)
+            } else {
+                decode_row_scalar(qrow, kd, vd, slot_row, g, kvh, d, scale, orow)
+            };
+            // finalize inline: l > 0 is guaranteed by ctx[r] >= 1
+            let inv = 1.0 / l;
+            for x in orow.iter_mut() {
+                *x *= inv;
+            }
+            s_g[ri - r0] = m + l.ln();
+        }
+    });
+    Ok(vec![Tensor::new(vec![h, b, d], o), Tensor::new(vec![h, b], lse)])
+}
+
+/// One decode row on the tiled path — the per-row loop of
+/// [`super::tiled::fwd_unit`] with slot-gathered kv rows. Returns the
+/// pre-finalize `(m, l)`.
+#[allow(clippy::too_many_arguments)]
+fn decode_row_tiled(
+    qrow: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    slot_row: &[f32],
+    g: usize,
+    kvh: usize,
+    d: usize,
+    scale: f32,
+    tile_k: usize,
+    orow: &mut [f32],
+) -> (f32, f32) {
+    let len = slot_row.len();
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut s_buf = [0.0f32; MAX_TILE_K];
+    let mut j0 = 0usize;
+    while j0 < len {
+        let jt = (j0 + tile_k).min(len);
+        let mut smax = f32::NEG_INFINITY;
+        for j in j0..jt {
+            let slot = slot_row[j] as usize;
+            let s = dot(qrow, &kd[(slot * kvh + g) * d..][..d]) * scale;
+            s_buf[j - j0] = s;
+            if s > smax {
+                smax = s;
+            }
+        }
+        let m_new = m.max(smax);
+        // exp(-inf - finite) is 0, but -inf - -inf is NaN: the initial
+        // accumulator carries zero weight either way
+        let alpha = if m == f32::NEG_INFINITY { 0.0 } else { (m - m_new).exp() };
+        if alpha != 1.0 {
+            scale_row(orow, alpha);
+        }
+        let mut lsum = 0.0f32;
+        for j in j0..jt {
+            let p = (s_buf[j - j0] - m_new).exp();
+            lsum += p;
+            let slot = slot_row[j] as usize;
+            axpy(orow, p, &vd[(slot * kvh + g) * d..][..d]);
+        }
+        l = l * alpha + lsum;
+        m = m_new;
+        j0 = jt;
+    }
+    (m, l)
+}
+
+/// One decode row on the scalar path — the per-row loop of
+/// [`super::scalar::chunk_fwd`] (naive serial dot, one full-width score
+/// pass) with slot-gathered kv rows. Returns the pre-finalize `(m, l)`.
+#[allow(clippy::too_many_arguments)]
+fn decode_row_scalar(
+    qrow: &[f32],
+    kd: &[f32],
+    vd: &[f32],
+    slot_row: &[f32],
+    g: usize,
+    kvh: usize,
+    d: usize,
+    scale: f32,
+    orow: &mut [f32],
+) -> (f32, f32) {
+    let len = slot_row.len();
+    let mut s_row = vec![0.0f32; len];
+    let mut smax = f32::NEG_INFINITY;
+    for (j, s) in s_row.iter_mut().enumerate() {
+        let slot = slot_row[j] as usize;
+        let krow = &kd[(slot * kvh + g) * d..(slot * kvh + g) * d + d];
+        let naive: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+        *s = naive * scale;
+        if *s > smax {
+            smax = *s;
+        }
+    }
+    // m starts at -inf with a zeroed accumulator, so the scalar path's
+    // alpha-rescale of the empty orow is a no-op exactly as in chunk_fwd
+    let m_new = smax;
+    let mut lsum = 0.0f32;
+    for (j, s) in s_row.iter().enumerate() {
+        let p = (s - m_new).exp();
+        lsum += p;
+        let slot = slot_row[j] as usize;
+        let vrow = &vd[(slot * kvh + g) * d..(slot * kvh + g) * d + d];
+        for (x, vv) in orow.iter_mut().zip(vrow) {
+            *x += p * vv;
+        }
+    }
+    (m_new, lsum)
+}

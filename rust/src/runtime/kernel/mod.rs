@@ -12,6 +12,12 @@
 //!   cache-blocked q×kv tiles with a blocked online softmax, fixed-width
 //!   accumulator arrays the compiler auto-vectorizes on stable Rust, and a
 //!   scoped-thread worker pool over independent (head, q-tile) units.
+//!   Tile geometry is a runtime value ([`tiled::Tiles`], default = the
+//!   original compile-time pick) with an opt-in cached startup sweep
+//!   ([`tiled::autotune`]).
+//! * [`decode`] — the serving decode kernel: one query row per running
+//!   request against its paged KV-cache, scalar oracle + tiled default,
+//!   bit-identical per path to the matching `full_attn_ref` rows.
 //!
 //! The tiled kernels are deterministic *per thread count and across
 //! thread counts*: every floating-point reduction (a q row's online
@@ -21,8 +27,11 @@
 //! `threads=8` bit-for-bit, and a pinned thread count reproduces a traced
 //! run exactly.
 
+pub mod decode;
 pub mod scalar;
 pub mod tiled;
+
+pub use tiled::{Tiles, MAX_TILE_K, MAX_TILE_Q};
 
 use anyhow::{bail, ensure, Result};
 

@@ -28,7 +28,9 @@
 
 use std::mem;
 use std::ops::Range;
+use std::sync::OnceLock;
 use std::thread;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -42,10 +44,93 @@ pub(crate) const TILE_Q: usize = 32;
 /// at d=128, sized for L1/L2 reuse across the whole q tile.
 pub(crate) const TILE_K: usize = 64;
 
+/// Largest q-tile the fixed stack buffers can hold (the sweep's ceiling).
+pub const MAX_TILE_Q: usize = 64;
+/// Largest kv-tile the fixed stack buffers can hold (the sweep's ceiling).
+pub const MAX_TILE_K: usize = 128;
+
+/// Runtime-selected tile geometry for the blocked kernels. The default is
+/// the original compile-time pick (`TILE_Q` × `TILE_K`), so runs that
+/// never opt into the autotune sweep stay bit-identical to every earlier
+/// pin. Different tile shapes are *not* bit-identical to each other (the
+/// blocked softmax rescales at tile boundaries), which is why the sweep
+/// is opt-in (`RunSpec::autotune_tiles`) and the effective pick is
+/// recorded in the trace — but any fixed `Tiles` is still bit-identical
+/// across thread counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiles {
+    /// q rows per tile (1..=`MAX_TILE_Q`).
+    pub q: usize,
+    /// kv columns per tile (1..=`MAX_TILE_K`).
+    pub k: usize,
+}
+
+impl Default for Tiles {
+    fn default() -> Self {
+        Tiles { q: TILE_Q, k: TILE_K }
+    }
+}
+
+impl Tiles {
+    /// Startup-sweep candidates, default geometry first (ties keep it).
+    pub const CANDIDATES: [Tiles; 9] = [
+        Tiles { q: 32, k: 64 },
+        Tiles { q: 16, k: 32 },
+        Tiles { q: 16, k: 64 },
+        Tiles { q: 16, k: 128 },
+        Tiles { q: 32, k: 32 },
+        Tiles { q: 32, k: 128 },
+        Tiles { q: 64, k: 32 },
+        Tiles { q: 64, k: 64 },
+        Tiles { q: 64, k: 128 },
+    ];
+
+    /// Clamp into the stack buffers' capacity — callers may deserialize
+    /// arbitrary geometry, the kernels must never index past `MAX_TILE_*`.
+    pub fn clamped(self) -> Tiles {
+        Tiles { q: self.q.clamp(1, MAX_TILE_Q), k: self.k.clamp(1, MAX_TILE_K) }
+    }
+}
+
+/// One-shot cached tile sweep: time the causal forward over
+/// [`Tiles::CANDIDATES`] on a small synthetic workload at one thread and
+/// keep the fastest. Cached per process (`OnceLock`), so the cost is paid
+/// at first kernel use only — the ROADMAP's "per-machine cached choice".
+pub fn autotune() -> Tiles {
+    static TUNED: OnceLock<Tiles> = OnceLock::new();
+    *TUNED.get_or_init(|| {
+        let (h, kvh, n, d) = (4usize, 2usize, 192usize, 64usize);
+        let mut rng = crate::util::Rng::new(0x7113);
+        let q = Tensor::new(vec![h, n, d], rng.normal_vec(h * n * d));
+        let k = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+        let v = Tensor::new(vec![kvh, n, d], rng.normal_vec(kvh * n * d));
+        let o0 = Tensor::zeros(&q.shape);
+        let m0 = Tensor::full(&[h, n], f32::NEG_INFINITY);
+        let l0 = Tensor::zeros(&[h, n]);
+        let mut best = Tiles::default();
+        let mut best_s = f64::INFINITY;
+        for &cand in Tiles::CANDIDATES.iter() {
+            // best-of-3 so one scheduler hiccup cannot flip the pick; the
+            // sweep needs a stable relative order, not absolute seconds
+            let mut s = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let _ = chunk_fwd("autotune", &q, &k, &v, &o0, &m0, &l0, true, 1, cand);
+                s = s.min(t0.elapsed().as_secs_f64());
+            }
+            if s < best_s {
+                best_s = s;
+                best = cand;
+            }
+        }
+        best
+    })
+}
+
 /// Run one closure per task — inline when there is a single task, on a
 /// scoped worker pool otherwise. Tasks own disjoint output slices, so the
 /// pool needs no synchronization beyond the scope join.
-fn run_tasks<T: Send, F: Fn(T) + Sync>(tasks: Vec<T>, f: F) {
+pub(crate) fn run_tasks<T: Send, F: Fn(T) + Sync>(tasks: Vec<T>, f: F) {
     if tasks.len() <= 1 {
         for t in tasks {
             f(t);
@@ -102,16 +187,17 @@ fn fwd_unit(
     d: usize,
     causal: bool,
     scale: f32,
+    tile_k: usize,
     o_u: &mut [f32],
     m_u: &mut [f32],
     l_u: &mut [f32],
 ) {
     let kbase = (u.hh / group) * ck;
     let jlim = if causal { u.i_hi } else { ck };
-    let mut s_buf = [0.0f32; TILE_K];
+    let mut s_buf = [0.0f32; MAX_TILE_K];
     let mut j0 = 0usize;
     while j0 < jlim {
-        let jt = (j0 + TILE_K).min(jlim);
+        let jt = (j0 + tile_k).min(jlim);
         for (r, i) in (u.i_lo..u.i_hi).enumerate() {
             let jmax = if causal { i + 1 } else { ck };
             if j0 >= jmax {
@@ -163,7 +249,9 @@ pub fn chunk_fwd(
     l0: &Tensor,
     causal: bool,
     threads: usize,
+    tiles: Tiles,
 ) -> Result<Vec<Tensor>> {
+    let tiles = tiles.clamped();
     let (h, cq, d) = dims3(name, q)?;
     let (kvh, ck, dk) = dims3(name, k)?;
     ensure!(d == dk && k.shape == v.shape, "{name}: k/v shape mismatch");
@@ -181,7 +269,7 @@ pub fn chunk_fwd(
     for hh in 0..h {
         let mut i_lo = 0usize;
         while i_lo < cq {
-            let i_hi = (i_lo + TILE_Q).min(cq);
+            let i_hi = (i_lo + tiles.q).min(cq);
             // score-element count: the causal lower triangle makes late
             // q tiles heavier, so the partition balances by work, not rows
             let cost: f64 = if causal {
@@ -220,6 +308,7 @@ pub fn chunk_fwd(
                 d,
                 causal,
                 scale,
+                tiles.k,
                 &mut o_g[row0 * d..(row0 + rows) * d],
                 &mut m_g[row0..row0 + rows],
                 &mut l_g[row0..row0 + rows],
@@ -249,15 +338,16 @@ fn bwd_head(
     d: usize,
     causal: bool,
     scale: f32,
+    tiles: Tiles,
     dq_h: &mut [f32],
     pk_h: &mut [f32],
     pv_h: &mut [f32],
 ) {
     let kbase = (hh / group) * ck;
-    let mut delta = [0.0f32; TILE_Q];
+    let mut delta = [0.0f32; MAX_TILE_Q];
     let mut i0 = 0usize;
     while i0 < cq {
-        let it = (i0 + TILE_Q).min(cq);
+        let it = (i0 + tiles.q).min(cq);
         for (r, i) in (i0..it).enumerate() {
             let ri = hh * cq + i;
             delta[r] = dot(&dod[ri * d..][..d], &od[ri * d..][..d]);
@@ -265,7 +355,7 @@ fn bwd_head(
         let jlim = if causal { it } else { ck };
         let mut j0 = 0usize;
         while j0 < jlim {
-            let jt = (j0 + TILE_K).min(jlim);
+            let jt = (j0 + tiles.k).min(jlim);
             for (r, i) in (i0..it).enumerate() {
                 let jmax = if causal { i + 1 } else { ck };
                 if j0 >= jmax {
@@ -311,7 +401,9 @@ pub fn chunk_bwd(
     do_: &Tensor,
     causal: bool,
     threads: usize,
+    tiles: Tiles,
 ) -> Result<Vec<Tensor>> {
+    let tiles = tiles.clamped();
     let (h, cq, d) = dims3(name, q)?;
     let (kvh, ck, dk_) = dims3(name, k)?;
     ensure!(d == dk_ && k.shape == v.shape, "{name}: k/v shape mismatch");
@@ -361,6 +453,7 @@ pub fn chunk_bwd(
                 d,
                 causal,
                 scale,
+                tiles,
                 &mut dq_g[n * cq * d..(n + 1) * cq * d],
                 &mut pk_g[n * ck * d..(n + 1) * ck * d],
                 &mut pv_g[n * ck * d..(n + 1) * ck * d],
@@ -485,12 +578,13 @@ pub fn full_attn_ref(
     k: &Tensor,
     v: &Tensor,
     threads: usize,
+    tiles: Tiles,
 ) -> Result<Vec<Tensor>> {
     let (h, n, _d) = dims3(name, q)?;
     let o0 = Tensor::zeros(&q.shape);
     let m0 = Tensor::full(&[h, n], f32::NEG_INFINITY);
     let l0 = Tensor::zeros(&[h, n]);
-    let oml = chunk_fwd(name, q, k, v, &o0, &m0, &l0, true, threads)?;
+    let oml = chunk_fwd(name, q, k, v, &o0, &m0, &l0, true, threads, tiles)?;
     finalize(
         name,
         &[

@@ -14,4 +14,5 @@ pub mod tensor;
 pub use artifacts::{load_tensor_bin, save_tensor_bin, Manifest, ModelConfigJson, StepState};
 pub use client::{Runtime, RuntimeStats};
 pub use hostref::{HostKernels, KernelMode, Kernels, NullKernels};
+pub use kernel::Tiles;
 pub use tensor::{ITensor, Tensor, Value};

@@ -1,0 +1,243 @@
+//! Paged KV-cache allocator — fixed-size pages over a flat slot slab.
+//!
+//! The serving analogue of vLLM/TGI block allocation: the cache owns
+//! `n_pages` pages of `page_size` token slots each, hands pages out from
+//! a LIFO free list, and keeps a per-request page table mapping token
+//! positions to slots. Storage is two flat `f32` slabs (k and v) laid
+//! out `[slot][kv_head][head_dim]` — exactly the addressing the
+//! [`crate::runtime::kernel::decode`] kernel expects (`slots` input =
+//! the page-table walk, gathered in position order).
+//!
+//! Everything here is deterministic: the free list is seeded in
+//! descending page order so allocation hands out page 0 first, pops are
+//! LIFO, and eviction returns a request's pages in reverse allocation
+//! order — so the next allocation reuses the most recently freed page.
+//! Two caches driven through the same call sequence produce identical
+//! slot assignments (pinned by `rust/tests/serving_properties.rs`).
+//!
+//! Invariants (pinned by the property tests):
+//! * **no aliasing** — live requests never share a slot;
+//! * **conservation** — `free_pages() + used_pages() == n_pages` after
+//!   every operation;
+//! * **reuse** — pages freed by [`PagedKvCache::evict`] are handed out
+//!   again before any never-used page.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+/// One request's resident KV state: the pages it owns, in allocation
+/// order, and how many token positions are filled.
+#[derive(Clone, Debug)]
+pub struct PageTable {
+    pub pages: Vec<usize>,
+    pub len: usize,
+}
+
+/// Fixed-size-page slot allocator plus the flat k/v slabs it indexes.
+#[derive(Clone, Debug)]
+pub struct PagedKvCache {
+    page_size: usize,
+    n_pages: usize,
+    kvh: usize,
+    d: usize,
+    /// LIFO free list (top = `last()`); seeded descending so the first
+    /// pops hand out pages 0, 1, 2, ...
+    free: Vec<usize>,
+    /// Live request id → page table. `BTreeMap` keeps iteration (and
+    /// therefore debugging output) deterministic.
+    tables: BTreeMap<usize, PageTable>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl PagedKvCache {
+    pub fn new(page_size: usize, n_pages: usize, kvh: usize, d: usize) -> PagedKvCache {
+        assert!(page_size >= 1 && n_pages >= 1 && kvh >= 1 && d >= 1);
+        let slots = n_pages * page_size;
+        PagedKvCache {
+            page_size,
+            n_pages,
+            kvh,
+            d,
+            free: (0..n_pages).rev().collect(),
+            tables: BTreeMap::new(),
+            k: vec![0.0; slots * kvh * d],
+            v: vec![0.0; slots * kvh * d],
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_pages * self.page_size
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.tables.values().map(|t| t.pages.len()).sum()
+    }
+
+    pub fn live_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Resident token count of a request (0 if absent).
+    pub fn len(&self, req: usize) -> usize {
+        self.tables.get(&req).map(|t| t.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tables.is_empty()
+    }
+
+    /// Pages needed to hold `tokens` positions.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Would appending `tokens` more positions to `req` (which may not
+    /// exist yet) succeed without exhausting the free list?
+    pub fn fits(&self, req: usize, tokens: usize) -> bool {
+        let (have_pages, have_len) = match self.tables.get(&req) {
+            Some(t) => (t.pages.len(), t.len),
+            None => (0, 0),
+        };
+        let need = self.pages_for(have_len + tokens);
+        need <= have_pages + self.free.len()
+    }
+
+    /// Append `tokens` new positions to `req`, writing their kv rows.
+    /// `k_rows`/`v_rows` are `tokens × kvh × d` values in position-major
+    /// order — position `p`'s kv head `g` at `(p * kvh + g) * d`, the
+    /// same layout the slab stores per slot. Allocates pages on demand;
+    /// fails (without partial mutation) when the free list runs dry.
+    pub fn append(&mut self, req: usize, k_rows: &[f32], v_rows: &[f32]) -> Result<()> {
+        let row = self.kvh * self.d;
+        ensure!(
+            !k_rows.is_empty() && k_rows.len() == v_rows.len() && k_rows.len() % row == 0,
+            "append(req {req}): k/v rows must be equal non-empty multiples of kvh*d = {row} \
+             (got {} and {})",
+            k_rows.len(),
+            v_rows.len()
+        );
+        let tokens = k_rows.len() / row;
+        if !self.fits(req, tokens) {
+            bail!(
+                "append(req {req}): {tokens} token(s) need more pages than the {} free \
+                 (page_size {}, {} live requests)",
+                self.free.len(),
+                self.page_size,
+                self.tables.len()
+            );
+        }
+        let table = self
+            .tables
+            .entry(req)
+            .or_insert_with(|| PageTable { pages: Vec::new(), len: 0 });
+        for p in 0..tokens {
+            let pos = table.len + p;
+            let page_idx = pos / self.page_size;
+            if page_idx == table.pages.len() {
+                table.pages.push(self.free.pop().expect("fits() checked above"));
+            }
+            let slot = table.pages[page_idx] * self.page_size + pos % self.page_size;
+            self.k[slot * row..(slot + 1) * row].copy_from_slice(&k_rows[p * row..(p + 1) * row]);
+            self.v[slot * row..(slot + 1) * row].copy_from_slice(&v_rows[p * row..(p + 1) * row]);
+        }
+        table.len += tokens;
+        Ok(())
+    }
+
+    /// Slot ids of a request's resident positions, in position order —
+    /// the decode kernel's `slots` row.
+    pub fn slots(&self, req: usize) -> Result<Vec<usize>> {
+        let Some(t) = self.tables.get(&req) else {
+            bail!("slots(req {req}): not resident");
+        };
+        Ok((0..t.len)
+            .map(|pos| t.pages[pos / self.page_size] * self.page_size + pos % self.page_size)
+            .collect())
+    }
+
+    /// Release a request's pages back to the free list (reverse
+    /// allocation order, so the most recently allocated page is reused
+    /// first). Returns how many pages were freed.
+    pub fn evict(&mut self, req: usize) -> Result<usize> {
+        let Some(t) = self.tables.remove(&req) else {
+            bail!("evict(req {req}): not resident");
+        };
+        let n = t.pages.len();
+        self.free.extend(t.pages.into_iter().rev());
+        Ok(n)
+    }
+
+    /// The k slab, `[n_slots][kvh][d]` flattened.
+    pub fn k_slab(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// The v slab, `[n_slots][kvh][d]` flattened.
+    pub fn v_slab(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_lookup_roundtrip_across_pages() {
+        let (kvh, d) = (2, 4);
+        let mut c = PagedKvCache::new(4, 8, kvh, d);
+        // 6 tokens spans two pages
+        let k: Vec<f32> = (0..6 * kvh * d).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..6 * kvh * d).map(|i| -(i as f32)).collect();
+        c.append(7, &k, &v).unwrap();
+        assert_eq!(c.len(7), 6);
+        assert_eq!(c.used_pages(), 2);
+        let slots = c.slots(7).unwrap();
+        assert_eq!(slots.len(), 6);
+        let row = kvh * d;
+        for (pos, &s) in slots.iter().enumerate() {
+            assert_eq!(c.k_slab()[s * row..(s + 1) * row], k[pos * row..(pos + 1) * row]);
+            assert_eq!(c.v_slab()[s * row..(s + 1) * row], v[pos * row..(pos + 1) * row]);
+        }
+    }
+
+    #[test]
+    fn out_of_pages_is_an_error_and_mutates_nothing() {
+        let mut c = PagedKvCache::new(2, 2, 1, 1);
+        c.append(0, &[1.0; 3], &[1.0; 3]).unwrap(); // 2 pages
+        assert_eq!(c.free_pages(), 0);
+        assert!(!c.fits(1, 1));
+        assert!(c.append(1, &[2.0], &[2.0]).is_err());
+        assert_eq!(c.live_requests(), 1);
+        assert_eq!(c.len(0), 3);
+        // growing the resident request also fails: both its pages are full
+        assert!(c.append(0, &[3.0; 2], &[3.0; 2]).is_err());
+        // ...but the last slot of its second page is still appendable
+        assert!(c.fits(0, 1));
+        c.append(0, &[4.0], &[4.0]).unwrap();
+        assert_eq!(c.len(0), 4);
+    }
+
+    #[test]
+    fn evict_rejects_unknown_requests() {
+        let mut c = PagedKvCache::new(2, 2, 1, 1);
+        assert!(c.evict(3).is_err());
+        c.append(3, &[1.0], &[1.0]).unwrap();
+        assert_eq!(c.evict(3).unwrap(), 1);
+        assert!(c.evict(3).is_err());
+    }
+}

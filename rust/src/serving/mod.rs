@@ -1,0 +1,526 @@
+//! Inference serving: continuous-batching decode on the schedule IR.
+//!
+//! The serving subsystem reuses the training stack's
+//! plan → simulate → execute → trace spine for the *other* half of an
+//! LLM's life: a [`ServeSpec`] (the [`crate::coordinator::RunSpec`]
+//! sibling) declares a workload, an arrival process ([`Arrivals`]), and
+//! the batching/backpressure knobs; [`serve`] then
+//!
+//! 1. draws the request stream ([`scheduler::gen_requests`]),
+//! 2. runs the TGI-shaped continuous-batching loop on a virtual clock
+//!    ([`scheduler::schedule`]) — admit from a bounded queue, filter
+//!    finished requests out of the running batch, concatenate waiting
+//!    prefills into the decode batch under a token budget, with the
+//!    varlen rebalancer spreading prefill waves across ranks,
+//! 3. lowers the step log to a lockstep [`crate::coordinator::Pass::Decode`]
+//!    plan ([`scheduler::lower`]) over the `KvAppend` / `KvLookup` /
+//!    `KvEvict` / `DecodeAttn` op kinds,
+//! 4. scores it with the event engine (tokens/sec, p50/p99 latency —
+//!    [`ServeScore`]), and
+//! 5. on the hostref backend, replays the log with real kernels over
+//!    per-rank paged KV-caches ([`PagedKvCache`]), checks every decode
+//!    row bit-for-bit against a one-shot full-prefill oracle, and
+//!    calibrates the measured trace back through the simulator
+//!    ([`ServeExec`]).
+//!
+//! The executed replay runs the admission schedule as fast as the host
+//! allows (arrival gaps are not slept), so its latency quantiles are
+//! completion times since run start; measured tokens/sec is the
+//! throughput gate (`repro bench --serve-out`, `BENCH_serve.json`).
+//! The serial no-batching baseline (`batching: false`) is the same loop
+//! restricted to one request in flight — the 2x comparison arm.
+
+pub mod kvcache;
+pub mod scheduler;
+
+pub use kvcache::{PageTable, PagedKvCache};
+pub use scheduler::{
+    gen_requests, quantile, rank_ops, Executed, Lowered, OpRole, Request, ServeLog, ServeScore,
+    StepLog,
+};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::baselines::attn_cost_from_dims;
+use crate::config::ClusterSpec;
+use crate::coordinator::executor::MergedTrace;
+use crate::coordinator::session::{
+    cluster_from_json, cluster_to_json, opt_bool, opt_f64, opt_usize, u64_from_json, u64_to_json,
+    BackendSpec, Workload,
+};
+use crate::report::trace as trace_report;
+use crate::runtime::kernel::tiled::autotune;
+use crate::runtime::Tiles;
+use crate::util::Json;
+
+/// Request arrival process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arrivals {
+    /// Open-loop Poisson stream: exponential inter-arrival gaps with the
+    /// given mean rate (requests per virtual second).
+    Poisson { rate: f64 },
+    /// Trace replay: explicit absolute arrival times, one per request,
+    /// sorted non-decreasing.
+    Replay { times_s: Vec<f64> },
+}
+
+/// Everything one serving run depends on, declared up front — the
+/// serving sibling of [`crate::coordinator::RunSpec`]. Construct with
+/// [`ServeSpec::dev`] and override fields with struct-update syntax;
+/// serialize with [`ServeSpec::to_json`] / [`ServeSpec::from_json`]
+/// (the `repro serve --spec` contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpec {
+    /// Head geometry; `chunk_tokens` is the reference chunk the cost
+    /// classes are resolved at (serving scales every op by
+    /// `tokens / chunk_tokens`).
+    pub workload: Workload,
+    /// Serving ranks: each owns a paged KV-cache and runs its share of
+    /// the batch.
+    pub n_workers: usize,
+    /// Topology the cost classes price against.
+    pub cluster: ClusterSpec,
+    /// `HostRef` executes + oracle-checks; `Null` stops after
+    /// simulation. `Pjrt` is rejected — decode artifacts don't exist.
+    pub backend: BackendSpec,
+    pub arrivals: Arrivals,
+    pub n_requests: usize,
+    /// Maximum prompt length; actual prompts are uniform on
+    /// `[(1 - prompt_spread) * prompt_tokens, prompt_tokens]`.
+    pub prompt_tokens: usize,
+    /// Prompt-length jitter in `[0, 1]` (0 = every prompt is exactly
+    /// `prompt_tokens`).
+    pub prompt_spread: f64,
+    /// Tokens generated per request (one per decode step).
+    pub decode_tokens: usize,
+    /// Token budget over the whole running batch: a request's full
+    /// lifetime context (`prompt + decode`) is reserved at admission.
+    pub max_batch_tokens: usize,
+    /// Bounded waiting-queue capacity; arrivals beyond it are deferred.
+    pub queue_cap: usize,
+    /// KV-cache page size (token slots per page).
+    pub page_size: usize,
+    /// KV-cache pages *per rank*.
+    pub n_pages: usize,
+    /// `true` = continuous batching; `false` = the serial no-batching
+    /// baseline (one request in flight, ever).
+    pub batching: bool,
+    /// Host-kernel worker threads per rank (clamped to the machine's
+    /// available parallelism at execution).
+    pub threads: usize,
+    /// Pick decode/prefill tile geometry with the cached startup sweep
+    /// ([`autotune`]) instead of the default tiles; the effective pick
+    /// is recorded in the executed trace.
+    pub autotune_tiles: bool,
+    /// Seed for the arrival draw and per-request synthetic tensors.
+    pub seed: u64,
+}
+
+impl ServeSpec {
+    /// Small, fast preset on the 2×8-dev cluster: 4 ranks, a bursty
+    /// Poisson stream (mean inter-arrival = 1/16 of a reference-chunk
+    /// attention pair, so the batch fills quickly), and dims small
+    /// enough to execute in well under a second.
+    pub fn dev() -> ServeSpec {
+        let workload = Workload::new(4, 2, 16, 12);
+        let cluster = ClusterSpec::cluster_16x40g();
+        let cost = attn_cost_from_dims(
+            &cluster,
+            workload.chunk_tokens as f64,
+            workload.n_heads,
+            workload.n_kv_heads,
+            workload.head_dim,
+        );
+        let rate = 16.0 / cost.pair_full_s.max(1e-30);
+        ServeSpec {
+            workload,
+            n_workers: 4,
+            cluster,
+            backend: BackendSpec::HostRef,
+            arrivals: Arrivals::Poisson { rate },
+            n_requests: 12,
+            prompt_tokens: 12,
+            prompt_spread: 0.5,
+            decode_tokens: 6,
+            max_batch_tokens: 256,
+            queue_cap: 16,
+            page_size: 8,
+            n_pages: 12,
+            batching: true,
+            threads: 1,
+            autotune_tiles: false,
+            seed: 7,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let w = &self.workload;
+        ensure!(
+            w.n_heads >= 1 && w.n_kv_heads >= 1 && w.head_dim >= 1 && w.chunk_tokens >= 1,
+            "workload dims must all be >= 1 (got {w:?})"
+        );
+        ensure!(
+            w.n_heads % w.n_kv_heads == 0,
+            "{} query heads not divisible by {} kv heads",
+            w.n_heads,
+            w.n_kv_heads
+        );
+        for (name, v) in [
+            ("n_workers", self.n_workers),
+            ("n_requests", self.n_requests),
+            ("prompt_tokens", self.prompt_tokens),
+            ("decode_tokens", self.decode_tokens),
+            ("queue_cap", self.queue_cap),
+            ("page_size", self.page_size),
+            ("n_pages", self.n_pages),
+            ("threads", self.threads),
+        ] {
+            ensure!(v >= 1, "{name} must be >= 1");
+        }
+        ensure!(
+            self.prompt_spread.is_finite() && (0.0..=1.0).contains(&self.prompt_spread),
+            "prompt_spread must be in [0, 1] (got {})",
+            self.prompt_spread
+        );
+        // progress guarantees: the largest possible request must fit an
+        // empty rank's pages and the token budget alone, so admission
+        // can never wedge
+        let max_ctx = self.prompt_tokens + self.decode_tokens;
+        ensure!(
+            max_ctx.div_ceil(self.page_size) <= self.n_pages,
+            "a full request ({max_ctx} tokens = {} pages of {}) exceeds the {} pages per rank",
+            max_ctx.div_ceil(self.page_size),
+            self.page_size,
+            self.n_pages
+        );
+        ensure!(
+            max_ctx <= self.max_batch_tokens,
+            "a full request ({max_ctx} tokens) exceeds max_batch_tokens = {}",
+            self.max_batch_tokens
+        );
+        match &self.arrivals {
+            Arrivals::Poisson { rate } => {
+                ensure!(
+                    rate.is_finite() && *rate > 0.0,
+                    "poisson arrival rate must be positive and finite (got {rate})"
+                );
+            }
+            Arrivals::Replay { times_s } => {
+                ensure!(
+                    times_s.len() == self.n_requests,
+                    "replay has {} arrival times for {} requests",
+                    times_s.len(),
+                    self.n_requests
+                );
+                for (i, t) in times_s.iter().enumerate() {
+                    ensure!(
+                        t.is_finite() && *t >= 0.0,
+                        "replay time {i} must be finite and non-negative (got {t})"
+                    );
+                    ensure!(
+                        i == 0 || times_s[i - 1] <= *t,
+                        "replay times must be sorted non-decreasing (index {i})"
+                    );
+                }
+            }
+        }
+        if let BackendSpec::Pjrt(_) = &self.backend {
+            bail!("serving has no PJRT decode artifacts; use the hostref or null backend");
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `repro serve --spec` JSON document. Floats print
+    /// in Rust's shortest round-trip form, so `from_json(to_json(s)) == s`
+    /// exactly.
+    pub fn to_json(&self) -> String {
+        let w = &self.workload;
+        let workload = format!(
+            "{{\"n_heads\": {}, \"n_kv_heads\": {}, \"head_dim\": {}, \"chunk_tokens\": {}}}",
+            w.n_heads, w.n_kv_heads, w.head_dim, w.chunk_tokens
+        );
+        let cluster = cluster_to_json(&self.cluster);
+        let backend = match &self.backend {
+            BackendSpec::HostRef => "\"hostref\"",
+            BackendSpec::Null => "\"null\"",
+            BackendSpec::Pjrt(_) => "\"pjrt-unsupported\"",
+        };
+        let arrivals = match &self.arrivals {
+            Arrivals::Poisson { rate } => format!("{{\"poisson\": {{\"rate\": {rate}}}}}"),
+            Arrivals::Replay { times_s } => {
+                let parts: Vec<String> = times_s.iter().map(|t| t.to_string()).collect();
+                format!("{{\"replay\": {{\"times_s\": [{}]}}}}", parts.join(", "))
+            }
+        };
+        format!(
+            "{{\n  \"workload\": {workload},\n  \"n_workers\": {},\n  \"cluster\": {cluster},\n  \
+             \"backend\": {backend},\n  \"arrivals\": {arrivals},\n  \"n_requests\": {},\n  \
+             \"prompt_tokens\": {},\n  \"prompt_spread\": {},\n  \"decode_tokens\": {},\n  \
+             \"max_batch_tokens\": {},\n  \"queue_cap\": {},\n  \"page_size\": {},\n  \
+             \"n_pages\": {},\n  \"batching\": {},\n  \"threads\": {},\n  \
+             \"autotune_tiles\": {},\n  \"seed\": {}\n}}\n",
+            self.n_workers,
+            self.n_requests,
+            self.prompt_tokens,
+            self.prompt_spread,
+            self.decode_tokens,
+            self.max_batch_tokens,
+            self.queue_cap,
+            self.page_size,
+            self.n_pages,
+            self.batching,
+            self.threads,
+            self.autotune_tiles,
+            u64_to_json(self.seed),
+        )
+    }
+
+    /// Parse a `repro serve --spec` document. Missing optional fields
+    /// fall back to the [`ServeSpec::dev`] preset; the `cluster` field
+    /// also accepts a preset name (`"1x8"`, `"2x8"`, `"dev"`).
+    pub fn from_json(s: &str) -> Result<ServeSpec> {
+        let j = Json::parse(s).map_err(|e| anyhow!("bad ServeSpec JSON: {e}"))?;
+        let d = ServeSpec::dev();
+        let workload = match j.get("workload") {
+            None | Some(Json::Null) => d.workload.clone(),
+            Some(w) => Workload {
+                n_heads: w
+                    .at("n_heads")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.n_heads must be an integer"))?,
+                n_kv_heads: w
+                    .at("n_kv_heads")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.n_kv_heads must be an integer"))?,
+                head_dim: w
+                    .at("head_dim")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.head_dim must be an integer"))?,
+                chunk_tokens: w
+                    .at("chunk_tokens")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("workload.chunk_tokens must be an integer"))?,
+            },
+        };
+        let backend = match j.get("backend") {
+            None | Some(Json::Null) => BackendSpec::HostRef,
+            Some(Json::Str(s)) => match s.as_str() {
+                "hostref" | "host" => BackendSpec::HostRef,
+                "null" => BackendSpec::Null,
+                other => bail!("unknown serving backend {other:?} (hostref | null)"),
+            },
+            Some(_) => bail!("serving backend must be a string (hostref | null)"),
+        };
+        let arrivals = match j.get("arrivals") {
+            None | Some(Json::Null) => d.arrivals.clone(),
+            Some(a) => {
+                if let Some(p) = a.get("poisson") {
+                    Arrivals::Poisson {
+                        rate: p
+                            .at("rate")
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("arrivals.poisson.rate must be a number"))?,
+                    }
+                } else if let Some(r) = a.get("replay") {
+                    let arr = r.at("times_s").as_arr().ok_or_else(|| {
+                        anyhow!("arrivals.replay.times_s must be an array of numbers")
+                    })?;
+                    let mut times_s = Vec::with_capacity(arr.len());
+                    for (i, t) in arr.iter().enumerate() {
+                        times_s.push(t.as_f64().ok_or_else(|| {
+                            anyhow!("arrivals.replay.times_s[{i}] must be a number")
+                        })?);
+                    }
+                    Arrivals::Replay { times_s }
+                } else {
+                    bail!("arrivals must be {{\"poisson\": ...}} or {{\"replay\": ...}}")
+                }
+            }
+        };
+        Ok(ServeSpec {
+            workload,
+            n_workers: opt_usize(&j, "n_workers", "", d.n_workers)?,
+            cluster: cluster_from_json(j.get("cluster"), d.cluster.clone())?,
+            backend,
+            arrivals,
+            n_requests: opt_usize(&j, "n_requests", "", d.n_requests)?,
+            prompt_tokens: opt_usize(&j, "prompt_tokens", "", d.prompt_tokens)?,
+            prompt_spread: opt_f64(&j, "prompt_spread", "", d.prompt_spread)?,
+            decode_tokens: opt_usize(&j, "decode_tokens", "", d.decode_tokens)?,
+            max_batch_tokens: opt_usize(&j, "max_batch_tokens", "", d.max_batch_tokens)?,
+            queue_cap: opt_usize(&j, "queue_cap", "", d.queue_cap)?,
+            page_size: opt_usize(&j, "page_size", "", d.page_size)?,
+            n_pages: opt_usize(&j, "n_pages", "", d.n_pages)?,
+            batching: opt_bool(&j, "batching", "", d.batching)?,
+            threads: opt_usize(&j, "threads", "", d.threads)?,
+            autotune_tiles: opt_bool(&j, "autotune_tiles", "", d.autotune_tiles)?,
+            seed: u64_from_json(j.at("seed"), "seed")?.unwrap_or(d.seed),
+        })
+    }
+}
+
+/// The executed leg of a serving run (hostref backend only).
+pub struct ServeExec {
+    /// Measured score: tokens/sec over the span makespan; latency
+    /// quantiles are completion times since run start (the replay does
+    /// not sleep through arrival gaps).
+    pub score: ServeScore,
+    /// Rank-merged per-op timeline (threads + tiles recorded).
+    pub trace: MergedTrace,
+    /// Decode output values compared bit-for-bit against the one-shot
+    /// full-prefill oracle.
+    pub checked_values: usize,
+    pub mismatched_values: usize,
+    /// Event-engine makespan under the trace-calibrated cost.
+    pub calibrated_total_s: f64,
+    /// |measured − calibrated sim| / measured — the same self-consistency
+    /// figure the training trace report renders.
+    pub calibration_rel_err: f64,
+}
+
+/// Everything one [`serve`] call produces.
+pub struct ServeOutcome {
+    pub spec: ServeSpec,
+    pub requests: Vec<Request>,
+    /// The virtual-clock schedule (step log, per-request finish steps,
+    /// queue stats).
+    pub log: ServeLog,
+    /// The lowered decode plan plus its op maps.
+    pub lowered: Lowered,
+    /// Event-engine score of the lowered plan (matches the virtual
+    /// clock to ~1e-9 — the plan is lockstep with no transfers).
+    pub sim: ServeScore,
+    /// Executed + oracle-checked leg; `None` on the null backend.
+    pub exec: Option<ServeExec>,
+}
+
+/// Run one serving workload end to end: generate arrivals, schedule,
+/// lower, simulate, and (hostref) execute + oracle-check + calibrate.
+pub fn serve(spec: &ServeSpec) -> Result<ServeOutcome> {
+    spec.validate()?;
+    let w = &spec.workload;
+    let cost = attn_cost_from_dims(
+        &spec.cluster,
+        w.chunk_tokens as f64,
+        w.n_heads,
+        w.n_kv_heads,
+        w.head_dim,
+    );
+    let requests = scheduler::gen_requests(spec);
+    let log = scheduler::schedule(spec, &requests, &cost)?;
+    let lowered = scheduler::lower(spec, requests.len(), &log);
+    lowered.plan.validate()?;
+    let sim = scheduler::simulate(spec, &requests, &lowered, &cost)?;
+    let exec = if matches!(spec.backend, BackendSpec::HostRef) {
+        let tiles = if spec.autotune_tiles { autotune() } else { Tiles::default() };
+        let ex = scheduler::execute(spec, &requests, &log, &lowered, tiles)?;
+        ensure!(
+            ex.mismatched_values == 0,
+            "decode outputs diverged from the full-prefill oracle on {} of {} values",
+            ex.mismatched_values,
+            ex.checked_values
+        );
+        // completion times relative to the first traced span
+        let t0 = ex
+            .trace
+            .start_s
+            .iter()
+            .zip(&ex.trace.covered)
+            .filter(|&(_, &c)| c)
+            .map(|(s, _)| *s)
+            .fold(f64::INFINITY, f64::min);
+        let mut lats: Vec<f64> = requests.iter().map(|r| ex.finish_s[r.id] - t0).collect();
+        lats.sort_by(f64::total_cmp);
+        let tokens: usize = requests.iter().map(|r| r.decode).sum();
+        let score = ServeScore {
+            total_s: ex.total_s,
+            tokens_per_s: if ex.total_s > 0.0 { tokens as f64 / ex.total_s } else { 0.0 },
+            p50_latency_s: quantile(&lats, 0.5),
+            p99_latency_s: quantile(&lats, 0.99),
+        };
+        let cmp = trace_report::compare(&lowered.plan, &ex.trace);
+        Some(ServeExec {
+            score,
+            trace: ex.trace,
+            checked_values: ex.checked_values,
+            mismatched_values: ex.mismatched_values,
+            calibrated_total_s: cmp.sim_total_s,
+            calibration_rel_err: cmp.total_rel_err,
+        })
+    } else {
+        None
+    };
+    Ok(ServeOutcome { spec: spec.clone(), requests, log, lowered, sim, exec })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_round_trips_exactly() {
+        let specs = [
+            ServeSpec::dev(),
+            ServeSpec {
+                arrivals: Arrivals::Replay {
+                    times_s: vec![0.0, 0.25, 0.25, 1e-3 + 1.0, 2.5],
+                },
+                n_requests: 5,
+                batching: false,
+                backend: BackendSpec::Null,
+                autotune_tiles: true,
+                seed: (1u64 << 60) + 3,
+                ..ServeSpec::dev()
+            },
+        ];
+        for s in specs {
+            let parsed = ServeSpec::from_json(&s.to_json()).unwrap();
+            assert_eq!(parsed, s);
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_the_dev_preset() {
+        assert_eq!(ServeSpec::from_json("{}").unwrap(), ServeSpec::dev());
+    }
+
+    #[test]
+    fn validate_rejects_wedgeable_specs() {
+        // request that can never fit the per-rank pages
+        let s = ServeSpec { n_pages: 1, ..ServeSpec::dev() };
+        assert!(s.validate().is_err());
+        // request that can never fit the token budget
+        let s = ServeSpec { max_batch_tokens: 4, ..ServeSpec::dev() };
+        assert!(s.validate().is_err());
+        // bad arrival processes
+        let s = ServeSpec { arrivals: Arrivals::Poisson { rate: 0.0 }, ..ServeSpec::dev() };
+        assert!(s.validate().is_err());
+        let s = ServeSpec {
+            arrivals: Arrivals::Replay { times_s: vec![0.0, 1.0] },
+            ..ServeSpec::dev()
+        };
+        assert!(s.validate().is_err()); // wrong length
+        let s = ServeSpec {
+            arrivals: Arrivals::Replay { times_s: vec![3.0; 12] },
+            ..ServeSpec::dev()
+        };
+        assert!(s.validate().is_ok());
+        let mut times = vec![3.0; 12];
+        times[5] = 2.0;
+        let s = ServeSpec { arrivals: Arrivals::Replay { times_s: times }, ..ServeSpec::dev() };
+        assert!(s.validate().is_err()); // unsorted
+        // GQA must divide
+        let s = ServeSpec { workload: Workload::new(4, 3, 8, 12), ..ServeSpec::dev() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn serve_runs_end_to_end_on_the_null_backend() {
+        let spec = ServeSpec { backend: BackendSpec::Null, ..ServeSpec::dev() };
+        let out = serve(&spec).unwrap();
+        assert!(out.exec.is_none());
+        assert_eq!(out.requests.len(), spec.n_requests);
+        assert!(out.sim.tokens_per_s > 0.0);
+        assert!(out.sim.p99_latency_s >= out.sim.p50_latency_s);
+    }
+}

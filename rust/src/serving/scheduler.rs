@@ -1,0 +1,940 @@
+//! Continuous-batching decode scheduler: admit → filter → prefill →
+//! decode, lowered onto the schedule IR.
+//!
+//! The loop has the TGI router's shape: arrivals land in a **bounded
+//! waiting queue**; each step first **filters** finished requests out of
+//! the running batch (evicting their pages), then **admits** waiting
+//! requests under a token budget and page backpressure, **concatenating**
+//! their prefills into the running decode batch; every resident request
+//! then decodes one token. Admitted prefill waves are spread across
+//! ranks by the *varlen rebalancer* ([`VarlenSpec::equal_split`]) — the
+//! same equal-token splitter the training pipeline uses to balance
+//! ragged documents balances prompt tokens here.
+//!
+//! The scheduler runs on a **virtual clock** priced by the same
+//! [`Kernel::seconds`] cost classes the event engine charges; because
+//! the lowered plan is lockstep with no transfers, the event engine's
+//! makespan reproduces the scheduler's clock exactly (pinned at 1e-9 by
+//! `rust/tests/serving_properties.rs`). [`lower`] turns the step log
+//! into a [`Pass::Decode`] plan — per rank and step: `KvEvict`,
+//! prefill `KvAppend` + `AttnTok`, decode `KvAppend` + `KvLookup` +
+//! `DecodeAttn` — and [`execute`] replays that log with real host
+//! kernels over per-rank [`PagedKvCache`]s, checking every decode row
+//! bit-for-bit against a one-shot full-prefill oracle.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::kvcache::PagedKvCache;
+use super::{Arrivals, ServeSpec};
+use crate::coordinator::executor::{MergedTrace, RunTrace};
+use crate::coordinator::plan::{Kernel, OpId, Pass, Plan, PlanOp};
+use crate::coordinator::schedule::VarlenSpec;
+use crate::coordinator::session::BackendSpec;
+use crate::runtime::hostref::{HostKernels, Kernels};
+use crate::runtime::kernel::Tiles;
+use crate::runtime::tensor::{Tensor, Value};
+use crate::simulator::{simulate_plan, AttnCost, EventOpts};
+use crate::util::Rng;
+
+/// One serving request: arrival time plus prompt/decode token counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub arrival_s: f64,
+    /// Prompt (prefill) tokens.
+    pub prompt: usize,
+    /// Tokens to generate, one per decode step.
+    pub decode: usize,
+}
+
+/// Draw the arrival process and per-request prompt lengths from the
+/// spec. Poisson arrivals use inverse-CDF exponential gaps; prompt
+/// lengths are uniform on `[(1 - spread) * prompt_tokens, prompt_tokens]`.
+/// Deterministic in `spec.seed`.
+pub fn gen_requests(spec: &ServeSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed ^ 0x5e7e_5e7e);
+    let times: Vec<f64> = match &spec.arrivals {
+        Arrivals::Poisson { rate } => {
+            let mut t = 0.0f64;
+            (0..spec.n_requests)
+                .map(|_| {
+                    let u = rng.f32() as f64;
+                    t += -(1.0 - u).ln() / rate;
+                    t
+                })
+                .collect()
+        }
+        Arrivals::Replay { times_s } => times_s.clone(),
+    };
+    times
+        .into_iter()
+        .enumerate()
+        .map(|(id, arrival_s)| {
+            let hi = spec.prompt_tokens;
+            let lo = (((1.0 - spec.prompt_spread) * hi as f64).round() as usize).clamp(1, hi);
+            let prompt = lo + rng.below(hi - lo + 1);
+            Request { id, arrival_s, prompt, decode: spec.decode_tokens }
+        })
+        .collect()
+}
+
+/// One scheduler step: who evicts, prefills, and decodes on each rank,
+/// plus the per-rank aggregates the cost classes are scaled by.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    /// Virtual start time of the step.
+    pub start_s: f64,
+    /// Virtual duration: max over ranks of the rank's summed op seconds.
+    pub dur_s: f64,
+    /// Per rank: requests evicted at the top of the step (filter).
+    pub evict: Vec<Vec<usize>>,
+    /// Per rank: requests whose prompts prefill this step (admission).
+    pub prefill: Vec<Vec<usize>>,
+    /// Per rank: running requests decoding one token, in batch-row order.
+    pub decode: Vec<Vec<usize>>,
+    /// Per rank: Σ prompt tokens prefilled.
+    pub prefill_tokens: Vec<usize>,
+    /// Per rank: Σ causal pairs over prefilled prompts (`p(p+1)/2`).
+    pub prefill_pairs: Vec<f64>,
+    /// Per rank: Σ post-append context length over the decode batch.
+    pub decode_ctx: Vec<usize>,
+}
+
+impl StepLog {
+    fn empty(p: usize, start_s: f64) -> StepLog {
+        StepLog {
+            start_s,
+            dur_s: 0.0,
+            evict: vec![Vec::new(); p],
+            prefill: vec![Vec::new(); p],
+            decode: vec![Vec::new(); p],
+            prefill_tokens: vec![0; p],
+            prefill_pairs: vec![0.0; p],
+            decode_ctx: vec![0; p],
+        }
+    }
+}
+
+/// What one rank does in one step, in emission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpRole {
+    Evict,
+    PrefillAppend,
+    PrefillAttn,
+    DecodeAppend,
+    DecodeLookup,
+    DecodeAttn,
+}
+
+/// The ops rank `w` runs in `step`, with their cost-class kernels — the
+/// single definition shared by the virtual clock ([`schedule`]) and the
+/// plan lowering ([`lower`]), so priced and lowered step times cannot
+/// drift apart.
+pub fn rank_ops(step: &StepLog, w: usize, c_ref: f64) -> Vec<(OpRole, Kernel)> {
+    let mut ops = Vec::new();
+    if !step.evict[w].is_empty() {
+        ops.push((OpRole::Evict, Kernel::KvEvict));
+    }
+    if step.prefill_tokens[w] > 0 {
+        ops.push((
+            OpRole::PrefillAppend,
+            Kernel::KvAppend { scale: step.prefill_tokens[w] as f64 / c_ref },
+        ));
+        ops.push((
+            OpRole::PrefillAttn,
+            Kernel::AttnTok { scale: step.prefill_pairs[w] / (c_ref * c_ref) },
+        ));
+    }
+    let b = step.decode[w].len();
+    if b > 0 {
+        ops.push((OpRole::DecodeAppend, Kernel::KvAppend { scale: b as f64 / c_ref }));
+        ops.push((
+            OpRole::DecodeLookup,
+            Kernel::KvLookup { scale: step.decode_ctx[w] as f64 / c_ref },
+        ));
+        ops.push((
+            OpRole::DecodeAttn,
+            Kernel::DecodeAttn { scale: step.decode_ctx[w] as f64 / (c_ref * c_ref) },
+        ));
+    }
+    ops
+}
+
+/// The full schedule of one serving run on the virtual clock.
+#[derive(Clone, Debug)]
+pub struct ServeLog {
+    pub n_workers: usize,
+    pub steps: Vec<StepLog>,
+    /// Rank each request ran on.
+    pub home: Vec<usize>,
+    /// Step index whose decode produced each request's last token.
+    pub finish_step: Vec<usize>,
+    /// Virtual makespan.
+    pub total_s: f64,
+    /// Largest waiting-queue occupancy observed.
+    pub peak_queue: usize,
+    /// Most arrivals simultaneously held out of the bounded queue.
+    pub max_deferred: usize,
+}
+
+struct Run {
+    req: usize,
+    rank: usize,
+    /// Tokens appended to the cache so far (prompt, then +1 per decode).
+    ctx: usize,
+    produced: usize,
+    done: bool,
+}
+
+/// Run the continuous-batching loop (or, with `spec.batching == false`,
+/// the serial no-batching baseline: at most one request in flight) on
+/// the virtual clock. Requests must be arrival-sorted with ids `0..n`.
+pub fn schedule(spec: &ServeSpec, requests: &[Request], cost: &AttnCost) -> Result<ServeLog> {
+    let p = spec.n_workers;
+    let n = requests.len();
+    ensure!(n >= 1, "schedule: no requests");
+    for (i, r) in requests.iter().enumerate() {
+        ensure!(r.id == i, "schedule: request ids must be dense 0..n");
+        ensure!(i == 0 || requests[i - 1].arrival_s <= r.arrival_s, "schedule: arrivals unsorted");
+    }
+    let c_ref = spec.workload.chunk_tokens as f64;
+    let pages_for = |tokens: usize| tokens.div_ceil(spec.page_size);
+    let final_ctx: Vec<usize> = requests.iter().map(|r| r.prompt + r.decode).collect();
+
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut running: Vec<Run> = Vec::new();
+    let mut rank_tokens = vec![0usize; p];
+    let mut rank_free_pages = vec![spec.n_pages; p];
+    let mut finished = 0usize;
+    let mut now = 0.0f64;
+    let mut steps: Vec<StepLog> = Vec::new();
+    let mut home = vec![usize::MAX; n];
+    let mut finish_step = vec![usize::MAX; n];
+    let mut peak_queue = 0usize;
+    let mut max_deferred = 0usize;
+
+    // hard progress bound: every request costs one prefill step, `decode`
+    // decode steps, one evict step, plus at most one idle jump
+    let step_budget = n * (spec.decode_tokens + 3) + 8;
+    let mut iters = 0usize;
+
+    while finished < n {
+        iters += 1;
+        if iters > step_budget {
+            bail!("scheduler stalled after {iters} iterations ({finished}/{n} finished)");
+        }
+
+        // ingest arrivals into the bounded queue
+        while next_arrival < n
+            && requests[next_arrival].arrival_s <= now + 1e-12
+            && waiting.len() < spec.queue_cap
+        {
+            waiting.push_back(next_arrival);
+            next_arrival += 1;
+        }
+        let mut due = 0usize;
+        while next_arrival + due < n && requests[next_arrival + due].arrival_s <= now + 1e-12 {
+            due += 1;
+        }
+        max_deferred = max_deferred.max(due);
+        peak_queue = peak_queue.max(waiting.len());
+
+        // idle: nothing resident, nothing admissible — jump to the next
+        // arrival (one exists, else everything would have finished)
+        if running.is_empty() && waiting.is_empty() {
+            now = now.max(requests[next_arrival].arrival_s);
+            continue;
+        }
+
+        let mut step = StepLog::empty(p, now);
+
+        // filter: drop finished requests from the running batch, evict
+        // their pages
+        running.retain(|r| {
+            if r.done {
+                step.evict[r.rank].push(r.req);
+                rank_tokens[r.rank] -= final_ctx[r.req];
+                rank_free_pages[r.rank] += pages_for(final_ctx[r.req]);
+                false
+            } else {
+                true
+            }
+        });
+        let pre_existing = running.len();
+
+        // admit: pull from the queue front under the token budget (whole
+        // lifetime context is reserved up front) and page backpressure
+        let mut batch_tokens: usize = running.iter().map(|r| final_ctx[r.req]).sum();
+        let mut wave: Vec<usize> = Vec::new();
+        while let Some(&rid) = waiting.front() {
+            if !spec.batching && (!running.is_empty() || !wave.is_empty()) {
+                break; // serial baseline: one request in flight, ever
+            }
+            if batch_tokens + final_ctx[rid] > spec.max_batch_tokens {
+                break;
+            }
+            let need = pages_for(final_ctx[rid]);
+            if !(0..p).any(|w| rank_free_pages[w] >= need) {
+                break;
+            }
+            waiting.pop_front();
+            wave.push(rid);
+            batch_tokens += final_ctx[rid];
+        }
+
+        // place the wave: the varlen rebalancer cuts the wave's packed
+        // prompt tokens into ≤ p equal-token groups; heaviest group goes
+        // to the least-loaded rank (pages permitting)
+        let mut pushed_back: Vec<usize> = Vec::new();
+        if !wave.is_empty() {
+            let prompts: Vec<usize> = wave.iter().map(|&r| requests[r].prompt).collect();
+            let g = p.min(wave.len());
+            let vs = VarlenSpec::equal_split(prompts.clone(), g);
+            // assign each request to the balanced chunk holding its
+            // token midpoint
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); g];
+            let mut cum = 0usize;
+            for (i, &plen) in prompts.iter().enumerate() {
+                let mid = cum + plen / 2;
+                let grp = (0..g).find(|&j| mid < vs.boundaries[j + 1]).unwrap_or(g - 1);
+                groups[grp].push(wave[i]);
+                cum += plen;
+            }
+            let weight = |grp: &Vec<usize>| -> f64 {
+                grp.iter().map(|&r| requests[r].prompt as f64).sum()
+            };
+            let mut order: Vec<usize> = (0..g).filter(|&j| !groups[j].is_empty()).collect();
+            order.sort_by(|&a, &b| {
+                weight(&groups[b]).total_cmp(&weight(&groups[a])).then(a.cmp(&b))
+            });
+            for gi in order {
+                // least-loaded rank for the whole group (deterministic
+                // tie-break: lowest rank id)
+                let target = (0..p).min_by_key(|&w| (rank_tokens[w], w)).unwrap();
+                for &rid in &groups[gi] {
+                    let need = pages_for(final_ctx[rid]);
+                    let rank = if rank_free_pages[target] >= need {
+                        Some(target)
+                    } else {
+                        // fall back per request: least-loaded rank with
+                        // page room
+                        (0..p)
+                            .filter(|&w| rank_free_pages[w] >= need)
+                            .min_by_key(|&w| (rank_tokens[w], w))
+                    };
+                    match rank {
+                        Some(w) => {
+                            home[rid] = w;
+                            rank_tokens[w] += final_ctx[rid];
+                            rank_free_pages[w] -= need;
+                            step.prefill[w].push(rid);
+                            let plen = requests[rid].prompt;
+                            step.prefill_tokens[w] += plen;
+                            step.prefill_pairs[w] += (plen * (plen + 1)) as f64 / 2.0;
+                            running.push(Run {
+                                req: rid,
+                                rank: w,
+                                ctx: plen,
+                                produced: 0,
+                                done: false,
+                            });
+                        }
+                        None => pushed_back.push(rid),
+                    }
+                }
+            }
+            for &rid in pushed_back.iter().rev() {
+                waiting.push_front(rid);
+            }
+        }
+
+        // decode: every request resident before this step's admissions
+        // generates one token (append its kv row, then attend over the
+        // grown context)
+        for r in running[..pre_existing].iter_mut() {
+            r.ctx += 1;
+            r.produced += 1;
+            step.decode[r.rank].push(r.req);
+            step.decode_ctx[r.rank] += r.ctx;
+            if r.produced == requests[r.req].decode {
+                r.done = true;
+                finish_step[r.req] = steps.len();
+                finished += 1;
+            }
+        }
+
+        // price the step: lockstep barrier = max over ranks of summed
+        // op seconds
+        step.dur_s = (0..p)
+            .map(|w| {
+                rank_ops(&step, w, c_ref).iter().map(|(_, k)| k.seconds(cost)).sum::<f64>()
+            })
+            .fold(0.0, f64::max);
+        now += step.dur_s;
+        steps.push(step);
+    }
+
+    // trailing filter: the last finishers still hold pages
+    if !running.is_empty() {
+        let mut step = StepLog::empty(p, now);
+        for r in &running {
+            debug_assert!(r.done);
+            step.evict[r.rank].push(r.req);
+        }
+        steps.push(step);
+    }
+
+    Ok(ServeLog {
+        n_workers: p,
+        steps,
+        home,
+        finish_step,
+        total_s: now,
+        peak_queue,
+        max_deferred,
+    })
+}
+
+/// Per-rank op ids of one lowered step, by role.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankOpIds {
+    pub evict: Option<OpId>,
+    pub prefill_append: Option<OpId>,
+    pub prefill_attn: Option<OpId>,
+    pub decode_append: Option<OpId>,
+    pub decode_lookup: Option<OpId>,
+    pub decode_attn: Option<OpId>,
+}
+
+/// A [`ServeLog`] lowered to the schedule IR, plus the op maps the
+/// executor and the latency scoring need.
+pub struct Lowered {
+    pub plan: Plan,
+    /// `step_ops[step][rank]` — op ids in emission order.
+    pub step_ops: Vec<Vec<RankOpIds>>,
+    /// Each request's final `DecodeAttn` op (its completion marker).
+    pub last_decode_op: Vec<Option<OpId>>,
+}
+
+/// Lower the step log to a lockstep, transfer-free [`Pass::Decode`]
+/// plan: per rank and step the [`rank_ops`] kernels, dependency-chained
+/// per rank.
+pub fn lower(spec: &ServeSpec, n_requests: usize, log: &ServeLog) -> Lowered {
+    let p = log.n_workers;
+    let c_ref = spec.workload.chunk_tokens as f64;
+    let name = if spec.batching { "serve/continuous" } else { "serve/serial" };
+    let mut plan = Plan::new(name, p, log.steps.len().max(1), true, false, Pass::Decode);
+    let mut last_op: Vec<Option<OpId>> = vec![None; p];
+    let mut last_decode_op: Vec<Option<OpId>> = vec![None; n_requests];
+    let mut step_ops = Vec::with_capacity(log.steps.len());
+    for (s, step) in log.steps.iter().enumerate() {
+        let mut row = Vec::with_capacity(p);
+        for w in 0..p {
+            let mut ids = RankOpIds::default();
+            for (role, kernel) in rank_ops(step, w, c_ref) {
+                let deps: Vec<OpId> = last_op[w].iter().copied().collect();
+                let id = plan.push(w, s, PlanOp::Compute { kernel, pair: None }, deps);
+                last_op[w] = Some(id);
+                match role {
+                    OpRole::Evict => ids.evict = Some(id),
+                    OpRole::PrefillAppend => ids.prefill_append = Some(id),
+                    OpRole::PrefillAttn => ids.prefill_attn = Some(id),
+                    OpRole::DecodeAppend => ids.decode_append = Some(id),
+                    OpRole::DecodeLookup => ids.decode_lookup = Some(id),
+                    OpRole::DecodeAttn => {
+                        ids.decode_attn = Some(id);
+                        // the last assignment a request sees is its
+                        // finishing step's op
+                        for &req in &step.decode[w] {
+                            last_decode_op[req] = Some(id);
+                        }
+                    }
+                }
+            }
+            row.push(ids);
+        }
+        step_ops.push(row);
+    }
+    Lowered { plan, step_ops, last_decode_op }
+}
+
+/// Throughput + latency summary of one serving run.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeScore {
+    /// Makespan (virtual, simulated, or measured — per producer).
+    pub total_s: f64,
+    /// Generated (decode) tokens per second of makespan.
+    pub tokens_per_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+}
+
+/// Empirical upper quantile: the smallest latency ≥ a `q` fraction of
+/// the sample (`sorted` ascending).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+    sorted[idx]
+}
+
+/// Score a run from absolute per-request finish times.
+pub fn score(requests: &[Request], finish_s: &[f64], total_s: f64) -> ServeScore {
+    let mut lats: Vec<f64> = requests.iter().map(|r| finish_s[r.id] - r.arrival_s).collect();
+    lats.sort_by(f64::total_cmp);
+    let tokens: usize = requests.iter().map(|r| r.decode).sum();
+    ServeScore {
+        total_s,
+        tokens_per_s: if total_s > 0.0 { tokens as f64 / total_s } else { 0.0 },
+        p50_latency_s: quantile(&lats, 0.5),
+        p99_latency_s: quantile(&lats, 0.99),
+    }
+}
+
+/// Event-engine score of a lowered plan: per-request completion is its
+/// last `DecodeAttn` op's simulated finish.
+pub fn simulate(
+    spec: &ServeSpec,
+    requests: &[Request],
+    low: &Lowered,
+    cost: &AttnCost,
+) -> Result<ServeScore> {
+    let res = simulate_plan(&low.plan, &spec.cluster, cost, &EventOpts::for_plan(&low.plan));
+    let mut finish = vec![0.0f64; requests.len()];
+    for r in requests {
+        let op = low.last_decode_op[r.id]
+            .ok_or_else(|| anyhow!("request {} never decoded", r.id))?;
+        finish[r.id] = res.op_finish[op];
+    }
+    Ok(score(requests, &finish, res.total_s))
+}
+
+/// One executed serving run: the rank-merged timeline, measured score
+/// inputs, and the oracle check tally.
+pub struct Executed {
+    pub trace: MergedTrace,
+    /// Measured absolute finish time per request (its last `DecodeAttn`
+    /// span end).
+    pub finish_s: Vec<f64>,
+    /// Span makespan (excludes the post-run oracle pass).
+    pub total_s: f64,
+    /// Decode output values compared / differing vs the one-shot
+    /// full-prefill oracle (bitwise).
+    pub checked_values: usize,
+    pub mismatched_values: usize,
+}
+
+/// Per-request synthetic tensors, seeded by request id: the full
+/// `prompt + decode` sequence in both kernel layouts, plus the decode
+/// rows produced so far.
+struct ReqData {
+    l: usize,
+    /// `[h][L][d]`
+    q: Vec<f32>,
+    /// `[kvh][L][d]` — oracle / prefill layout.
+    k_full: Vec<f32>,
+    v_full: Vec<f32>,
+    /// `[L][kvh][d]` — cache append layout (same values).
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+    /// One `[h][d]` row per generated token.
+    decode_o: Vec<Vec<f32>>,
+}
+
+impl ReqData {
+    fn generate(seed: u64, r: &Request, h: usize, kvh: usize, d: usize) -> ReqData {
+        let l = r.prompt + r.decode;
+        let mut rng =
+            Rng::new(seed ^ (r.id as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let q = rng.normal_vec(h * l * d);
+        let k_full = rng.normal_vec(kvh * l * d);
+        let v_full = rng.normal_vec(kvh * l * d);
+        let mut k_rows = vec![0.0f32; kvh * l * d];
+        let mut v_rows = vec![0.0f32; kvh * l * d];
+        for t in 0..l {
+            for g in 0..kvh {
+                let src = (g * l + t) * d;
+                let dst = (t * kvh + g) * d;
+                k_rows[dst..dst + d].copy_from_slice(&k_full[src..src + d]);
+                v_rows[dst..dst + d].copy_from_slice(&v_full[src..src + d]);
+            }
+        }
+        ReqData { l, q, k_full, v_full, k_rows, v_rows, decode_o: Vec::new() }
+    }
+
+    /// First `plen` positions in oracle layout, per tensor.
+    fn prefix(&self, plen: usize, heads: usize, d: usize, src: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(heads * plen * d);
+        for hh in 0..heads {
+            out.extend_from_slice(&src[hh * self.l * d..hh * self.l * d + plen * d]);
+        }
+        out
+    }
+}
+
+/// Replay the step log with real host kernels: per-rank threads over
+/// per-rank paged caches, a step barrier mirroring the plan's lockstep
+/// barrier, spans stamped per plan op. After the replay each rank
+/// checks its decode rows bit-for-bit against `full_attn_ref` run once
+/// over each request's full sequence (outside the timed spans).
+pub fn execute(
+    spec: &ServeSpec,
+    requests: &[Request],
+    log: &ServeLog,
+    low: &Lowered,
+    tiles: Tiles,
+) -> Result<Executed> {
+    ensure!(
+        matches!(spec.backend, BackendSpec::HostRef),
+        "serving executes on the hostref backend (got {:?})",
+        spec.backend
+    );
+    let p = spec.n_workers;
+    let eff_threads = spec
+        .threads
+        .clamp(1, std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(1));
+    let barrier = Arc::new(Barrier::new(p));
+    let epoch = Instant::now();
+
+    struct RankOut {
+        trace: RunTrace,
+        checked: usize,
+        mismatched: usize,
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_rank(
+        rank: usize,
+        spec: &ServeSpec,
+        requests: &[Request],
+        log: &ServeLog,
+        low: &Lowered,
+        tiles: Tiles,
+        threads: usize,
+        barrier: &Barrier,
+        epoch: Instant,
+    ) -> Result<RankOut> {
+        let wl = &spec.workload;
+        let (h, kvh, d) = (wl.n_heads, wl.n_kv_heads, wl.head_dim);
+        let kernels = HostKernels::with_tiles(threads, tiles);
+        let mut cache = PagedKvCache::new(spec.page_size, spec.n_pages, kvh, d);
+        let mut data: BTreeMap<usize, ReqData> = BTreeMap::new();
+        let mut ctx: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut trace = RunTrace::default();
+        let now = |epoch: &Instant| epoch.elapsed().as_secs_f64();
+
+        for (s, step) in log.steps.iter().enumerate() {
+            barrier.wait();
+            let ids = &low.step_ops[s][rank];
+            if let Some(op) = ids.evict {
+                let t0 = now(&epoch);
+                for &req in &step.evict[rank] {
+                    cache.evict(req)?;
+                }
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+            if let Some(op) = ids.prefill_append {
+                let t0 = now(&epoch);
+                for &req in &step.prefill[rank] {
+                    let rd = data.entry(req).or_insert_with(|| {
+                        ReqData::generate(spec.seed, &requests[req], h, kvh, d)
+                    });
+                    let plen = requests[req].prompt;
+                    cache.append(
+                        req,
+                        &rd.k_rows[..plen * kvh * d],
+                        &rd.v_rows[..plen * kvh * d],
+                    )?;
+                    ctx.insert(req, plen);
+                }
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+            if let Some(op) = ids.prefill_attn {
+                let t0 = now(&epoch);
+                for &req in &step.prefill[rank] {
+                    let rd = &data[&req];
+                    let plen = requests[req].prompt;
+                    let q = Tensor::new(vec![h, plen, d], rd.prefix(plen, h, d, &rd.q));
+                    let k = Tensor::new(vec![kvh, plen, d], rd.prefix(plen, kvh, d, &rd.k_full));
+                    let v = Tensor::new(vec![kvh, plen, d], rd.prefix(plen, kvh, d, &rd.v_full));
+                    kernels.run(
+                        "full_attn_ref",
+                        &[Value::F32(q), Value::F32(k), Value::F32(v)],
+                    )?;
+                }
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+            if let Some(op) = ids.decode_append {
+                let t0 = now(&epoch);
+                for &req in &step.decode[rank] {
+                    let c = ctx
+                        .get_mut(&req)
+                        .ok_or_else(|| anyhow!("decode before prefill for request {req}"))?;
+                    let t = *c;
+                    let rd = &data[&req];
+                    cache.append(
+                        req,
+                        &rd.k_rows[t * kvh * d..(t + 1) * kvh * d],
+                        &rd.v_rows[t * kvh * d..(t + 1) * kvh * d],
+                    )?;
+                    *c += 1;
+                }
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+            let mut gathered: Option<(Vec<f32>, Vec<f32>, usize)> = None;
+            if let Some(op) = ids.decode_lookup {
+                let t0 = now(&epoch);
+                let b = step.decode[rank].len();
+                let max_ctx =
+                    step.decode[rank].iter().map(|r| ctx[r]).max().expect("b > 0");
+                let mut slots_f = vec![0.0f32; b * max_ctx];
+                let mut lens_f = vec![0.0f32; b];
+                for (i, &req) in step.decode[rank].iter().enumerate() {
+                    let sl = cache.slots(req)?;
+                    for (j, &slot) in sl.iter().enumerate() {
+                        slots_f[i * max_ctx + j] = slot as f32;
+                    }
+                    lens_f[i] = sl.len() as f32;
+                }
+                gathered = Some((slots_f, lens_f, max_ctx));
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+            if let Some(op) = ids.decode_attn {
+                let t0 = now(&epoch);
+                let (slots_f, lens_f, max_ctx) =
+                    gathered.take().ok_or_else(|| anyhow!("decode_attn without lookup"))?;
+                let b = step.decode[rank].len();
+                let mut qb = vec![0.0f32; h * b * d];
+                for (i, &req) in step.decode[rank].iter().enumerate() {
+                    let t = ctx[&req] - 1;
+                    let rd = &data[&req];
+                    for hh in 0..h {
+                        qb[(hh * b + i) * d..(hh * b + i + 1) * d]
+                            .copy_from_slice(&rd.q[(hh * rd.l + t) * d..(hh * rd.l + t + 1) * d]);
+                    }
+                }
+                let out = kernels.run(
+                    "decode_attn",
+                    &[
+                        Value::F32(Tensor::new(vec![h, b, d], qb)),
+                        Value::F32(Tensor::new(
+                            vec![cache.n_slots(), kvh, d],
+                            cache.k_slab().to_vec(),
+                        )),
+                        Value::F32(Tensor::new(
+                            vec![cache.n_slots(), kvh, d],
+                            cache.v_slab().to_vec(),
+                        )),
+                        Value::F32(Tensor::new(vec![b, max_ctx], slots_f)),
+                        Value::F32(Tensor::new(vec![b], lens_f)),
+                    ],
+                )?;
+                let o = out[0].data();
+                for (i, &req) in step.decode[rank].iter().enumerate() {
+                    let mut row = vec![0.0f32; h * d];
+                    for hh in 0..h {
+                        row[hh * d..(hh + 1) * d]
+                            .copy_from_slice(&o[(hh * b + i) * d..(hh * b + i + 1) * d]);
+                    }
+                    data.get_mut(&req).expect("decoded request has data").decode_o.push(row);
+                }
+                trace.spans.push((op, t0, now(&epoch)));
+            }
+        }
+
+        // oracle: one-shot full prefill over each request's whole
+        // sequence; decode row g must equal oracle row prompt + g
+        // bit-for-bit (untimed — after the replayed spans)
+        let mut checked = 0usize;
+        let mut mismatched = 0usize;
+        for (&req, rd) in &data {
+            let q = Tensor::new(vec![h, rd.l, d], rd.q.clone());
+            let k = Tensor::new(vec![kvh, rd.l, d], rd.k_full.clone());
+            let v = Tensor::new(vec![kvh, rd.l, d], rd.v_full.clone());
+            let out =
+                kernels.run("full_attn_ref", &[Value::F32(q), Value::F32(k), Value::F32(v)])?;
+            let oracle = out[0].data();
+            let plen = requests[req].prompt;
+            ensure!(
+                rd.decode_o.len() == requests[req].decode,
+                "request {req} decoded {} of {} tokens",
+                rd.decode_o.len(),
+                requests[req].decode
+            );
+            for (g, row) in rd.decode_o.iter().enumerate() {
+                let t = plen + g;
+                for hh in 0..h {
+                    for j in 0..d {
+                        checked += 1;
+                        if row[hh * d + j].to_bits() != oracle[(hh * rd.l + t) * d + j].to_bits()
+                        {
+                            mismatched += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(RankOut { trace, checked, mismatched })
+    }
+
+    let outs: Vec<Result<RankOut>> = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let barrier = Arc::clone(&barrier);
+                sc.spawn(move || {
+                    run_rank(
+                        rank, spec, requests, log, low, tiles, eff_threads, &barrier, epoch,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|hd| {
+                hd.join().unwrap_or_else(|_| Err(anyhow!("serving rank thread panicked")))
+            })
+            .collect()
+    });
+
+    let mut traces = Vec::with_capacity(p);
+    let mut checked = 0usize;
+    let mut mismatched = 0usize;
+    for out in outs {
+        let o = out?;
+        checked += o.checked;
+        mismatched += o.mismatched;
+        traces.push(o.trace);
+    }
+    let mut trace = MergedTrace::merge(&low.plan, &traces);
+    trace.threads = eff_threads;
+    trace.tiles = Some((tiles.q, tiles.k));
+    let total_s = trace.makespan_s();
+    let mut finish_s = vec![0.0f64; requests.len()];
+    for r in requests {
+        let op = low.last_decode_op[r.id]
+            .ok_or_else(|| anyhow!("request {} never decoded", r.id))?;
+        ensure!(trace.covered[op], "request {}'s final decode op has no span", r.id);
+        finish_s[r.id] = trace.end_s[op];
+    }
+    Ok(Executed {
+        trace,
+        finish_s,
+        total_s,
+        checked_values: checked,
+        mismatched_values: mismatched,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::attn_cost_from_dims;
+    use crate::config::ClusterSpec;
+
+    fn dev_spec() -> ServeSpec {
+        ServeSpec::dev()
+    }
+
+    fn dev_cost(spec: &ServeSpec) -> AttnCost {
+        let w = &spec.workload;
+        attn_cost_from_dims(
+            &spec.cluster,
+            w.chunk_tokens as f64,
+            w.n_heads,
+            w.n_kv_heads,
+            w.head_dim,
+        )
+    }
+
+    #[test]
+    fn schedule_serves_every_request_exactly_once() {
+        let spec = dev_spec();
+        let requests = gen_requests(&spec);
+        let log = schedule(&spec, &requests, &dev_cost(&spec)).unwrap();
+        let mut prefills = vec![0usize; requests.len()];
+        let mut decoded = vec![0usize; requests.len()];
+        let mut evicted = vec![0usize; requests.len()];
+        for step in &log.steps {
+            for w in 0..log.n_workers {
+                for &r in &step.prefill[w] {
+                    prefills[r] += 1;
+                    assert_eq!(log.home[r], w);
+                }
+                for &r in &step.decode[w] {
+                    decoded[r] += 1;
+                    assert_eq!(log.home[r], w);
+                }
+                for &r in &step.evict[w] {
+                    evicted[r] += 1;
+                }
+            }
+        }
+        for r in &requests {
+            assert_eq!(prefills[r.id], 1, "request {} prefilled once", r.id);
+            assert_eq!(decoded[r.id], r.decode, "request {} decoded fully", r.id);
+            assert_eq!(evicted[r.id], 1, "request {} evicted once", r.id);
+            assert!(log.finish_step[r.id] < log.steps.len());
+        }
+    }
+
+    #[test]
+    fn event_engine_reproduces_the_virtual_clock() {
+        for batching in [true, false] {
+            let spec = ServeSpec { batching, ..dev_spec() };
+            let cost = dev_cost(&spec);
+            let requests = gen_requests(&spec);
+            let log = schedule(&spec, &requests, &cost).unwrap();
+            let low = lower(&spec, requests.len(), &log);
+            low.plan.validate().unwrap();
+            let sim = simulate(&spec, &requests, &low, &cost).unwrap();
+            let rel = (sim.total_s - log.total_s).abs() / log.total_s.max(1e-30);
+            assert!(
+                rel < 1e-9,
+                "lockstep sim {} vs virtual clock {} (batching={batching})",
+                sim.total_s,
+                log.total_s
+            );
+        }
+    }
+
+    #[test]
+    fn continuous_batching_beats_serial_throughput() {
+        let spec = dev_spec();
+        let cost = dev_cost(&spec);
+        let requests = gen_requests(&spec);
+        let cont = schedule(&spec, &requests, &cost).unwrap();
+        let serial_spec = ServeSpec { batching: false, ..dev_spec() };
+        let serial = schedule(&serial_spec, &requests, &cost).unwrap();
+        assert!(
+            serial.total_s >= 2.0 * cont.total_s,
+            "serial {} vs continuous {}",
+            serial.total_s,
+            cont.total_s
+        );
+    }
+
+    #[test]
+    fn serial_baseline_never_batches() {
+        let spec = ServeSpec { batching: false, ..dev_spec() };
+        let requests = gen_requests(&spec);
+        let log = schedule(&spec, &requests, &dev_cost(&spec)).unwrap();
+        for step in &log.steps {
+            let in_flight: usize =
+                (0..log.n_workers).map(|w| step.prefill[w].len() + step.decode[w].len()).sum();
+            assert!(in_flight <= 1, "serial step ran {in_flight} requests");
+        }
+    }
+
+    #[test]
+    fn quantile_picks_the_ceil_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert_eq!(quantile(&xs, 0.99), 4.0);
+        assert_eq!(quantile(&xs[..1], 0.99), 1.0);
+    }
+}

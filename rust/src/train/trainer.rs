@@ -793,11 +793,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             // recompute spans carry *backward-plan* op ids (the prefix
             // lives in the bwd lowering), so only "fwd" merges against the
             // forward plan
-            let n_ops = if pass == "fwd" { fwd_plan.n_ops() } else { bwd_plan.n_ops() };
+            let plan = if pass == "fwd" { &fwd_plan } else { &bwd_plan };
             report.layer_traces.push(LayerTrace {
                 layer,
                 pass,
-                trace: MergedTrace::merge(n_ops, &traces),
+                trace: MergedTrace::merge(plan, &traces),
             });
         }
     }
